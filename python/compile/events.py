@@ -1,0 +1,174 @@
+"""Synthetic HL-LHC collision events (python mirror of rust/src/physics).
+
+Used only at build time, for training (train.py) and pytest workloads. The
+Rust generator is the one used by benches/examples; the two share the same
+schema and distributions but need not be bit-identical (training only needs
+statistically matching data).
+
+Event model (DELPHES-substitute, see DESIGN.md §2):
+  - A hard-scatter process produces a few high-pT "signal" particles whose
+    vector pT sum defines a genuine recoil; neutrinos/invisibles carry the
+    true MET.
+  - Pileup adds many soft particles, roughly isotropic in phi, pT from a
+    steeply falling power law. Pileup is noise: ideally weighted ~0.
+  - Detector smearing perturbs pT/eta/phi, which is why a learned
+    per-particle weighting beats a fixed-rule (PUPPI-like) weighting.
+
+Particle classes (pdg_class): 0 ch.hadron(PV) 1 ch.hadron(PU) 2 neu.hadron
+3 photon 4 electron 5 muon 6 tau-ish 7 other. charge_class: 0:-1 1:0 2:+1.
+"""
+
+import numpy as np
+
+ETA_MAX = 3.0
+DELTA_R = 0.8  # paper Eq. 1 threshold (tunable delta)
+
+# pdg_class sampling weights for pileup vs hard-scatter particles
+_PU_CLASS_W = np.array([0.05, 0.45, 0.25, 0.20, 0.01, 0.01, 0.01, 0.02])
+_HS_CLASS_W = np.array([0.40, 0.02, 0.20, 0.25, 0.05, 0.05, 0.01, 0.02])
+_CHARGED = {0, 1, 4, 5}
+
+
+def _wrap_phi(phi):
+    return (phi + np.pi) % (2 * np.pi) - np.pi
+
+
+def generate_event(rng, mean_pileup=40, hard_scatter_pt=60.0):
+    """Generate one event. Returns dict with per-particle arrays + truth.
+
+    Keys: cont f32[N,6] = [pt, eta, phi, px, py, dz], cat i32[N,2],
+          weight_target f32[N] (1 for hard-scatter, 0 for pileup),
+          true_met_xy f32[2].
+    """
+    parts = []
+    targets = []
+
+    # --- hard scatter: a pseudo-dijet + invisible recoil -------------------
+    # Momentum balance: the invisible (neutrino-like) vector `inv` defines
+    # the true MET, and the *visible* hard-scatter system is boosted so that
+    # sum(visible HS momenta) = -inv exactly (pre-smearing). A perfect
+    # pileup-removal weighting therefore recovers the true MET up to
+    # detector smearing — the quantity Fig. 2's resolution measures.
+    n_hs = 2 + rng.poisson(6)
+    axis_phi = rng.uniform(-np.pi, np.pi)
+    axis_eta = rng.uniform(-1.5, 1.5)
+    hs = []  # (pt, eta, phi, cls, dz)
+    hs_sum = np.zeros(2)
+    for i in range(n_hs):
+        # two back-to-back cores
+        core = axis_phi if i % 2 == 0 else _wrap_phi(axis_phi + np.pi)
+        # clamp at the L1 calorimeter saturation scale — also keeps the
+        # f32 training numerics away from the Pareto tail
+        pt = min(rng.pareto(2.0) * hard_scatter_pt / 4.0 + 2.0, 500.0)
+        phi = _wrap_phi(core + rng.normal(0, 0.35))
+        eta = np.clip(axis_eta * (1 if i % 2 == 0 else -1) + rng.normal(0, 0.5),
+                      -ETA_MAX, ETA_MAX)
+        cls = int(rng.choice(8, p=_HS_CLASS_W / _HS_CLASS_W.sum()))
+        hs.append([pt, eta, phi, cls, 0.05 * rng.standard_normal()])
+        hs_sum += pt * np.array([np.cos(phi), np.sin(phi)])
+
+    inv_mag = rng.exponential(25.0)
+    inv_phi = rng.uniform(-np.pi, np.pi)
+    inv = inv_mag * np.array([np.cos(inv_phi), np.sin(inv_phi)])
+    true_met = inv
+
+    # Boost the visible system: distribute (-inv - hs_sum) across the HS
+    # particles in proportion to their pT, then recompute (pt, phi).
+    sum_pt = sum(p[0] for p in hs)
+    delta = -inv - hs_sum
+    for p in hs:
+        share = p[0] / sum_pt
+        px = p[0] * np.cos(p[2]) + delta[0] * share
+        py = p[0] * np.sin(p[2]) + delta[1] * share
+        p[0] = max(float(np.hypot(px, py)), 0.1)
+        p[2] = float(np.arctan2(py, px))
+    for pt, eta, phi, cls, dz in hs:
+        parts.append((pt, eta, phi, cls, dz))
+        targets.append(1.0)
+
+    # --- pileup -------------------------------------------------------------
+    n_pu = rng.poisson(mean_pileup)
+    for _ in range(n_pu):
+        pt = min((rng.pareto(2.5) + 1.0) * 0.7, 500.0)
+        phi = rng.uniform(-np.pi, np.pi)
+        eta = rng.uniform(-ETA_MAX, ETA_MAX)
+        cls = int(rng.choice(8, p=_PU_CLASS_W / _PU_CLASS_W.sum()))
+        parts.append((pt, eta, phi, cls, rng.normal(0, 1.0)))
+        targets.append(0.0)
+
+    # --- detector smearing ---------------------------------------------------
+    n = len(parts)
+    cont = np.zeros((n, 6), np.float32)
+    cat = np.zeros((n, 2), np.int32)
+    for i, (pt, eta, phi, cls, dz) in enumerate(parts):
+        pt_s = max(pt * (1.0 + rng.normal(0, 0.08)), 0.1)
+        eta_s = np.clip(eta + rng.normal(0, 0.01), -ETA_MAX, ETA_MAX)
+        phi_s = _wrap_phi(phi + rng.normal(0, 0.01))
+        px, py = pt_s * np.cos(phi_s), pt_s * np.sin(phi_s)
+        cont[i] = [pt_s, eta_s, phi_s, px, py, dz]
+        charge = 0
+        if cls in _CHARGED:
+            charge = -1 if rng.random() < 0.5 else 1
+        cat[i] = [cls, charge + 1]
+
+    return {
+        "cont": cont,
+        "cat": cat,
+        "weight_target": np.asarray(targets, np.float32),
+        "true_met_xy": true_met.astype(np.float32),
+    }
+
+
+def build_edges(cont, delta=DELTA_R):
+    """Dynamic graph construction (paper Eq. 1): directed edges (u,v) both
+    ways for every pair with (eta_u-eta_v)^2 + dphi^2 < delta^2, u != v."""
+    eta, phi = cont[:, 1], cont[:, 2]
+    n = cont.shape[0]
+    src, dst = [], []
+    for u in range(n):
+        deta = eta - eta[u]
+        dphi = _wrap_phi(phi - phi[u])
+        close = deta * deta + dphi * dphi < delta * delta
+        for v in np.nonzero(close)[0]:
+            if v != u:
+                src.append(u)
+                dst.append(int(v))
+    return np.asarray(src, np.int32), np.asarray(dst, np.int32)
+
+
+def pad_event(ev, n_max, e_max, delta=DELTA_R):
+    """Pad an event to an artifact bucket; drops lowest-pT extras if over."""
+    cont, cat = ev["cont"], ev["cat"]
+    n = cont.shape[0]
+    if n > n_max:
+        keep = np.argsort(-cont[:, 0])[:n_max]
+        keep.sort()
+        cont, cat = cont[keep], cat[keep]
+        ev = dict(ev, weight_target=ev["weight_target"][keep])
+        n = n_max
+    src, dst = build_edges(cont, delta)
+    e = len(src)
+    if e > e_max:
+        sel = np.random.default_rng(0).permutation(e)[:e_max]
+        sel.sort()
+        src, dst = src[sel], dst[sel]
+        e = e_max
+
+    cont_p = np.zeros((n_max, 6), np.float32)
+    cat_p = np.zeros((n_max, 2), np.int32)
+    cont_p[:n], cat_p[:n] = cont, cat
+    src_p = np.zeros(e_max, np.int32)
+    dst_p = np.zeros(e_max, np.int32)
+    src_p[:e], dst_p[:e] = src, dst
+    node_mask = np.zeros(n_max, np.float32)
+    node_mask[:n] = 1.0
+    edge_mask = np.zeros(e_max, np.float32)
+    edge_mask[:e] = 1.0
+    wt = np.zeros(n_max, np.float32)
+    wt[:n] = ev["weight_target"][:n]
+    return {
+        "cont": cont_p, "cat": cat_p, "src": src_p, "dst": dst_p,
+        "node_mask": node_mask, "edge_mask": edge_mask,
+        "weight_target": wt, "true_met_xy": ev["true_met_xy"],
+        "n": n, "e": e,
+    }

@@ -1,0 +1,80 @@
+"""Pallas kernel: fused dense + bias + optional activation / folded BN.
+
+Used by the embedding stage and the output head — the Node Transformation
+(NT) unit datapath of the paper. Row-tiled: each grid step processes a
+[TR, In] block through one MXU matmul, then applies bias, activation and an
+optional folded batch-norm (scale/shift) without another HBM round trip —
+the same fusion the HLS datapath gets from pipelining the MAC array into
+the normalisation stage.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TR = 128
+
+_ACTS = ("none", "relu", "sigmoid")
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, scale_ref, shift_ref, o_ref, *, act, bn):
+    y = x_ref[...] @ w_ref[...] + b_ref[...]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "sigmoid":
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    if bn:
+        y = y * scale_ref[...] + shift_ref[...]
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act", "tile_r", "bn"))
+def dense(x, w, b, scale=None, shift=None, *, act="none", tile_r=DEFAULT_TR, bn=False):
+    """y = act(x @ w + b) [* scale + shift if bn].
+
+    x: f32[R, In], w: f32[In, Out], b: f32[Out]
+    scale/shift: f32[Out] folded batch-norm parameters (bn=True)
+    act in {"none", "relu", "sigmoid"} (applied before BN fold, matching the
+    model's dense->relu->dense->BN ordering where BN follows a linear layer).
+    """
+    assert act in _ACTS, act
+    r, cin = x.shape
+    cin2, cout = w.shape
+    assert cin == cin2 and b.shape == (cout,)
+    if bn:
+        assert scale is not None and shift is not None
+        assert scale.shape == (cout,) and shift.shape == (cout,)
+    else:
+        scale = jnp.ones((cout,), x.dtype)
+        shift = jnp.zeros((cout,), x.dtype)
+
+    tr = min(tile_r, max(r, 1))
+    r_pad = ((r + tr - 1) // tr) * tr if r > 0 else tr
+    if r_pad != r:
+        x = jnp.pad(x, ((0, r_pad - r), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, act=act, bn=bn),
+        grid=(r_pad // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tr, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, cout), x.dtype),
+        interpret=True,
+    )(x, w, b, scale, shift)
+    return out[:r]
+
+
+def vmem_bytes(tile_r=DEFAULT_TR, cin=32, cout=32, dtype_bytes=4):
+    return (tile_r * cin + cin * cout + 3 * cout + tile_r * cout) * dtype_bytes
+
+
+def mxu_flops(r, cin, cout):
+    return 2 * r * cin * cout

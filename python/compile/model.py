@@ -1,0 +1,197 @@
+"""L2: L1DeepMETv2 — EdgeConv-based dynamic GNN for MET regression in JAX.
+
+Architecture (paper §II, Fig. 1), shared bit-exactly with the Rust reference
+model via artifacts/weights.json:
+
+  Embedding stage
+      cont_norm = (cont - MEAN) / STD                         [N, 6]
+      h0 = concat(cont_norm, Emb_pdg[pdg], Emb_q[q])          [N, 22]
+      x0 = BN0( relu(h0 W1 + b1) W2 + b2 )                    [N, 32]
+  EdgeConv layer l in {1, 2}  (Eq. 2)
+      m_uv = relu(concat(x_u, x_v - x_u) Wa_l + ba_l) Wb_l + bb_l   [E, 32]
+      a_u  = masked mean of incoming messages                  [N, 32]
+      x_l  = BN_l(x_{l-1} + a_u)         (residual)            [N, 32]
+  Output head
+      w_i  = sigmoid( relu(x2 Wo1 + bo1) Wo2 + bo2 )           [N, 1]
+      met  = ( sum_i w_i px_i, sum_i w_i py_i )                [2]
+
+Two execution paths compute the same function:
+  - forward(..., use_pallas=True): the Pallas kernels (edgeconv/aggregate/
+    dense) — this is what gets AOT-lowered into the HLO artifacts.
+  - forward(..., use_pallas=False): the pure-jnp ref path — the oracle, and
+    the differentiable path used by train.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import edgeconv as k_edgeconv
+from .kernels import aggregate as k_aggregate
+from .kernels import dense as k_dense
+
+# ---------------------------------------------------------------------------
+# Model hyper-parameters (fixed by the paper: embedding dim 32, message dim
+# 32, 6 continuous + 2 categorical input features).
+# ---------------------------------------------------------------------------
+N_CONT = 6          # [pt, eta, phi, px, py, dz]
+N_CAT = 2           # [pdg_class, charge_class]
+N_PDG = 8           # particle-class vocabulary
+N_CHARGE = 3        # -1 / 0 / +1
+EMB_DIM = 8         # categorical embedding width
+IN_DIM = N_CONT + 2 * EMB_DIM   # 22
+HID_EMB = 64        # embedding MLP hidden
+NODE_DIM = 32       # node/edge embedding dim (paper: 32)
+HID_EDGE = 64       # phi MLP hidden
+HID_OUT = 16        # output head hidden
+N_LAYERS = 2        # EdgeConv layers (paper: two message-passing layers)
+
+# Feature normalisation constants (fixed; mirrored in rust/src/model).
+CONT_MEAN = jnp.array([5.0, 0.0, 0.0, 0.0, 0.0, 0.0], dtype=jnp.float32)
+CONT_STD = jnp.array([10.0, 2.0, 1.8, 7.0, 7.0, 1.0], dtype=jnp.float32)
+
+# Indices of px/py in the raw continuous feature vector (used for MET).
+IDX_PX, IDX_PY = 3, 4
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(seed=0):
+    """He-initialised parameters; BN starts as identity (scale=1, shift=0)."""
+    key = jax.random.PRNGKey(seed)
+    ks = list(jax.random.split(key, 16))
+
+    def he(k, shape):
+        fan_in = shape[0]
+        return (jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)).astype(
+            jnp.float32
+        )
+
+    params = {
+        "emb_pdg": 0.1 * jax.random.normal(ks[0], (N_PDG, EMB_DIM)).astype(jnp.float32),
+        "emb_q": 0.1 * jax.random.normal(ks[1], (N_CHARGE, EMB_DIM)).astype(jnp.float32),
+        "w1": he(ks[2], (IN_DIM, HID_EMB)),
+        "b1": jnp.zeros((HID_EMB,), jnp.float32),
+        "w2": he(ks[3], (HID_EMB, NODE_DIM)),
+        "b2": jnp.zeros((NODE_DIM,), jnp.float32),
+        "bn0_scale": jnp.ones((NODE_DIM,), jnp.float32),
+        "bn0_shift": jnp.zeros((NODE_DIM,), jnp.float32),
+        "wo1": he(ks[4], (NODE_DIM, HID_OUT)),
+        "bo1": jnp.zeros((HID_OUT,), jnp.float32),
+        "wo2": he(ks[5], (HID_OUT, 1)),
+        "bo2": jnp.zeros((1,), jnp.float32),
+    }
+    for l in range(N_LAYERS):
+        params[f"ec{l}_wa"] = he(ks[6 + 2 * l], (2 * NODE_DIM, HID_EDGE))
+        params[f"ec{l}_ba"] = jnp.zeros((HID_EDGE,), jnp.float32)
+        params[f"ec{l}_wb"] = he(ks[7 + 2 * l], (HID_EDGE, NODE_DIM))
+        params[f"ec{l}_bb"] = jnp.zeros((NODE_DIM,), jnp.float32)
+        params[f"ec{l}_bn_scale"] = jnp.ones((NODE_DIM,), jnp.float32)
+        params[f"ec{l}_bn_shift"] = jnp.zeros((NODE_DIM,), jnp.float32)
+    return params
+
+
+def params_to_jsonable(params):
+    """Flatten params to {name: {shape, data}} for weights.json."""
+    out = {}
+    for k, v in params.items():
+        arr = jnp.asarray(v)
+        out[k] = {
+            "shape": list(arr.shape),
+            "data": [float(x) for x in arr.reshape(-1)],
+        }
+    return out
+
+
+def params_from_jsonable(obj):
+    return {
+        k: jnp.array(v["data"], dtype=jnp.float32).reshape(v["shape"])
+        for k, v in obj.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _embed(params, cont, cat, node_mask, use_pallas):
+    cont_norm = (cont - CONT_MEAN) / CONT_STD
+    pdg = jnp.clip(cat[:, 0], 0, N_PDG - 1)
+    q = jnp.clip(cat[:, 1], 0, N_CHARGE - 1)
+    e_pdg = jnp.take(params["emb_pdg"], pdg, axis=0)
+    e_q = jnp.take(params["emb_q"], q, axis=0)
+    h0 = jnp.concatenate([cont_norm, e_pdg, e_q], axis=-1)  # [N, 22]
+    if use_pallas:
+        h1 = k_dense.dense(h0, params["w1"], params["b1"], act="relu")
+        x0 = k_dense.dense(
+            h1, params["w2"], params["b2"],
+            params["bn0_scale"], params["bn0_shift"], bn=True,
+        )
+    else:
+        h1 = ref.dense_relu(h0, params["w1"], params["b1"])
+        x0 = ref.batchnorm_fold(
+            ref.dense(h1, params["w2"], params["b2"]),
+            params["bn0_scale"], params["bn0_shift"],
+        )
+    return x0 * node_mask[:, None]
+
+
+def _edgeconv_layer(params, l, x, src, dst, adj, use_pallas):
+    xu = ref.gather_rows(x, src)  # endpoint gathers live at L2 (host side of
+    xv = ref.gather_rows(x, dst)  # the MP unit); kernels get dense tiles.
+    wa, ba = params[f"ec{l}_wa"], params[f"ec{l}_ba"]
+    wb, bb = params[f"ec{l}_wb"], params[f"ec{l}_bb"]
+    if use_pallas:
+        msg = k_edgeconv.edgeconv_messages(xu, xv, wa, ba, wb, bb)
+        agg = k_aggregate.aggregate_mean(adj, msg)
+    else:
+        msg = ref.edgeconv_messages(xu, xv, wa, ba, wb, bb)
+        agg = ref.aggregate_mean(adj, msg)
+    y = x + agg  # residual
+    return ref.batchnorm_fold(
+        y, params[f"ec{l}_bn_scale"], params[f"ec{l}_bn_shift"]
+    )
+
+
+def _head(params, x, use_pallas):
+    if use_pallas:
+        h = k_dense.dense(x, params["wo1"], params["bo1"], act="relu")
+        w = k_dense.dense(h, params["wo2"], params["bo2"], act="sigmoid")
+    else:
+        h = ref.dense_relu(x, params["wo1"], params["bo1"])
+        w = ref.sigmoid(ref.dense(h, params["wo2"], params["bo2"]))
+    return w[:, 0]
+
+
+def forward(params, cont, cat, src, dst, node_mask, edge_mask, *, use_pallas=False):
+    """Full L1DeepMETv2 forward.
+
+    cont: f32[N,6] raw continuous features; cat: i32[N,2]; src/dst: i32[E];
+    node_mask: f32[N]; edge_mask: f32[E].
+    Returns (weights f32[N], met_xy f32[2]).
+    """
+    n = cont.shape[0]
+    adj = ref.adjacency_from_dst(dst, edge_mask, n)  # [N, E]
+
+    x = _embed(params, cont, cat, node_mask, use_pallas)
+    for l in range(N_LAYERS):
+        x = _edgeconv_layer(params, l, x, src, dst, adj, use_pallas)
+        x = x * node_mask[:, None]
+
+    w = _head(params, x, use_pallas) * node_mask  # [N]
+    met_x = jnp.sum(w * cont[:, IDX_PX])
+    met_y = jnp.sum(w * cont[:, IDX_PY])
+    return w, jnp.stack([met_x, met_y])
+
+
+def forward_pallas(params, cont, cat, src, dst, node_mask, edge_mask):
+    """AOT entry point (what aot.py lowers)."""
+    return forward(
+        params, cont, cat, src, dst, node_mask, edge_mask, use_pallas=True
+    )
+
+
+def met_magnitude(met_xy):
+    return jnp.sqrt(met_xy[0] ** 2 + met_xy[1] ** 2)

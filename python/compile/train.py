@@ -1,0 +1,161 @@
+"""Training loop for L1DeepMETv2 (build-time only; produces Fig. 2 weights).
+
+Trains on synthetic events from events.py (the DELPHES substitute), using
+the differentiable ref path of model.py. Loss combines:
+  - per-particle weight supervision (BCE against the hard-scatter truth
+    label — the DeepMET recipe), and
+  - the MET regression error (Huber on the met vector),
+so the network learns to keep hard-scatter particles and drop pileup, which
+is exactly what beats PUPPI in Fig. 2 (PUPPI cannot use detector-smearing
+context; the GNN can).
+
+Writes artifacts/weights.json; re-running `make artifacts` afterwards bakes
+the trained weights into the HLO artifacts and regenerates testvec.json.
+
+Usage: python -m compile.train --steps 400 --batch 16 --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import events, model
+
+N_MAX, E_MAX = 128, 4096
+
+
+def make_batch(rng, batch_size):
+    """Generate a padded batch of events."""
+    out = {k: [] for k in ("cont", "cat", "src", "dst", "node_mask",
+                            "edge_mask", "weight_target", "true_met_xy")}
+    for _ in range(batch_size):
+        ev = events.generate_event(rng)
+        p = events.pad_event(ev, N_MAX, E_MAX)
+        for k in out:
+            out[k].append(p[k] if k != "true_met_xy" else p["true_met_xy"])
+    return {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
+
+
+def loss_fn(params, batch, w_bce=1.0, w_met=0.002):
+    def one(cont, cat, src, dst, nm, em, wt, true_met):
+        w, met = model.forward(params, cont, cat, src, dst, nm, em,
+                               use_pallas=False)
+        # BCE on per-particle weights (masked)
+        eps = 1e-6
+        wc = jnp.clip(w, eps, 1.0 - eps)
+        bce = -(wt * jnp.log(wc) + (1 - wt) * jnp.log(1.0 - wc))
+        bce = jnp.sum(bce * nm) / jnp.maximum(jnp.sum(nm), 1.0)
+        # Huber on the MET vector (delta=10 GeV, kept small relative to BCE
+        # so early training is driven by the well-conditioned BCE term).
+        # Momentum balance: sum(w * p) should recover the *visible* HS
+        # system, which recoils against the invisible vector: target is
+        # -true_met_xy (see events.py).
+        d = met + true_met
+        a = jnp.abs(d)
+        huber = jnp.sum(jnp.where(a < 10.0, 0.5 * d * d, 10.0 * (a - 5.0)))
+        return w_bce * bce + w_met * huber
+
+    losses = jax.vmap(one)(
+        batch["cont"], batch["cat"], batch["src"], batch["dst"],
+        batch["node_mask"], batch["edge_mask"], batch["weight_target"],
+        batch["true_met_xy"],
+    )
+    return jnp.mean(losses)
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    """Gradient clipping: rescale so the global L2 norm <= max_norm."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--resume", default=None,
+                    help="weights.json to warm-start from")
+    ap.add_argument("--w-met", type=float, default=0.002,
+                    help="MET-regression loss weight (raise in a second "
+                         "phase so the MET head learns the magnitude)")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    if args.resume and os.path.exists(args.resume):
+        with open(args.resume) as f:
+            params = model.params_from_jsonable(json.load(f))
+        print(f"resumed from {args.resume}")
+    else:
+        params = model.init_params(args.seed)
+    opt = adam_init(params)
+
+    import functools
+    grad_fn = jax.jit(
+        jax.value_and_grad(functools.partial(loss_fn, w_met=args.w_met))
+    )
+
+    os.makedirs(args.out, exist_ok=True)
+    log_path = os.path.join(args.out, "train_log.json")
+    log = []
+    t0 = time.time()
+    best = (float("inf"), params)
+    for step in range(args.steps):
+        batch = make_batch(rng, args.batch)
+        loss, grads = grad_fn(params, batch)
+        if not np.isfinite(float(loss)):
+            print(f"step {step}: non-finite loss, stopping early", flush=True)
+            break
+        grads, gnorm = clip_by_global_norm(grads, args.clip)
+        params, opt = adam_step(params, grads, opt, lr=args.lr)
+        if float(loss) < best[0]:
+            best = (float(loss), params)
+        if step % 20 == 0 or step == args.steps - 1:
+            entry = {"step": step, "loss": float(loss),
+                     "grad_norm": float(gnorm),
+                     "elapsed_s": time.time() - t0}
+            log.append(entry)
+            print(f"step {step:4d}  loss {float(loss):.4f}  |g| {float(gnorm):.2f}  "
+                  f"({entry['elapsed_s']:.0f}s)", flush=True)
+    params = best[1]  # export the best checkpoint, never a diverged one
+
+    wpath = os.path.join(args.out, "weights.json")
+    with open(wpath, "w") as f:
+        json.dump(model.params_to_jsonable(params), f)
+    with open(log_path, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"wrote {wpath} and {log_path}")
+    print("NOTE: re-run `make artifacts` (after touching python/compile/aot.py "
+          "or removing artifacts/.stamp) to bake the trained weights into the "
+          "HLO artifacts and refresh testvec.json.")
+
+
+if __name__ == "__main__":
+    main()

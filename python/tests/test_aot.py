@@ -1,0 +1,75 @@
+"""AOT pipeline checks: bucket ladder sync with Rust, HLO lowering sanity
+(no elided constants, correct I/O signature), and lowering determinism."""
+
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_buckets_match_rust_default_buckets():
+    """python/compile/aot.py BUCKETS must mirror rust graph::padding::
+    DEFAULT_BUCKETS — the Rust side picks artifacts by these shapes."""
+    rust_src = open("../rust/src/graph/padding.rs").read()
+    pairs = re.findall(r"n_max:\s*(\d+),\s*e_max:\s*(\d+)", rust_src)
+    rust_buckets = sorted((int(n), int(e)) for n, e in pairs[: len(aot.BUCKETS)])
+    assert sorted(aot.BUCKETS) == rust_buckets, (
+        f"python {aot.BUCKETS} vs rust {rust_buckets}"
+    )
+
+
+@pytest.fixture(scope="module")
+def lowered_text():
+    params = model.init_params(0)
+    lowered = aot.lower_bucket(params, 64, 768)
+    return aot.to_hlo_text(lowered)
+
+
+def test_hlo_has_no_elided_constants(lowered_text):
+    """The default HLO printer replaces big weight constants with
+    `constant({...})`, which would silently destroy the numerics after the
+    text round-trip (this bit us once; see aot.py)."""
+    assert "constant({...})" not in lowered_text
+
+
+def test_hlo_signature(lowered_text):
+    header = lowered_text.splitlines()[0]
+    # 6 inputs with the padded shapes, tuple of (weights, met_xy)
+    assert "f32[64,6]" in header
+    assert "s32[64,2]" in header
+    assert "s32[768]" in header
+    assert "(f32[64]{0}, f32[2]{0})" in header
+
+
+def test_lowering_deterministic():
+    params = model.init_params(0)
+    a = aot.to_hlo_text(aot.lower_bucket(params, 64, 768))
+    b = aot.to_hlo_text(aot.lower_bucket(params, 64, 768))
+    assert a == b
+
+
+def test_bucket_shapes_strictly_increase():
+    ns = [n for n, _ in aot.BUCKETS]
+    es = [e for _, e in aot.BUCKETS]
+    assert ns == sorted(ns) and len(set(ns)) == len(ns)
+    assert es == sorted(es) and len(set(es)) == len(es)
+
+
+def test_forward_matches_baked_signature_semantics():
+    """The artifact treats src/dst as i32 with padded zeros; running the
+    model function with exactly the artifact's input layout must work."""
+    params = model.init_params(0)
+    n, e = 64, 768
+    cont = jnp.zeros((n, 6), jnp.float32)
+    cat = jnp.zeros((n, 2), jnp.int32)
+    src = jnp.zeros((e,), jnp.int32)
+    dst = jnp.zeros((e,), jnp.int32)
+    nm = jnp.zeros((n,), jnp.float32).at[:3].set(1.0)
+    em = jnp.zeros((e,), jnp.float32)
+    w, met = model.forward_pallas(params, cont, cat, src, dst, nm, em)
+    assert w.shape == (n,)
+    assert met.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(w)))

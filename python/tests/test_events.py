@@ -1,0 +1,81 @@
+"""Event-generator physics invariants (the DELPHES substitute)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import events
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_momentum_balance(seed):
+    """Pre-smearing, the visible hard-scatter system recoils exactly
+    against the invisible vector: sum(HS p) = -true_met (up to the pT floor
+    clamp and smearing). With smearing the residual stays small."""
+    rng = np.random.default_rng(seed)
+    ev = events.generate_event(rng)
+    hs = ev["weight_target"] == 1.0
+    vis = ev["cont"][hs][:, 3:5].sum(axis=0)  # px, py of HS particles
+    residual = vis + ev["true_met_xy"]
+    # smearing is ~8% on pT; allow a generous envelope
+    scale = np.abs(ev["cont"][hs][:, 0]).sum()
+    assert np.linalg.norm(residual) < 0.35 * scale + 5.0, (
+        f"momentum imbalance {residual} (scale {scale})"
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_event_fields_sane(seed):
+    rng = np.random.default_rng(seed)
+    ev = events.generate_event(rng)
+    cont = ev["cont"]
+    assert np.all(np.isfinite(cont))
+    assert np.all(cont[:, 0] > 0)  # pt
+    assert np.all(cont[:, 0] <= 600)  # saturation clamp (+smearing headroom)
+    assert np.all(np.abs(cont[:, 1]) <= events.ETA_MAX)
+    assert np.all(np.abs(cont[:, 2]) <= np.pi + 1e-5)
+    # px/py consistent with pt/phi
+    np.testing.assert_allclose(cont[:, 3], cont[:, 0] * np.cos(cont[:, 2]), atol=1e-3)
+    np.testing.assert_allclose(cont[:, 4], cont[:, 0] * np.sin(cont[:, 2]), atol=1e-3)
+
+
+def test_true_met_spectrum_fills_fig2_range():
+    """Fig. 2 bins span 0-120 GeV; the exponential invisible spectrum must
+    populate that range."""
+    rng = np.random.default_rng(0)
+    mets = []
+    for _ in range(400):
+        ev = events.generate_event(rng)
+        mets.append(float(np.linalg.norm(ev["true_met_xy"])))
+    mets = np.asarray(mets)
+    assert mets.mean() > 10.0
+    assert (mets > 50).sum() > 10
+    assert (mets < 20).sum() > 100
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), delta=st.floats(0.3, 1.2))
+def test_edges_within_threshold(seed, delta):
+    rng = np.random.default_rng(seed)
+    ev = events.generate_event(rng)
+    src, dst = events.build_edges(ev["cont"], delta)
+    eta, phi = ev["cont"][:, 1], ev["cont"][:, 2]
+    for u, v in zip(src[:100], dst[:100]):
+        dphi = (phi[v] - phi[u] + np.pi) % (2 * np.pi) - np.pi
+        assert (eta[v] - eta[u]) ** 2 + dphi**2 < delta**2 + 1e-5
+        assert u != v
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pad_event_endpoint_invariants(seed):
+    rng = np.random.default_rng(seed)
+    ev = events.generate_event(rng)
+    p = events.pad_event(ev, 128, 4096)
+    n, e = p["n"], p["e"]
+    assert p["node_mask"][:n].all() and not p["node_mask"][n:].any()
+    assert p["edge_mask"][:e].all() and not p["edge_mask"][e:].any()
+    if e:
+        assert p["src"][:e].max() < n
+        assert p["dst"][:e].max() < n

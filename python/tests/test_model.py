@@ -1,0 +1,161 @@
+"""Model-level tests: pallas path == ref path, masking invariants, MET math."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, events
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+def make_inputs(rng, n_max=64, e_max=256, n=None, e=None):
+    n = n if n is not None else int(rng.integers(1, n_max + 1))
+    e = e if e is not None else int(rng.integers(0, e_max + 1))
+    cont = rng.standard_normal((n_max, 6)).astype(np.float32) * 5.0
+    cat = np.stack(
+        [rng.integers(0, model.N_PDG, n_max), rng.integers(0, model.N_CHARGE, n_max)],
+        axis=1,
+    ).astype(np.int32)
+    src = rng.integers(0, max(n, 1), e_max).astype(np.int32)
+    dst = rng.integers(0, max(n, 1), e_max).astype(np.int32)
+    node_mask = np.zeros(n_max, np.float32)
+    node_mask[:n] = 1.0
+    edge_mask = np.zeros(e_max, np.float32)
+    edge_mask[:e] = 1.0
+    return tuple(map(jnp.array, (cont, cat, src, dst, node_mask, edge_mask)))
+
+
+def test_pallas_path_equals_ref_path(params):
+    rng = np.random.default_rng(0)
+    inputs = make_inputs(rng)
+    w_ref, met_ref = model.forward(params, *inputs, use_pallas=False)
+    w_pl, met_pl = model.forward(params, *inputs, use_pallas=True)
+    np.testing.assert_allclose(w_pl, w_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(met_pl, met_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pallas_equals_ref_sweep(seed):
+    params = model.init_params(0)
+    rng = np.random.default_rng(seed)
+    inputs = make_inputs(rng)
+    w_ref, met_ref = model.forward(params, *inputs, use_pallas=False)
+    w_pl, met_pl = model.forward(params, *inputs, use_pallas=True)
+    np.testing.assert_allclose(w_pl, w_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(met_pl, met_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_padded_nodes_have_zero_weight(params):
+    rng = np.random.default_rng(1)
+    inputs = make_inputs(rng, n=10, e=30)
+    w, _ = model.forward(params, *inputs, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(w)[10:], 0.0, atol=1e-7)
+
+
+def test_padding_invariance(params):
+    """The same physical graph padded into two different buckets must give
+    identical (up to fp) weights on the real nodes and the same MET."""
+    rng = np.random.default_rng(2)
+    n, e = 20, 50
+    cont = rng.standard_normal((n, 6)).astype(np.float32) * 5.0
+    cat = np.stack(
+        [rng.integers(0, 8, n), rng.integers(0, 3, n)], axis=1
+    ).astype(np.int32)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+
+    def padded(n_max, e_max):
+        c = np.zeros((n_max, 6), np.float32); c[:n] = cont
+        k = np.zeros((n_max, 2), np.int32); k[:n] = cat
+        s = np.zeros(e_max, np.int32); s[:e] = src
+        d = np.zeros(e_max, np.int32); d[:e] = dst
+        nm = np.zeros(n_max, np.float32); nm[:n] = 1
+        em = np.zeros(e_max, np.float32); em[:e] = 1
+        return tuple(map(jnp.array, (c, k, s, d, nm, em)))
+
+    w1, met1 = model.forward(params, *padded(32, 64), use_pallas=False)
+    w2, met2 = model.forward(params, *padded(64, 256), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(w1)[:n], np.asarray(w2)[:n],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(met1, met2, rtol=1e-4, atol=1e-5)
+
+
+def test_met_is_weighted_momentum_sum(params):
+    rng = np.random.default_rng(3)
+    inputs = make_inputs(rng, n=16, e=40)
+    w, met = model.forward(params, *inputs, use_pallas=False)
+    cont = np.asarray(inputs[0])
+    want_x = float(np.sum(np.asarray(w) * cont[:, model.IDX_PX]))
+    want_y = float(np.sum(np.asarray(w) * cont[:, model.IDX_PY]))
+    np.testing.assert_allclose(met, [want_x, want_y], rtol=1e-5, atol=1e-5)
+
+
+def test_weights_in_unit_interval(params):
+    rng = np.random.default_rng(4)
+    inputs = make_inputs(rng)
+    w, _ = model.forward(params, *inputs, use_pallas=False)
+    w = np.asarray(w)
+    assert np.all(w >= 0.0) and np.all(w <= 1.0)
+
+
+def test_isolated_graph_still_runs(params):
+    """Zero edges: model reduces to embedding + BN + head on each node."""
+    rng = np.random.default_rng(5)
+    inputs = make_inputs(rng, n=8, e=0)
+    w, met = model.forward(params, *inputs, use_pallas=False)
+    assert np.all(np.isfinite(np.asarray(w)))
+    assert np.all(np.isfinite(np.asarray(met)))
+
+
+def test_params_json_roundtrip(params):
+    obj = model.params_to_jsonable(params)
+    back = model.params_from_jsonable(obj)
+    for k in params:
+        np.testing.assert_allclose(back[k], params[k], rtol=0, atol=0)
+
+
+def test_event_generator_schema():
+    rng = np.random.default_rng(6)
+    ev = events.generate_event(rng)
+    n = ev["cont"].shape[0]
+    assert ev["cont"].shape == (n, 6)
+    assert ev["cat"].shape == (n, 2)
+    assert ev["cat"][:, 0].max() < 8 and ev["cat"][:, 1].max() < 3
+    assert ev["true_met_xy"].shape == (2,)
+    assert np.all(ev["cont"][:, 0] > 0)  # pt positive
+    assert np.all(np.abs(ev["cont"][:, 1]) <= events.ETA_MAX)
+
+
+def test_edge_construction_symmetric_and_thresholded():
+    rng = np.random.default_rng(7)
+    ev = events.generate_event(rng)
+    src, dst = events.build_edges(ev["cont"], delta=0.8)
+    pairs = set(zip(src.tolist(), dst.tolist()))
+    # undirected: (u,v) present iff (v,u) present
+    for u, v in pairs:
+        assert (v, u) in pairs
+        assert u != v
+    eta, phi = ev["cont"][:, 1], ev["cont"][:, 2]
+    for u, v in list(pairs)[:200]:
+        dphi = (phi[v] - phi[u] + np.pi) % (2 * np.pi) - np.pi
+        dr2 = (eta[v] - eta[u]) ** 2 + dphi ** 2
+        assert dr2 < 0.8 ** 2 + 1e-6
+
+
+def test_pad_event_respects_buckets():
+    rng = np.random.default_rng(8)
+    ev = events.generate_event(rng, mean_pileup=100)
+    p = events.pad_event(ev, 64, 1024)
+    assert p["cont"].shape == (64, 6)
+    assert p["src"].shape == (1024,)
+    assert p["node_mask"].sum() == p["n"]
+    assert p["edge_mask"].sum() == p["e"]
+    # all edge endpoints point at real nodes
+    assert p["src"][: p["e"]].max(initial=0) < p["n"]
+    assert p["dst"][: p["e"]].max(initial=0) < p["n"]

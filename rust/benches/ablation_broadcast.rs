@@ -1,0 +1,115 @@
+//! Ablation A (§III-B.3): Node Embedding Broadcast vs Full Replication vs
+//! Multicast Bus — cycles and NE memory across graph sizes. The paper
+//! argues broadcast gives near-replication performance at a third of the
+//! memory, while the multicast bus serialises under load.
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::{BroadcastMode, DataflowEngine};
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::util::bench::Table;
+
+fn model() -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 77)).unwrap()
+}
+
+fn main() {
+    println!("=== Ablation A: target-embedding delivery designs (paper §III-B.3) ===\n");
+    let arch = ArchConfig::default();
+    let mut t = Table::new(&[
+        "pileup",
+        "nodes",
+        "edges",
+        "mode",
+        "layer cycles",
+        "vs broadcast",
+        "NE mem (KiB)",
+        "bcast stalls",
+        "bus deliveries",
+    ]);
+    for pu in [30.0, 80.0, 160.0] {
+        let mut gen =
+            EventGenerator::new(11, GeneratorConfig { mean_pileup: pu, ..Default::default() });
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let mut bcast_cycles = 0u64;
+        for (mode, name) in [
+            (BroadcastMode::Broadcast, "Broadcast (ours)"),
+            (BroadcastMode::FullReplication, "Full Replication"),
+            (BroadcastMode::MulticastBus, "Multicast Bus"),
+        ] {
+            let eng = DataflowEngine::with_mode(arch.clone(), model(), mode).unwrap();
+            let r = eng.run(&g);
+            let layer_cycles: u64 = r.breakdown.layers.iter().map(|l| l.cycles).sum();
+            if mode == BroadcastMode::Broadcast {
+                bcast_cycles = layer_cycles;
+            }
+            let stalls: u64 = r.breakdown.layers.iter().map(|l| l.broadcast_stalls).sum();
+            let deliveries: u64 = r.breakdown.layers.iter().map(|l| l.bus_deliveries).sum();
+            t.row(&[
+                format!("{pu:.0}"),
+                g.n.to_string(),
+                g.e.to_string(),
+                name.into(),
+                layer_cycles.to_string(),
+                format!("{:.2}x", layer_cycles as f64 / bcast_cycles as f64),
+                format!("{:.0}", r.ne_memory_bytes as f64 / 1024.0),
+                stalls.to_string(),
+                deliveries.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nWith the paper's datapath (ii_edge=96) the phi pipeline dominates and all\n\
+         three designs track each other — delivery is never the bottleneck, which is\n\
+         itself the justification for choosing the cheapest-memory design (broadcast).\n"
+    );
+
+    // --- delivery-bound fabric: beefy MACs expose the delivery trade-off ----
+    println!("=== same sweep on a delivery-bound fabric (dsp_per_mp=2048 -> ii_edge=3) ===\n");
+    let fast = ArchConfig { dsp_per_mp: 2048, ..ArchConfig::default() };
+    let mut t2 = Table::new(&[
+        "pileup",
+        "edges",
+        "mode",
+        "layer cycles",
+        "vs broadcast",
+        "NE mem (KiB)",
+    ]);
+    for pu in [80.0, 160.0] {
+        let mut gen =
+            EventGenerator::new(11, GeneratorConfig { mean_pileup: pu, ..Default::default() });
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let mut bcast_cycles = 0u64;
+        for (mode, name) in [
+            (BroadcastMode::Broadcast, "Broadcast (ours)"),
+            (BroadcastMode::FullReplication, "Full Replication"),
+            (BroadcastMode::MulticastBus, "Multicast Bus"),
+        ] {
+            let eng = DataflowEngine::with_mode(fast.clone(), model(), mode).unwrap();
+            let r = eng.run(&g);
+            let layer_cycles: u64 = r.breakdown.layers.iter().map(|l| l.cycles).sum();
+            if mode == BroadcastMode::Broadcast {
+                bcast_cycles = layer_cycles;
+            }
+            t2.row(&[
+                format!("{pu:.0}"),
+                g.e.to_string(),
+                name.into(),
+                layer_cycles.to_string(),
+                format!("{:.2}x", layer_cycles as f64 / bcast_cycles as f64),
+                format!("{:.0}", r.ne_memory_bytes as f64 / 1024.0),
+            ]);
+        }
+    }
+    t2.print();
+    println!(
+        "\nexpected shape here: Full Replication fastest (no delivery wait) at P_edge x\n\
+         memory; Multicast Bus slowest (serialised deliveries); Broadcast within a few\n\
+         percent of replication at 1/P_edge of its NE memory — the paper's trade-off."
+    );
+}

@@ -1,0 +1,63 @@
+//! Ablation C: parallelism sweep — latency vs resources over (P_edge,
+//! P_node). Shows the knee the paper's configuration sits on: more MP
+//! units cut cycles until broadcast/adapter serialisation dominates, while
+//! DSP/LUT grow linearly.
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::resource::{ResourceModel, ALVEO_U50};
+use dgnnflow::dataflow::DataflowEngine;
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::util::bench::Table;
+
+fn model() -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 99)).unwrap()
+}
+
+fn main() {
+    println!("=== Ablation C: parallelism sweep (P_edge, P_node) ===\n");
+    let mut gen =
+        EventGenerator::new(17, GeneratorConfig { mean_pileup: 90.0, ..Default::default() });
+    let ev = gen.generate();
+    let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+    println!("workload: {} nodes, {} edges\n", g.n, g.e);
+
+    let mut t = Table::new(&[
+        "P_edge",
+        "P_node",
+        "total cycles",
+        "E2E (us)",
+        "speedup vs 1x1",
+        "DSP",
+        "LUT",
+        "fits U50",
+    ]);
+    let mut base_cycles = 0u64;
+    for (pe, pn) in [(1usize, 1usize), (2, 1), (4, 2), (8, 4), (16, 8), (32, 16)] {
+        let arch = ArchConfig { p_edge: pe, p_node: pn, ..Default::default() };
+        let eng = DataflowEngine::new(arch.clone(), model()).unwrap();
+        let r = eng.run(&g);
+        if pe == 1 {
+            base_cycles = r.breakdown.total_cycles;
+        }
+        let u = ResourceModel::new(arch, ModelConfig::default(), 256, 12288).estimate();
+        t.row(&[
+            pe.to_string(),
+            pn.to_string(),
+            r.breakdown.total_cycles.to_string(),
+            format!("{:.1}", r.e2e_s * 1e6),
+            format!("{:.2}x", base_cycles as f64 / r.breakdown.total_cycles as f64),
+            u.dsp.to_string(),
+            u.lut.to_string(),
+            if u.fits(&ALVEO_U50) { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t.print();
+    println!(
+        "\nexpected shape: near-linear speedup at low parallelism, diminishing\n\
+         returns as the broadcast stream and adapter ports saturate; the paper's\n\
+         8x4 point balances speedup against U50 resources."
+    );
+}

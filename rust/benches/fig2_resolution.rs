@@ -1,0 +1,72 @@
+//! Fig. 2: MET resolution — Dynamic GNN vs traditional PUPPI, per true-MET
+//! bin. (The examples/met_resolution.rs driver is the full version; this
+//! bench regenerates the figure's rows with a fixed medium sample.)
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::met::{met_mag, overall_metrics, MetPair, ResolutionCurve};
+use dgnnflow::physics::puppi::{puppi_met_xy, puppi_weights, PuppiConfig};
+use dgnnflow::physics::EventGenerator;
+use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::util::bench::Table;
+
+fn main() {
+    println!("=== Fig. 2: MET resolution — Dynamic GNN vs PUPPI ===\n");
+    let dir = ModelRuntime::artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        println!("artifacts missing — run `make artifacts` (and ideally compile.train) first");
+        return;
+    }
+    let cfg = ModelConfig::from_meta(&dir.join("meta.json")).unwrap();
+    let weights = Weights::load(&dir.join("weights.json"), &cfg).unwrap();
+    let model = L1DeepMetV2::new(cfg, weights).unwrap();
+    let pcfg = PuppiConfig::default();
+
+    let n_events = 2500;
+    let mut gnn = ResolutionCurve::new(0.0, 120.0, 6);
+    let mut puppi = ResolutionCurve::new(0.0, 120.0, 6);
+    let mut gnn_all = Vec::new();
+    let mut puppi_all = Vec::new();
+    let mut gen = EventGenerator::with_seed(606);
+    for _ in 0..n_events {
+        let ev = gen.generate();
+        let t = ev.true_met() as f64;
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let out = model.forward(&g);
+        let gm = met_mag([-out.met_xy[0], -out.met_xy[1]]) as f64;
+        let pw = puppi_weights(&ev, &pcfg);
+        let pv = puppi_met_xy(&ev, &pw);
+        let pm = met_mag([-pv[0], -pv[1]]) as f64;
+        let gp = MetPair { true_met: t, reco_met: gm };
+        let pp = MetPair { true_met: t, reco_met: pm };
+        gnn.push(gp);
+        puppi.push(pp);
+        gnn_all.push(gp);
+        puppi_all.push(pp);
+    }
+
+    let mut t = Table::new(&["bin center (GeV)", "Dynamic GNN res", "PUPPI res", "GNN better?", "n"]);
+    for ((c, g, n), (_, p, _)) in gnn.resolve().into_iter().zip(puppi.resolve()) {
+        t.row(&[
+            format!("{c:.0}"),
+            format!("{g:.2}"),
+            format!("{p:.2}"),
+            if g < p { "yes".into() } else { "no".into() },
+            n.to_string(),
+        ]);
+    }
+    t.print();
+    let mg = overall_metrics(&gnn_all);
+    let mp = overall_metrics(&puppi_all);
+    println!(
+        "\noverall resolution: GNN {:.2} GeV vs PUPPI {:.2} GeV ({})",
+        mg.resolution,
+        mp.resolution,
+        if mg.resolution < mp.resolution {
+            "GNN wins — paper Fig. 2 shape reproduced"
+        } else {
+            "PUPPI wins — train longer (python -m compile.train)"
+        }
+    );
+}

@@ -1,0 +1,48 @@
+//! Table I: resource availability and usage on the AMD Alveo U50.
+//!
+//! Prints the analytic estimate for the default (paper) configuration next
+//! to the paper's published numbers, then a small parallelism sweep showing
+//! how utilisation scales (the quantity the model is for).
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::resource::{ResourceModel, ALVEO_U50};
+use dgnnflow::util::bench::Table;
+
+fn main() {
+    println!("=== Table I: resource availability and usage (AMD Alveo U50) ===\n");
+    let rm = ResourceModel::new(ArchConfig::default(), ModelConfig::default(), 256, 12288);
+    let est = rm.estimate();
+
+    let paper = [("LUT", 235_017u64), ("Register", 228_548), ("BRAM", 488), ("DSP", 601)];
+    let avail = [ALVEO_U50.lut, ALVEO_U50.register, ALVEO_U50.bram, ALVEO_U50.dsp];
+    let ours = [est.lut, est.register, est.bram, est.dsp];
+
+    let mut t = Table::new(&["Resource", "Available", "Paper usage", "Model estimate", "ratio"]);
+    for i in 0..4 {
+        t.row(&[
+            paper[i].0.to_string(),
+            avail[i].to_string(),
+            paper[i].1.to_string(),
+            ours[i].to_string(),
+            format!("{:.2}", ours[i] as f64 / paper[i].1 as f64),
+        ]);
+    }
+    t.print();
+    println!("\n(ratio ~1.0 = estimate matches the paper's synthesis point)\n");
+
+    println!("=== parallelism sweep (scaling behaviour) ===\n");
+    let mut t2 = Table::new(&["P_edge", "P_node", "LUT", "BRAM", "DSP", "fits U50"]);
+    for (pe, pn) in [(2usize, 1usize), (4, 2), (8, 4), (16, 8), (32, 16), (64, 16)] {
+        let arch = ArchConfig { p_edge: pe, p_node: pn, ..Default::default() };
+        let u = ResourceModel::new(arch, ModelConfig::default(), 256, 12288).estimate();
+        t2.row(&[
+            pe.to_string(),
+            pn.to_string(),
+            u.lut.to_string(),
+            u.bram.to_string(),
+            u.dsp.to_string(),
+            if u.fits(&ALVEO_U50) { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,66 @@
+//! Table II: average power consumption — DGNNFlow (FPGA) vs GPU vs CPU.
+//!
+//! Paper: FPGA 5.89 W | GPU 26.25 W | CPU 23.25 W -> 0.22x / 0.25x.
+//! The FPGA figure is activity-based from real simulator runs; GPU/CPU are
+//! the calibrated duty-cycle models (batch-1 serving).
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::{DataflowEngine, PowerModel};
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::EventGenerator;
+use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::util::bench::Table;
+
+fn load_model() -> L1DeepMetV2 {
+    let dir = ModelRuntime::artifacts_dir();
+    if dir.join("meta.json").exists() {
+        let cfg = ModelConfig::from_meta(&dir.join("meta.json")).unwrap();
+        let w = Weights::load(&dir.join("weights.json"), &cfg).unwrap();
+        L1DeepMetV2::new(cfg, w).unwrap()
+    } else {
+        let cfg = ModelConfig::default();
+        L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 0)).unwrap()
+    }
+}
+
+fn main() {
+    println!("=== Table II: average power consumption (batch size 1) ===\n");
+    let arch = ArchConfig::default();
+    let engine = DataflowEngine::new(arch.clone(), load_model()).unwrap();
+    let pm = PowerModel::new(arch);
+
+    // average the FPGA activity over a sample of real events
+    let mut gen = EventGenerator::with_seed(2);
+    let mut fpga_sum = 0.0;
+    let n = 25;
+    let mut last = None;
+    for _ in 0..n {
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let sim = engine.run(&g);
+        fpga_sum += pm.fpga_from_sim(&sim);
+        last = Some(sim);
+    }
+    let est = pm.table2(&last.unwrap());
+    let fpga_w = fpga_sum / n as f64;
+
+    let mut t = Table::new(&["", "FPGA", "GPU", "CPU", "FPGA vs GPU", "FPGA vs CPU"]);
+    t.row(&[
+        "measured (model)".into(),
+        format!("{:.2}W", fpga_w),
+        format!("{:.2}W", est.gpu_w),
+        format!("{:.2}W", est.cpu_w),
+        format!("{:.2}x", fpga_w / est.gpu_w),
+        format!("{:.2}x", fpga_w / est.cpu_w),
+    ]);
+    t.row(&[
+        "paper".into(),
+        "5.89W".into(),
+        "26.25W".into(),
+        "23.25W".into(),
+        "0.22x".into(),
+        "0.25x".into(),
+    ]);
+    t.print();
+}

@@ -1,0 +1,341 @@
+//! Typed configuration for every subsystem, loadable from JSON files and
+//! overridable from the CLI. One source of truth: defaults here mirror the
+//! paper's setup (Alveo U50 @ 200 MHz, dim-32 model, delta = 0.8).
+
+use std::path::Path;
+
+use crate::util::json::{self, Value};
+
+/// Model hyper-parameters. Must match python/compile/model.py — the Rust
+/// reference model and the artifact loader both validate against
+/// artifacts/meta.json at startup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub n_cont: usize,
+    pub n_cat: usize,
+    pub n_pdg: usize,
+    pub n_charge: usize,
+    pub emb_dim: usize,
+    pub hid_emb: usize,
+    pub node_dim: usize,
+    pub hid_edge: usize,
+    pub hid_out: usize,
+    pub n_layers: usize,
+    pub cont_mean: Vec<f32>,
+    pub cont_std: Vec<f32>,
+    pub idx_px: usize,
+    pub idx_py: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            n_cont: 6,
+            n_cat: 2,
+            n_pdg: 8,
+            n_charge: 3,
+            emb_dim: 8,
+            hid_emb: 64,
+            node_dim: 32,
+            hid_edge: 64,
+            hid_out: 16,
+            n_layers: 2,
+            cont_mean: vec![5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            cont_std: vec![10.0, 2.0, 1.8, 7.0, 7.0, 1.0],
+            idx_px: 3,
+            idx_py: 4,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Load from artifacts/meta.json (written by aot.py).
+    pub fn from_meta(path: &Path) -> anyhow::Result<Self> {
+        let v = json::parse_file(path)?;
+        Ok(ModelConfig {
+            n_cont: v.get("n_cont")?.as_usize()?,
+            n_cat: v.get("n_cat")?.as_usize()?,
+            n_pdg: v.get("n_pdg")?.as_usize()?,
+            n_charge: v.get("n_charge")?.as_usize()?,
+            emb_dim: v.get("emb_dim")?.as_usize()?,
+            hid_emb: v.get("hid_emb")?.as_usize()?,
+            node_dim: v.get("node_dim")?.as_usize()?,
+            hid_edge: v.get("hid_edge")?.as_usize()?,
+            hid_out: v.get("hid_out")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            cont_mean: v.get("cont_mean")?.as_f32_vec()?,
+            cont_std: v.get("cont_std")?.as_f32_vec()?,
+            idx_px: v.get("idx_px")?.as_usize()?,
+            idx_py: v.get("idx_py")?.as_usize()?,
+        })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.n_cont + 2 * self.emb_dim
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cont_mean.len() == self.n_cont, "cont_mean len");
+        anyhow::ensure!(self.cont_std.len() == self.n_cont, "cont_std len");
+        anyhow::ensure!(self.cont_std.iter().all(|&s| s > 0.0), "cont_std > 0");
+        anyhow::ensure!(self.idx_px < self.n_cont && self.idx_py < self.n_cont, "px/py idx");
+        anyhow::ensure!(self.n_layers >= 1, "need >= 1 EdgeConv layer");
+        Ok(())
+    }
+}
+
+/// DGNNFlow hardware-architecture parameters (the simulated fabric).
+/// Defaults follow the paper: Alveo U50, 200 MHz, dim-32 datapath.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchConfig {
+    /// Number of Message-Passing units (parallel edge lanes).
+    pub p_edge: usize,
+    /// Number of Node-Transformation units (parallel node lanes).
+    pub p_node: usize,
+    /// Clock frequency in Hz (paper: 200 MHz).
+    pub clock_hz: f64,
+    /// Streaming FIFO depth (words) between units.
+    pub fifo_depth: usize,
+    /// SIMD lanes per unit datapath (elements processed per cycle).
+    pub lanes: usize,
+    /// DSP slices allocated per MP unit's MLP MAC array.
+    pub dsp_per_mp: usize,
+    /// DSP slices per NT unit.
+    pub dsp_per_nt: usize,
+    /// Host->device PCIe bandwidth (bytes/s) for the transfer model.
+    pub pcie_bw: f64,
+    /// Fixed PCIe/driver latency per transfer (seconds).
+    pub pcie_lat: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            p_edge: 8,
+            p_node: 4,
+            clock_hz: 200e6,
+            fifo_depth: 64,
+            lanes: 8,
+            dsp_per_mp: 64,
+            dsp_per_nt: 16,
+            pcie_bw: 12e9,   // PCIe gen3 x16 effective
+            pcie_lat: 40e-6, // XRT kernel-invocation + DMA setup per transfer
+                             // (measured XRT overheads are O(50-100us); the
+                             // paper's E2E includes this host-driver cost)
+        }
+    }
+}
+
+impl ArchConfig {
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let d = ArchConfig::default();
+        let g_us = |k: &str, dft: usize| -> anyhow::Result<usize> {
+            Ok(match v.opt(k) {
+                Some(x) => x.as_usize()?,
+                None => dft,
+            })
+        };
+        let g_f = |k: &str, dft: f64| -> anyhow::Result<f64> {
+            Ok(match v.opt(k) {
+                Some(x) => x.as_f64()?,
+                None => dft,
+            })
+        };
+        let c = ArchConfig {
+            p_edge: g_us("p_edge", d.p_edge)?,
+            p_node: g_us("p_node", d.p_node)?,
+            clock_hz: g_f("clock_hz", d.clock_hz)?,
+            fifo_depth: g_us("fifo_depth", d.fifo_depth)?,
+            lanes: g_us("lanes", d.lanes)?,
+            dsp_per_mp: g_us("dsp_per_mp", d.dsp_per_mp)?,
+            dsp_per_nt: g_us("dsp_per_nt", d.dsp_per_nt)?,
+            pcie_bw: g_f("pcie_bw", d.pcie_bw)?,
+            pcie_lat: g_f("pcie_lat", d.pcie_lat)?,
+        };
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.p_edge >= 1 && self.p_node >= 1, "need >= 1 unit");
+        anyhow::ensure!(
+            self.p_node <= self.p_edge,
+            "paper layout: P_node banks among P_edge total banks (p_node <= p_edge)"
+        );
+        anyhow::ensure!(self.clock_hz > 0.0, "clock");
+        anyhow::ensure!(self.fifo_depth >= 2, "fifo depth >= 2");
+        anyhow::ensure!(self.lanes >= 1, "lanes");
+        Ok(())
+    }
+
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+}
+
+/// Trigger-system (L3 coordinator) parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TriggerConfig {
+    /// Simulated collision rate into L1T (paper: 40 MHz).
+    pub input_rate_hz: f64,
+    /// Target accept rate out of L1T (paper: 750 kHz).
+    pub target_accept_hz: f64,
+    /// MET threshold (GeV) for accept decisions.
+    pub met_threshold: f64,
+    /// Max events queued before backpressure drops (detector buffers are finite).
+    pub queue_capacity: usize,
+    /// Worker threads in the serve loop.
+    pub workers: usize,
+    /// Dynamic batcher: max batch before flush.
+    pub max_batch: usize,
+    /// Dynamic batcher: max wait before flushing a partial batch (us).
+    pub batch_timeout_us: u64,
+    /// Mean pileup interactions per event (HL-LHC: up to 200; default keeps
+    /// graphs inside the mid artifact bucket).
+    pub mean_pileup: f64,
+    /// Graph construction radius delta (paper Eq. 1).
+    pub delta_r: f64,
+}
+
+impl Default for TriggerConfig {
+    fn default() -> Self {
+        TriggerConfig {
+            input_rate_hz: 40e6,
+            target_accept_hz: 750e3,
+            met_threshold: 40.0,
+            queue_capacity: 4096,
+            workers: 4,
+            max_batch: 8,
+            batch_timeout_us: 100,
+            mean_pileup: 60.0,
+            delta_r: 0.8,
+        }
+    }
+}
+
+impl TriggerConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.input_rate_hz > 0.0, "input rate");
+        anyhow::ensure!(
+            self.target_accept_hz < self.input_rate_hz,
+            "accept rate must be below input rate"
+        );
+        anyhow::ensure!(self.queue_capacity > 0 && self.workers > 0, "capacity/workers");
+        anyhow::ensure!(self.max_batch >= 1, "max batch");
+        anyhow::ensure!(self.delta_r > 0.0, "delta_r");
+        Ok(())
+    }
+}
+
+/// Everything together, as loaded by the binary.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub model: ModelConfig,
+    pub arch: ArchConfig,
+    pub trigger: TriggerConfig,
+}
+
+impl Config {
+    /// Load a combined config JSON: {"arch": {...}, "trigger": {...}}.
+    /// Missing sections fall back to defaults; model config always comes
+    /// from artifacts/meta.json when artifacts are present.
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let v = json::parse_file(path)?;
+        let arch = match v.opt("arch") {
+            Some(a) => ArchConfig::from_json(a)?,
+            None => ArchConfig::default(),
+        };
+        let mut trigger = TriggerConfig::default();
+        if let Some(t) = v.opt("trigger") {
+            if let Some(x) = t.opt("input_rate_hz") {
+                trigger.input_rate_hz = x.as_f64()?;
+            }
+            if let Some(x) = t.opt("target_accept_hz") {
+                trigger.target_accept_hz = x.as_f64()?;
+            }
+            if let Some(x) = t.opt("met_threshold") {
+                trigger.met_threshold = x.as_f64()?;
+            }
+            if let Some(x) = t.opt("queue_capacity") {
+                trigger.queue_capacity = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("workers") {
+                trigger.workers = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("max_batch") {
+                trigger.max_batch = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("batch_timeout_us") {
+                trigger.batch_timeout_us = x.as_usize()? as u64;
+            }
+            if let Some(x) = t.opt("mean_pileup") {
+                trigger.mean_pileup = x.as_f64()?;
+            }
+            if let Some(x) = t.opt("delta_r") {
+                trigger.delta_r = x.as_f64()?;
+            }
+        }
+        trigger.validate()?;
+        Ok(Config { model: ModelConfig::default(), arch, trigger })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ModelConfig::default().validate().unwrap();
+        ArchConfig::default().validate().unwrap();
+        TriggerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn model_in_dim() {
+        assert_eq!(ModelConfig::default().in_dim(), 22);
+    }
+
+    #[test]
+    fn arch_rejects_bad_layouts() {
+        let mut a = ArchConfig::default();
+        a.p_node = a.p_edge + 1; // more NT banks than total banks
+        assert!(a.validate().is_err());
+        let mut b = ArchConfig::default();
+        b.fifo_depth = 1;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn trigger_rejects_accept_above_input() {
+        let mut t = TriggerConfig::default();
+        t.target_accept_hz = t.input_rate_hz * 2.0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn arch_from_json_partial_override() {
+        let v = json::parse(r#"{"p_edge": 16, "fifo_depth": 128}"#).unwrap();
+        let a = ArchConfig::from_json(&v).unwrap();
+        assert_eq!(a.p_edge, 16);
+        assert_eq!(a.fifo_depth, 128);
+        assert_eq!(a.p_node, ArchConfig::default().p_node);
+    }
+
+    #[test]
+    fn config_from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("dgnnflow_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"arch": {"p_edge": 4, "p_node": 2}, "trigger": {"met_threshold": 55.5, "workers": 2}}"#,
+        )
+        .unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.arch.p_edge, 4);
+        assert_eq!(c.trigger.met_threshold, 55.5);
+        assert_eq!(c.trigger.workers, 2);
+        assert_eq!(c.trigger.max_batch, TriggerConfig::default().max_batch);
+    }
+}

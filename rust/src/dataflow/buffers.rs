@@ -1,0 +1,122 @@
+//! Double-buffered Node Embedding (NE) banks.
+//!
+//! FlowGNN's memory optimisation, kept in DGNNFlow: two NE buffers swap
+//! roles each layer — the layer reads buffer A and writes buffer B, the
+//! next layer reads B and writes A. The buffer is partitioned into P_edge
+//! banks (read side, one per MP unit) and written through P_node banks by
+//! the NT units.
+
+use crate::model::Mat;
+
+/// Ping-pong NE buffer pair.
+#[derive(Clone, Debug)]
+pub struct DoubleBuffer {
+    a: Mat,
+    b: Mat,
+    /// true: read A / write B; false: read B / write A.
+    phase: bool,
+    pub swaps: u64,
+}
+
+impl DoubleBuffer {
+    pub fn new(n: usize, d: usize) -> Self {
+        DoubleBuffer { a: Mat::zeros(n, d), b: Mat::zeros(n, d), phase: true, swaps: 0 }
+    }
+
+    /// Initialise the read buffer with the embedding-stage output.
+    pub fn load(&mut self, x: Mat) {
+        if self.phase {
+            self.a = x;
+        } else {
+            self.b = x;
+        }
+    }
+
+    pub fn read(&self) -> &Mat {
+        if self.phase {
+            &self.a
+        } else {
+            &self.b
+        }
+    }
+
+    pub fn write(&mut self) -> &mut Mat {
+        if self.phase {
+            &mut self.b
+        } else {
+            &mut self.a
+        }
+    }
+
+    /// Read and write views simultaneously (NT writes while MP reads).
+    pub fn split(&mut self) -> (&Mat, &mut Mat) {
+        if self.phase {
+            (&self.a, &mut self.b)
+        } else {
+            (&self.b, &mut self.a)
+        }
+    }
+
+    /// Layer barrier: swap roles (paper: "Input and Output NE buffers are
+    /// swapped for the subsequent GNN layer").
+    pub fn swap(&mut self) {
+        self.phase = !self.phase;
+        self.swaps += 1;
+    }
+
+    /// Total embedding storage in bytes (both buffers + the broadcast's
+    /// single intermediate copy).
+    pub fn footprint_bytes(&self, with_broadcast_copy: bool) -> usize {
+        let one = self.a.rows * self.a.cols * 4;
+        if with_broadcast_copy {
+            3 * one
+        } else {
+            2 * one
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_roles() {
+        let mut db = DoubleBuffer::new(4, 2);
+        db.write().set(0, 0, 5.0);
+        assert_eq!(db.read().at(0, 0), 0.0, "write side is not read side");
+        db.swap();
+        assert_eq!(db.read().at(0, 0), 5.0, "after swap the written value is visible");
+        db.write().set(1, 1, 7.0);
+        db.swap();
+        assert_eq!(db.read().at(1, 1), 7.0);
+        assert_eq!(db.swaps, 2);
+    }
+
+    #[test]
+    fn load_targets_read_side() {
+        let mut db = DoubleBuffer::new(2, 2);
+        let mut m = Mat::zeros(2, 2);
+        m.set(0, 1, 3.0);
+        db.load(m);
+        assert_eq!(db.read().at(0, 1), 3.0);
+    }
+
+    #[test]
+    fn split_gives_both_views() {
+        let mut db = DoubleBuffer::new(2, 2);
+        db.load(Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        let (r, w) = db.split();
+        assert_eq!(r.at(1, 0), 3.0);
+        w.set(0, 0, 9.0);
+        db.swap();
+        assert_eq!(db.read().at(0, 0), 9.0);
+    }
+
+    #[test]
+    fn footprint() {
+        let db = DoubleBuffer::new(128, 32);
+        assert_eq!(db.footprint_bytes(false), 2 * 128 * 32 * 4);
+        assert_eq!(db.footprint_bytes(true), 3 * 128 * 32 * 4);
+    }
+}

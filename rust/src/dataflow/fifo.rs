@@ -1,0 +1,136 @@
+//! Cycle-level streaming FIFO with finite depth and backpressure — the
+//! interconnect primitive of the whole fabric (the paper's units talk
+//! exclusively over "streaming FIFOs").
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO with occupancy/stall accounting.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    depth: usize,
+    q: VecDeque<T>,
+    /// total successful pushes/pops (throughput accounting)
+    pub pushed: u64,
+    pub popped: u64,
+    /// rejected pushes (producer stalled on full FIFO)
+    pub push_stalls: u64,
+    /// occupancy high-water mark
+    pub max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1);
+        Fifo {
+            depth,
+            q: VecDeque::with_capacity(depth),
+            pushed: 0,
+            popped: 0,
+            push_stalls: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.depth
+    }
+
+    pub fn free(&self) -> usize {
+        self.depth - self.q.len()
+    }
+
+    /// Try to push; returns false (and counts a stall) when full.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.is_full() {
+            self.push_stalls += 1;
+            return false;
+        }
+        self.q.push_back(item);
+        self.pushed += 1;
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let item = self.q.pop_front();
+        if item.is_some() {
+            self.popped += 1;
+        }
+        item
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    pub fn clear_stats(&mut self) {
+        self.pushed = 0;
+        self.popped = 0;
+        self.push_stalls = 0;
+        self.max_occupancy = self.q.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_on_full() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(!f.push(3));
+        assert_eq!(f.push_stalls, 1);
+        assert_eq!(f.len(), 2);
+        f.pop();
+        assert!(f.push(3));
+    }
+
+    #[test]
+    fn stats_track() {
+        let mut f = Fifo::new(3);
+        for i in 0..3 {
+            f.push(i);
+        }
+        assert_eq!(f.max_occupancy, 3);
+        f.pop();
+        f.pop();
+        assert_eq!(f.pushed, 3);
+        assert_eq!(f.popped, 2);
+        f.clear_stats();
+        assert_eq!(f.pushed, 0);
+        assert_eq!(f.max_occupancy, 1); // one item still queued
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut f = Fifo::new(2);
+        f.push(7);
+        assert_eq!(f.peek(), Some(&7));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.pop(), Some(7));
+    }
+}

@@ -1,0 +1,191 @@
+//! Static-FlowGNN baseline (ablation B).
+//!
+//! FlowGNN assumes "statically provided edge features and fixed graph
+//! connectivity": its MP units read *pre-computed* edge embeddings. For an
+//! edge-based dynamic GNN, the messages depend on the current layer's node
+//! embeddings, so a FlowGNN-style deployment must bounce to the host
+//! between layers (the DGNN-Booster pattern the paper criticises):
+//!
+//!   per layer: read node embeddings back over PCIe -> compute edge
+//!   messages on the host -> ship the [E, D] message matrix to the device
+//!   -> fabric does aggregation + node transform only.
+//!
+//! This module models that deployment with the same fabric parameters, so
+//! `ablation_flowgnn` can quantify exactly what Enhanced MP Units (runtime
+//! edge computation on-fabric) buy.
+
+use crate::config::ArchConfig;
+use crate::graph::PaddedGraph;
+use crate::model::{L1DeepMetV2, Mat, ModelOutput};
+
+use super::engine::CycleParams;
+
+/// Host model for the per-layer edge recompute.
+#[derive(Clone, Copy, Debug)]
+pub struct HostModel {
+    /// Sustained host MAC throughput (MAC/s) for the small ragged edge MLP.
+    pub host_macs_per_s: f64,
+    /// Fixed software overhead per host round trip (driver, sync, launch).
+    pub roundtrip_overhead_s: f64,
+}
+
+impl Default for HostModel {
+    fn default() -> Self {
+        // A few-GHz core with AVX on a ragged, gather-heavy kernel sustains
+        // a few GMAC/s; plus O(10us) driver/sync overhead per bounce.
+        HostModel { host_macs_per_s: 4e9, roundtrip_overhead_s: 15e-6 }
+    }
+}
+
+/// Result of the baseline run.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub output: ModelOutput,
+    /// Fabric cycles (aggregation + NT + embed + head only).
+    pub fabric_cycles: u64,
+    /// Host compute seconds across all layers.
+    pub host_compute_s: f64,
+    /// PCIe seconds across all transfers (initial + per-layer bounces).
+    pub transfer_s: f64,
+    pub e2e_s: f64,
+}
+
+/// FlowGNN-style deployment of the same model on the same fabric.
+pub struct FlowGnnBaseline {
+    pub arch: ArchConfig,
+    pub model: L1DeepMetV2,
+    pub host: HostModel,
+    params: CycleParams,
+}
+
+impl FlowGnnBaseline {
+    pub fn new(arch: ArchConfig, model: L1DeepMetV2, host: HostModel) -> anyhow::Result<Self> {
+        arch.validate()?;
+        let params = CycleParams::derive(&arch, &model.cfg);
+        Ok(FlowGnnBaseline { arch, model, host, params })
+    }
+
+    pub fn run(&self, g: &PaddedGraph) -> BaselineResult {
+        let cfg = &self.model.cfg;
+        let d = cfg.node_dim;
+        let n = g.n;
+        let e_live = (0..g.e).filter(|&k| g.edge_mask[k] != 0.0).count();
+        let p_node = self.arch.p_node;
+        let nodes_per_nt = (n + p_node - 1) / p_node;
+
+        // --- fabric-side cycles -------------------------------------------------
+        // embed + head identical to DGNNFlow
+        let embed_cycles = nodes_per_nt as u64 * self.params.embed_ii as u64;
+        let head_cycles = nodes_per_nt as u64 * self.params.head_ii as u64;
+        // per layer: stream E pre-computed messages through the adapter/NT
+        // (1 msg/cycle/port) + node writebacks
+        let msgs_per_port = (e_live + p_node - 1) / p_node;
+        let layer_fabric = msgs_per_port as u64 + nodes_per_nt as u64 * self.params.nt_write as u64;
+        let fabric_cycles =
+            embed_cycles + head_cycles + cfg.n_layers as u64 * (layer_fabric + 1);
+
+        // --- host-side per-layer bounce -------------------------------------------
+        let mac_edge = (2 * d * cfg.hid_edge + cfg.hid_edge * d) as f64;
+        let host_per_layer = e_live as f64 * mac_edge / self.host.host_macs_per_s
+            + self.host.roundtrip_overhead_s;
+        let host_compute_s = cfg.n_layers as f64 * host_per_layer;
+
+        // --- transfers ---------------------------------------------------------------
+        let initial_in = g.n * (6 * 4 + 2 * 4) + e_live * 2 * 4 + 16;
+        let per_layer_down = n * d * 4; // node embeddings device -> host
+        let per_layer_up = e_live * d * 4; // message matrix host -> device
+        let final_out = n * 4 + 8;
+        let xfer = |bytes: usize| self.arch.pcie_lat + bytes as f64 / self.arch.pcie_bw;
+        let transfer_s = xfer(initial_in)
+            + cfg.n_layers as f64 * (xfer(per_layer_down) + xfer(per_layer_up))
+            + xfer(final_out);
+
+        // --- functional output (identical math, computed directly) ------------------
+        let output = self.model.forward(g);
+
+        let e2e_s =
+            fabric_cycles as f64 * self.arch.cycle_s() + host_compute_s + transfer_s;
+        BaselineResult { output, fabric_cycles, host_compute_s, transfer_s, e2e_s }
+    }
+
+    /// The message matrix a FlowGNN deployment must ship per layer (bytes)
+    /// — the paper's "transfer sequences of static graph snapshots" cost.
+    pub fn per_layer_upload_bytes(&self, g: &PaddedGraph) -> usize {
+        let e_live = (0..g.e).filter(|&k| g.edge_mask[k] != 0.0).count();
+        e_live * self.model.cfg.node_dim * 4
+    }
+}
+
+/// Convenience: reference forward as a plain host CPU would do it (used as
+/// the measured CPU baseline anchor in benches).
+pub fn host_forward(model: &L1DeepMetV2, g: &PaddedGraph) -> (ModelOutput, Mat) {
+    let x = model.embed(g);
+    (model.forward(g), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::dataflow::{BroadcastMode, DataflowEngine};
+    use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+    use crate::model::Weights;
+    use crate::physics::generator::EventGenerator;
+
+    fn setup() -> (FlowGnnBaseline, DataflowEngine, PaddedGraph) {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 21);
+        let model_a = L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap();
+        let model_b = L1DeepMetV2::new(cfg, w).unwrap();
+        let base = FlowGnnBaseline::new(ArchConfig::default(), model_a, HostModel::default())
+            .unwrap();
+        let eng =
+            DataflowEngine::with_mode(ArchConfig::default(), model_b, BroadcastMode::Broadcast)
+                .unwrap();
+        let mut gen = EventGenerator::with_seed(22);
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        (base, eng, g)
+    }
+
+    #[test]
+    fn baseline_functionally_identical() {
+        let (base, eng, g) = setup();
+        let a = base.run(&g);
+        let b = eng.run(&g);
+        for (x, y) in a.output.weights.iter().zip(&b.output.weights) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dgnnflow_beats_host_bounce_baseline() {
+        // The headline ablation: runtime edge computation on-fabric must be
+        // faster end-to-end than per-layer host round trips.
+        let (base, eng, g) = setup();
+        let a = base.run(&g);
+        let b = eng.run(&g);
+        assert!(
+            b.e2e_s < a.e2e_s,
+            "DGNNFlow {:.1}us !< FlowGNN-bounce {:.1}us",
+            b.e2e_s * 1e6,
+            a.e2e_s * 1e6
+        );
+    }
+
+    #[test]
+    fn host_bounce_cost_scales_with_layers() {
+        let (base, _, g) = setup();
+        let r = base.run(&g);
+        // two layers -> at least two round trips of overhead
+        assert!(r.host_compute_s >= 2.0 * base.host.roundtrip_overhead_s);
+        assert!(r.transfer_s > 4.0 * base.arch.pcie_lat); // >= 6 transfers
+    }
+
+    #[test]
+    fn upload_bytes_scale_with_edges() {
+        let (base, _, g) = setup();
+        let bytes = base.per_layer_upload_bytes(&g);
+        assert_eq!(bytes, 2 * g.e * 32 * 4 / 2); // e_live * D * 4
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's contribution: a cycle-approximate, *functional* simulator of
+//! the DGNNFlow streaming dataflow fabric (Fig. 4), plus the resource
+//! (Table I) and power (Table II) models and the static-FlowGNN baseline.
+//!
+//! Unit inventory (all per paper §III-B):
+//! - [`broadcast`] — Node Embedding Broadcast (Alg. 2)
+//! - [`mp_unit`]   — Enhanced MP Units with runtime edge embedding (Alg. 1)
+//! - [`adapter`]   — MP→NT multicast adapter
+//! - [`nt_unit`]   — Node Transformation units
+//! - [`buffers`]   — double-buffered NE banks (swap per layer)
+//! - [`fifo`]      — bounded streaming FIFOs with backpressure
+//! - [`engine`]    — per-layer cycle loop + E2E latency model
+//! - [`flowgnn`]   — static-graph baseline (host-side edge recompute)
+//! - [`resource`]  — LUT/FF/BRAM/DSP estimator (Table I)
+//! - [`power`]     — activity-based power model (Table II)
+
+pub mod adapter;
+pub mod broadcast;
+pub mod buffers;
+pub mod engine;
+pub mod fifo;
+pub mod flowgnn;
+pub mod mp_unit;
+pub mod nt_unit;
+pub mod power;
+pub mod resource;
+pub mod tokens;
+
+pub use engine::{BroadcastMode, CycleParams, DataflowEngine, SimResult};
+pub use flowgnn::FlowGnnBaseline;
+pub use power::PowerModel;
+pub use resource::ResourceModel;

@@ -1,0 +1,211 @@
+//! FPGA resource estimator (reproduces Table I's structure).
+//!
+//! Analytic model of post-synthesis utilisation on the Alveo U50
+//! (xcu50-fsvh2104-2-e): per-unit costs are derived from typical Vitis HLS
+//! synthesis results for dim-32 MLP datapaths and calibrated so the paper's
+//! default configuration (P_edge=8, P_node=4, dim 32, 2 EdgeConv layers)
+//! lands near the published numbers:
+//!
+//!   | LUT 235,017 | Register 228,548 | BRAM 488 | DSP 601 |   (paper)
+//!
+//! The point of the model is *scaling*: how utilisation moves with
+//! P_edge/P_node/FIFO depth/precision, for the parallelism ablation.
+
+use crate::config::{ArchConfig, ModelConfig};
+
+/// Alveo U50 available resources (paper Table I, "Available" row).
+#[derive(Clone, Copy, Debug)]
+pub struct Capacity {
+    pub lut: u64,
+    pub register: u64,
+    pub bram: u64,
+    pub dsp: u64,
+}
+
+pub const ALVEO_U50: Capacity =
+    Capacity { lut: 872_000, register: 1_743_000, bram: 1344, dsp: 5952 };
+
+/// Estimated utilisation.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Usage {
+    pub lut: u64,
+    pub register: u64,
+    pub bram: u64,
+    pub dsp: u64,
+}
+
+impl Usage {
+    pub fn fits(&self, cap: &Capacity) -> bool {
+        self.lut <= cap.lut
+            && self.register <= cap.register
+            && self.bram <= cap.bram
+            && self.dsp <= cap.dsp
+    }
+
+    pub fn utilisation(&self, cap: &Capacity) -> [f64; 4] {
+        [
+            self.lut as f64 / cap.lut as f64,
+            self.register as f64 / cap.register as f64,
+            self.bram as f64 / cap.bram as f64,
+            self.dsp as f64 / cap.dsp as f64,
+        ]
+    }
+}
+
+/// Analytic resource model.
+pub struct ResourceModel {
+    pub arch: ArchConfig,
+    pub model: ModelConfig,
+    /// Largest graph bucket the fabric must buffer on-chip.
+    pub n_max: usize,
+    pub e_max: usize,
+}
+
+// Calibration constants (per-unit synthesis-shaped costs).
+const LUT_BASE: u64 = 38_000; // shell, AXI/PCIe DMA, control
+const REG_BASE: u64 = 45_000;
+const BRAM_BASE: u64 = 170; // U50 shell + HBM controllers + DMA buffering
+const DSP_BASE: u64 = 25; // address calc, misc
+
+const LUT_PER_MP: u64 = 15_500; // phi datapath control + capture filter
+const REG_PER_MP: u64 = 14_200;
+const LUT_PER_NT: u64 = 9_800; // accumulator + BN/residual datapath
+const REG_PER_NT: u64 = 9_400;
+const LUT_PER_BCAST_LANE: u64 = 900; // broadcast tree per MP fanout
+const REG_PER_BCAST_LANE: u64 = 1_100;
+const LUT_ADAPTER_PER_PORT: u64 = 2_400; // crossbar mux + RR arbiter
+const REG_ADAPTER_PER_PORT: u64 = 2_100;
+
+/// 36kb BRAM blocks per buffer of `bytes`.
+fn bram_blocks(bytes: usize) -> u64 {
+    ((bytes * 8 + 36_863) / 36_864) as u64
+}
+
+impl ResourceModel {
+    pub fn new(arch: ArchConfig, model: ModelConfig, n_max: usize, e_max: usize) -> Self {
+        ResourceModel { arch, model, n_max, e_max }
+    }
+
+    pub fn estimate(&self) -> Usage {
+        let a = &self.arch;
+        let m = &self.model;
+        let d = m.node_dim;
+
+        // --- DSP: MAC arrays --------------------------------------------------
+        let dsp = DSP_BASE
+            + (a.p_edge * a.dsp_per_mp) as u64
+            + (a.p_node * a.dsp_per_nt) as u64;
+
+        // --- LUT / registers -----------------------------------------------------
+        let lut = LUT_BASE
+            + (a.p_edge as u64) * (LUT_PER_MP + LUT_PER_BCAST_LANE)
+            + (a.p_node as u64) * (LUT_PER_NT + LUT_ADAPTER_PER_PORT);
+        let register = REG_BASE
+            + (a.p_edge as u64) * (REG_PER_MP + REG_PER_BCAST_LANE)
+            + (a.p_node as u64) * (REG_PER_NT + REG_ADAPTER_PER_PORT);
+
+        // --- BRAM: NE buffers, weight ROMs, FIFOs, CSR/edge store ----------------
+        let ne_buffer = 2 * self.n_max * d * 4; // double buffer
+        let bcast_copy = self.n_max * d * 4; // intermediate NE copy
+        // weights replicated into each MP unit's phi ROM + NT/embed/head ROMs
+        let phi_rom = (2 * d * m.hid_edge + m.hid_edge * d) * 4;
+        let nt_rom = (m.in_dim() * m.hid_emb + m.hid_emb * d + d * m.hid_out + m.hid_out) * 4;
+        let edge_store = self.e_max * 2 * 4; // CSR-packed edge list
+        let fifo_bytes =
+            (a.p_edge * 2 + a.p_node) * a.fifo_depth * (d * 4 + 8); // token + payload width
+        // per-MP capture buffer (Alg. 2 line 6: each unit buffers the target
+        // embeddings it captures; sized worst-case N)
+        let capture_buffer = self.n_max * d * 4;
+        // host<->fabric staging (features in, weights/MET out, ping-pong)
+        let staging = 2 * (self.n_max * (6 + 2) * 4 + self.e_max * 2 * 4);
+        let bram = BRAM_BASE
+            + bram_blocks(ne_buffer)
+            + bram_blocks(bcast_copy)
+            + (a.p_edge as u64) * bram_blocks(phi_rom)
+            + (a.p_edge as u64) * bram_blocks(capture_buffer)
+            + (a.p_node as u64) * bram_blocks(nt_rom)
+            + bram_blocks(edge_store)
+            + bram_blocks(staging)
+            + bram_blocks(fifo_bytes)
+            // aggregation scratch per NT unit: agg row + degree counters
+            + (a.p_node as u64) * bram_blocks(self.n_max / a.p_node.max(1) * d * 4 + self.n_max);
+
+        Usage { lut, register, bram, dsp }
+    }
+
+    /// Paper Table I rows: (name, available, used).
+    pub fn table(&self) -> Vec<(&'static str, u64, u64)> {
+        let u = self.estimate();
+        vec![
+            ("LUT", ALVEO_U50.lut, u.lut),
+            ("Register", ALVEO_U50.register, u.register),
+            ("BRAM", ALVEO_U50.bram, u.bram),
+            ("DSP", ALVEO_U50.dsp, u.dsp),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_model() -> ResourceModel {
+        ResourceModel::new(ArchConfig::default(), ModelConfig::default(), 256, 12288)
+    }
+
+    #[test]
+    fn default_config_near_paper_table1() {
+        let u = default_model().estimate();
+        // shape fidelity: within 25% of the published point
+        let close = |got: u64, paper: u64| {
+            let r = got as f64 / paper as f64;
+            (0.75..1.25).contains(&r)
+        };
+        assert!(close(u.lut, 235_017), "LUT {} vs paper 235017", u.lut);
+        assert!(close(u.register, 228_548), "Reg {} vs paper 228548", u.register);
+        assert!(close(u.bram, 488), "BRAM {} vs paper 488", u.bram);
+        assert!(close(u.dsp, 601), "DSP {} vs paper 601", u.dsp);
+    }
+
+    #[test]
+    fn fits_on_u50() {
+        assert!(default_model().estimate().fits(&ALVEO_U50));
+    }
+
+    #[test]
+    fn scales_with_parallelism() {
+        let small = ResourceModel::new(
+            ArchConfig { p_edge: 4, p_node: 2, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        let big = ResourceModel::new(
+            ArchConfig { p_edge: 16, p_node: 8, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(big.lut > small.lut);
+        assert!(big.dsp > small.dsp);
+        assert!(big.bram > small.bram);
+    }
+
+    #[test]
+    fn bram_blocks_rounding() {
+        assert_eq!(bram_blocks(0), 0);
+        assert_eq!(bram_blocks(1), 1);
+        assert_eq!(bram_blocks(36_864 / 8), 1);
+        assert_eq!(bram_blocks(36_864 / 8 + 1), 2);
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = default_model().table();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0].0, "LUT");
+        assert_eq!(t[0].1, 872_000);
+    }
+}

@@ -1,0 +1,15 @@
+//! Stream tokens exchanged between fabric units. Payloads (embedding and
+//! message vectors) live in the engine's matrices; tokens carry indices so
+//! the timing model and the functional math stay mechanically coupled.
+
+/// A node-embedding beat on the broadcast stream.
+pub type BcastToken = u32; // node id v
+
+/// An edge message on an MP->adapter->NT stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsgToken {
+    /// Index into the layer's message matrix (original edge-list id).
+    pub edge_id: u32,
+    /// Target node (determines the NT bank).
+    pub dst: u32,
+}

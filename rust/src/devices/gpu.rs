@@ -1,0 +1,150 @@
+//! RTX A6000 analytic latency model (PyTorch eager vs torch.compile).
+
+use crate::util::rng::Rng;
+
+use super::{GraphSize, LatencyModel};
+
+/// Software variant (paper §IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpuVariant {
+    /// PyTorch eager: one CUDA kernel launch per op, python dispatch.
+    BaselineSw,
+    /// torch.compile: fused kernels, CUDA graphs — lower fixed overhead.
+    OptimizedSw,
+}
+
+/// Mechanistic model: t(batch) = fixed + sum(per-graph compute) + jitter.
+/// The fixed term covers host->device transfer setup, python/dispatch and
+/// kernel-launch overhead for the whole batch (launches do not multiply
+/// with batch size because ops are batched); compute grows weakly with
+/// graph size because the device is enormously under-utilised.
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    pub variant: GpuVariant,
+    /// Per-invocation fixed overhead (s).
+    pub fixed_s: f64,
+    /// Compute floor per graph (s).
+    pub per_graph_s: f64,
+    /// Marginal cost per edge (s) — small: SMs are mostly idle.
+    pub per_edge_s: f64,
+    /// Relative jitter sigma (GPU latency is very consistent).
+    pub jitter_rel: f64,
+}
+
+impl GpuModel {
+    pub fn new(variant: GpuVariant) -> Self {
+        match variant {
+            // Calibrated so batch-1 ≈ 1.8 ms and batch-4 ≈ 0.45 ms/graph
+            // (paper: DGNNFlow 0.283 ms is 6.3x at bs1, 1.6x at bs4).
+            GpuVariant::BaselineSw => GpuModel {
+                variant,
+                fixed_s: 1.72e-3,
+                per_graph_s: 55e-6,
+                per_edge_s: 4e-9,
+                jitter_rel: 0.03,
+            },
+            // Calibrated so batch-1 ≈ 1.15 ms (4.1x) and breakeven
+            // (≈0.283 ms/graph) at batch 4.
+            GpuVariant::OptimizedSw => GpuModel {
+                variant,
+                fixed_s: 1.08e-3,
+                per_graph_s: 11e-6,
+                per_edge_s: 2e-9,
+                jitter_rel: 0.02,
+            },
+        }
+    }
+}
+
+impl LatencyModel for GpuModel {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            GpuVariant::BaselineSw => "GPU Baseline SW (RTX A6000, PyTorch)",
+            GpuVariant::OptimizedSw => "GPU Optimized SW (RTX A6000, torch.compile)",
+        }
+    }
+
+    fn batch_latency_s(&self, batch: &[GraphSize], rng: &mut Rng) -> f64 {
+        let compute: f64 = batch
+            .iter()
+            .map(|g| self.per_graph_s + self.per_edge_s * g.e as f64)
+            .sum();
+        let base = self.fixed_s + compute;
+        // lognormal-ish mild jitter
+        let jitter = (rng.normal() * self.jitter_rel).exp();
+        base * jitter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(b: usize, n: usize, e: usize) -> Vec<GraphSize> {
+        vec![GraphSize { n, e }; b]
+    }
+
+    #[test]
+    fn batch_amortises_fixed_overhead() {
+        let m = GpuModel::new(GpuVariant::BaselineSw);
+        let mut rng = Rng::new(1);
+        let t1: f64 = (0..200)
+            .map(|_| m.per_graph_latency_s(&batch(1, 100, 900), &mut rng))
+            .sum::<f64>()
+            / 200.0;
+        let t8: f64 = (0..200)
+            .map(|_| m.per_graph_latency_s(&batch(8, 100, 900), &mut rng))
+            .sum::<f64>()
+            / 200.0;
+        assert!(t8 < t1 / 4.0, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn optimized_faster_than_baseline() {
+        let base = GpuModel::new(GpuVariant::BaselineSw);
+        let opt = GpuModel::new(GpuVariant::OptimizedSw);
+        let mut rng = Rng::new(2);
+        let b = batch(1, 100, 900);
+        let tb: f64 =
+            (0..200).map(|_| base.batch_latency_s(&b, &mut rng)).sum::<f64>() / 200.0;
+        let to: f64 =
+            (0..200).map(|_| opt.batch_latency_s(&b, &mut rng)).sum::<f64>() / 200.0;
+        assert!(to < tb);
+    }
+
+    #[test]
+    fn calibration_matches_paper_ratios() {
+        // DGNNFlow = 0.283 ms. Paper: GPU base bs1 is ~6.3x, bs4 ~1.6x;
+        // GPU opt bs1 ~4.1x, breakeven ~bs4.
+        let dgnnflow = 0.283e-3;
+        let mut rng = Rng::new(3);
+        let mut mean = |m: &GpuModel, b: usize| -> f64 {
+            (0..500)
+                .map(|_| m.per_graph_latency_s(&batch(b, 100, 900), &mut rng))
+                .sum::<f64>()
+                / 500.0
+        };
+        let base = GpuModel::new(GpuVariant::BaselineSw);
+        let opt = GpuModel::new(GpuVariant::OptimizedSw);
+        let r_base_1 = mean(&base, 1) / dgnnflow;
+        let r_base_4 = mean(&base, 4) / dgnnflow;
+        let r_opt_1 = mean(&opt, 1) / dgnnflow;
+        let r_opt_4 = mean(&opt, 4) / dgnnflow;
+        assert!((5.5..7.2).contains(&r_base_1), "base bs1 ratio {r_base_1}");
+        assert!((1.3..2.1).contains(&r_base_4), "base bs4 ratio {r_base_4}");
+        assert!((3.5..4.8).contains(&r_opt_1), "opt bs1 ratio {r_opt_1}");
+        assert!((0.8..1.3).contains(&r_opt_4), "opt bs4 breakeven {r_opt_4}");
+    }
+
+    #[test]
+    fn latency_flat_in_graph_size() {
+        // Fig 6: "GPU latency stays highly consistent with graph size".
+        let m = GpuModel::new(GpuVariant::BaselineSw);
+        let mut rng = Rng::new(4);
+        let small: f64 =
+            (0..200).map(|_| m.batch_latency_s(&batch(1, 30, 150), &mut rng)).sum::<f64>() / 200.0;
+        let big: f64 =
+            (0..200).map(|_| m.batch_latency_s(&batch(1, 250, 3000), &mut rng)).sum::<f64>() / 200.0;
+        assert!(big / small < 1.1, "GPU should be flat: {small} -> {big}");
+    }
+}

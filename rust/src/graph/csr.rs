@@ -1,0 +1,165 @@
+//! Compressed Sparse Row adjacency (FlowGNN stores graphs in CSR; the
+//! dataflow simulator shards edges across MP units from this form).
+
+use super::EventGraph;
+
+/// CSR over *outgoing* edges: for node u, edges are
+/// `dst[row_ptr[u] .. row_ptr[u+1]]`, and `edge_id` maps each CSR slot back
+/// to the original edge-list index (so per-edge payloads line up).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n_nodes: usize,
+    pub row_ptr: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub edge_id: Vec<u32>,
+}
+
+impl Csr {
+    pub fn from_graph(g: &EventGraph) -> Csr {
+        let n = g.n_nodes;
+        let e = g.n_edges();
+        let mut counts = vec![0u32; n + 1];
+        for &s in &g.src {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut fill = counts;
+        let mut dst = vec![0u32; e];
+        let mut edge_id = vec![0u32; e];
+        for (i, (&s, &d)) in g.src.iter().zip(&g.dst).enumerate() {
+            let slot = fill[s as usize] as usize;
+            dst[slot] = d;
+            edge_id[slot] = i as u32;
+            fill[s as usize] += 1;
+        }
+        Csr { n_nodes: n, row_ptr, dst, edge_id }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.dst.len()
+    }
+
+    /// Neighbours (targets) of node u.
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        let lo = self.row_ptr[u] as usize;
+        let hi = self.row_ptr[u + 1] as usize;
+        &self.dst[lo..hi]
+    }
+
+    /// Original edge-list ids of node u's outgoing edges.
+    pub fn edge_ids(&self, u: usize) -> &[u32] {
+        let lo = self.row_ptr[u] as usize;
+        let hi = self.row_ptr[u + 1] as usize;
+        &self.edge_id[lo..hi]
+    }
+
+    pub fn out_degree(&self, u: usize) -> usize {
+        (self.row_ptr[u + 1] - self.row_ptr[u]) as usize
+    }
+
+    /// Round-robin shard of *source nodes* across `p` units, as the paper
+    /// partitions the Input NE buffer into P_edge banks: unit k owns nodes
+    /// {u : u mod p == k} and therefore all their outgoing edges.
+    pub fn shard_nodes(&self, p: usize) -> Vec<Vec<u32>> {
+        let mut shards = vec![Vec::new(); p];
+        for u in 0..self.n_nodes {
+            shards[u % p].push(u as u32);
+        }
+        shards
+    }
+
+    /// Edges (csr slots) owned by unit k under the node sharding.
+    pub fn shard_edges(&self, p: usize, k: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut u = k;
+        while u < self.n_nodes {
+            let lo = self.row_ptr[u] as usize;
+            let hi = self.row_ptr[u + 1] as usize;
+            out.extend((lo..hi).map(|x| x as u32));
+            u += p;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_edges;
+    use crate::physics::generator::EventGenerator;
+
+    fn sample_graph(seed: u64) -> EventGraph {
+        let mut g = EventGenerator::with_seed(seed);
+        build_edges(&g.generate(), 0.8)
+    }
+
+    #[test]
+    fn csr_preserves_all_edges() {
+        let g = sample_graph(1);
+        let c = Csr::from_graph(&g);
+        assert_eq!(c.n_edges(), g.n_edges());
+        // reconstruct edge list through edge_id mapping
+        let mut seen = vec![false; g.n_edges()];
+        for u in 0..c.n_nodes {
+            for (&d, &eid) in c.neighbors(u).iter().zip(c.edge_ids(u)) {
+                assert_eq!(g.src[eid as usize], u as u32);
+                assert_eq!(g.dst[eid as usize], d);
+                assert!(!seen[eid as usize]);
+                seen[eid as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn degrees_match() {
+        let g = sample_graph(2);
+        let c = Csr::from_graph(&g);
+        let deg = g.out_degrees();
+        for u in 0..g.n_nodes {
+            assert_eq!(c.out_degree(u), deg[u] as usize);
+        }
+    }
+
+    #[test]
+    fn shards_partition_nodes_and_edges() {
+        let g = sample_graph(3);
+        let c = Csr::from_graph(&g);
+        for p in [1usize, 3, 8] {
+            let shards = c.shard_nodes(p);
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, c.n_nodes);
+            let mut edge_total = 0;
+            let mut all_slots = std::collections::HashSet::new();
+            for k in 0..p {
+                let es = c.shard_edges(p, k);
+                edge_total += es.len();
+                for s in es {
+                    assert!(all_slots.insert(s));
+                }
+            }
+            assert_eq!(edge_total, c.n_edges());
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = EventGraph { n_nodes: 0, src: vec![], dst: vec![] };
+        let c = Csr::from_graph(&g);
+        assert_eq!(c.n_edges(), 0);
+        assert_eq!(c.row_ptr, vec![0]);
+    }
+
+    #[test]
+    fn isolated_nodes_have_empty_rows() {
+        let g = EventGraph { n_nodes: 4, src: vec![0, 1], dst: vec![1, 0] };
+        let c = Csr::from_graph(&g);
+        assert_eq!(c.out_degree(0), 1);
+        assert_eq!(c.out_degree(2), 0);
+        assert_eq!(c.out_degree(3), 0);
+        assert!(c.neighbors(2).is_empty());
+    }
+}

@@ -1,0 +1,66 @@
+//! Dynamic graph construction and graph data structures.
+//!
+//! The paper's "Input Dynamic Graph Construction Auxiliary Setup" (§III-B.4):
+//! for each pair of nodes (u, v), an undirected edge is generated if
+//! ΔR²(u,v) = (η_u-η_v)² + (φ_u-φ_v)² < δ² (Eq. 1). The resulting edge list
+//! and node feature matrix are packed into buffers for the device.
+
+pub mod builder;
+pub mod csr;
+pub mod padding;
+pub mod stats;
+
+pub use builder::{build_edges, build_edges_brute, GraphBuilder};
+pub use csr::Csr;
+pub use padding::{pad_graph, Bucket, PaddedGraph};
+
+/// A dynamically-constructed event graph (directed edge list; undirected
+/// pairs appear in both directions, matching EdgeConv message passing).
+#[derive(Clone, Debug, Default)]
+pub struct EventGraph {
+    pub n_nodes: usize,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+}
+
+impl EventGraph {
+    pub fn n_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// In-degree per node.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n_nodes];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Out-degree per node.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n_nodes];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// Structural sanity: endpoints in range, no self loops, symmetric
+    /// (every (u,v) has a matching (v,u)).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use std::collections::HashSet;
+        let n = self.n_nodes as u32;
+        anyhow::ensure!(self.src.len() == self.dst.len(), "src/dst length mismatch");
+        let mut set = HashSet::with_capacity(self.src.len());
+        for (&s, &d) in self.src.iter().zip(&self.dst) {
+            anyhow::ensure!(s < n && d < n, "edge endpoint out of range");
+            anyhow::ensure!(s != d, "self loop {s}");
+            anyhow::ensure!(set.insert((s, d)), "duplicate edge ({s},{d})");
+        }
+        for &(s, d) in &set {
+            anyhow::ensure!(set.contains(&(d, s)), "asymmetric edge ({s},{d})");
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,217 @@
+//! Padding events+graphs into the AOT artifact size buckets.
+//!
+//! The HLO artifacts have static shapes (N_max, E_max); real events are
+//! ragged. This module selects the smallest bucket that fits, pads feature
+//! and edge buffers, and produces the masks the model uses to ignore
+//! padding. Overflow policy: drop lowest-pT particles / excess edges
+//! (rare at the configured pileup; counted so callers can monitor).
+
+use crate::physics::event::Event;
+
+use super::EventGraph;
+
+/// One artifact size bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub n_max: usize,
+    pub e_max: usize,
+}
+
+/// Must mirror python/compile/aot.py BUCKETS.
+pub const DEFAULT_BUCKETS: [Bucket; 4] = [
+    Bucket { n_max: 64, e_max: 768 },
+    Bucket { n_max: 128, e_max: 2048 },
+    Bucket { n_max: 192, e_max: 4096 },
+    Bucket { n_max: 256, e_max: 8192 },
+];
+
+/// Pick the smallest bucket with n_max >= n and e_max >= e; None if nothing
+/// fits (caller then truncates into the largest bucket).
+pub fn pick_bucket(buckets: &[Bucket], n: usize, e: usize) -> Option<Bucket> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|b| b.n_max >= n && b.e_max >= e)
+        .min_by_key(|b| (b.n_max, b.e_max))
+}
+
+/// A padded, artifact-ready graph.
+#[derive(Clone, Debug)]
+pub struct PaddedGraph {
+    pub bucket: Bucket,
+    /// real (unpadded) counts
+    pub n: usize,
+    pub e: usize,
+    /// how many particles/edges were dropped to fit (usually 0)
+    pub dropped_nodes: usize,
+    pub dropped_edges: usize,
+    /// row-major [n_max, 6]
+    pub cont: Vec<f32>,
+    /// row-major [n_max, 2]
+    pub cat: Vec<i32>,
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub node_mask: Vec<f32>,
+    pub edge_mask: Vec<f32>,
+}
+
+/// Pad an event+graph into a bucket chosen from `buckets`.
+pub fn pad_graph(event: &Event, graph: &EventGraph, buckets: &[Bucket]) -> PaddedGraph {
+    assert_eq!(event.n_particles(), graph.n_nodes);
+    let n0 = graph.n_nodes;
+    let e0 = graph.n_edges();
+
+    let bucket = pick_bucket(buckets, n0, e0).unwrap_or_else(|| {
+        *buckets
+            .iter()
+            .max_by_key(|b| (b.n_max, b.e_max))
+            .expect("no buckets configured")
+    });
+
+    // --- node selection (drop lowest pT if over) ---------------------------
+    let (keep, dropped_nodes): (Vec<usize>, usize) = if n0 > bucket.n_max {
+        let mut idx: Vec<usize> = (0..n0).collect();
+        idx.sort_by(|&a, &b| {
+            event.particles[b]
+                .pt
+                .partial_cmp(&event.particles[a].pt)
+                .unwrap()
+        });
+        let mut kept: Vec<usize> = idx[..bucket.n_max].to_vec();
+        kept.sort_unstable();
+        (kept, n0 - bucket.n_max)
+    } else {
+        ((0..n0).collect(), 0)
+    };
+    let n = keep.len();
+
+    // old index -> new index (or None if dropped)
+    let mut remap = vec![usize::MAX; n0];
+    for (new, &old) in keep.iter().enumerate() {
+        remap[old] = new;
+    }
+
+    // --- edge selection ------------------------------------------------------
+    let mut src_kept = Vec::with_capacity(e0.min(bucket.e_max));
+    let mut dst_kept = Vec::with_capacity(e0.min(bucket.e_max));
+    let mut dropped_edges = 0usize;
+    for (&s, &d) in graph.src.iter().zip(&graph.dst) {
+        let (rs, rd) = (remap[s as usize], remap[d as usize]);
+        if rs == usize::MAX || rd == usize::MAX {
+            dropped_edges += 1; // endpoint dropped
+            continue;
+        }
+        if src_kept.len() >= bucket.e_max {
+            dropped_edges += 1;
+            continue;
+        }
+        src_kept.push(rs as i32);
+        dst_kept.push(rd as i32);
+    }
+    let e = src_kept.len();
+
+    // --- packing ---------------------------------------------------------------
+    let mut cont = vec![0.0f32; bucket.n_max * 6];
+    let mut cat = vec![0i32; bucket.n_max * 2];
+    for (new, &old) in keep.iter().enumerate() {
+        let p = &event.particles[old];
+        cont[new * 6..new * 6 + 6].copy_from_slice(&p.cont_features());
+        cat[new * 2..new * 2 + 2].copy_from_slice(&p.cat_features());
+    }
+    let mut src = vec![0i32; bucket.e_max];
+    let mut dst = vec![0i32; bucket.e_max];
+    src[..e].copy_from_slice(&src_kept);
+    dst[..e].copy_from_slice(&dst_kept);
+    let mut node_mask = vec![0.0f32; bucket.n_max];
+    node_mask[..n].iter_mut().for_each(|x| *x = 1.0);
+    let mut edge_mask = vec![0.0f32; bucket.e_max];
+    edge_mask[..e].iter_mut().for_each(|x| *x = 1.0);
+
+    PaddedGraph {
+        bucket,
+        n,
+        e,
+        dropped_nodes,
+        dropped_edges,
+        cont,
+        cat,
+        src,
+        dst,
+        node_mask,
+        edge_mask,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_edges;
+    use crate::physics::generator::{EventGenerator, GeneratorConfig};
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let b = pick_bucket(&DEFAULT_BUCKETS, 50, 500).unwrap();
+        assert_eq!(b.n_max, 64);
+        let b = pick_bucket(&DEFAULT_BUCKETS, 65, 500).unwrap();
+        assert_eq!(b.n_max, 128);
+        let b = pick_bucket(&DEFAULT_BUCKETS, 50, 2000).unwrap();
+        assert_eq!(b.n_max, 128); // edge count forces the bigger bucket
+        assert!(pick_bucket(&DEFAULT_BUCKETS, 1000, 10).is_none());
+    }
+
+    #[test]
+    fn pads_typical_event_without_drops() {
+        let mut g = EventGenerator::with_seed(1);
+        let ev = g.generate();
+        let graph = build_edges(&ev, 0.8);
+        let p = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        assert_eq!(p.dropped_nodes, 0);
+        assert_eq!(p.dropped_edges, 0);
+        assert_eq!(p.n, ev.n_particles());
+        assert_eq!(p.e, graph.n_edges());
+        assert_eq!(p.cont.len(), p.bucket.n_max * 6);
+        assert_eq!(p.node_mask.iter().sum::<f32>() as usize, p.n);
+        assert_eq!(p.edge_mask.iter().sum::<f32>() as usize, p.e);
+        // endpoints of live edges point at live nodes
+        for i in 0..p.e {
+            assert!((p.src[i] as usize) < p.n);
+            assert!((p.dst[i] as usize) < p.n);
+        }
+        // padding region is zero
+        assert!(p.cont[p.n * 6..].iter().all(|&x| x == 0.0));
+        assert!(p.src[p.e..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn oversize_event_truncates_by_pt() {
+        let cfg = GeneratorConfig { mean_pileup: 400.0, ..Default::default() };
+        let mut g = EventGenerator::new(2, cfg);
+        let ev = g.generate();
+        assert!(ev.n_particles() > 256, "need oversize event");
+        let graph = build_edges(&ev, 0.8);
+        let p = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        assert_eq!(p.bucket.n_max, 256);
+        assert_eq!(p.n, 256);
+        assert!(p.dropped_nodes > 0);
+        // kept particles are the highest-pT ones: min kept pt >= max dropped pt
+        let mut pts: Vec<f32> = ev.particles.iter().map(|q| q.pt).collect();
+        pts.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let threshold = pts[255];
+        let min_kept = (0..p.n)
+            .map(|i| p.cont[i * 6])
+            .fold(f32::INFINITY, f32::min);
+        assert!(min_kept >= threshold - 1e-4);
+    }
+
+    #[test]
+    fn mask_counts_match() {
+        let mut g = EventGenerator::with_seed(3);
+        for _ in 0..10 {
+            let ev = g.generate();
+            let graph = build_edges(&ev, 0.8);
+            let p = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+            assert_eq!(p.node_mask.iter().filter(|&&m| m == 1.0).count(), p.n);
+            assert_eq!(p.edge_mask.iter().filter(|&&m| m == 1.0).count(), p.e);
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Graph-population statistics (drives the Fig. 6 x-axis bucketing and the
+//! workload characterisation in EXPERIMENTS.md).
+
+use crate::util::stats::Summary;
+
+use super::EventGraph;
+
+/// Aggregate structure statistics over a stream of graphs.
+#[derive(Clone, Debug, Default)]
+pub struct GraphStats {
+    pub nodes: Summary,
+    pub edges: Summary,
+    pub degree: Summary,
+    pub isolated_frac: Summary,
+    pub count: usize,
+}
+
+impl GraphStats {
+    pub fn new() -> Self {
+        GraphStats {
+            nodes: Summary::new(),
+            edges: Summary::new(),
+            degree: Summary::new(),
+            isolated_frac: Summary::new(),
+            count: 0,
+        }
+    }
+
+    pub fn push(&mut self, g: &EventGraph) {
+        self.count += 1;
+        self.nodes.push(g.n_nodes as f64);
+        self.edges.push(g.n_edges() as f64);
+        if g.n_nodes > 0 {
+            let deg = g.in_degrees();
+            let isolated = deg.iter().filter(|&&d| d == 0).count();
+            self.isolated_frac.push(isolated as f64 / g.n_nodes as f64);
+            for d in deg {
+                self.degree.push(d as f64);
+            }
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "graphs={} nodes(mean={:.1},max={:.0}) edges(mean={:.1},max={:.0}) \
+             degree(mean={:.2},max={:.0}) isolated={:.1}%",
+            self.count,
+            self.nodes.mean(),
+            self.nodes.max(),
+            self.edges.mean(),
+            self.edges.max(),
+            self.degree.mean(),
+            self.degree.max(),
+            100.0 * self.isolated_frac.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_edges;
+    use crate::physics::generator::EventGenerator;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut gen = EventGenerator::with_seed(1);
+        let mut st = GraphStats::new();
+        for _ in 0..20 {
+            st.push(&build_edges(&gen.generate(), 0.8));
+        }
+        assert_eq!(st.count, 20);
+        assert!(st.nodes.mean() > 10.0);
+        assert!(st.degree.mean() > 0.5);
+        let r = st.report();
+        assert!(r.contains("graphs=20"));
+    }
+
+    #[test]
+    fn empty_graph_handled() {
+        let mut st = GraphStats::new();
+        st.push(&EventGraph { n_nodes: 0, src: vec![], dst: vec![] });
+        assert_eq!(st.count, 1);
+    }
+}

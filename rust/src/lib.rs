@@ -1,0 +1,30 @@
+//! DGNNFlow: streaming dataflow architecture for real-time edge-based
+//! dynamic GNN inference in HL-LHC trigger systems (reproduction).
+//!
+//! Layer map (see DESIGN.md):
+//! - [`dataflow`] — the paper's contribution: a cycle-approximate simulator
+//!   of the DGNNFlow fabric (Enhanced MP units, Node Embedding Broadcast,
+//!   double-buffered NE banks) plus resource and power models.
+//! - [`trigger`] — the L1T streaming coordinator (router, batcher, rate
+//!   control) that drives inference backends.
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas model.
+//! - [`model`] — pure-Rust reference of L1DeepMETv2 (correctness oracle +
+//!   CPU baseline).
+//! - [`physics`], [`graph`] — DELPHES-substitute event generation and
+//!   dynamic ΔR graph construction (paper Eq. 1).
+//! - [`devices`] — analytic GPU/CPU latency models for paper-shape
+//!   comparisons.
+//! - [`fixedpoint`] — ap_fixed-style quantisation study.
+//! - [`util`], [`config`] — from-scratch substrates (JSON, CLI, RNG, stats,
+//!   bench/property harnesses) and typed configuration.
+
+pub mod config;
+pub mod dataflow;
+pub mod devices;
+pub mod fixedpoint;
+pub mod graph;
+pub mod model;
+pub mod physics;
+pub mod runtime;
+pub mod trigger;
+pub mod util;

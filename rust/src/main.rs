@@ -1,0 +1,226 @@
+//! dgnnflow — leader binary / CLI.
+//!
+//! Subcommands:
+//!   info        artifact + config inventory
+//!   serve       run the trigger pipeline over synthetic events
+//!   simulate    run one event through the simulated DGNNFlow fabric
+//!   resources   print the Table I resource estimate
+//!   power       print the Table II power estimate
+//!
+//! `dgnnflow <cmd> --help` lists per-command options.
+
+use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
+use dgnnflow::dataflow::{DataflowEngine, PowerModel, ResourceModel};
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::EventGenerator;
+use dgnnflow::runtime::{ModelRuntime, PjrtService};
+use dgnnflow::trigger::{Backend, TriggerServer};
+use dgnnflow::util::bench::Table;
+use dgnnflow::util::cli::{Args, Help};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("info") => cmd_info(),
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("resources") => cmd_resources(&args),
+        Some("power") => cmd_power(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "dgnnflow — streaming dataflow architecture for real-time edge-based\n\
+         dynamic GNN inference in HL-LHC trigger systems (reproduction)\n\n\
+         Commands:\n\
+         \u{20}  info                     artifact + config inventory\n\
+         \u{20}  serve [--backend B]      trigger pipeline over synthetic events\n\
+         \u{20}  simulate [--seed N]      one event through the simulated fabric\n\
+         \u{20}  resources                Table I resource estimate\n\
+         \u{20}  power                    Table II power estimate\n\n\
+         Run `cargo run --release -- serve --events 1000 --backend pjrt`."
+    );
+}
+
+/// Load config: --config FILE or defaults.
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    match args.opt_str("config") {
+        Some(p) => Config::from_file(std::path::Path::new(p)),
+        None => Ok(Config::default()),
+    }
+}
+
+fn load_model() -> anyhow::Result<L1DeepMetV2> {
+    let dir = ModelRuntime::artifacts_dir();
+    let meta = dir.join("meta.json");
+    if meta.exists() {
+        let cfg = ModelConfig::from_meta(&meta)?;
+        let weights = Weights::load(&dir.join("weights.json"), &cfg)?;
+        L1DeepMetV2::new(cfg, weights)
+    } else {
+        eprintln!("note: no artifacts found; using random weights (run `make artifacts`)");
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 0);
+        L1DeepMetV2::new(cfg, w)
+    }
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = ModelRuntime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    if dir.join("meta.json").exists() {
+        let cfg = ModelConfig::from_meta(&dir.join("meta.json"))?;
+        println!(
+            "model: L1DeepMETv2 (dim {}, {} EdgeConv layers, {} cont + {} cat features)",
+            cfg.node_dim, cfg.n_layers, cfg.n_cont, cfg.n_cat
+        );
+        let weights = Weights::load(&dir.join("weights.json"), &cfg)?;
+        println!("parameters: {}", weights.param_count());
+        let rt = ModelRuntime::load(&dir)?;
+        println!("PJRT platform: {}", rt.platform());
+        for b in &rt.buckets {
+            println!("  bucket: n_max={} e_max={}", b.n_max, b.e_max);
+        }
+    } else {
+        println!("no artifacts (run `make artifacts`)");
+    }
+    let arch = ArchConfig::default();
+    println!(
+        "fabric: P_edge={} P_node={} @ {:.0} MHz, FIFO depth {}",
+        arch.p_edge,
+        arch.p_node,
+        arch.clock_hz / 1e6,
+        arch.fifo_depth
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            Help::new("serve", "run the trigger pipeline over synthetic events")
+                .arg("--events N", "number of events (default 1000)")
+                .arg("--backend B", "rust-cpu | pjrt | fpga (default fpga)")
+                .arg("--workers N", "worker threads (default 4)")
+                .arg("--seed N", "event stream seed (default 1)")
+                .arg("--pileup X", "mean pileup (default 60)")
+                .arg("--config FILE", "JSON config file")
+                .render()
+        );
+        return Ok(());
+    }
+    let cfg = load_config(args)?;
+    let events = args.usize_or("events", 1000).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let mut tcfg: TriggerConfig = cfg.trigger.clone();
+    tcfg.workers = args.usize_or("workers", tcfg.workers).map_err(anyhow::Error::msg)?;
+    tcfg.mean_pileup = args.f64_or("pileup", tcfg.mean_pileup).map_err(anyhow::Error::msg)?;
+
+    let backend = match args.str_or("backend", "fpga") {
+        "rust-cpu" => Backend::RustCpu(load_model()?),
+        "pjrt" => Backend::Pjrt(PjrtService::start_default()?),
+        "fpga" => Backend::Fpga(DataflowEngine::new(cfg.arch.clone(), load_model()?)?),
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let server = TriggerServer::new(tcfg, backend, DEFAULT_BUCKETS.to_vec())?;
+    let report = server.serve_events(events, seed);
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let model = load_model()?;
+    let engine = DataflowEngine::new(cfg.arch.clone(), model)?;
+    let mut gen = EventGenerator::with_seed(seed);
+    let ev = gen.generate();
+    let graph = build_edges(&ev, cfg.trigger.delta_r as f32);
+    let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+    let r = engine.run(&padded);
+    println!(
+        "event {}: {} particles, {} edges (bucket {}x{})",
+        ev.id, padded.n, padded.e, padded.bucket.n_max, padded.bucket.e_max
+    );
+    println!(
+        "MET = {:.2} GeV (true {:.2}); accept decision depends on threshold",
+        r.output.met(),
+        ev.true_met()
+    );
+    println!(
+        "cycles: embed={} layers={:?} head={} total={}",
+        r.breakdown.embed_cycles,
+        r.breakdown.layers.iter().map(|l| l.cycles).collect::<Vec<_>>(),
+        r.breakdown.head_cycles,
+        r.breakdown.total_cycles
+    );
+    println!(
+        "latency: compute={:.1}us, e2e={:.1}us (PCIe in {:.1}us / out {:.1}us)",
+        r.compute_s * 1e6,
+        r.e2e_s * 1e6,
+        r.breakdown.transfer_in_s * 1e6,
+        r.breakdown.transfer_out_s * 1e6
+    );
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let rm = ResourceModel::new(cfg.arch.clone(), cfg.model.clone(), 256, 12288);
+    let mut t = Table::new(&["Resource", "Available", "Usage", "Util %"]);
+    for (name, avail, used) in rm.table() {
+        t.row(&[
+            name.to_string(),
+            avail.to_string(),
+            used.to_string(),
+            format!("{:.1}", 100.0 * used as f64 / avail as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_power(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let model = load_model()?;
+    let engine = DataflowEngine::new(cfg.arch.clone(), model)?;
+    let mut gen = EventGenerator::with_seed(1);
+    let ev = gen.generate();
+    let padded = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+    let sim = engine.run(&padded);
+    let pm = PowerModel::new(cfg.arch.clone());
+    let est = pm.table2(&sim);
+    let mut t = Table::new(&["", "FPGA", "GPU", "CPU", "FPGA vs GPU", "FPGA vs CPU"]);
+    t.row(&[
+        "Power (W)".to_string(),
+        format!("{:.2}", est.fpga_w),
+        format!("{:.2}", est.gpu_w),
+        format!("{:.2}", est.cpu_w),
+        format!("{:.2}x", est.fpga_vs_gpu()),
+        format!("{:.2}x", est.fpga_vs_cpu()),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! Pure-Rust reference implementation of L1DeepMETv2.
+//!
+//! Bit-comparable (to f32 round-off) with python/compile/model.py: same
+//! layer order, same masking, same folded batch norm. Serves three roles:
+//!   1. correctness oracle for the PJRT artifact path (tests),
+//!   2. the functional payload of the dataflow simulator's MP/NT units,
+//!   3. the "CPU Baseline SW" measurement point on this testbed.
+
+use crate::config::ModelConfig;
+use crate::graph::PaddedGraph;
+
+use super::tensor::Mat;
+use super::weights::Weights;
+
+/// Inference output.
+#[derive(Clone, Debug)]
+pub struct ModelOutput {
+    /// Per-particle weights (padded length n_max; zero on padding).
+    pub weights: Vec<f32>,
+    pub met_xy: [f32; 2],
+}
+
+impl ModelOutput {
+    pub fn met(&self) -> f32 {
+        (self.met_xy[0] * self.met_xy[0] + self.met_xy[1] * self.met_xy[1]).sqrt()
+    }
+}
+
+/// Reference model. Holds scratch buffers so repeated inference does not
+/// allocate (hot path of the CPU baseline).
+pub struct L1DeepMetV2 {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+}
+
+impl L1DeepMetV2 {
+    pub fn new(cfg: ModelConfig, weights: Weights) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        weights.validate(&cfg)?;
+        Ok(L1DeepMetV2 { cfg, weights })
+    }
+
+    /// Embedding stage: [n, 6]+[n, 2] -> x0 [n, node_dim].
+    /// Public: the dataflow simulator reuses it as its input stage payload.
+    pub fn embed(&self, g: &PaddedGraph) -> Mat {
+        let cfg = &self.cfg;
+        let w = &self.weights;
+        let n_max = g.bucket.n_max;
+        // Perf (§Perf L3): run the whole embedding chain on the live-row
+        // prefix only — padded rows would get nonzero *normalised* features
+        // ((0-mean)/std) plus biases and then burn two matmuls that the
+        // node mask discards anyway.
+        let n_live = g.n.min(n_max);
+        let mut h0 = Mat::zeros(n_live.max(1), cfg.in_dim());
+        for i in 0..n_live {
+            let row = h0.row_mut(i);
+            // normalised continuous features
+            for c in 0..cfg.n_cont {
+                row[c] = (g.cont[i * cfg.n_cont + c] - cfg.cont_mean[c]) / cfg.cont_std[c];
+            }
+            // categorical embeddings (indices clipped like jnp.clip)
+            let pdg = (g.cat[i * 2] as usize).min(cfg.n_pdg - 1);
+            let q = (g.cat[i * 2 + 1] as usize).min(cfg.n_charge - 1);
+            row[cfg.n_cont..cfg.n_cont + cfg.emb_dim].copy_from_slice(w.emb_pdg.row(pdg));
+            row[cfg.n_cont + cfg.emb_dim..].copy_from_slice(w.emb_q.row(q));
+        }
+        let mut h1 = h0.matmul(&w.w1);
+        h1.add_bias(&w.b1);
+        h1.relu();
+        let mut x_live = h1.matmul(&w.w2);
+        x_live.add_bias(&w.b2);
+        x_live.bn_fold(&w.bn0_scale, &w.bn0_shift);
+        // scatter the live rows into the padded output (padding stays zero,
+        // which is exactly what mask_rows produced before)
+        let mut x0 = Mat::zeros(n_max, cfg.node_dim);
+        for i in 0..n_live {
+            if g.node_mask[i] != 0.0 {
+                x0.row_mut(i).copy_from_slice(x_live.row(i));
+            }
+        }
+        x0
+    }
+
+    /// One EdgeConv layer (paper Eq. 2 + mean aggregation + residual + BN).
+    ///
+    /// Perf note (§Perf L3): messages are computed for the *live* edge
+    /// prefix only — padded edge slots would otherwise burn the φ-MLP on
+    /// garbage that the aggregation mask throws away (the padding is a
+    /// leading prefix by construction, see graph::padding).
+    fn edgeconv(&self, l: usize, x: &Mat, g: &PaddedGraph) -> Mat {
+        let cfg = &self.cfg;
+        let lw = &self.weights.layers[l];
+        let n = g.bucket.n_max;
+        let d = cfg.node_dim;
+        // live edges form a prefix; fall back to full scan if masks are
+        // interior (hand-built graphs in tests may do that)
+        let e_live = g.edge_mask.iter().take_while(|&&m| m == 1.0).count();
+        let contiguous = g.edge_mask[e_live..].iter().all(|&m| m == 0.0);
+        let e = if contiguous { e_live } else { g.bucket.e_max };
+
+        // Gather endpoints and build [e, 2D] message-input features.
+        let mut feat = Mat::zeros(e, 2 * d);
+        for k in 0..e {
+            let (s, t) = (g.src[k] as usize, g.dst[k] as usize);
+            let xu = x.row(s);
+            let xv = x.row(t);
+            let row = feat.row_mut(k);
+            row[..d].copy_from_slice(xu);
+            for c in 0..d {
+                row[d + c] = xv[c] - xu[c];
+            }
+        }
+        // phi MLP
+        let mut h = feat.matmul(&lw.wa);
+        h.add_bias(&lw.ba);
+        h.relu();
+        let mut msg = h.matmul(&lw.wb);
+        msg.add_bias(&lw.bb);
+
+        // Masked mean aggregation into target nodes.
+        let mut agg = Mat::zeros(n, d);
+        let mut deg = vec![0.0f32; n];
+        for k in 0..e {
+            if g.edge_mask[k] == 0.0 {
+                continue;
+            }
+            let t = g.dst[k] as usize;
+            deg[t] += 1.0;
+            let arow = agg.row_mut(t);
+            let mrow = msg.row(k);
+            for c in 0..d {
+                arow[c] += mrow[c];
+            }
+        }
+        for i in 0..n {
+            let dv = deg[i].max(1.0);
+            for v in agg.row_mut(i) {
+                *v /= dv;
+            }
+        }
+
+        // Residual + BN + node mask.
+        let mut y = x.clone();
+        y.add_assign(&agg);
+        y.bn_fold(&lw.bn_scale, &lw.bn_shift);
+        y.mask_rows(&g.node_mask);
+        y
+    }
+
+    /// Output head: node embeddings -> per-particle weights.
+    /// Public: the dataflow simulator reuses it as its output stage payload.
+    pub fn head(&self, x: &Mat, g: &PaddedGraph) -> Vec<f32> {
+        let w = &self.weights;
+        let mut h = x.matmul(&w.wo1);
+        h.add_bias(&w.bo1);
+        h.relu();
+        let mut o = h.matmul(&w.wo2);
+        o.add_bias(&w.bo2);
+        o.sigmoid();
+        (0..x.rows).map(|i| o.at(i, 0) * g.node_mask[i]).collect()
+    }
+
+    /// Full forward pass over a padded graph.
+    pub fn forward(&self, g: &PaddedGraph) -> ModelOutput {
+        let cfg = &self.cfg;
+        let mut x = self.embed(g);
+        for l in 0..cfg.n_layers {
+            x = self.edgeconv(l, &x, g);
+        }
+        self.finish(&x, g)
+    }
+
+    /// Head + MET from final node embeddings (shared with the simulator).
+    pub fn finish(&self, x: &Mat, g: &PaddedGraph) -> ModelOutput {
+        let cfg = &self.cfg;
+        let weights = self.head(x, g);
+        let mut met_xy = [0.0f32; 2];
+        for i in 0..g.bucket.n_max {
+            met_xy[0] += weights[i] * g.cont[i * cfg.n_cont + cfg.idx_px];
+            met_xy[1] += weights[i] * g.cont[i * cfg.n_cont + cfg.idx_py];
+        }
+        ModelOutput { weights, met_xy }
+    }
+
+    /// FLOP count of one forward pass (MAC-based; for perf reporting).
+    pub fn flops(&self, n: usize, e: usize) -> u64 {
+        let cfg = &self.cfg;
+        let (d, he, hm, ho) =
+            (cfg.node_dim, cfg.hid_edge, cfg.hid_emb, cfg.hid_out);
+        let embed = 2 * n * cfg.in_dim() * hm + 2 * n * hm * d;
+        let per_layer = 2 * e * (2 * d) * he + 2 * e * he * d + e * d /* agg */;
+        let head = 2 * n * d * ho + 2 * n * ho;
+        (embed + cfg.n_layers * per_layer + head) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+    use crate::physics::generator::EventGenerator;
+
+    fn model() -> L1DeepMetV2 {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 3);
+        L1DeepMetV2::new(cfg, w).unwrap()
+    }
+
+    fn sample_graph(seed: u64) -> PaddedGraph {
+        let mut gen = EventGenerator::with_seed(seed);
+        let ev = gen.generate();
+        let g = build_edges(&ev, 0.8);
+        pad_graph(&ev, &g, &DEFAULT_BUCKETS)
+    }
+
+    #[test]
+    fn forward_finite_and_masked() {
+        let m = model();
+        let g = sample_graph(1);
+        let out = m.forward(&g);
+        assert!(out.weights.iter().all(|w| w.is_finite() && (0.0..=1.0).contains(w)));
+        assert!(out.weights[g.n..].iter().all(|&w| w == 0.0));
+        assert!(out.met().is_finite());
+    }
+
+    #[test]
+    fn met_matches_weight_sum() {
+        let m = model();
+        let g = sample_graph(2);
+        let out = m.forward(&g);
+        let mut mx = 0.0f32;
+        let mut my = 0.0f32;
+        for i in 0..g.bucket.n_max {
+            mx += out.weights[i] * g.cont[i * 6 + 3];
+            my += out.weights[i] * g.cont[i * 6 + 4];
+        }
+        assert!((out.met_xy[0] - mx).abs() < 1e-4);
+        assert!((out.met_xy[1] - my).abs() < 1e-4);
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = model();
+        let g = sample_graph(3);
+        let a = m.forward(&g);
+        let b = m.forward(&g);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.met_xy, b.met_xy);
+    }
+
+    #[test]
+    fn padding_bucket_invariance() {
+        // Same event padded into two buckets -> same result on real nodes.
+        let mut gen = EventGenerator::with_seed(4);
+        let ev = gen.generate();
+        let graph = build_edges(&ev, 0.8);
+        let m = model();
+        let small = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        let big = pad_graph(
+            &ev,
+            &graph,
+            &[crate::graph::Bucket { n_max: 256, e_max: 12288 }],
+        );
+        let (a, b) = (m.forward(&small), m.forward(&big));
+        for i in 0..small.n {
+            assert!(
+                (a.weights[i] - b.weights[i]).abs() < 1e-4,
+                "node {i}: {} vs {}",
+                a.weights[i],
+                b.weights[i]
+            );
+        }
+        assert!((a.met_xy[0] - b.met_xy[0]).abs() < 1e-2);
+        assert!((a.met_xy[1] - b.met_xy[1]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn edge_direction_matters() {
+        // EdgeConv messages flow src->dst; flipping an asymmetric edge set
+        // must change the output (guards against silently symmetrising).
+        let m = model();
+        let mut g = sample_graph(5);
+        // make the live edge set asymmetric by dropping the first live edge's
+        // reverse partner if present
+        if g.e >= 2 {
+            let (s0, d0) = (g.src[0], g.dst[0]);
+            for k in 1..g.e {
+                if g.src[k] == d0 && g.dst[k] == s0 {
+                    g.edge_mask[k] = 0.0;
+                    break;
+                }
+            }
+        }
+        let a = m.forward(&g);
+        let mut flipped = g.clone();
+        for k in 0..flipped.e {
+            std::mem::swap(&mut flipped.src[k], &mut flipped.dst[k]);
+        }
+        let b = m.forward(&flipped);
+        let diff: f32 = a
+            .weights
+            .iter()
+            .zip(&b.weights)
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1e-6, "flip had no effect");
+    }
+
+    #[test]
+    fn flops_scale_with_graph() {
+        let m = model();
+        assert!(m.flops(200, 2000) > m.flops(100, 1000));
+        assert!(m.flops(64, 512) > 0);
+    }
+}

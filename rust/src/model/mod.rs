@@ -1,0 +1,10 @@
+//! Pure-Rust L1DeepMETv2 reference model (see DESIGN.md §5 for the shared
+//! specification; python/compile/model.py is the co-implementation).
+
+pub mod l1deepmetv2;
+pub mod tensor;
+pub mod weights;
+
+pub use l1deepmetv2::{L1DeepMetV2, ModelOutput};
+pub use tensor::Mat;
+pub use weights::{EdgeConvWeights, Weights};

@@ -1,0 +1,205 @@
+//! Minimal row-major f32 matrix type for the reference model.
+//!
+//! Not a general tensor library: exactly the ops L1DeepMETv2 needs, written
+//! to be readable and fast enough to serve as the CPU baseline (the matmul
+//! has a cache-friendly ikj loop; §Perf L3 measures it).
+
+/// Row-major 2-D matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape {rows}x{cols} vs len {}", data.len());
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// C = self @ rhs  (ikj loop: streams rhs rows, good cache behaviour).
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, rhs.rows, rhs.cols);
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        self.matmul_into(rhs, &mut out);
+        out
+    }
+
+    /// Matmul into a pre-allocated output (hot-path variant; avoids
+    /// per-call allocation in the serve loop).
+    pub fn matmul_into(&self, rhs: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, rhs.rows);
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, rhs.cols);
+        out.data.fill(0.0);
+        let n = rhs.cols;
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue; // padded rows are all-zero; skip their work
+                }
+                let brow = &rhs.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+    }
+
+    /// Add a row-vector bias in place.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    /// ReLU in place.
+    pub fn relu(&mut self) {
+        for x in &mut self.data {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// Sigmoid in place.
+    pub fn sigmoid(&mut self) {
+        for x in &mut self.data {
+            *x = 1.0 / (1.0 + (-*x).exp());
+        }
+    }
+
+    /// Folded batch-norm: x = x * scale + shift (per column), in place.
+    pub fn bn_fold(&mut self, scale: &[f32], shift: &[f32]) {
+        assert_eq!(scale.len(), self.cols);
+        assert_eq!(shift.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for c in 0..self.cols {
+                row[c] = row[c] * scale[c] + shift[c];
+            }
+        }
+    }
+
+    /// Zero out rows where mask == 0 (mask length == rows).
+    pub fn mask_rows(&mut self, mask: &[f32]) {
+        assert_eq!(mask.len(), self.rows);
+        for (r, &m) in mask.iter().enumerate() {
+            if m == 0.0 {
+                self.row_mut(r).fill(0.0);
+            }
+        }
+    }
+
+    /// Elementwise addition in place.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (1, 2));
+        assert_eq!(c.data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_into_matches() {
+        let a = Mat::from_vec(3, 4, (0..12).map(|x| x as f32).collect());
+        let b = Mat::from_vec(4, 5, (0..20).map(|x| (x as f32).sin()).collect());
+        let c1 = a.matmul(&b);
+        let mut c2 = Mat::zeros(3, 5);
+        a.matmul_into(&b, &mut c2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn bias_relu_sigmoid() {
+        let mut m = Mat::from_vec(2, 2, vec![-1.0, 0.5, 2.0, -3.0]);
+        m.add_bias(&[1.0, 0.0]);
+        assert_eq!(m.data, vec![0.0, 0.5, 3.0, -3.0]);
+        m.relu();
+        assert_eq!(m.data, vec![0.0, 0.5, 3.0, 0.0]);
+        let mut s = Mat::from_vec(1, 1, vec![0.0]);
+        s.sigmoid();
+        assert_eq!(s.data, vec![0.5]);
+    }
+
+    #[test]
+    fn bn_and_mask() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        m.bn_fold(&[2.0, 0.5], &[1.0, -1.0]);
+        assert_eq!(m.data, vec![3.0, 0.0, 7.0, 1.0]);
+        m.mask_rows(&[1.0, 0.0]);
+        assert_eq!(m.data, vec![3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,290 @@
+//! Model parameters: loading artifacts/weights.json (written by aot.py /
+//! train.py) and deterministic re-initialisation for tests without
+//! artifacts.
+
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::util::json;
+use crate::util::rng::Rng;
+
+use super::tensor::Mat;
+
+/// All L1DeepMETv2 parameters (inference form: BN folded to scale/shift).
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub emb_pdg: Mat, // [n_pdg, emb_dim]
+    pub emb_q: Mat,   // [n_charge, emb_dim]
+    pub w1: Mat,      // [in_dim, hid_emb]
+    pub b1: Vec<f32>,
+    pub w2: Mat, // [hid_emb, node_dim]
+    pub b2: Vec<f32>,
+    pub bn0_scale: Vec<f32>,
+    pub bn0_shift: Vec<f32>,
+    /// Per EdgeConv layer: (wa, ba, wb, bb, bn_scale, bn_shift).
+    pub layers: Vec<EdgeConvWeights>,
+    pub wo1: Mat, // [node_dim, hid_out]
+    pub bo1: Vec<f32>,
+    pub wo2: Mat, // [hid_out, 1]
+    pub bo2: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EdgeConvWeights {
+    pub wa: Mat, // [2*node_dim, hid_edge]
+    pub ba: Vec<f32>,
+    pub wb: Mat, // [hid_edge, node_dim]
+    pub bb: Vec<f32>,
+    pub bn_scale: Vec<f32>,
+    pub bn_shift: Vec<f32>,
+}
+
+impl EdgeConvWeights {
+    /// Single-edge message m_uv = phi(concat(xu, xv - xu)) — the exact
+    /// computation of one Enhanced MP Unit datapath pass (paper Alg. 1
+    /// steps 5-7). `hidden` is caller-provided scratch of len hid_edge.
+    pub fn message(&self, xu: &[f32], xv: &[f32], hidden: &mut [f32], out: &mut [f32]) {
+        let d = xu.len();
+        let h = self.ba.len();
+        debug_assert_eq!(xv.len(), d);
+        debug_assert_eq!(hidden.len(), h);
+        debug_assert_eq!(out.len(), self.bb.len());
+        debug_assert_eq!(self.wa.rows, 2 * d);
+        // hidden = relu([xu, xv-xu] @ wa + ba), accumulated row-by-row so we
+        // never materialise the concat.
+        hidden.copy_from_slice(&self.ba);
+        for (k, &x) in xu.iter().enumerate() {
+            if x != 0.0 {
+                let wrow = self.wa.row(k);
+                for j in 0..h {
+                    hidden[j] += x * wrow[j];
+                }
+            }
+        }
+        for k in 0..d {
+            let dx = xv[k] - xu[k];
+            if dx != 0.0 {
+                let wrow = self.wa.row(d + k);
+                for j in 0..h {
+                    hidden[j] += dx * wrow[j];
+                }
+            }
+        }
+        for v in hidden.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        // out = hidden @ wb + bb
+        out.copy_from_slice(&self.bb);
+        for (k, &hv) in hidden.iter().enumerate() {
+            if hv != 0.0 {
+                let wrow = self.wb.row(k);
+                for (o, &w) in out.iter_mut().zip(wrow) {
+                    *o += hv * w;
+                }
+            }
+        }
+    }
+}
+
+fn mat_from_json(v: &json::Value, name: &str) -> anyhow::Result<Mat> {
+    let entry = v.get(name).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+    let shape = entry.get("shape")?.as_usize_vec()?;
+    let data = entry.get("data")?.as_f32_vec()?;
+    anyhow::ensure!(
+        shape.len() <= 2,
+        "{name}: expected <=2-d, got shape {shape:?}"
+    );
+    let (rows, cols) = match shape.len() {
+        2 => (shape[0], shape[1]),
+        1 => (1, shape[0]),
+        _ => (1, 1),
+    };
+    anyhow::ensure!(rows * cols == data.len(), "{name}: shape/data mismatch");
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn vec_from_json(v: &json::Value, name: &str) -> anyhow::Result<Vec<f32>> {
+    Ok(mat_from_json(v, name)?.data)
+}
+
+impl Weights {
+    /// Load from artifacts/weights.json and validate against the config.
+    pub fn load(path: &Path, cfg: &ModelConfig) -> anyhow::Result<Weights> {
+        let v = json::parse_file(path)?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            layers.push(EdgeConvWeights {
+                wa: mat_from_json(&v, &format!("ec{l}_wa"))?,
+                ba: vec_from_json(&v, &format!("ec{l}_ba"))?,
+                wb: mat_from_json(&v, &format!("ec{l}_wb"))?,
+                bb: vec_from_json(&v, &format!("ec{l}_bb"))?,
+                bn_scale: vec_from_json(&v, &format!("ec{l}_bn_scale"))?,
+                bn_shift: vec_from_json(&v, &format!("ec{l}_bn_shift"))?,
+            });
+        }
+        let w = Weights {
+            emb_pdg: mat_from_json(&v, "emb_pdg")?,
+            emb_q: mat_from_json(&v, "emb_q")?,
+            w1: mat_from_json(&v, "w1")?,
+            b1: vec_from_json(&v, "b1")?,
+            w2: mat_from_json(&v, "w2")?,
+            b2: vec_from_json(&v, "b2")?,
+            bn0_scale: vec_from_json(&v, "bn0_scale")?,
+            bn0_shift: vec_from_json(&v, "bn0_shift")?,
+            layers,
+            wo1: mat_from_json(&v, "wo1")?,
+            bo1: vec_from_json(&v, "bo1")?,
+            wo2: mat_from_json(&v, "wo2")?,
+            bo2: vec_from_json(&v, "bo2")?,
+        };
+        w.validate(cfg)?;
+        Ok(w)
+    }
+
+    /// Deterministic random weights (for tests that must run without
+    /// artifacts; NOT the same numbers as python init).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let mut he = |rows: usize, cols: usize| -> Mat {
+            let std = (2.0 / rows as f64).sqrt();
+            Mat::from_vec(
+                rows,
+                cols,
+                (0..rows * cols)
+                    .map(|_| (rng.normal() * std) as f32)
+                    .collect(),
+            )
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| EdgeConvWeights {
+                wa: he(2 * cfg.node_dim, cfg.hid_edge),
+                ba: vec![0.0; cfg.hid_edge],
+                wb: he(cfg.hid_edge, cfg.node_dim),
+                bb: vec![0.0; cfg.node_dim],
+                bn_scale: vec![1.0; cfg.node_dim],
+                bn_shift: vec![0.0; cfg.node_dim],
+            })
+            .collect();
+        Weights {
+            emb_pdg: he(cfg.n_pdg, cfg.emb_dim),
+            emb_q: he(cfg.n_charge, cfg.emb_dim),
+            w1: he(cfg.in_dim(), cfg.hid_emb),
+            b1: vec![0.0; cfg.hid_emb],
+            w2: he(cfg.hid_emb, cfg.node_dim),
+            b2: vec![0.0; cfg.node_dim],
+            bn0_scale: vec![1.0; cfg.node_dim],
+            bn0_shift: vec![0.0; cfg.node_dim],
+            layers,
+            wo1: he(cfg.node_dim, cfg.hid_out),
+            bo1: vec![0.0; cfg.hid_out],
+            wo2: he(cfg.hid_out, 1),
+            bo2: vec![0.0; 1],
+        }
+    }
+
+    pub fn validate(&self, cfg: &ModelConfig) -> anyhow::Result<()> {
+        let d = cfg.node_dim;
+        anyhow::ensure!(
+            self.emb_pdg.rows == cfg.n_pdg && self.emb_pdg.cols == cfg.emb_dim,
+            "emb_pdg shape"
+        );
+        anyhow::ensure!(
+            self.emb_q.rows == cfg.n_charge && self.emb_q.cols == cfg.emb_dim,
+            "emb_q shape"
+        );
+        anyhow::ensure!(
+            self.w1.rows == cfg.in_dim() && self.w1.cols == cfg.hid_emb,
+            "w1 shape {}x{}",
+            self.w1.rows,
+            self.w1.cols
+        );
+        anyhow::ensure!(self.w2.rows == cfg.hid_emb && self.w2.cols == d, "w2 shape");
+        anyhow::ensure!(self.bn0_scale.len() == d && self.bn0_shift.len() == d, "bn0");
+        anyhow::ensure!(self.layers.len() == cfg.n_layers, "layer count");
+        for (l, lw) in self.layers.iter().enumerate() {
+            anyhow::ensure!(
+                lw.wa.rows == 2 * d && lw.wa.cols == cfg.hid_edge,
+                "ec{l}_wa shape"
+            );
+            anyhow::ensure!(lw.wb.rows == cfg.hid_edge && lw.wb.cols == d, "ec{l}_wb shape");
+            anyhow::ensure!(
+                lw.bn_scale.len() == d && lw.bn_shift.len() == d,
+                "ec{l} bn"
+            );
+        }
+        anyhow::ensure!(self.wo1.rows == d && self.wo1.cols == cfg.hid_out, "wo1 shape");
+        anyhow::ensure!(self.wo2.rows == cfg.hid_out && self.wo2.cols == 1, "wo2 shape");
+        Ok(())
+    }
+
+    /// Flat parameter count (for the resource/power models and docs).
+    pub fn param_count(&self) -> usize {
+        let mut n = self.emb_pdg.data.len()
+            + self.emb_q.data.len()
+            + self.w1.data.len()
+            + self.b1.len()
+            + self.w2.data.len()
+            + self.b2.len()
+            + self.bn0_scale.len()
+            + self.bn0_shift.len()
+            + self.wo1.data.len()
+            + self.bo1.len()
+            + self.wo2.data.len()
+            + self.bo2.len();
+        for l in &self.layers {
+            n += l.wa.data.len()
+                + l.ba.len()
+                + l.wb.data.len()
+                + l.bb.len()
+                + l.bn_scale.len()
+                + l.bn_shift.len();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_validate() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 1);
+        w.validate(&cfg).unwrap();
+        assert!(w.param_count() > 10_000);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let cfg = ModelConfig::default();
+        let a = Weights::random(&cfg, 7);
+        let b = Weights::random(&cfg, 7);
+        assert_eq!(a.w1.data, b.w1.data);
+        assert_eq!(a.layers[1].wa.data, b.layers[1].wa.data);
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let cfg = ModelConfig::default();
+        let mut w = Weights::random(&cfg, 1);
+        w.w1 = Mat::zeros(3, 3);
+        assert!(w.validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn load_real_weights_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.json");
+        if !path.exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let cfg = ModelConfig::default();
+        let w = Weights::load(&path, &cfg).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        // init BN is identity
+        assert!(w.bn0_scale.iter().all(|&s| (s - 1.0).abs() < 10.0));
+    }
+}

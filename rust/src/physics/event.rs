@@ -1,0 +1,202 @@
+//! Particle / event data types shared across the whole stack.
+
+/// Detector acceptance in pseudorapidity (L1 PF candidates: |eta| < 3).
+pub const ETA_MAX: f32 = 3.0;
+
+/// Coarse particle classes reconstructed by the L1 trigger.
+/// Mirrors python/compile/events.py (pdg_class 0..7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParticleClass {
+    ChargedHadronPv = 0,
+    ChargedHadronPu = 1,
+    NeutralHadron = 2,
+    Photon = 3,
+    Electron = 4,
+    Muon = 5,
+    Tau = 6,
+    Other = 7,
+}
+
+impl ParticleClass {
+    pub fn from_index(i: usize) -> ParticleClass {
+        use ParticleClass::*;
+        match i {
+            0 => ChargedHadronPv,
+            1 => ChargedHadronPu,
+            2 => NeutralHadron,
+            3 => Photon,
+            4 => Electron,
+            5 => Muon,
+            6 => Tau,
+            _ => Other,
+        }
+    }
+
+    pub fn is_charged(self) -> bool {
+        use ParticleClass::*;
+        matches!(self, ChargedHadronPv | ChargedHadronPu | Electron | Muon)
+    }
+}
+
+/// One reconstructed particle (L1 PF candidate).
+#[derive(Clone, Copy, Debug)]
+pub struct Particle {
+    pub pt: f32,
+    pub eta: f32,
+    pub phi: f32,
+    pub px: f32,
+    pub py: f32,
+    /// Longitudinal impact parameter (vertex association handle).
+    pub dz: f32,
+    pub class: ParticleClass,
+    /// Electric charge in {-1, 0, +1}.
+    pub charge: i8,
+    /// Truth label: 1.0 if from the hard scatter, 0.0 if pileup.
+    /// Only used for training targets and analysis, never by inference.
+    pub truth_weight: f32,
+}
+
+impl Particle {
+    /// The 6 continuous model features [pt, eta, phi, px, py, dz].
+    pub fn cont_features(&self) -> [f32; 6] {
+        [self.pt, self.eta, self.phi, self.px, self.py, self.dz]
+    }
+
+    /// The 2 categorical model features [pdg_class, charge_class].
+    pub fn cat_features(&self) -> [i32; 2] {
+        [self.class as i32, (self.charge + 1) as i32]
+    }
+}
+
+/// One collision event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub id: u64,
+    pub particles: Vec<Particle>,
+    /// Generator-level true MET vector (what the regression should recover).
+    pub true_met_xy: [f32; 2],
+}
+
+impl Event {
+    pub fn n_particles(&self) -> usize {
+        self.particles.len()
+    }
+
+    pub fn true_met(&self) -> f32 {
+        (self.true_met_xy[0] * self.true_met_xy[0]
+            + self.true_met_xy[1] * self.true_met_xy[1])
+            .sqrt()
+    }
+
+    /// Flattened continuous feature matrix [n, 6] row-major.
+    pub fn cont_matrix(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.particles.len() * 6);
+        for p in &self.particles {
+            out.extend_from_slice(&p.cont_features());
+        }
+        out
+    }
+
+    /// Flattened categorical feature matrix [n, 2] row-major.
+    pub fn cat_matrix(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.particles.len() * 2);
+        for p in &self.particles {
+            out.extend_from_slice(&p.cat_features());
+        }
+        out
+    }
+}
+
+/// Wrap an angle to (-pi, pi].
+#[inline]
+pub fn wrap_phi(phi: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    let mut x = (phi + std::f32::consts::PI) % two_pi;
+    if x < 0.0 {
+        x += two_pi;
+    }
+    x - std::f32::consts::PI
+}
+
+/// Squared angular distance of the paper's Eq. 1.
+#[inline]
+pub fn delta_r2(eta1: f32, phi1: f32, eta2: f32, phi2: f32) -> f32 {
+    let de = eta1 - eta2;
+    let dp = wrap_phi(phi1 - phi2);
+    de * de + dp * dp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_roundtrip() {
+        for i in 0..8 {
+            assert_eq!(ParticleClass::from_index(i) as usize, i);
+        }
+        assert_eq!(ParticleClass::from_index(99), ParticleClass::Other);
+    }
+
+    #[test]
+    fn charged_classes() {
+        assert!(ParticleClass::ChargedHadronPv.is_charged());
+        assert!(ParticleClass::Muon.is_charged());
+        assert!(!ParticleClass::Photon.is_charged());
+        assert!(!ParticleClass::NeutralHadron.is_charged());
+    }
+
+    #[test]
+    fn wrap_phi_range() {
+        for k in -20..20 {
+            let phi = 0.7 + k as f32 * std::f32::consts::PI;
+            let w = wrap_phi(phi);
+            assert!(w > -std::f32::consts::PI - 1e-5 && w <= std::f32::consts::PI + 1e-5);
+        }
+        // 3π ≡ π ≡ -π: either representation of the boundary is fine.
+        assert!((wrap_phi(3.0 * std::f32::consts::PI).abs() - std::f32::consts::PI).abs() < 1e-5);
+    }
+
+    #[test]
+    fn delta_r2_wraps_phi_seam() {
+        // Two particles on opposite sides of the phi seam are close.
+        let d = delta_r2(0.0, 3.1, 0.0, -3.1);
+        assert!(d < 0.01, "d={d}");
+    }
+
+    #[test]
+    fn feature_layout() {
+        let p = Particle {
+            pt: 10.0,
+            eta: 1.0,
+            phi: 0.5,
+            px: 8.8,
+            py: 4.8,
+            dz: 0.1,
+            class: ParticleClass::Electron,
+            charge: -1,
+            truth_weight: 1.0,
+        };
+        assert_eq!(p.cont_features(), [10.0, 1.0, 0.5, 8.8, 4.8, 0.1]);
+        assert_eq!(p.cat_features(), [4, 0]);
+    }
+
+    #[test]
+    fn event_matrices() {
+        let p = Particle {
+            pt: 1.0,
+            eta: 0.0,
+            phi: 0.0,
+            px: 1.0,
+            py: 0.0,
+            dz: 0.0,
+            class: ParticleClass::Photon,
+            charge: 0,
+            truth_weight: 0.0,
+        };
+        let ev = Event { id: 7, particles: vec![p; 3], true_met_xy: [3.0, 4.0] };
+        assert_eq!(ev.cont_matrix().len(), 18);
+        assert_eq!(ev.cat_matrix().len(), 6);
+        assert!((ev.true_met() - 5.0).abs() < 1e-6);
+    }
+}

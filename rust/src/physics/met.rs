@@ -1,0 +1,138 @@
+//! MET computation and resolution analysis (drives Fig. 2).
+
+use crate::util::stats::{self, BinnedProfile};
+
+use super::event::Event;
+
+/// |MET| from a vector.
+pub fn met_mag(met_xy: [f32; 2]) -> f32 {
+    (met_xy[0] * met_xy[0] + met_xy[1] * met_xy[1]).sqrt()
+}
+
+/// Weighted-sum MET from per-particle weights.
+pub fn weighted_met_xy(ev: &Event, weights: &[f32]) -> [f32; 2] {
+    assert_eq!(weights.len(), ev.n_particles());
+    let mut met = [0.0f32; 2];
+    for (p, &w) in ev.particles.iter().zip(weights) {
+        met[0] += w * p.px;
+        met[1] += w * p.py;
+    }
+    met
+}
+
+/// One (true, reconstructed) MET pair.
+#[derive(Clone, Copy, Debug)]
+pub struct MetPair {
+    pub true_met: f64,
+    pub reco_met: f64,
+}
+
+impl MetPair {
+    pub fn residual(&self) -> f64 {
+        self.reco_met - self.true_met
+    }
+}
+
+/// Fig. 2-style resolution curve: robust sigma of (reco - true) per bin of
+/// true MET ("bin center = bin of MET values where corresponding resolution
+/// is computed, lower resolution = higher similarity").
+pub struct ResolutionCurve {
+    profile: BinnedProfile,
+}
+
+impl ResolutionCurve {
+    pub fn new(met_lo: f64, met_hi: f64, bins: usize) -> Self {
+        ResolutionCurve { profile: BinnedProfile::new(met_lo, met_hi, bins) }
+    }
+
+    pub fn push(&mut self, pair: MetPair) {
+        self.profile.push(pair.true_met, pair.residual());
+    }
+
+    pub fn push_all(&mut self, pairs: &[MetPair]) {
+        for &p in pairs {
+            self.push(p);
+        }
+    }
+
+    /// (bin_center, resolution, n_samples) per bin.
+    pub fn resolve(&self) -> Vec<(f64, f64, usize)> {
+        self.profile.map(stats::quantile_resolution)
+    }
+
+    /// (bin_center, mean residual, n) per bin — the response/bias curve.
+    pub fn bias(&self) -> Vec<(f64, f64, usize)> {
+        self.profile
+            .map(|xs| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+}
+
+/// Overall scalar metrics across a sample.
+#[derive(Clone, Copy, Debug)]
+pub struct MetMetrics {
+    pub resolution: f64,
+    pub bias: f64,
+    pub rmse: f64,
+    pub n: usize,
+}
+
+pub fn overall_metrics(pairs: &[MetPair]) -> MetMetrics {
+    let res: Vec<f64> = pairs.iter().map(|p| p.residual()).collect();
+    let n = res.len();
+    let bias = res.iter().sum::<f64>() / n.max(1) as f64;
+    let rmse = (res.iter().map(|r| r * r).sum::<f64>() / n.max(1) as f64).sqrt();
+    MetMetrics { resolution: stats::quantile_resolution(&res), bias, rmse, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn met_mag_pythagoras() {
+        assert!((met_mag([3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(met_mag([0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn resolution_curve_recovers_sigma() {
+        // Residuals ~ N(0, sigma(true_met)) with sigma = 5 + 0.1*met:
+        // the curve should recover the linear growth.
+        let mut rng = Rng::new(1);
+        let mut curve = ResolutionCurve::new(0.0, 100.0, 5);
+        for _ in 0..50_000 {
+            let t = rng.range_f64(0.0, 100.0);
+            let sigma = 5.0 + 0.1 * t;
+            curve.push(MetPair { true_met: t, reco_met: t + rng.normal_ms(0.0, sigma) });
+        }
+        let res = curve.resolve();
+        assert_eq!(res.len(), 5);
+        for (center, r, n) in res {
+            let expect = 5.0 + 0.1 * center;
+            assert!(n > 1000);
+            assert!((r - expect).abs() / expect < 0.1, "center={center} r={r} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn bias_detected() {
+        let mut curve = ResolutionCurve::new(0.0, 10.0, 1);
+        for i in 0..100 {
+            curve.push(MetPair { true_met: 5.0, reco_met: 5.0 + 2.0 + (i % 3) as f64 * 0.0 });
+        }
+        let b = curve.bias();
+        assert!((b[0].1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overall_metrics_sane() {
+        let pairs: Vec<MetPair> = (0..1000)
+            .map(|i| MetPair { true_met: 50.0, reco_met: 50.0 + if i % 2 == 0 { 1.0 } else { -1.0 } })
+            .collect();
+        let m = overall_metrics(&pairs);
+        assert_eq!(m.n, 1000);
+        assert!(m.bias.abs() < 1e-9);
+        assert!((m.rmse - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! Physics substrate: synthetic HL-LHC collision events (DELPHES
+//! substitute), the PUPPI baseline algorithm, and MET analysis.
+//!
+//! The paper evaluates on 16K graphs produced by DELPHES fast simulation.
+//! DELPHES itself is a large C++ detector-simulation package we do not
+//! have; this module generates events with the same *schema* and the
+//! statistical features that matter to the system under test: stochastic
+//! per-event multiplicities (so graph sizes vary event-by-event), spatially
+//! clustered hard-scatter particles plus diffuse pileup (so ΔR graph
+//! construction produces realistic degree distributions), and detector
+//! smearing (so a learned per-particle weighting has signal to recover).
+
+pub mod event;
+pub mod generator;
+pub mod met;
+pub mod puppi;
+
+pub use event::{Event, Particle, ParticleClass, ETA_MAX};
+pub use generator::{EventGenerator, GeneratorConfig};

@@ -1,0 +1,167 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from the
+//! Rust hot path. Python never runs here — the HLO was lowered once by
+//! `make artifacts` (python/compile/aot.py).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! (the text parser reassigns the 64-bit jax instruction ids that
+//! xla_extension 0.5.1 would otherwise reject) -> XlaComputation ->
+//! PjRtClient::compile -> execute.
+
+pub mod service;
+pub use service::PjrtService;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::graph::{Bucket, PaddedGraph};
+use crate::model::ModelOutput;
+use crate::util::json;
+
+/// One compiled executable per artifact size bucket.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    /// bucket -> compiled executable, ordered smallest-first.
+    executables: BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    pub buckets: Vec<Bucket>,
+    pub model_cfg: ModelConfig,
+}
+
+impl ModelRuntime {
+    /// Load every artifact listed in `<dir>/meta.json`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let meta_path = artifacts_dir.join("meta.json");
+        let meta = json::parse_file(&meta_path)?;
+        let model_cfg = ModelConfig::from_meta(&meta_path)?;
+        model_cfg.validate()?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = BTreeMap::new();
+        let mut buckets = Vec::new();
+        for b in meta.get("buckets")?.as_arr()? {
+            let n = b.get("n")?.as_usize()?;
+            let e = b.get("e")?.as_usize()?;
+            let file: PathBuf = artifacts_dir.join(b.get("file")?.as_str()?);
+            let proto = xla::HloModuleProto::from_text_file(&file)
+                .with_context(|| format!("parsing HLO text {}", file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", file.display()))?;
+            executables.insert((n, e), exe);
+            buckets.push(Bucket { n_max: n, e_max: e });
+        }
+        anyhow::ensure!(!executables.is_empty(), "no artifacts found in meta.json");
+        buckets.sort_by_key(|b| (b.n_max, b.e_max));
+        Ok(ModelRuntime { client, executables, buckets, model_cfg })
+    }
+
+    /// Default artifacts location relative to the crate root.
+    pub fn artifacts_dir() -> PathBuf {
+        // Allow override for deployments; default to the build-time layout.
+        if let Ok(dir) = std::env::var("DGNNFLOW_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Convenience: load from the default location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pack a padded graph into input literals for its bucket's executable.
+    fn pack_inputs(&self, g: &PaddedGraph) -> Result<[xla::Literal; 6]> {
+        let n = g.bucket.n_max as i64;
+        let cont = xla::Literal::vec1(&g.cont).reshape(&[n, 6])?;
+        let cat = xla::Literal::vec1(&g.cat).reshape(&[n, 2])?;
+        Ok([
+            cont,
+            cat,
+            xla::Literal::vec1(&g.src),
+            xla::Literal::vec1(&g.dst),
+            xla::Literal::vec1(&g.node_mask),
+            xla::Literal::vec1(&g.edge_mask),
+        ])
+    }
+
+    /// Execute inference for one padded graph.
+    pub fn infer(&self, g: &PaddedGraph) -> Result<ModelOutput> {
+        let key = (g.bucket.n_max, g.bucket.e_max);
+        let exe = self
+            .executables
+            .get(&key)
+            .with_context(|| format!("no artifact for bucket {key:?}"))?;
+        let inputs = self.pack_inputs(g)?;
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .context("PJRT execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: (weights [N], met_xy [2]).
+        let (w_lit, met_lit) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpacking output tuple: {e}"))?;
+        let weights: Vec<f32> = w_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("weights to_vec: {e}"))?;
+        let met: Vec<f32> = met_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("met to_vec: {e}"))?;
+        anyhow::ensure!(weights.len() == g.bucket.n_max, "weights length");
+        anyhow::ensure!(met.len() == 2, "met length");
+        Ok(ModelOutput { weights, met_xy: [met[0], met[1]] })
+    }
+
+    /// Execute a batch sequentially (per-graph artifacts; batching at the
+    /// coordinator level amortises queueing, not kernel launches — the FPGA
+    /// analogue processes one graph at a time too).
+    pub fn infer_batch(&self, graphs: &[PaddedGraph]) -> Result<Vec<ModelOutput>> {
+        graphs.iter().map(|g| self.infer(g)).collect()
+    }
+}
+
+/// A test-vector from artifacts/testvec.json (ref-path outputs from python).
+#[derive(Clone, Debug)]
+pub struct TestVector {
+    pub graph: PaddedGraph,
+    pub expect_weights: Vec<f32>,
+    pub expect_met_xy: [f32; 2],
+}
+
+/// Load the cross-check vectors written by aot.py.
+pub fn load_test_vectors(artifacts_dir: &Path) -> Result<Vec<TestVector>> {
+    let v = json::parse_file(&artifacts_dir.join("testvec.json"))?;
+    let mut out = Vec::new();
+    for tv in v.as_arr()? {
+        let n_max = tv.get("n_max")?.as_usize()?;
+        let e_max = tv.get("e_max")?.as_usize()?;
+        let graph = PaddedGraph {
+            bucket: Bucket { n_max, e_max },
+            n: tv.get("n")?.as_usize()?,
+            e: tv.get("e")?.as_usize()?,
+            dropped_nodes: 0,
+            dropped_edges: 0,
+            cont: tv.get("cont")?.as_f32_vec()?,
+            cat: tv.get("cat")?.as_i32_vec()?,
+            src: tv.get("src")?.as_i32_vec()?,
+            dst: tv.get("dst")?.as_i32_vec()?,
+            node_mask: tv.get("node_mask")?.as_f32_vec()?,
+            edge_mask: tv.get("edge_mask")?.as_f32_vec()?,
+        };
+        let met = tv.get("expect_met_xy")?.as_f32_vec()?;
+        out.push(TestVector {
+            graph,
+            expect_weights: tv.get("expect_weights")?.as_f32_vec()?,
+            expect_met_xy: [met[0], met[1]],
+        });
+    }
+    Ok(out)
+}

@@ -1,0 +1,98 @@
+//! PJRT device service: the `xla` crate's client is not Send/Sync (it holds
+//! Rc-backed FFI handles), so a single dedicated device thread owns the
+//! compiled executables and serves inference over channels — the same shape
+//! as a real accelerator's in-order command queue. Worker threads hold a
+//! cheap, Sync handle.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::graph::{Bucket, PaddedGraph};
+use crate::model::ModelOutput;
+
+use super::ModelRuntime;
+
+enum Request {
+    Infer(PaddedGraph, mpsc::Sender<Result<ModelOutput>>),
+    Shutdown,
+}
+
+/// Sync handle to the device thread.
+pub struct PjrtService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    pub buckets: Vec<Bucket>,
+    pub model_cfg: ModelConfig,
+}
+
+impl PjrtService {
+    /// Load artifacts on a dedicated device thread and start serving.
+    pub fn start(artifacts_dir: &Path) -> Result<PjrtService> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<(Vec<Bucket>, ModelConfig)>>();
+
+        let handle = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let rt = match ModelRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = boot_tx.send(Ok((rt.buckets.clone(), rt.model_cfg.clone())));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // in-order command queue
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Infer(g, resp) => {
+                            let _ = resp.send(rt.infer(&g));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+
+        let (buckets, model_cfg) = boot_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("device thread died during startup"))??;
+        Ok(PjrtService { tx: Mutex::new(tx), handle: Some(handle), buckets, model_cfg })
+    }
+
+    /// Start from the default artifacts location.
+    pub fn start_default() -> Result<PjrtService> {
+        Self::start(&ModelRuntime::artifacts_dir())
+    }
+
+    /// Synchronous inference through the device queue.
+    pub fn infer(&self, g: &PaddedGraph) -> Result<ModelOutput> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request::Infer(g.clone(), resp_tx))
+                .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        }
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("device thread dropped the request"))?
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Pluggable inference backends for the trigger pipeline.
+
+use crate::dataflow::DataflowEngine;
+use crate::graph::PaddedGraph;
+use crate::model::{L1DeepMetV2, ModelOutput};
+use crate::runtime::PjrtService;
+
+/// Anything that can turn a padded event graph into model output.
+pub trait InferenceBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn infer(&self, g: &PaddedGraph) -> anyhow::Result<ModelOutput>;
+    /// Device-time estimate for the inference (seconds), when the backend
+    /// models a device rather than running natively (FPGA sim). Native
+    /// backends return None and are wall-clock timed by the server.
+    fn device_latency_s(&self, _g: &PaddedGraph) -> Option<f64> {
+        None
+    }
+}
+
+/// Concrete backend choices (enum avoids trait objects in hot loops).
+pub enum Backend {
+    /// Pure-Rust reference model ("CPU baseline" on this testbed).
+    RustCpu(L1DeepMetV2),
+    /// AOT HLO artifact on the PJRT CPU client (the production path),
+    /// served through the dedicated device thread.
+    Pjrt(PjrtService),
+    /// Simulated DGNNFlow fabric (functional + cycle-timed).
+    Fpga(DataflowEngine),
+}
+
+impl InferenceBackend for Backend {
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::RustCpu(_) => "rust-cpu",
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Fpga(_) => "dgnnflow-sim",
+        }
+    }
+
+    fn infer(&self, g: &PaddedGraph) -> anyhow::Result<ModelOutput> {
+        match self {
+            Backend::RustCpu(m) => Ok(m.forward(g)),
+            Backend::Pjrt(rt) => rt.infer(g),
+            Backend::Fpga(engine) => Ok(engine.run(g).output),
+        }
+    }
+
+    fn device_latency_s(&self, g: &PaddedGraph) -> Option<f64> {
+        match self {
+            Backend::Fpga(engine) => Some(engine.run(g).e2e_s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, ModelConfig};
+    use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+    use crate::model::Weights;
+    use crate::physics::generator::EventGenerator;
+
+    fn graph() -> PaddedGraph {
+        let mut gen = EventGenerator::with_seed(50);
+        let ev = gen.generate();
+        pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+    }
+
+    #[test]
+    fn rust_and_fpga_backends_agree() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 51);
+        let cpu = Backend::RustCpu(L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap());
+        let fpga = Backend::Fpga(
+            DataflowEngine::new(ArchConfig::default(), L1DeepMetV2::new(cfg, w).unwrap())
+                .unwrap(),
+        );
+        let g = graph();
+        let a = cpu.infer(&g).unwrap();
+        let b = fpga.infer(&g).unwrap();
+        assert!((a.met() - b.met()).abs() < 1e-3);
+        assert!(cpu.device_latency_s(&g).is_none());
+        let lat = fpga.device_latency_s(&g).unwrap();
+        assert!(lat > 0.0 && lat < 5e-3);
+    }
+}

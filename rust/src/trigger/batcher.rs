@@ -1,0 +1,114 @@
+//! Dynamic batcher: collects inference requests into batches, flushing on
+//! size or timeout — the standard serving trade-off the paper's Fig. 5
+//! probes (GPU wants big batches; DGNNFlow serves at batch 1).
+
+use std::time::{Duration, Instant};
+
+/// A batch-pending request.
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued_at: Instant,
+}
+
+/// Size-or-timeout batcher. Single-consumer; thread-safe wrapping is the
+/// server's job (it owns one batcher per worker lane).
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    max_batch: usize,
+    timeout: Duration,
+    queue: Vec<Pending<T>>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, timeout: Duration) -> Self {
+        assert!(max_batch >= 1);
+        DynamicBatcher { max_batch, timeout, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push(Pending { item, enqueued_at: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should the current queue flush now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        match self.queue.first() {
+            Some(p) => now.duration_since(p.enqueued_at) >= self.timeout,
+            None => false,
+        }
+    }
+
+    /// Take up to max_batch items (oldest first). Empty vec if not ready.
+    pub fn flush(&mut self, now: Instant) -> Vec<Pending<T>> {
+        if !self.ready(now) {
+            return Vec::new();
+        }
+        let take = self.queue.len().min(self.max_batch);
+        self.queue.drain(..take).collect()
+    }
+
+    /// Unconditional drain (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Pending<T>> {
+        std::mem::take(&mut self.queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(3600));
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready(Instant::now()));
+        b.push(3);
+        assert!(b.ready(Instant::now()));
+        let batch = b.flush(Instant::now());
+        assert_eq!(batch.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(1));
+        b.push("x");
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.flush(Instant::now()).len(), 1);
+    }
+
+    #[test]
+    fn oversize_queue_flushes_in_chunks() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(3600));
+        for i in 0..5 {
+            b.push(i);
+        }
+        let first = b.flush(Instant::now());
+        assert_eq!(first.iter().map(|p| p.item).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        let second = b.flush(Instant::now());
+        assert_eq!(second.len(), 2);
+    }
+
+    #[test]
+    fn drain_all_ignores_readiness() {
+        let mut b = DynamicBatcher::new(10, Duration::from_secs(3600));
+        b.push(1);
+        assert_eq!(b.drain_all().len(), 1);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! L1 Trigger coordinator (the L3 serving layer).
+//!
+//! The CMS Level-1 Trigger context (paper §I-B): 40 MHz collisions in,
+//! accept/reject decisions out at ≤ 750 kHz, fixed latency budget, no
+//! host in the loop. This module is the streaming coordinator around the
+//! inference backends:
+//!
+//! - [`backend`]  — pluggable inference backends (Rust reference, PJRT
+//!   artifact, simulated DGNNFlow fabric)
+//! - [`batcher`]  — dynamic batcher (size + timeout flush)
+//! - [`rate`]     — accept-rate controller (adaptive MET threshold)
+//! - [`server`]   — multi-worker serve loop with latency accounting
+
+pub mod backend;
+pub mod batcher;
+pub mod rate;
+pub mod server;
+
+pub use backend::{Backend, InferenceBackend};
+pub use batcher::DynamicBatcher;
+pub use rate::RateController;
+pub use server::{ServeReport, TriggerServer};

@@ -1,0 +1,126 @@
+//! Accept-rate controller: the L1T must reduce 40 MHz of collisions to a
+//! ~750 kHz accept stream. The physics selection here is a MET threshold;
+//! this controller adapts the threshold so the realised accept fraction
+//! tracks the target (event kinematics drift with beam conditions — a
+//! fixed threshold would not hold the output rate).
+
+/// Proportional controller on the accept fraction with an EWMA estimator.
+#[derive(Clone, Debug)]
+pub struct RateController {
+    /// Target accept fraction (target_rate / input_rate).
+    pub target_frac: f64,
+    /// Current MET threshold (GeV).
+    pub threshold: f64,
+    /// EWMA of the realised accept fraction.
+    ewma: f64,
+    alpha: f64,
+    gain: f64,
+    /// clamps
+    min_threshold: f64,
+    max_threshold: f64,
+    pub accepted: u64,
+    pub total: u64,
+}
+
+impl RateController {
+    pub fn new(target_frac: f64, initial_threshold: f64) -> Self {
+        assert!((0.0..=1.0).contains(&target_frac));
+        RateController {
+            target_frac,
+            threshold: initial_threshold,
+            ewma: target_frac,
+            alpha: 0.02,
+            // Loop stability: the EWMA lags ~1/alpha events, so the
+            // per-event multiplicative gain must keep gain/alpha < 1 or the
+            // controller oscillates around the target instead of settling.
+            gain: 0.015,
+            min_threshold: 1.0,
+            max_threshold: 500.0,
+            accepted: 0,
+            total: 0,
+        }
+    }
+
+    /// Decide one event and adapt. Returns true = accept.
+    pub fn decide(&mut self, met: f64) -> bool {
+        let accept = met >= self.threshold;
+        self.total += 1;
+        if accept {
+            self.accepted += 1;
+        }
+        self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * (accept as u8 as f64);
+        // proportional correction in log-threshold space: too many accepts
+        // -> raise the bar, too few -> lower it
+        let err = self.ewma - self.target_frac;
+        self.threshold =
+            (self.threshold * (1.0 + self.gain * err)).clamp(self.min_threshold, self.max_threshold);
+        accept
+    }
+
+    pub fn realised_frac(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn converges_to_target_fraction() {
+        // MET ~ Exponential(mean 30): controller should find the threshold
+        // whose survival probability is ~2%.
+        let mut rc = RateController::new(0.02, 10.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..60_000 {
+            let met = rng.exponential(1.0 / 30.0);
+            rc.decide(met);
+        }
+        // realised fraction over the last window tracks target
+        let mut recent = RateController::new(0.02, rc.threshold);
+        recent.threshold = rc.threshold;
+        let mut accepted = 0u64;
+        let n = 20_000;
+        for _ in 0..n {
+            let met = rng.exponential(1.0 / 30.0);
+            if met >= rc.threshold {
+                accepted += 1;
+            }
+        }
+        let frac = accepted as f64 / n as f64;
+        assert!(
+            (frac - 0.02).abs() < 0.01,
+            "converged frac {frac} (threshold {})",
+            rc.threshold
+        );
+    }
+
+    #[test]
+    fn adapts_when_distribution_shifts() {
+        let mut rc = RateController::new(0.05, 20.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..30_000 {
+            rc.decide(rng.exponential(1.0 / 20.0));
+        }
+        let t_before = rc.threshold;
+        // beam conditions change: MET scale doubles
+        for _ in 0..30_000 {
+            rc.decide(rng.exponential(1.0 / 40.0));
+        }
+        assert!(rc.threshold > t_before, "threshold must rise with harder spectrum");
+    }
+
+    #[test]
+    fn threshold_clamped() {
+        let mut rc = RateController::new(0.5, 2.0);
+        for _ in 0..10_000 {
+            rc.decide(0.0); // never accept -> threshold pushed down
+        }
+        assert!(rc.threshold >= 1.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Bench harness (no criterion offline): warmup + repeats + robust stats,
+//! and table printers matching the paper's rows. Used by `cargo bench`
+//! targets (all `harness = false`).
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Timing result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Timing {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len().max(1) as f64
+    }
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.samples_ns)
+    }
+    pub fn p99_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 99.0)
+    }
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns() / 1e6
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns() / 1e6
+    }
+    pub fn p99_ms(&self) -> f64 {
+        self.p99_ns() / 1e6
+    }
+}
+
+/// Run `f` with warmup then timed repeats. `f` should perform one unit of
+/// work; its return value is black-boxed to stop the optimizer.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, repeats: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Timing { name: name.to_string(), samples_ns: samples }
+}
+
+/// Optimizer barrier (std::hint::black_box stabilized).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-style outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a milliseconds value like the paper (3 significant-ish digits).
+pub fn fmt_ms(ms: f64) -> String {
+    if ms < 0.01 {
+        format!("{:.4}", ms)
+    } else if ms < 1.0 {
+        format!("{:.3}", ms)
+    } else if ms < 100.0 {
+        format!("{:.2}", ms)
+    } else {
+        format!("{:.1}", ms)
+    }
+}
+
+/// Format a speedup ratio like the paper: "3.2x".
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{:.1}x", r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_requested_samples() {
+        let t = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(t.samples_ns.len(), 10);
+        assert!(t.mean_ns() >= 0.0);
+        assert!(t.p99_ns() >= t.median_ns());
+    }
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let t = bench("sleep", 0, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(t.median_ms() >= 1.5, "median={}ms", t.median_ms());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut tb = Table::new(&["name", "value"]);
+        tb.row(&["a".into(), "1".into()]);
+        tb.row(&["long-name".into(), "2".into()]);
+        let s = tb.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut tb = Table::new(&["a", "b"]);
+        tb.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(fmt_ms(0.2834), "0.283");
+        assert_eq!(fmt_ms(12.345), "12.35");
+        assert_eq!(fmt_ratio(3.24), "3.2x");
+    }
+}

@@ -1,0 +1,198 @@
+//! Tiny declarative CLI parser (no clap in the offline registry).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). The first non-`--` token
+    /// becomes the subcommand; later bare tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` separator: everything after is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt_str(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected number, got '{s}'")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--batch-sizes 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad list element '{t}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Names of unknown options, given the known set — for strict CLIs.
+    pub fn unknown_options(&self, known: &[&str]) -> Vec<String> {
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+/// Help-text builder shared by the binary and benches.
+pub struct Help {
+    name: &'static str,
+    about: &'static str,
+    entries: Vec<(String, &'static str)>,
+}
+
+impl Help {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Help { name, about, entries: Vec::new() }
+    }
+
+    pub fn arg(mut self, spec: &str, about: &'static str) -> Self {
+        self.entries.push((spec.to_string(), about));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        let w = self.entries.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        for (k, v) in &self.entries {
+            s.push_str(&format!("  {k:<w$}  {v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["serve", "x", "y"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["run", "--n", "5", "--mode=fast"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+        assert_eq!(a.str_or("mode", "slow"), "fast");
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["run", "--verbose", "--n", "3"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["run", "--a", "--b"]);
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+        assert_eq!(a.f64_or("missing", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--bs", "1,2, 4"]);
+        assert_eq!(a.usize_list_or("bs", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse(&["cmd", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["x", "--good", "1", "--bad", "2"]);
+        assert_eq!(a.unknown_options(&["good"]), vec!["bad".to_string()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch utility substrates (the offline registry has no
+//! clap/serde/rand/criterion/proptest, so we build what we need).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,132 @@
+//! Mini property-testing harness (no proptest in the offline registry).
+//!
+//! `check(seed, cases, |g| { ... })` runs a closure over `cases` generated
+//! inputs; on failure it re-raises with the failing case index and the
+//! per-case RNG seed so the case can be replayed deterministically with
+//! `replay(seed_reported, |g| ...)`.
+
+use super::rng::Rng;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint grows over the run, so early cases are small (shrink-ish).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A "sized" count in [0, size] — grows with the case index.
+    pub fn count(&mut self) -> usize {
+        self.rng.index(self.size + 1)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `body` on `cases` generated inputs. Panics (with replay info) on the
+/// first failing case. The body signals failure by panicking (use assert!).
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut body: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size: 4 + (case * 64) / cases.max(1),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F: FnMut(&mut Gen)>(case_seed: u64, mut body: F) {
+    let mut g = Gen { rng: Rng::new(case_seed), size: 64 };
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+            n += 1;
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            check(2, 100, |g| {
+                let x = g.usize_in(0, 10);
+                assert!(x < 10, "x was {x}");
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "msg={msg}");
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_size = 0;
+        check(3, 20, |g| {
+            max_size = max_size.max(g.size);
+        });
+        assert!(max_size > 4);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check(4, 200, |g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(5, 0.0, 2.0);
+            assert_eq!(v.len(), 5);
+            assert!(v.iter().all(|&x| (0.0..2.0).contains(&x)));
+        });
+    }
+}

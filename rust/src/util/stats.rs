@@ -1,0 +1,281 @@
+//! Statistics helpers: running summaries, percentiles, histograms, and the
+//! resolution metric used by the MET analysis (Fig. 2).
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean = mean;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Percentile of a sample set (linear interpolation, p in [0, 100]).
+/// Sorts a copy; use `percentile_sorted` on pre-sorted data in hot paths.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Half the 16–84 inter-quantile width: a robust sigma used for MET
+/// resolution (insensitive to non-Gaussian tails, standard in HEP).
+pub fn quantile_resolution(residuals: &[f64]) -> f64 {
+    if residuals.len() < 2 {
+        return f64::NAN;
+    }
+    let mut v = residuals.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile_sorted(&v, 84.135) - percentile_sorted(&v, 15.865)) / 2.0
+}
+
+/// Fixed-width histogram over [lo, hi); out-of-range values clamp to the
+/// edge bins so nothing is silently dropped.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64)
+            .floor()
+            .clamp(0.0, (bins - 1) as f64) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Render a terminal bar chart (used by bench output).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!("{:>10.2} | {:<w$} {}\n", self.bin_center(i), bar, c, w = width));
+        }
+        out
+    }
+}
+
+/// Binned profile: collects samples per x-bin, reports a statistic per bin.
+/// Drives Fig. 2 (resolution vs MET bin) and Fig. 6 (latency vs graph size).
+#[derive(Clone, Debug)]
+pub struct BinnedProfile {
+    pub lo: f64,
+    pub hi: f64,
+    pub samples: Vec<Vec<f64>>,
+}
+
+impl BinnedProfile {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        BinnedProfile { lo, hi, samples: vec![Vec::new(); bins] }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        if x < self.lo || x >= self.hi {
+            return; // out-of-range x-values are excluded from profiles
+        }
+        let bins = self.samples.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor() as usize;
+        self.samples[idx.min(bins - 1)].push(y);
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.samples.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Apply `f` per bin; empty bins yield NaN.
+    pub fn map<F: Fn(&[f64]) -> f64>(&self, f: F) -> Vec<(f64, f64, usize)> {
+        self.samples
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let v = if s.is_empty() { f64::NAN } else { f(s) };
+                (self.bin_center(i), v, s.len())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.var() - naive_var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Summary::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.var() - whole.var()).abs() < 1e-10);
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn quantile_resolution_gaussian() {
+        // For a normal sample, the 16-84 half-width ~= sigma.
+        let mut rng = crate::util::rng::Rng::new(99);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal_ms(3.0, 2.5)).collect();
+        let r = quantile_resolution(&xs);
+        assert!((r - 2.5).abs() < 0.06, "r={r}");
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(0.5);
+        h.push(9.99);
+        h.push(-5.0); // clamps to first bin
+        h.push(50.0); // clamps to last bin
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total, 4);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binned_profile_median() {
+        let mut p = BinnedProfile::new(0.0, 10.0, 2);
+        p.push(1.0, 5.0);
+        p.push(2.0, 7.0);
+        p.push(8.0, 100.0);
+        p.push(20.0, 42.0); // ignored
+        let med = p.map(median);
+        assert_eq!(med.len(), 2);
+        assert_eq!(med[0].1, 6.0);
+        assert_eq!(med[0].2, 2);
+        assert_eq!(med[1].1, 100.0);
+    }
+}

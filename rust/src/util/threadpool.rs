@@ -1,0 +1,178 @@
+//! Minimal thread pool (no tokio offline): fixed workers over an mpsc
+//! channel, used by the trigger server's worker routing and by parallel
+//! benchmark sweeps.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Jobs run FIFO; `join` blocks until all submitted
+/// jobs finish (the pool stays usable afterwards).
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("dgnnflow-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.join();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job did not complete"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn join_then_reuse() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicUsize::new(0));
+        let c1 = Arc::clone(&c);
+        pool.execute(move || {
+            c1.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+        let c2 = Arc::clone(&c);
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        use std::time::{Duration, Instant};
+        let pool = ThreadPool::new(4);
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            pool.execute(|| std::thread::sleep(Duration::from_millis(50)));
+        }
+        pool.join();
+        // 4 x 50ms on 4 workers should take ~50ms, not 200ms.
+        assert!(t0.elapsed() < Duration::from_millis(150));
+    }
+}

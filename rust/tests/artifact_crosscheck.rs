@@ -1,0 +1,115 @@
+//! End-to-end numeric cross-check over the AOT artifacts:
+//!
+//!   python ref path (testvec.json expectations)
+//!     == PJRT execution of the HLO artifact (pallas path, lowered)
+//!     == pure-Rust reference model (weights.json)
+//!
+//! This is the load-bearing test of the whole three-layer architecture: if
+//! the text round-trip, the pallas kernels, or the Rust reference drift,
+//! it fails.
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::runtime::{load_test_vectors, ModelRuntime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    ModelRuntime::artifacts_dir()
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("meta.json").exists()
+}
+
+#[test]
+fn pjrt_matches_python_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifacts_dir()).expect("load artifacts");
+    let vectors = load_test_vectors(&artifacts_dir()).expect("load test vectors");
+    assert!(!vectors.is_empty());
+    for (i, tv) in vectors.iter().enumerate() {
+        let out = rt.infer(&tv.graph).expect("infer");
+        let mut max_err = 0.0f32;
+        for (a, b) in out.weights.iter().zip(&tv.expect_weights) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-4,
+            "vector {i}: PJRT weights deviate from python ref by {max_err}"
+        );
+        for c in 0..2 {
+            let err = (out.met_xy[c] - tv.expect_met_xy[c]).abs();
+            let tol = 1e-3 + 1e-4 * tv.expect_met_xy[c].abs();
+            assert!(
+                err < tol,
+                "vector {i}: met[{c}] {} vs {} (err {err})",
+                out.met_xy[c],
+                tv.expect_met_xy[c]
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_reference_matches_python_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::from_meta(&dir.join("meta.json")).unwrap();
+    let weights = Weights::load(&dir.join("weights.json"), &cfg).unwrap();
+    let model = L1DeepMetV2::new(cfg, weights).unwrap();
+    let vectors = load_test_vectors(&dir).unwrap();
+    for (i, tv) in vectors.iter().enumerate() {
+        let out = model.forward(&tv.graph);
+        let mut max_err = 0.0f32;
+        for (a, b) in out.weights.iter().zip(&tv.expect_weights) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-4,
+            "vector {i}: rust ref weights deviate from python ref by {max_err}"
+        );
+        for c in 0..2 {
+            let err = (out.met_xy[c] - tv.expect_met_xy[c]).abs();
+            let tol = 1e-3 + 1e-4 * tv.expect_met_xy[c].abs();
+            assert!(err < tol, "vector {i}: met[{c}] err {err}");
+        }
+    }
+}
+
+#[test]
+fn rust_reference_matches_pjrt_on_fresh_events() {
+    // Beyond the canned vectors: generate fresh events in Rust, run both
+    // paths, compare. Exercises padding/bucket selection too.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use dgnnflow::graph::{build_edges, pad_graph};
+    use dgnnflow::physics::EventGenerator;
+
+    let dir = artifacts_dir();
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let cfg = ModelConfig::from_meta(&dir.join("meta.json")).unwrap();
+    let weights = Weights::load(&dir.join("weights.json"), &cfg).unwrap();
+    let model = L1DeepMetV2::new(cfg, weights).unwrap();
+
+    let mut gen = EventGenerator::with_seed(42);
+    for _ in 0..8 {
+        let ev = gen.generate();
+        let graph = build_edges(&ev, 0.8);
+        let padded = pad_graph(&ev, &graph, &rt.buckets);
+        let a = rt.infer(&padded).unwrap();
+        let b = model.forward(&padded);
+        let mut max_err = 0.0f32;
+        for (x, y) in a.weights.iter().zip(&b.weights) {
+            max_err = max_err.max((x - y).abs());
+        }
+        assert!(max_err < 1e-4, "weights deviate by {max_err}");
+        assert!((a.met() - b.met()).abs() < 1e-2 + 1e-4 * b.met().abs());
+    }
+}

@@ -1,0 +1,260 @@
+//! Property-based tests over the coordinator invariants: graph
+//! construction, CSR sharding, padding, FIFOs, simulator-vs-reference
+//! equivalence, quantisation, and the rate controller — all through the
+//! from-scratch `util::prop` harness (seeded, replayable).
+
+use dgnnflow::config::{ArchConfig, ModelConfig, TriggerConfig};
+use dgnnflow::dataflow::{BroadcastMode, DataflowEngine};
+use dgnnflow::fixedpoint::Format;
+use dgnnflow::graph::{
+    build_edges, build_edges_brute, pad_graph, padding::DEFAULT_BUCKETS, Csr, EventGraph,
+};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::util::prop::{check, Gen};
+
+/// Random event with size driven by the generator's size hint.
+fn random_event(g: &mut Gen) -> dgnnflow::physics::Event {
+    let pileup = 5.0 + g.f64_in(0.0, 120.0);
+    let seed = g.rng.next_u64();
+    let mut gen = EventGenerator::new(
+        seed,
+        GeneratorConfig { mean_pileup: pileup, ..Default::default() },
+    );
+    gen.generate()
+}
+
+#[test]
+fn prop_graph_builder_matches_brute_force() {
+    check(0xA1, 30, |g| {
+        let ev = random_event(g);
+        let delta = g.f32_in(0.2, 1.5);
+        let grid = build_edges(&ev, delta);
+        let brute = build_edges_brute(&ev, delta);
+        let mut a: Vec<(u32, u32)> =
+            grid.src.iter().zip(&grid.dst).map(|(&s, &d)| (s, d)).collect();
+        let mut b: Vec<(u32, u32)> =
+            brute.src.iter().zip(&brute.dst).map(|(&s, &d)| (s, d)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "delta={delta} n={}", ev.n_particles());
+    });
+}
+
+#[test]
+fn prop_graphs_always_valid() {
+    check(0xA2, 30, |g| {
+        let ev = random_event(g);
+        let delta = g.f32_in(0.2, 1.2);
+        build_edges(&ev, delta).validate().unwrap();
+    });
+}
+
+#[test]
+fn prop_csr_shards_partition_edges() {
+    check(0xA3, 25, |g| {
+        let ev = random_event(g);
+        let graph = build_edges(&ev, 0.8);
+        let csr = Csr::from_graph(&graph);
+        let p = g.usize_in(1, 16);
+        let mut seen = vec![false; csr.n_edges()];
+        for k in 0..p {
+            for slot in csr.shard_edges(p, k) {
+                assert!(!seen[slot as usize], "edge slot {slot} in two shards");
+                seen[slot as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "edge missing from all shards");
+    });
+}
+
+#[test]
+fn prop_padding_preserves_live_structure() {
+    check(0xA4, 25, |g| {
+        let ev = random_event(g);
+        let graph = build_edges(&ev, 0.8);
+        let p = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        // masks consistent
+        assert_eq!(p.node_mask.iter().filter(|&&m| m == 1.0).count(), p.n);
+        assert_eq!(p.edge_mask.iter().filter(|&&m| m == 1.0).count(), p.e);
+        // all live endpoints point at live nodes
+        for k in 0..p.e {
+            assert!((p.src[k] as usize) < p.n);
+            assert!((p.dst[k] as usize) < p.n);
+        }
+        // when nothing is dropped, edge count preserved
+        if p.dropped_nodes == 0 && p.dropped_edges == 0 {
+            assert_eq!(p.e, graph.n_edges());
+        }
+        // padding region zeroed
+        assert!(p.cont[p.n * 6..].iter().all(|&x| x == 0.0));
+    });
+}
+
+#[test]
+fn prop_simulator_equals_reference_all_modes() {
+    // The heavyweight invariant: the cycle-level fabric computes exactly
+    // the reference model, for every delivery mode and random fabrics.
+    let cfg = ModelConfig::default();
+    let weights = Weights::random(&cfg, 0xBEEF);
+    let reference = L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap();
+    check(0xA5, 10, |g| {
+        let ev = random_event(g);
+        let graph = build_edges(&ev, 0.8);
+        let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        let p_edge = *g.pick(&[1usize, 2, 5, 8]);
+        let p_node = g.usize_in(1, p_edge);
+        let arch = ArchConfig {
+            p_edge,
+            p_node,
+            fifo_depth: *g.pick(&[2usize, 8, 64]),
+            ..Default::default()
+        };
+        let mode = *g.pick(&[
+            BroadcastMode::Broadcast,
+            BroadcastMode::FullReplication,
+            BroadcastMode::MulticastBus,
+        ]);
+        let model = L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap();
+        let engine = DataflowEngine::with_mode(arch, model, mode).unwrap();
+        let sim = engine.run(&padded);
+        let exp = reference.forward(&padded);
+        let mut max_err = 0.0f32;
+        for (a, b) in sim.output.weights.iter().zip(&exp.weights) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-5,
+            "mode {mode:?} p_edge={p_edge} p_node={p_node}: err {max_err}"
+        );
+    });
+}
+
+#[test]
+fn prop_quantization_bounded_by_lsb() {
+    check(0xA6, 200, |g| {
+        let w = g.usize_in(6, 24) as u32;
+        let i = g.usize_in(2, (w - 1) as usize) as u32;
+        let f = Format::new(w, i);
+        let (lo, hi) = f.range();
+        let x = g.f32_in(lo as f32, hi as f32);
+        let q = f.quantize(x);
+        assert!(
+            (q as f64 - x as f64).abs() <= f.lsb() / 2.0 + 1e-6,
+            "fmt<{w},{i}> x={x} q={q}"
+        );
+        // idempotent
+        assert_eq!(f.quantize(q), q);
+    });
+}
+
+#[test]
+fn prop_fifo_conserves_tokens() {
+    use dgnnflow::dataflow::fifo::Fifo;
+    check(0xA7, 100, |g| {
+        let depth = g.usize_in(1, 32);
+        let mut f: Fifo<u64> = Fifo::new(depth);
+        let mut sent = Vec::new();
+        let mut got = Vec::new();
+        for _ in 0..200 {
+            if g.bool() {
+                let v = g.rng.next_u64();
+                if f.push(v) {
+                    sent.push(v);
+                }
+            } else if let Some(v) = f.pop() {
+                got.push(v);
+            }
+            assert!(f.len() <= depth);
+        }
+        while let Some(v) = f.pop() {
+            got.push(v);
+        }
+        assert_eq!(sent, got, "FIFO must deliver exactly what was accepted, in order");
+    });
+}
+
+#[test]
+fn prop_event_graph_in_degrees_sum() {
+    check(0xA8, 50, |g| {
+        let n = g.usize_in(1, 60);
+        let e = g.usize_in(0, 200);
+        let mut src = Vec::with_capacity(e);
+        let mut dst = Vec::with_capacity(e);
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..e {
+            let s = g.usize_in(0, n - 1) as u32;
+            let d = g.usize_in(0, n - 1) as u32;
+            if s != d && used.insert((s, d)) {
+                src.push(s);
+                dst.push(d);
+            }
+        }
+        let graph = EventGraph { n_nodes: n, src, dst };
+        let din: usize = graph.in_degrees().iter().map(|&x| x as usize).sum();
+        let dout: usize = graph.out_degrees().iter().map(|&x| x as usize).sum();
+        assert_eq!(din, graph.n_edges());
+        assert_eq!(dout, graph.n_edges());
+    });
+}
+
+#[test]
+fn prop_rate_controller_tracks_any_target() {
+    use dgnnflow::trigger::RateController;
+    check(0xA9, 10, |g| {
+        let target = g.f64_in(0.01, 0.3);
+        let scale = g.f64_in(10.0, 60.0);
+        let mut rc = RateController::new(target, scale);
+        for _ in 0..40_000 {
+            let met = g.rng.exponential(1.0 / scale);
+            rc.decide(met);
+        }
+        // threshold should settle near -scale*ln(target)
+        let expect = -scale * target.ln();
+        let rel = (rc.threshold - expect).abs() / expect;
+        assert!(
+            rel < 0.35,
+            "target {target}: threshold {} vs expected {expect}",
+            rc.threshold
+        );
+    });
+}
+
+#[test]
+fn prop_trigger_config_validation_total() {
+    // validation never panics, only errors
+    check(0xAA, 100, |g| {
+        let mut t = TriggerConfig::default();
+        t.input_rate_hz = g.f64_in(-1.0, 1e8);
+        t.target_accept_hz = g.f64_in(-1.0, 1e8);
+        t.queue_capacity = g.usize_in(0, 10);
+        t.workers = g.usize_in(0, 8);
+        let _ = t.validate();
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use dgnnflow::util::json::{self, Value};
+    check(0xAB, 100, |g| {
+        // build a random JSON tree
+        fn build(g: &mut Gen, depth: usize) -> Value {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Value::Null,
+                1 => Value::Bool(g.bool()),
+                2 => Value::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Value::Str(format!("s{}-\"quoted\"\n", g.usize_in(0, 999))),
+                4 => Value::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect()),
+                _ => Value::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_json();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, v, "roundtrip failed for {text}");
+    });
+}
