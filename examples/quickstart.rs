@@ -1,4 +1,5 @@
-//! Quickstart: one synthetic HL-LHC collision event, end to end.
+//! Quickstart: one synthetic HL-LHC collision event end to end, then the
+//! front door — the streaming `Pipeline`.
 //!
 //! 1. Generate an event (DELPHES-substitute generator).
 //! 2. Dynamic graph construction (paper Eq. 1: dR^2 < delta^2).
@@ -7,15 +8,22 @@
 //!    - the AOT HLO artifact on the PJRT CPU client (production path),
 //!    - the pure-Rust reference model,
 //!    - the simulated DGNNFlow fabric (functional + cycle-timed).
+//! 5. Serve a small stream through `dgnnflow::pipeline::Pipeline` — the
+//!    public API composing source -> graph build -> padding -> dynamic
+//!    batcher -> batch-first backend -> accept/reject.
 //!
 //! Run: cargo run --release --example quickstart
+
+use std::time::Duration;
 
 use dgnnflow::config::{ArchConfig, ModelConfig};
 use dgnnflow::dataflow::DataflowEngine;
 use dgnnflow::graph::{build_edges, pad_graph};
 use dgnnflow::model::{L1DeepMetV2, Weights};
-use dgnnflow::physics::EventGenerator;
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::pipeline::{Pipeline, SyntheticSource};
 use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::trigger::Backend;
 
 fn main() -> anyhow::Result<()> {
     // --- 1. one collision event -------------------------------------------
@@ -62,7 +70,8 @@ fn main() -> anyhow::Result<()> {
     println!("Rust reference:  MET {:.3} GeV  ({ref_ms:.3} ms wall)", ref_out.met());
 
     // --- 4c. simulated DGNNFlow fabric -------------------------------------------
-    let engine = DataflowEngine::new(ArchConfig::default(), L1DeepMetV2::new(cfg, weights)?)?;
+    let sim_model = L1DeepMetV2::new(cfg.clone(), weights.clone())?;
+    let engine = DataflowEngine::new(ArchConfig::default(), sim_model)?;
     let sim = engine.run(&padded);
     println!(
         "DGNNFlow (sim):  MET {:.3} GeV  ({:.3} ms E2E @ 200 MHz: {} cycles + PCIe)",
@@ -76,6 +85,21 @@ fn main() -> anyhow::Result<()> {
     let d_sim = (sim.output.met() - ref_out.met()).abs();
     println!("cross-check: |PJRT-ref| = {d_pjrt:.2e} GeV, |sim-ref| = {d_sim:.2e} GeV");
     anyhow::ensure!(d_pjrt < 1e-2 && d_sim < 1e-2, "paths disagree!");
+
+    // --- 5. the front door: a streaming Pipeline ------------------------------------
+    let model = L1DeepMetV2::new(cfg, weights)?;
+    let report = Pipeline::builder()
+        .source(SyntheticSource::new(64, 2027, GeneratorConfig::default()))
+        .backend(Backend::RustCpu(model))
+        .graph(delta)
+        .buckets(rt.buckets.clone())
+        .batching(4, Duration::from_micros(200))
+        .workers(2)
+        .build()?
+        .serve();
+    println!("pipeline: {}", report.summary());
+    anyhow::ensure!(report.events == 64, "pipeline must serve every event");
+
     println!("quickstart OK");
     Ok(())
 }

@@ -1,24 +1,32 @@
-//! END-TO-END DRIVER: the full trigger system on a real workload.
+//! END-TO-END DRIVER: the full trigger system on a real workload, on the
+//! streaming `Pipeline` API.
 //!
-//! Streams synthetic HL-LHC collision events through the complete stack —
-//! event generation -> dynamic graph construction (Eq. 1) -> bucket padding
-//! -> inference backend -> adaptive accept/reject — across worker threads,
-//! and reports latency/throughput for all three backends:
+//! Replays the SAME pre-generated HL-LHC event stream through the complete
+//! stack — event source -> dynamic graph construction (Eq. 1) -> bucket
+//! padding -> per-worker dynamic batching -> batch-first inference backend
+//! -> adaptive accept/reject — and reports latency/throughput/batching for
+//! all three backends:
 //!
 //!   rust-cpu      pure-Rust reference model (CPU baseline)
-//!   pjrt          AOT HLO artifact on the PJRT CPU client (production path)
-//!   dgnnflow-sim  simulated Alveo U50 fabric (cycle-timed @ 200 MHz)
+//!   pjrt          AOT HLO artifact on the PJRT CPU client (production
+//!                 path; each batch is one device-thread request)
+//!   dgnnflow-sim  simulated Alveo U50 fabric (cycle-timed @ 200 MHz,
+//!                 sequential fabric occupancy within a batch)
 //!
 //! This is the run recorded in EXPERIMENTS.md §E2E.
 //!
 //! Run: cargo run --release --example trigger_pipeline [-- --events 2000]
 
+use std::time::Duration;
+
 use dgnnflow::config::{ArchConfig, ModelConfig, TriggerConfig};
 use dgnnflow::dataflow::DataflowEngine;
 use dgnnflow::graph::padding::DEFAULT_BUCKETS;
 use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::pipeline::{Pipeline, ReplaySource, ServeReport};
 use dgnnflow::runtime::{ModelRuntime, PjrtService};
-use dgnnflow::trigger::{Backend, TriggerServer};
+use dgnnflow::trigger::Backend;
 use dgnnflow::util::bench::Table;
 use dgnnflow::util::cli::Args;
 
@@ -40,14 +48,35 @@ fn main() -> anyhow::Result<()> {
         "artifacts missing — run `make artifacts` first"
     );
 
-    let mut tcfg = TriggerConfig::default();
-    tcfg.workers = args.usize_or("workers", 4).map_err(anyhow::Error::msg)?;
+    let tcfg = TriggerConfig::default();
+    let workers = args.usize_or("workers", 4).map_err(anyhow::Error::msg)?;
+    let max_batch = args.usize_or("batch", tcfg.max_batch).map_err(anyhow::Error::msg)?;
+
+    // One pre-generated stream, replayed identically into every backend.
+    let gen_cfg = GeneratorConfig { mean_pileup: tcfg.mean_pileup, ..Default::default() };
+    let stream = EventGenerator::new(seed, gen_cfg).generate_n(events);
 
     println!(
-        "trigger pipeline: {events} events, {} workers, target accept {:.2}%\n",
-        tcfg.workers,
+        "trigger pipeline: {events} events, {workers} workers, batch {max_batch}, \
+         target accept {:.2}%\n",
         100.0 * tcfg.target_accept_hz / tcfg.input_rate_hz
     );
+
+    let run = |backend: Backend| -> anyhow::Result<ServeReport> {
+        let report = Pipeline::builder()
+            .source(ReplaySource::new(stream.clone()))
+            .backend(backend)
+            .graph(tcfg.delta_r as f32)
+            .buckets(DEFAULT_BUCKETS.to_vec())
+            .batching(max_batch, Duration::from_micros(tcfg.batch_timeout_us))
+            .workers(workers)
+            .accept_fraction(tcfg.target_accept_hz / tcfg.input_rate_hz)
+            .met_threshold(tcfg.met_threshold)
+            .build()?
+            .serve();
+        println!("{}", report.summary());
+        Ok(report)
+    };
 
     let mut table = Table::new(&[
         "backend",
@@ -56,35 +85,21 @@ fn main() -> anyhow::Result<()> {
         "infer med (ms)",
         "infer p99 (ms)",
         "device med (ms)",
+        "mean batch",
         "accept %",
     ]);
 
     // --- rust-cpu ------------------------------------------------------------
-    let server = TriggerServer::new(
-        tcfg.clone(),
-        Backend::RustCpu(load_model()?),
-        DEFAULT_BUCKETS.to_vec(),
-    )?;
-    let r = server.serve_events(events, seed);
-    println!("{}", r.summary());
+    let r = run(Backend::RustCpu(load_model()?))?;
     push_row(&mut table, &r);
 
     // --- pjrt (the production path) ---------------------------------------------
-    let server = TriggerServer::new(
-        tcfg.clone(),
-        Backend::Pjrt(PjrtService::start_default()?),
-        DEFAULT_BUCKETS.to_vec(),
-    )?;
-    let r = server.serve_events(events, seed);
-    println!("{}", r.summary());
+    let r = run(Backend::Pjrt(PjrtService::start_default()?))?;
     push_row(&mut table, &r);
 
     // --- simulated DGNNFlow fabric -------------------------------------------------
     let engine = DataflowEngine::new(ArchConfig::default(), load_model()?)?;
-    let server =
-        TriggerServer::new(tcfg, Backend::Fpga(engine), DEFAULT_BUCKETS.to_vec())?;
-    let r = server.serve_events(events, seed);
-    println!("{}", r.summary());
+    let r = run(Backend::Fpga(engine))?;
     push_row(&mut table, &r);
 
     println!();
@@ -92,13 +107,14 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nnote: 'device med' is the simulated on-board E2E latency of the\n\
          DGNNFlow fabric (cycles @ 200 MHz + PCIe model) — the paper's 0.283 ms\n\
-         comparison point. Wall-clock 'infer' for dgnnflow-sim measures the\n\
-         simulator itself, not the modelled device."
+         comparison point; within a batch it includes sequential fabric\n\
+         occupancy. Wall-clock 'infer' for dgnnflow-sim measures the simulator\n\
+         itself, not the modelled device."
     );
     Ok(())
 }
 
-fn push_row(table: &mut Table, r: &dgnnflow::trigger::ServeReport) {
+fn push_row(table: &mut Table, r: &ServeReport) {
     table.row(&[
         r.backend.to_string(),
         format!("{:.0}", r.throughput_hz),
@@ -108,6 +124,7 @@ fn push_row(table: &mut Table, r: &dgnnflow::trigger::ServeReport) {
         r.device_median_ms
             .map(|d| format!("{:.3}", d))
             .unwrap_or_else(|| "-".into()),
+        format!("{:.2}", r.mean_batch()),
         format!("{:.1}", 100.0 * r.accept_frac),
     ]);
 }

@@ -12,6 +12,7 @@ use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS, PaddedGr
 use dgnnflow::model::{L1DeepMetV2, Weights};
 use dgnnflow::physics::{EventGenerator, GeneratorConfig};
 use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::trigger::{Backend, InferenceBackend};
 use dgnnflow::util::bench::{fmt_ms, Table};
 use dgnnflow::util::rng::Rng;
 use dgnnflow::util::stats;
@@ -43,7 +44,8 @@ fn main() {
         }
     }
 
-    let engine = DataflowEngine::new(ArchConfig::default(), load_model()).unwrap();
+    // the simulated fabric through the batch-first backend API
+    let fpga = Backend::Fpga(DataflowEngine::new(ArchConfig::default(), load_model()).unwrap());
     let gpu = GpuModel::new(GpuVariant::BaselineSw);
     let cpu = CpuModel::new(CpuVariant::BaselineSw);
     let mut rng = Rng::new(7);
@@ -79,7 +81,7 @@ fn main() {
                 cpu_l.push(cpu.batch_latency_s(&[size], &mut rng) * 1e3);
                 gpu_l.push(gpu.batch_latency_s(&[size], &mut rng) * 1e3);
             }
-            fpga_l.push(engine.run(g).e2e_s * 1e3);
+            fpga_l.push(fpga.device_latency_s(g).expect("fpga models a device") * 1e3);
         }
         t.row(&[
             format!("{lo}-{hi}"),

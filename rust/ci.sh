@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate for the rust crate: formatting, lints, and the full test suite.
+#
+#   ./ci.sh            run everything
+#   ./ci.sh --quick    skip the release build (debug tests only)
+#
+# Requires a Rust toolchain >= 1.74 with rustfmt and clippy components.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+quick=0
+[[ "${1:-}" == "--quick" ]] && quick=1
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy (all targets, warnings are errors)"
+cargo clippy --all-targets -- -D warnings
+
+if [[ "$quick" == 0 ]]; then
+    echo "==> cargo build --release"
+    cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "CI OK"

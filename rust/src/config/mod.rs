@@ -216,6 +216,7 @@ impl Default for TriggerConfig {
 impl TriggerConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.input_rate_hz > 0.0, "input rate");
+        anyhow::ensure!(self.target_accept_hz > 0.0, "accept rate must be positive");
         anyhow::ensure!(
             self.target_accept_hz < self.input_rate_hz,
             "accept rate must be below input rate"

@@ -49,7 +49,7 @@ pub struct CycleParams {
 impl CycleParams {
     pub fn derive(arch: &ArchConfig, cfg: &crate::config::ModelConfig) -> CycleParams {
         let d = cfg.node_dim;
-        let ceil = |a: usize, b: usize| ((a + b - 1) / b) as u32;
+        let ceil = |a: usize, b: usize| a.div_ceil(b) as u32;
         let mac_edge = 2 * d * cfg.hid_edge + cfg.hid_edge * d;
         let mac_embed = cfg.in_dim() * cfg.hid_emb + cfg.hid_emb * d;
         let mac_head = d * cfg.hid_out + cfg.hid_out;
@@ -203,7 +203,7 @@ impl DataflowEngine {
 
         // --- embedding stage (NT units, formula-timed, functional) --------
         let x0 = self.model.embed(g);
-        let nodes_per_nt = (n_live + p_node - 1) / p_node;
+        let nodes_per_nt = n_live.div_ceil(p_node);
         breakdown.embed_cycles = nodes_per_nt as u64 * self.params.embed_ii as u64;
 
         // --- GNN layers through the fabric ---------------------------------

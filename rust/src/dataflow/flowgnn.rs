@@ -71,7 +71,7 @@ impl FlowGnnBaseline {
         let n = g.n;
         let e_live = (0..g.e).filter(|&k| g.edge_mask[k] != 0.0).count();
         let p_node = self.arch.p_node;
-        let nodes_per_nt = (n + p_node - 1) / p_node;
+        let nodes_per_nt = n.div_ceil(p_node);
 
         // --- fabric-side cycles -------------------------------------------------
         // embed + head identical to DGNNFlow
@@ -79,7 +79,7 @@ impl FlowGnnBaseline {
         let head_cycles = nodes_per_nt as u64 * self.params.head_ii as u64;
         // per layer: stream E pre-computed messages through the adapter/NT
         // (1 msg/cycle/port) + node writebacks
-        let msgs_per_port = (e_live + p_node - 1) / p_node;
+        let msgs_per_port = e_live.div_ceil(p_node);
         let layer_fabric = msgs_per_port as u64 + nodes_per_nt as u64 * self.params.nt_write as u64;
         let fabric_cycles =
             embed_cycles + head_cycles + cfg.n_layers as u64 * (layer_fabric + 1);

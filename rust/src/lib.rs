@@ -1,13 +1,47 @@
 //! DGNNFlow: streaming dataflow architecture for real-time edge-based
 //! dynamic GNN inference in HL-LHC trigger systems (reproduction).
 //!
+//! **Front door:** [`pipeline`] — a builder-composed streaming serving
+//! pipeline: pluggable [`pipeline::EventSource`]s (synthetic, replay,
+//! burst) → dynamic ΔR graph construction → bucket padding → per-worker
+//! dynamic batching → batch-first [`trigger::InferenceBackend`] →
+//! accept/reject, returned as a streaming iterator of
+//! [`pipeline::EventRecord`]s.
+//!
+//! ```no_run
+//! use dgnnflow::config::ModelConfig;
+//! use dgnnflow::model::{L1DeepMetV2, Weights};
+//! use dgnnflow::physics::GeneratorConfig;
+//! use dgnnflow::pipeline::{Pipeline, SyntheticSource};
+//! use dgnnflow::trigger::Backend;
+//! use std::time::Duration;
+//!
+//! let cfg = ModelConfig::default();
+//! let model = L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 1))?;
+//! let report = Pipeline::builder()
+//!     .source(SyntheticSource::new(1000, 7, GeneratorConfig::default()))
+//!     .backend(Backend::RustCpu(model))
+//!     .graph(0.8)
+//!     .batching(4, Duration::from_micros(100))
+//!     .workers(4)
+//!     .build()?
+//!     .serve();
+//! println!("{}", report.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
 //! Layer map (see DESIGN.md):
+//! - [`pipeline`] — the public serving API: `Pipeline` builder, event
+//!   sources, streaming `EventRecord` results, `ServeReport` aggregation.
 //! - [`dataflow`] — the paper's contribution: a cycle-approximate simulator
 //!   of the DGNNFlow fabric (Enhanced MP units, Node Embedding Broadcast,
 //!   double-buffered NE banks) plus resource and power models.
-//! - [`trigger`] — the L1T streaming coordinator (router, batcher, rate
-//!   control) that drives inference backends.
-//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas model.
+//! - [`trigger`] — the serving components the pipeline composes: batch-first
+//!   inference backends, the dynamic batcher, the accept-rate controller,
+//!   and the classic `TriggerServer` compatibility wrapper.
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas model
+//!   (behind the `xla` feature; an in-tree shim reports a clear error
+//!   otherwise). Batches cross the device-thread channel as one request.
 //! - [`model`] — pure-Rust reference of L1DeepMETv2 (correctness oracle +
 //!   CPU baseline).
 //! - [`physics`], [`graph`] — DELPHES-substitute event generation and
@@ -25,6 +59,7 @@ pub mod fixedpoint;
 pub mod graph;
 pub mod model;
 pub mod physics;
+pub mod pipeline;
 pub mod runtime;
 pub mod trigger;
 pub mod util;

@@ -9,13 +9,16 @@
 //!
 //! `dgnnflow <cmd> --help` lists per-command options.
 
+use std::time::Duration;
+
 use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
 use dgnnflow::dataflow::{DataflowEngine, PowerModel, ResourceModel};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
-use dgnnflow::physics::EventGenerator;
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::pipeline::{BurstSource, EventSource, Pipeline, SyntheticSource};
 use dgnnflow::runtime::{ModelRuntime, PjrtService};
-use dgnnflow::trigger::{Backend, TriggerServer};
+use dgnnflow::trigger::Backend;
 use dgnnflow::util::bench::Table;
 use dgnnflow::util::cli::{Args, Help};
 
@@ -120,10 +123,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if args.flag("help") {
         println!(
             "{}",
-            Help::new("serve", "run the trigger pipeline over synthetic events")
+            Help::new("serve", "run the streaming pipeline over an event source")
                 .arg("--events N", "number of events (default 1000)")
                 .arg("--backend B", "rust-cpu | pjrt | fpga (default fpga)")
+                .arg("--source S", "synthetic | burst (default synthetic)")
                 .arg("--workers N", "worker threads (default 4)")
+                .arg("--batch N", "dynamic batcher max batch (default from config)")
+                .arg("--batch-timeout-us N", "batcher flush timeout (default from config)")
+                .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 5000)")
+                .arg("--paced", "honour source arrival times in wall-clock")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default 60)")
                 .arg("--config FILE", "JSON config file")
@@ -137,6 +145,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut tcfg: TriggerConfig = cfg.trigger.clone();
     tcfg.workers = args.usize_or("workers", tcfg.workers).map_err(anyhow::Error::msg)?;
     tcfg.mean_pileup = args.f64_or("pileup", tcfg.mean_pileup).map_err(anyhow::Error::msg)?;
+    tcfg.max_batch = args.usize_or("batch", tcfg.max_batch).map_err(anyhow::Error::msg)?;
+    tcfg.batch_timeout_us = args
+        .u64_or("batch-timeout-us", tcfg.batch_timeout_us)
+        .map_err(anyhow::Error::msg)?;
 
     let backend = match args.str_or("backend", "fpga") {
         "rust-cpu" => Backend::RustCpu(load_model()?),
@@ -144,9 +156,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "fpga" => Backend::Fpga(DataflowEngine::new(cfg.arch.clone(), load_model()?)?),
         other => anyhow::bail!("unknown backend '{other}'"),
     };
-    let server = TriggerServer::new(tcfg, backend, DEFAULT_BUCKETS.to_vec())?;
-    let report = server.serve_events(events, seed);
+
+    let gen_cfg = GeneratorConfig { mean_pileup: tcfg.mean_pileup, ..Default::default() };
+    let rate_hz = args.f64_or("rate", 5000.0).map_err(anyhow::Error::msg)?;
+    let source: Box<dyn EventSource> = match args.str_or("source", "synthetic") {
+        // fixed bunch-crossing cadence; only observable with --paced
+        "synthetic" => Box::new(SyntheticSource::new(events, seed, gen_cfg).with_rate(rate_hz)),
+        "burst" => Box::new(BurstSource::new(events, seed, gen_cfg, rate_hz)),
+        other => anyhow::bail!("unknown source '{other}' (synthetic | burst)"),
+    };
+
+    let report = Pipeline::builder()
+        .source(source)
+        .backend(backend)
+        .graph(tcfg.delta_r as f32)
+        .buckets(DEFAULT_BUCKETS.to_vec())
+        .batching(tcfg.max_batch, Duration::from_micros(tcfg.batch_timeout_us))
+        .workers(tcfg.workers)
+        .queue_capacity(tcfg.queue_capacity)
+        .accept_fraction(tcfg.target_accept_hz / tcfg.input_rate_hz)
+        .met_threshold(tcfg.met_threshold)
+        .paced(args.flag("paced"))
+        .build()?
+        .serve();
     println!("{}", report.summary());
+    println!(
+        "batches: {} (mean size {:.2}, histogram {})",
+        report.batches,
+        report.mean_batch(),
+        report.batch_hist_string()
+    );
     Ok(())
 }
 

@@ -10,6 +10,14 @@
 pub mod service;
 pub use service::PjrtService;
 
+// Without the `xla` feature the runtime compiles against an in-tree shim
+// whose client constructor fails with a clear message; with the feature the
+// real bindings crate resolves from the extern prelude instead.
+#[cfg(not(feature = "xla"))]
+mod xla_shim;
+#[cfg(not(feature = "xla"))]
+use xla_shim as xla;
+
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

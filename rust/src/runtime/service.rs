@@ -19,6 +19,9 @@ use super::ModelRuntime;
 
 enum Request {
     Infer(PaddedGraph, mpsc::Sender<Result<ModelOutput>>),
+    /// One request per *batch*: the whole flush crosses the channel once and
+    /// executes back-to-back on the device thread (no per-graph queueing).
+    InferBatch(Vec<PaddedGraph>, mpsc::Sender<Result<Vec<ModelOutput>>>),
     Shutdown,
 }
 
@@ -56,6 +59,9 @@ impl PjrtService {
                         Request::Infer(g, resp) => {
                             let _ = resp.send(rt.infer(&g));
                         }
+                        Request::InferBatch(gs, resp) => {
+                            let _ = resp.send(rt.infer_batch(&gs));
+                        }
                         Request::Shutdown => break,
                     }
                 }
@@ -78,6 +84,24 @@ impl PjrtService {
         {
             let tx = self.tx.lock().unwrap();
             tx.send(Request::Infer(g.clone(), resp_tx))
+                .map_err(|_| anyhow::anyhow!("device thread gone"))?;
+        }
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("device thread dropped the request"))?
+    }
+
+    /// Batched inference: the whole batch is submitted to the device thread
+    /// as a single request, so a flush from the dynamic batcher costs one
+    /// channel round-trip regardless of batch size.
+    pub fn infer_batch(&self, graphs: &[PaddedGraph]) -> Result<Vec<ModelOutput>> {
+        if graphs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request::InferBatch(graphs.to_vec(), resp_tx))
                 .map_err(|_| anyhow::anyhow!("device thread gone"))?;
         }
         resp_rx

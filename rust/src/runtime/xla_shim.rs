@@ -1,0 +1,101 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The build image does not ship the xla_extension toolchain, so the crate
+//! compiles against this API-compatible shim unless the `xla` feature is
+//! enabled (which expects the real bindings as a dependency). Every entry
+//! point that would touch a device fails at *client construction* with a
+//! clear message, so `ModelRuntime::load` / `PjrtService::start` return a
+//! normal error and callers fall back to the pure-Rust or simulated
+//! backends. Nothing past client creation is ever reachable.
+
+use std::error::Error as StdError;
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str = "dgnnflow was built without the `xla` feature; \
+     PJRT execution is unavailable (rebuild with --features xla and the \
+     xla_extension bindings installed, or use the rust-cpu / fpga backends)";
+
+/// Error type matching the surface the runtime expects from the bindings.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(UNAVAILABLE.into()))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}

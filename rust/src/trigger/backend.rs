@@ -1,19 +1,57 @@
 //! Pluggable inference backends for the trigger pipeline.
+//!
+//! The trait is **batch-first**: the serving path (see [`crate::pipeline`])
+//! flushes the dynamic batcher into `infer_batch`, so backends see whole
+//! batches and can exploit them — the PJRT backend submits one device-thread
+//! request per batch, the simulated fabric models sequential occupancy, the
+//! Rust reference simply loops. Single-graph `infer` is a convenience
+//! wrapper and is guaranteed bit-identical to a batch of one.
 
 use crate::dataflow::DataflowEngine;
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, ModelOutput};
 use crate::runtime::PjrtService;
 
-/// Anything that can turn a padded event graph into model output.
+/// Anything that can turn padded event graphs into model outputs.
 pub trait InferenceBackend: Send + Sync {
-    fn name(&self) -> &'static str;
-    fn infer(&self, g: &PaddedGraph) -> anyhow::Result<ModelOutput>;
-    /// Device-time estimate for the inference (seconds), when the backend
-    /// models a device rather than running natively (FPGA sim). Native
-    /// backends return None and are wall-clock timed by the server.
-    fn device_latency_s(&self, _g: &PaddedGraph) -> Option<f64> {
+    fn name(&self) -> &str;
+
+    /// Run inference for a whole batch, preserving order. Implementations
+    /// must return exactly one output per input graph, and each output must
+    /// bit-equal what a singleton call on that graph would produce (the
+    /// batcher only amortises *serving* overheads, never changes physics).
+    fn infer_batch(&self, graphs: &[PaddedGraph]) -> anyhow::Result<Vec<ModelOutput>>;
+
+    /// Single-graph convenience: a batch of one.
+    fn infer(&self, g: &PaddedGraph) -> anyhow::Result<ModelOutput> {
+        let mut out = self.infer_batch(std::slice::from_ref(g))?;
+        anyhow::ensure!(out.len() == 1, "backend returned {} outputs for 1 graph", out.len());
+        Ok(out.pop().expect("len checked above"))
+    }
+
+    /// Simulated device completion times (seconds, relative to batch start)
+    /// for each graph in the batch, when the backend models a device rather
+    /// than running natively. Native backends return None and are wall-clock
+    /// timed by the server.
+    fn device_batch_latency_s(&self, _graphs: &[PaddedGraph]) -> Option<Vec<f64>> {
         None
+    }
+
+    /// Device-time estimate for a single inference (seconds).
+    fn device_latency_s(&self, g: &PaddedGraph) -> Option<f64> {
+        self.device_batch_latency_s(std::slice::from_ref(g))
+            .and_then(|v| v.first().copied())
+    }
+
+    /// One fused pass returning outputs plus per-graph device completion
+    /// times. The default composes `infer_batch` + `device_batch_latency_s`;
+    /// backends where the two share work (the cycle simulator) override it
+    /// to avoid simulating every graph twice.
+    fn infer_batch_timed(
+        &self,
+        graphs: &[PaddedGraph],
+    ) -> anyhow::Result<(Vec<ModelOutput>, Option<Vec<f64>>)> {
+        Ok((self.infer_batch(graphs)?, self.device_batch_latency_s(graphs)))
     }
 }
 
@@ -22,14 +60,36 @@ pub enum Backend {
     /// Pure-Rust reference model ("CPU baseline" on this testbed).
     RustCpu(L1DeepMetV2),
     /// AOT HLO artifact on the PJRT CPU client (the production path),
-    /// served through the dedicated device thread.
+    /// served through the dedicated device thread — one request per batch.
     Pjrt(PjrtService),
-    /// Simulated DGNNFlow fabric (functional + cycle-timed).
+    /// Simulated DGNNFlow fabric (functional + cycle-timed). The fabric
+    /// holds one event's NE buffers, so a batch occupies it sequentially:
+    /// graph i's completion time includes every graph before it (the
+    /// paper's batch-1 design point).
     Fpga(DataflowEngine),
 }
 
+impl Backend {
+    /// Fused functional + timing pass over the simulated fabric.
+    fn fpga_batch(
+        engine: &DataflowEngine,
+        graphs: &[PaddedGraph],
+    ) -> (Vec<ModelOutput>, Vec<f64>) {
+        let mut outputs = Vec::with_capacity(graphs.len());
+        let mut done_at = Vec::with_capacity(graphs.len());
+        let mut occupied_s = 0.0;
+        for g in graphs {
+            let r = engine.run(g);
+            occupied_s += r.e2e_s;
+            outputs.push(r.output);
+            done_at.push(occupied_s);
+        }
+        (outputs, done_at)
+    }
+}
+
 impl InferenceBackend for Backend {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         match self {
             Backend::RustCpu(_) => "rust-cpu",
             Backend::Pjrt(_) => "pjrt",
@@ -37,18 +97,34 @@ impl InferenceBackend for Backend {
         }
     }
 
-    fn infer(&self, g: &PaddedGraph) -> anyhow::Result<ModelOutput> {
+    fn infer_batch(&self, graphs: &[PaddedGraph]) -> anyhow::Result<Vec<ModelOutput>> {
         match self {
-            Backend::RustCpu(m) => Ok(m.forward(g)),
-            Backend::Pjrt(rt) => rt.infer(g),
-            Backend::Fpga(engine) => Ok(engine.run(g).output),
+            Backend::RustCpu(m) => Ok(graphs.iter().map(|g| m.forward(g)).collect()),
+            Backend::Pjrt(rt) => rt.infer_batch(graphs),
+            Backend::Fpga(engine) => {
+                Ok(graphs.iter().map(|g| engine.run(g).output).collect())
+            }
         }
     }
 
-    fn device_latency_s(&self, g: &PaddedGraph) -> Option<f64> {
+    fn device_batch_latency_s(&self, graphs: &[PaddedGraph]) -> Option<Vec<f64>> {
         match self {
-            Backend::Fpga(engine) => Some(engine.run(g).e2e_s),
+            Backend::Fpga(engine) => Some(Self::fpga_batch(engine, graphs).1),
             _ => None,
+        }
+    }
+
+    fn infer_batch_timed(
+        &self,
+        graphs: &[PaddedGraph],
+    ) -> anyhow::Result<(Vec<ModelOutput>, Option<Vec<f64>>)> {
+        match self {
+            // One simulator pass yields both outputs and occupancy times.
+            Backend::Fpga(engine) => {
+                let (outputs, done_at) = Self::fpga_batch(engine, graphs);
+                Ok((outputs, Some(done_at)))
+            }
+            _ => Ok((self.infer_batch(graphs)?, None)),
         }
     }
 }
@@ -61,10 +137,14 @@ mod tests {
     use crate::model::Weights;
     use crate::physics::generator::EventGenerator;
 
-    fn graph() -> PaddedGraph {
-        let mut gen = EventGenerator::with_seed(50);
+    fn graph_with_seed(seed: u64) -> PaddedGraph {
+        let mut gen = EventGenerator::with_seed(seed);
         let ev = gen.generate();
         pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+    }
+
+    fn graph() -> PaddedGraph {
+        graph_with_seed(50)
     }
 
     #[test]
@@ -83,5 +163,46 @@ mod tests {
         assert!(cpu.device_latency_s(&g).is_none());
         let lat = fpga.device_latency_s(&g).unwrap();
         assert!(lat > 0.0 && lat < 5e-3);
+    }
+
+    #[test]
+    fn fpga_batch_occupancy_is_cumulative() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 52);
+        let fpga = Backend::Fpga(
+            DataflowEngine::new(ArchConfig::default(), L1DeepMetV2::new(cfg, w).unwrap())
+                .unwrap(),
+        );
+        let g1 = graph_with_seed(52);
+        let g2 = graph_with_seed(53);
+        let single1 = fpga.device_latency_s(&g1).unwrap();
+        let single2 = fpga.device_latency_s(&g2).unwrap();
+        let batch = fpga
+            .device_batch_latency_s(&[g1.clone(), g2.clone()])
+            .unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!((batch[0] - single1).abs() < 1e-12);
+        // graph 2 waits for graph 1 on the single fabric
+        assert!((batch[1] - (single1 + single2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infer_batch_timed_matches_untimed() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 54);
+        let fpga = Backend::Fpga(
+            DataflowEngine::new(ArchConfig::default(), L1DeepMetV2::new(cfg, w).unwrap())
+                .unwrap(),
+        );
+        let batch = [graph_with_seed(54), graph_with_seed(55)];
+        let (outs, lats) = fpga.infer_batch_timed(&batch).unwrap();
+        let plain = fpga.infer_batch(&batch).unwrap();
+        let lats = lats.expect("fpga models a device");
+        assert_eq!(outs.len(), 2);
+        assert!(lats[1] > lats[0]);
+        for (a, b) in outs.iter().zip(&plain) {
+            assert_eq!(a.met_xy, b.met_xy);
+            assert_eq!(a.weights, b.weights);
+        }
     }
 }

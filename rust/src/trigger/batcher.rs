@@ -1,6 +1,11 @@
 //! Dynamic batcher: collects inference requests into batches, flushing on
 //! size or timeout — the standard serving trade-off the paper's Fig. 5
 //! probes (GPU wants big batches; DGNNFlow serves at batch 1).
+//!
+//! This is wired into the [`crate::pipeline`] worker loop: each worker owns
+//! one batcher, pushes prepared graphs into it, and uses [`DynamicBatcher::
+//! ready_at`] to sleep exactly until the flush deadline instead of
+//! spin-polling.
 
 use std::time::{Duration, Instant};
 
@@ -38,14 +43,40 @@ impl<T> DynamicBatcher<T> {
         self.queue.is_empty()
     }
 
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Enqueue time of the *oldest* pending request. Timeout semantics key
+    /// off this request — a partial flush must not reset the clock for
+    /// survivors. The queue is strictly FIFO (push appends with `now`,
+    /// drains take from the front), so the front element is the oldest.
+    fn oldest_enqueued_at(&self) -> Option<Instant> {
+        self.queue.first().map(|p| p.enqueued_at)
+    }
+
     /// Should the current queue flush now?
     pub fn ready(&self, now: Instant) -> bool {
         if self.queue.len() >= self.max_batch {
             return true;
         }
-        match self.queue.first() {
-            Some(p) => now.duration_since(p.enqueued_at) >= self.timeout,
+        match self.oldest_enqueued_at() {
+            Some(t) => now.duration_since(t) >= self.timeout,
             None => false,
+        }
+    }
+
+    /// The instant at which the queue becomes flush-ready on its own:
+    /// `oldest.enqueued_at + timeout`, or `now`-or-earlier when the size
+    /// threshold is already met. `None` when empty (nothing will ever become
+    /// ready without a push). Worker loops use this as a precise sleep
+    /// deadline instead of polling `ready` in a busy loop.
+    pub fn ready_at(&self) -> Option<Instant> {
+        let oldest = self.oldest_enqueued_at()?;
+        if self.queue.len() >= self.max_batch {
+            Some(oldest) // already due
+        } else {
+            Some(oldest + self.timeout)
         }
     }
 
@@ -54,6 +85,12 @@ impl<T> DynamicBatcher<T> {
         if !self.ready(now) {
             return Vec::new();
         }
+        self.drain_chunk()
+    }
+
+    /// Take up to max_batch items (oldest first) regardless of readiness.
+    /// Shutdown paths call this in a loop to drain in batch-sized chunks.
+    pub fn drain_chunk(&mut self) -> Vec<Pending<T>> {
         let take = self.queue.len().min(self.max_batch);
         self.queue.drain(..take).collect()
     }
@@ -110,5 +147,63 @@ mod tests {
         b.push(1);
         assert_eq!(b.drain_all().len(), 1);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn ready_at_tracks_oldest_request() {
+        let timeout = Duration::from_millis(50);
+        let mut b = DynamicBatcher::new(100, timeout);
+        assert!(b.ready_at().is_none(), "empty queue has no deadline");
+        b.push(1);
+        let d1 = b.ready_at().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        b.push(2);
+        // the deadline keys off the OLDEST request: pushing again must not
+        // extend it
+        assert_eq!(b.ready_at().unwrap(), d1);
+        // deadline is enqueue + timeout, in the future right after push
+        assert!(d1 > Instant::now() - timeout);
+        assert!(!b.ready(Instant::now()));
+        assert!(b.ready(d1));
+    }
+
+    #[test]
+    fn ready_at_is_due_when_size_threshold_met() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(3600));
+        b.push(1);
+        assert!(b.ready_at().unwrap() > Instant::now(), "partial batch waits");
+        b.push(2);
+        assert!(b.ready_at().unwrap() <= Instant::now(), "full batch is due now");
+    }
+
+    #[test]
+    fn partial_flush_keeps_survivor_deadlines() {
+        let timeout = Duration::from_millis(40);
+        let mut b = DynamicBatcher::new(2, timeout);
+        for i in 0..3 {
+            b.push(i);
+        }
+        let pushed_by = Instant::now();
+        let before = b.ready_at().unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        let flushed = b.flush(Instant::now());
+        assert_eq!(flushed.len(), 2);
+        // the survivor keeps its ORIGINAL enqueue time: its deadline is no
+        // later than (push time + timeout), i.e. the flush did not reset it
+        let after = b.ready_at().unwrap();
+        assert!(after >= before, "survivor is younger than the flushed items");
+        assert!(after <= pushed_by + timeout, "partial flush must not reset the clock");
+    }
+
+    #[test]
+    fn drain_chunk_respects_max_batch() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(3600));
+        for i in 0..10 {
+            b.push(i);
+        }
+        assert_eq!(b.drain_chunk().len(), 4);
+        assert_eq!(b.drain_chunk().len(), 4);
+        assert_eq!(b.drain_chunk().len(), 2);
+        assert!(b.drain_chunk().is_empty());
     }
 }

@@ -2,14 +2,16 @@
 //!
 //! The CMS Level-1 Trigger context (paper §I-B): 40 MHz collisions in,
 //! accept/reject decisions out at ≤ 750 kHz, fixed latency budget, no
-//! host in the loop. This module is the streaming coordinator around the
-//! inference backends:
+//! host in the loop. This module holds the serving *components*; the
+//! [`crate::pipeline`] module composes them into the streaming front door:
 //!
-//! - [`backend`]  — pluggable inference backends (Rust reference, PJRT
-//!   artifact, simulated DGNNFlow fabric)
-//! - [`batcher`]  — dynamic batcher (size + timeout flush)
+//! - [`backend`]  — batch-first pluggable inference backends (Rust
+//!   reference, PJRT artifact, simulated DGNNFlow fabric)
+//! - [`batcher`]  — dynamic batcher (size + timeout flush, precise
+//!   deadline via `ready_at`), wired into each pipeline worker lane
 //! - [`rate`]     — accept-rate controller (adaptive MET threshold)
-//! - [`server`]   — multi-worker serve loop with latency accounting
+//! - [`server`]   — the classic `TriggerServer` entry point, now a thin
+//!   port over [`crate::pipeline::Pipeline`]
 
 pub mod backend;
 pub mod batcher;
@@ -19,4 +21,4 @@ pub mod server;
 pub use backend::{Backend, InferenceBackend};
 pub use batcher::DynamicBatcher;
 pub use rate::RateController;
-pub use server::{ServeReport, TriggerServer};
+pub use server::{EventRecord, ServeReport, TriggerServer};

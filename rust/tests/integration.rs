@@ -48,8 +48,7 @@ fn trigger_server_all_backends_same_mets() {
     // on the same event stream.
     let cfg = ModelConfig::default();
     let w = Weights::random(&cfg, 2);
-    let mut tcfg = TriggerConfig::default();
-    tcfg.workers = 2;
+    let tcfg = TriggerConfig { workers: 2, ..Default::default() };
 
     let cpu_server = TriggerServer::new(
         tcfg.clone(),
@@ -206,25 +205,26 @@ struct FlakyBackend {
 }
 
 impl InferenceBackend for FlakyBackend {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "flaky"
     }
-    fn infer(
+    fn infer_batch(
         &self,
-        g: &dgnnflow::graph::PaddedGraph,
-    ) -> anyhow::Result<dgnnflow::model::ModelOutput> {
+        graphs: &[dgnnflow::graph::PaddedGraph],
+    ) -> anyhow::Result<Vec<dgnnflow::model::ModelOutput>> {
         let c = self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         if c % self.fail_every == self.fail_every - 1 {
             anyhow::bail!("injected device fault");
         }
-        Ok(self.inner.forward(g))
+        Ok(graphs.iter().map(|g| self.inner.forward(g)).collect())
     }
 }
 
 #[test]
 fn serve_loop_survives_backend_faults() {
-    let mut tcfg = TriggerConfig::default();
-    tcfg.workers = 2;
+    // batch of 1 so each injected fault drops exactly one event and the
+    // bookkeeping below is exact
+    let tcfg = TriggerConfig { workers: 2, max_batch: 1, ..Default::default() };
     let backend = FlakyBackend {
         inner: model(9),
         fail_every: 5,

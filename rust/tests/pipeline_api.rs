@@ -1,0 +1,205 @@
+//! Tests for the streaming `Pipeline` API: batch-vs-singleton equivalence
+//! across backends, source determinism, builder validation, and the
+//! batcher actually being exercised by the serving path.
+
+use std::time::Duration;
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::DataflowEngine;
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS, PaddedGraph};
+use dgnnflow::model::{L1DeepMetV2, ModelOutput, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::pipeline::{Pipeline, PipelineError, ReplaySource, SyntheticSource};
+use dgnnflow::runtime::{ModelRuntime, PjrtService};
+use dgnnflow::trigger::{Backend, InferenceBackend};
+
+fn model(seed: u64) -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, seed)).unwrap()
+}
+
+fn graphs(seed: u64, n: usize) -> Vec<PaddedGraph> {
+    let mut gen = EventGenerator::with_seed(seed);
+    (0..n)
+        .map(|_| {
+            let ev = gen.generate();
+            pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+        })
+        .collect()
+}
+
+fn assert_bit_equal(a: &ModelOutput, b: &ModelOutput, what: &str) {
+    assert_eq!(a.met_xy, b.met_xy, "{what}: met_xy must bit-equal");
+    assert_eq!(a.weights, b.weights, "{what}: weights must bit-equal");
+}
+
+/// For each backend: infer_batch([g1, g2]) bit-equals two singleton calls.
+fn check_batch_singleton_equivalence<B: InferenceBackend>(backend: &B) {
+    let gs = graphs(401, 3);
+    let batched = backend.infer_batch(&gs).unwrap();
+    assert_eq!(batched.len(), gs.len());
+    for (i, g) in gs.iter().enumerate() {
+        let single = backend.infer(g).unwrap();
+        assert_bit_equal(&batched[i], &single, backend.name());
+    }
+}
+
+#[test]
+fn rust_cpu_batch_equals_singletons() {
+    check_batch_singleton_equivalence(&Backend::RustCpu(model(21)));
+}
+
+#[test]
+fn fpga_batch_equals_singletons() {
+    let engine = DataflowEngine::new(ArchConfig::default(), model(22)).unwrap();
+    check_batch_singleton_equivalence(&Backend::Fpga(engine));
+}
+
+#[test]
+fn pjrt_batch_equals_singletons() {
+    // requires AOT artifacts and a build with the `xla` feature
+    if !ModelRuntime::artifacts_dir().join("meta.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let svc = match PjrtService::start_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable ({e})");
+            return;
+        }
+    };
+    check_batch_singleton_equivalence(&Backend::Pjrt(svc));
+}
+
+#[test]
+fn replay_source_is_deterministic_by_seed() {
+    let drain = |seed: u64| {
+        let mut src = ReplaySource::from_seed(seed, GeneratorConfig::default(), 25);
+        let mut out = Vec::new();
+        use dgnnflow::pipeline::EventSource;
+        while let Some(te) = src.next_event() {
+            out.push((te.event.id, te.event.true_met_xy, te.event.n_particles()));
+        }
+        out
+    };
+    assert_eq!(drain(17), drain(17));
+    assert_ne!(drain(17), drain(18));
+}
+
+#[test]
+fn builder_bad_config_is_typed_error_not_panic() {
+    // no source
+    let err = Pipeline::<Backend>::builder().build().unwrap_err();
+    assert_eq!(err, PipelineError::MissingSource);
+
+    // zero-size batch
+    let err = Pipeline::builder()
+        .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+        .backend(Backend::RustCpu(model(1)))
+        .batching(0, Duration::from_micros(50))
+        .build()
+        .unwrap_err();
+    assert_eq!(err, PipelineError::BadBatch(0));
+
+    // non-finite delta
+    let err = Pipeline::builder()
+        .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+        .backend(Backend::RustCpu(model(1)))
+        .graph(f32::NAN)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, PipelineError::BadDelta(_)));
+
+    // bad accept fraction
+    let err = Pipeline::builder()
+        .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+        .backend(Backend::RustCpu(model(1)))
+        .accept_fraction(1.5)
+        .build()
+        .unwrap_err();
+    assert_eq!(err, PipelineError::BadAcceptFraction(1.5));
+}
+
+#[test]
+fn batcher_is_exercised_and_histogram_reports_it() {
+    // one worker + generous timeout: the batcher must fill to max_batch
+    let n = 64;
+    let report = Pipeline::builder()
+        .source(ReplaySource::from_seed(33, GeneratorConfig::default(), n))
+        .backend(Backend::RustCpu(model(34)))
+        .batching(4, Duration::from_millis(50))
+        .workers(1)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.events, n);
+    let hist_events: u64 = report
+        .batch_hist
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i as u64 + 1) * c)
+        .sum();
+    assert_eq!(hist_events, n as u64, "histogram accounts for every event");
+    assert_eq!(report.batch_hist.len(), 4);
+    assert!(
+        report.mean_batch() > 1.5,
+        "dynamic batching must actually form batches (mean {:.2}, hist {})",
+        report.mean_batch(),
+        report.batch_hist_string()
+    );
+    assert!(
+        report.batch_hist[3] >= 8,
+        "most flushes should reach max_batch (hist {})",
+        report.batch_hist_string()
+    );
+    // per-record batch metadata agrees
+    assert!(report.records.iter().all(|r| r.batch_len >= 1 && r.batch_len <= 4));
+    assert!(report.records.iter().any(|r| r.batch_len == 4));
+}
+
+#[test]
+fn pjrt_pipeline_produces_batched_device_requests() {
+    // acceptance: batching(4, 100us) on the Pjrt backend yields batched
+    // device-thread requests, visible in the report's batch histogram
+    if !ModelRuntime::artifacts_dir().join("meta.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let svc = match PjrtService::start_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable ({e})");
+            return;
+        }
+    };
+    let report = Pipeline::builder()
+        .source(ReplaySource::from_seed(35, GeneratorConfig::default(), 32))
+        .backend(Backend::Pjrt(svc))
+        .batching(4, Duration::from_micros(100))
+        .workers(2)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.events, 32);
+    assert!(
+        report.records.iter().any(|r| r.batch_len > 1),
+        "PJRT serving must batch (hist {})",
+        report.batch_hist_string()
+    );
+}
+
+#[test]
+fn fpga_device_latency_includes_batch_occupancy() {
+    let engine = DataflowEngine::new(ArchConfig::default(), model(36)).unwrap();
+    let fpga = Backend::Fpga(engine);
+    let gs = graphs(402, 3);
+    let lats = fpga.device_batch_latency_s(&gs).unwrap();
+    // the fabric serves one graph at a time: completion times are strictly
+    // increasing and each step is at least the single-graph latency
+    for i in 1..lats.len() {
+        assert!(lats[i] > lats[i - 1]);
+        let single = fpga.device_latency_s(&gs[i]).unwrap();
+        assert!(lats[i] - lats[i - 1] >= single * 0.999);
+    }
+}
