@@ -1,0 +1,132 @@
+//! Fig. 2-style accuracy-vs-width sweep over the fixed-point datapath:
+//! for each ap_fixed<W, 6> in W ∈ {8, 12, 16, 20, 32}, run the quantised
+//! model over a fixed event sample and report MET resolution (vs true MET)
+//! plus the max/mean absolute MET error against the f32 reference.
+//!
+//! Emits `BENCH_precision.json` next to Cargo.toml — the checked-over-time
+//! perf/accuracy trajectory of the precision axis (LL-GNN / JEDI-linear
+//! treat this trade-off as a first-class design input; so do we).
+//!
+//!   cargo bench --bench precision_sweep [-- --events N]
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::fixedpoint::{Arith, Format};
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::met::{met_mag, overall_metrics, MetPair};
+use dgnnflow::physics::EventGenerator;
+use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::util::bench::Table;
+use dgnnflow::util::cli::Args;
+use dgnnflow::util::json::{obj, Value};
+
+/// Integer bits fixed at the datapath default (range ±32); the sweep varies
+/// total width, i.e. fraction bits.
+const I_BITS: u32 = 6;
+const WIDTHS: [u32; 5] = [8, 12, 16, 20, 32];
+
+/// (cfg, weights) from artifacts when present, else the deterministic
+/// random init — the sweep is about *relative* precision loss, which does
+/// not need trained weights.
+fn load_cfg_weights() -> (ModelConfig, Weights) {
+    let dir = ModelRuntime::artifacts_dir();
+    if dir.join("meta.json").exists() {
+        if let Ok(cfg) = ModelConfig::from_meta(&dir.join("meta.json")) {
+            if let Ok(w) = Weights::load(&dir.join("weights.json"), &cfg) {
+                return (cfg, w);
+            }
+        }
+    }
+    let cfg = ModelConfig::default();
+    let w = Weights::random(&cfg, 606);
+    (cfg, w)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let n_events = args.usize_or("events", 400).unwrap_or(400);
+    println!("=== Precision sweep: MET accuracy vs ap_fixed<W,{I_BITS}> width ===\n");
+
+    let (cfg, weights) = load_cfg_weights();
+    let f32_model = L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap();
+
+    // fixed event sample, shared by every width
+    let mut gen = EventGenerator::with_seed(606);
+    let graphs: Vec<_> = (0..n_events)
+        .map(|_| {
+            let ev = gen.generate();
+            let true_met = ev.true_met() as f64;
+            (pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS), true_met)
+        })
+        .collect();
+
+    // f32 anchor: resolution of the reference datapath
+    let f32_mets: Vec<f32> = graphs
+        .iter()
+        .map(|(g, _)| {
+            let o = f32_model.forward(g);
+            met_mag([-o.met_xy[0], -o.met_xy[1]])
+        })
+        .collect();
+    let f32_pairs: Vec<MetPair> = graphs
+        .iter()
+        .zip(&f32_mets)
+        .map(|((_, t), &m)| MetPair { true_met: *t, reco_met: m as f64 })
+        .collect();
+    let f32_res = overall_metrics(&f32_pairs).resolution;
+
+    let mut table = Table::new(&[
+        "format",
+        "lsb",
+        "MET resolution (GeV)",
+        "max |dMET| vs f32",
+        "mean |dMET| vs f32",
+    ]);
+    let mut points = Vec::new();
+    for w in WIDTHS {
+        let fmt = Format::new(w, I_BITS);
+        let qm =
+            L1DeepMetV2::with_arith(cfg.clone(), weights.clone(), Arith::Fixed(fmt)).unwrap();
+        let mut pairs = Vec::with_capacity(graphs.len());
+        let mut max_err = 0.0f64;
+        let mut sum_err = 0.0f64;
+        for ((g, t), f32_met) in graphs.iter().zip(&f32_mets) {
+            let o = qm.forward(g);
+            let m = met_mag([-o.met_xy[0], -o.met_xy[1]]);
+            pairs.push(MetPair { true_met: *t, reco_met: m as f64 });
+            let err = (m - f32_met).abs() as f64;
+            max_err = max_err.max(err);
+            sum_err += err;
+        }
+        let res = overall_metrics(&pairs).resolution;
+        let mean_err = sum_err / pairs.len().max(1) as f64;
+        table.row(&[
+            fmt.to_string(),
+            format!("{:.2e}", fmt.lsb()),
+            format!("{res:.3}"),
+            format!("{max_err:.3}"),
+            format!("{mean_err:.4}"),
+        ]);
+        points.push(obj(vec![
+            ("w", Value::Num(w as f64)),
+            ("i", Value::Num(I_BITS as f64)),
+            ("lsb", Value::Num(fmt.lsb())),
+            ("met_resolution_gev", Value::Num(res)),
+            ("max_abs_err_gev", Value::Num(max_err)),
+            ("mean_abs_err_gev", Value::Num(mean_err)),
+        ]));
+    }
+    table.print();
+    println!("\nf32 reference resolution: {f32_res:.3} GeV over {n_events} events");
+
+    let doc = obj(vec![
+        ("bench", Value::from("precision_sweep")),
+        ("events", Value::Num(n_events as f64)),
+        ("i_bits", Value::Num(I_BITS as f64)),
+        ("f32_resolution_gev", Value::Num(f32_res)),
+        ("points", Value::Arr(points)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_precision.json");
+    std::fs::write(&out, doc.to_json()).expect("write BENCH_precision.json");
+    println!("wrote {}", out.display());
+}

@@ -1,15 +1,31 @@
 #!/usr/bin/env bash
-# CI gate for the rust crate: formatting, lints, and the full test suite.
+# CI gate for the rust crate.
 #
-#   ./ci.sh            run everything
-#   ./ci.sh --quick    skip the release build (debug tests only)
+#   ./ci.sh            full gate: smoke tier, then fmt, lints, release
+#                      build, and the full test suite
+#   ./ci.sh --quick    smoke tier only: compile the benches and run the
+#                      golden-vector conformance suite by itself, so
+#                      numeric regressions in the datapath fail fast
+#                      before the full test run
 #
-# Requires a Rust toolchain >= 1.74 with rustfmt and clippy components.
+# Requires a Rust toolchain >= 1.74 (full gate also needs rustfmt and
+# clippy components).
 set -euo pipefail
 cd "$(dirname "$0")"
 
 quick=0
 [[ "${1:-}" == "--quick" ]] && quick=1
+
+echo "==> cargo bench --no-run (benches must compile)"
+cargo bench --no-run
+
+echo "==> cargo test --test golden (golden-vector conformance suite)"
+cargo test -q --test golden
+
+if [[ "$quick" == 1 ]]; then
+    echo "CI OK (quick smoke tier)"
+    exit 0
+fi
 
 echo "==> cargo fmt --check"
 cargo fmt --check
@@ -17,10 +33,8 @@ cargo fmt --check
 echo "==> cargo clippy (all targets, warnings are errors)"
 cargo clippy --all-targets -- -D warnings
 
-if [[ "$quick" == 0 ]]; then
-    echo "==> cargo build --release"
-    cargo build --release
-fi
+echo "==> cargo build --release"
+cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q

@@ -7,8 +7,21 @@
 //! issues, and every node writeback really produces the next-layer
 //! embedding — so tests assert the simulator's output equals the reference
 //! model bit-for-bit, and the timing model can never drift from the math.
+//!
+//! The functional payload is *shared code* with the reference model: edge
+//! messages go through [`crate::model::EdgeConvWeights::message`] and node
+//! writebacks through [`crate::model::EdgeConvWeights::node_update`], with
+//! each node's message sum taken in ascending edge-id order (the canonical
+//! order the reference uses) at the cycle the NT unit writes the node back.
+//! That makes simulator-vs-reference equality bit-exact — in f32 *and* on
+//! the fixed-point datapath: the engine inherits the model's
+//! [`crate::fixedpoint::Arith`], so every simulated MAC quantises exactly
+//! where the fabric would (φ subtractor/ReLU/output registers in the MP
+//! units, mean-divider and residual+BN registers in the NT units, the wide
+//! MET accumulator in the head).
 
 use crate::config::ArchConfig;
+use crate::fixedpoint::Arith;
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, Mat, ModelOutput};
 
@@ -176,6 +189,12 @@ impl DataflowEngine {
         })
     }
 
+    /// The datapath arithmetic the simulated fabric runs (inherited from
+    /// the model payload; see [`crate::fixedpoint::Arith`]).
+    pub fn arith(&self) -> Arith {
+        self.model.arith()
+    }
+
     /// Host->device transfer model (paper: E2E includes transfer time).
     fn transfer_in_s(&self, g: &PaddedGraph) -> f64 {
         // live payload: features + edges + masks + live counts
@@ -270,10 +289,14 @@ impl DataflowEngine {
         let fifo_depth = self.arch.fifo_depth;
 
         // --- setup -----------------------------------------------------------
+        let arith = self.model.arith();
         let mut mps: Vec<MpUnit> = (0..p_edge)
             .map(|k| MpUnit::new(k, n_live, self.params.ii_edge, fifo_depth))
             .collect();
         let mut deg = vec![0u32; n_live];
+        // per-node in-edge lists in ascending edge-id order: the canonical
+        // summation order of the NT writeback (shared with the reference)
+        let mut in_edges: Vec<Vec<u32>> = vec![Vec::new(); n_live];
         let mut live_edges = 0u64;
         for k in 0..g.e {
             if g.edge_mask[k] == 0.0 {
@@ -283,6 +306,7 @@ impl DataflowEngine {
             debug_assert!(s < n_live && t < n_live);
             mps[s % p_edge].assign_edge(k as u32, t as u32);
             deg[t] += 1;
+            in_edges[t].push(k as u32);
             live_edges += 1;
         }
 
@@ -340,9 +364,10 @@ impl DataflowEngine {
             g.bucket.e_max
         };
         let mut msg = Mat::zeros(msg_rows, d);
-        let mut agg = Mat::zeros(n_live, d);
         let mut count = vec![0u32; n_live];
         let mut hidden = vec![0.0f32; cfg.hid_edge];
+        // writeback scratch: one node's message sum (wide DSP accumulator)
+        let mut agg_sum = vec![0.0f32; d];
 
         // split read/write views of the NE double buffer
         let (x_in, x_out) = ne.split();
@@ -372,16 +397,16 @@ impl DataflowEngine {
                 "layer {l} deadlocked after {cycles} cycles"
             );
 
-            // 1. NT units consume + write back.
+            // 1. NT units consume + write back. Token arrivals only *gate*
+            //    the schedule (a node is ready once its in-degree count is
+            //    met); the functional sum happens at writeback, over the
+            //    node's in-edges in ascending edge-id order — the canonical
+            //    order shared with the reference model, so the result does
+            //    not depend on delivery order (which varies by mode).
             for nt in nts.iter_mut() {
                 let (acc, written) = nt.step();
                 if let Some(tok) = acc {
                     let t = tok.dst as usize;
-                    let arow = agg.row_mut(t);
-                    let mrow = msg.row(tok.edge_id as usize);
-                    for c in 0..d {
-                        arow[c] += mrow[c];
-                    }
                     count[t] += 1;
                     if count[t] == deg[t] {
                         nt.mark_ready(tok.dst);
@@ -389,13 +414,17 @@ impl DataflowEngine {
                 }
                 if let Some(node) = written {
                     let i = node as usize;
-                    let dv = (deg[i] as f32).max(1.0);
-                    let xrow = x_in.row(i);
-                    let arow = agg.row(i);
-                    let orow = x_out.row_mut(i);
-                    for c in 0..d {
-                        let y = xrow[c] + arow[c] / dv;
-                        orow[c] = y * lw.bn_scale[c] + lw.bn_shift[c];
+                    agg_sum.fill(0.0);
+                    for &k in &in_edges[i] {
+                        let mrow = msg.row(k as usize);
+                        for c in 0..d {
+                            agg_sum[c] += mrow[c];
+                        }
+                    }
+                    if g.node_mask[i] == 0.0 {
+                        x_out.row_mut(i).fill(0.0);
+                    } else {
+                        lw.node_update(arith, x_in.row(i), &agg_sum, deg[i], x_out.row_mut(i));
                     }
                 }
             }
@@ -403,12 +432,13 @@ impl DataflowEngine {
             // 2. Adapter routes MP->NT.
             adapter.step(&mut mps, &mut nts);
 
-            // 3. MP units issue edges into the φ pipeline.
+            // 3. MP units issue edges into the φ pipeline (quantising at
+            //    the datapath's register points when arith is fixed).
             for mp in mps.iter_mut() {
                 if let MpEvent::Issued(edge) = mp.step() {
                     let k = edge as usize;
                     let (s, t) = (g.src[k] as usize, g.dst[k] as usize);
-                    lw.message(x_in.row(s), x_in.row(t), &mut hidden, msg.row_mut(k));
+                    lw.message(arith, x_in.row(s), x_in.row(t), &mut hidden, msg.row_mut(k));
                 }
             }
 
@@ -484,21 +514,26 @@ fn mp_needs(mp: &MpUnit, v: u32) -> bool {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::fixedpoint::Format;
     use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
     use crate::model::Weights;
     use crate::physics::generator::EventGenerator;
 
-    fn engine(mode: BroadcastMode) -> DataflowEngine {
+    fn engine_arith(mode: BroadcastMode, arith: Arith) -> DataflowEngine {
         let cfg = ModelConfig::default();
         let w = Weights::random(&cfg, 11);
-        let model = L1DeepMetV2::new(cfg, w).unwrap();
+        let model = L1DeepMetV2::with_arith(cfg, w, arith).unwrap();
         DataflowEngine::with_mode(ArchConfig::default(), model, mode).unwrap()
     }
 
-    fn reference() -> L1DeepMetV2 {
+    fn engine(mode: BroadcastMode) -> DataflowEngine {
+        engine_arith(mode, Arith::F32)
+    }
+
+    fn reference_arith(arith: Arith) -> L1DeepMetV2 {
         let cfg = ModelConfig::default();
         let w = Weights::random(&cfg, 11);
-        L1DeepMetV2::new(cfg, w).unwrap()
+        L1DeepMetV2::with_arith(cfg, w, arith).unwrap()
     }
 
     fn sample(seed: u64) -> PaddedGraph {
@@ -508,34 +543,52 @@ mod tests {
     }
 
     #[test]
-    fn simulator_output_equals_reference_model() {
-        let eng = engine(BroadcastMode::Broadcast);
-        let reference = reference();
-        for seed in [1u64, 2, 3] {
-            let g = sample(seed);
-            let sim = eng.run(&g);
-            let exp = reference.forward(&g);
-            let mut max_err = 0.0f32;
-            for (a, b) in sim.output.weights.iter().zip(&exp.weights) {
-                max_err = max_err.max((a - b).abs());
+    fn simulator_output_bit_equals_reference_model() {
+        // The load-bearing invariant, now exact: same shared payload, same
+        // canonical summation order, so not a single ULP of drift.
+        for arith in [Arith::F32, Arith::Fixed(Format::default_datapath())] {
+            let eng = engine_arith(BroadcastMode::Broadcast, arith);
+            let reference = reference_arith(arith);
+            assert_eq!(eng.arith(), arith);
+            for seed in [1u64, 2, 3] {
+                let g = sample(seed);
+                let sim = eng.run(&g);
+                let exp = reference.forward(&g);
+                assert_eq!(sim.output.weights, exp.weights, "{arith} seed {seed}");
+                assert_eq!(sim.output.met_xy, exp.met_xy, "{arith} seed {seed}");
             }
-            assert!(max_err < 1e-5, "seed {seed}: weights deviate by {max_err}");
-            assert!((sim.output.met() - exp.met()).abs() < 1e-3);
         }
     }
 
     #[test]
-    fn all_modes_agree_functionally() {
-        let g = sample(4);
-        let a = engine(BroadcastMode::Broadcast).run(&g);
-        let b = engine(BroadcastMode::FullReplication).run(&g);
-        let c = engine(BroadcastMode::MulticastBus).run(&g);
-        for (x, y) in a.output.weights.iter().zip(&b.output.weights) {
-            assert!((x - y).abs() < 1e-6);
+    fn all_modes_agree_bit_exactly() {
+        for arith in [Arith::F32, Arith::Fixed(Format::default_datapath())] {
+            let g = sample(4);
+            let a = engine_arith(BroadcastMode::Broadcast, arith).run(&g);
+            let b = engine_arith(BroadcastMode::FullReplication, arith).run(&g);
+            let c = engine_arith(BroadcastMode::MulticastBus, arith).run(&g);
+            assert_eq!(a.output.weights, b.output.weights, "{arith} replication");
+            assert_eq!(a.output.weights, c.output.weights, "{arith} multicast");
+            assert_eq!(a.output.met_xy, b.output.met_xy, "{arith} replication");
+            assert_eq!(a.output.met_xy, c.output.met_xy, "{arith} multicast");
         }
-        for (x, y) in a.output.weights.iter().zip(&c.output.weights) {
-            assert!((x - y).abs() < 1e-6);
-        }
+    }
+
+    #[test]
+    fn fixed_point_changes_timing_not_the_contract() {
+        // Same event, same fabric: the fixed-point engine still produces a
+        // finite MET near the f32 one (the precision axis is functional
+        // only; cycle accounting is arithmetic-independent).
+        let g = sample(14);
+        let f = engine(BroadcastMode::Broadcast).run(&g);
+        let q = engine_arith(
+            BroadcastMode::Broadcast,
+            Arith::Fixed(Format::default_datapath()),
+        )
+        .run(&g);
+        assert_eq!(f.breakdown.total_cycles, q.breakdown.total_cycles);
+        assert!(q.output.met().is_finite());
+        assert!((f.output.met() - q.output.met()).abs() < 5.0 + 0.1 * f.output.met().abs());
     }
 
     #[test]

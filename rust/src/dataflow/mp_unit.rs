@@ -10,7 +10,11 @@
 //!
 //! The unit is a pure timing state machine; the engine performs the actual
 //! φ computation when an edge *issues* (so the math is mechanically tied to
-//! the simulated schedule).
+//! the simulated schedule). Precision contract: the φ pass the engine runs
+//! at issue time is [`crate::model::EdgeConvWeights::message`] under the
+//! model's [`crate::fixedpoint::Arith`] — on a fixed-point datapath the
+//! subtractor, post-ReLU hidden, and message output registers quantise,
+//! exactly as the synthesised MP unit would.
 
 use std::collections::VecDeque;
 

@@ -7,6 +7,14 @@
 //! per message; writeback is a pipelined `nt_write`-cycle pass per node,
 //! overlapping further accumulation (separate adder vs. normaliser
 //! resources, as HLS would schedule them).
+//!
+//! Precision contract: the unit itself is a pure timing state machine —
+//! message arrivals gate *when* a node writes back. The writeback math the
+//! engine runs at that cycle is [`crate::model::EdgeConvWeights::
+//! node_update`] over the node's message sum taken in ascending edge-id
+//! order, under the model's [`crate::fixedpoint::Arith`]: on a fixed-point
+//! datapath the mean-divider output and the residual+BN result quantise,
+//! while the sum itself rides the wide DSP accumulator (f32 here).
 
 use std::collections::VecDeque;
 

@@ -1,16 +1,55 @@
-//! ap_fixed-style fixed-point arithmetic simulation.
+//! ap_fixed-style fixed-point arithmetic for the whole datapath.
 //!
-//! The FPGA datapath in the paper is synthesised from HLS with fixed-point
-//! types (Vitis `ap_fixed<W, I>`). Our functional simulator runs in f32 by
-//! default; this module quantifies what the fixed-point datapath would do:
-//! `Fixed<W, I>`-equivalent quantisation with saturation and
-//! round-to-nearest, a quantised model evaluation, and error analysis
-//! against the f32 reference. Used by the `ablation` benches and DESIGN.md's
-//! precision discussion.
+//! The FPGA fabric in the paper is synthesised from HLS with fixed-point
+//! types (Vitis `ap_fixed<W, I>`), while the functional simulator's default
+//! datapath is f32. This module makes precision a pluggable axis of the
+//! stack:
+//!
+//! - [`Format`] — an ap_fixed<W, I> descriptor (saturation + round-to-
+//!   nearest-even, AP_SAT/AP_RND), with a typed [`FormatError`] from
+//!   [`Format::try_new`] for untrusted (W, I) pairs.
+//! - [`Arith`] — the datapath arithmetic mode threaded through the model,
+//!   the timed dataflow engine, and the serving backends: `Arith::F32` is
+//!   the exact reference, `Arith::Fixed(fmt)` quantises at every register
+//!   boundary the HLS pipeline would have (see the register-point list on
+//!   [`Arith`]).
+//! - [`QuantizedModel`] — error analysis of a fixed-point model against the
+//!   f32 reference (used by the precision sweep bench).
+//!
+//! The load-bearing invariant (enforced by `tests/golden.rs` and the
+//! simulator-equivalence property tests): for every `Arith`, the timed
+//! engine's output is **bit-identical** to the reference model evaluated in
+//! the same `Arith` — the timing model can never drift from the math, in
+//! either precision.
+
+use std::fmt;
 
 use crate::config::ModelConfig;
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, ModelOutput};
+
+/// Widest format this emulation supports: beyond the f64 mantissa the
+/// quantisation grid is no longer representable exactly.
+pub const MAX_WIDTH: u32 = 52;
+
+/// A rejected (W, I) pair from [`Format::try_new`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FormatError {
+    pub w: u32,
+    pub i: u32,
+}
+
+impl fmt::Display for FormatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid ap_fixed format <{},{}>: need 2 <= W <= {MAX_WIDTH} and 1 <= I <= W",
+            self.w, self.i
+        )
+    }
+}
+
+impl std::error::Error for FormatError {}
 
 /// Fixed-point format descriptor: total width `w` bits, `i` integer bits
 /// (two's complement, like ap_fixed<W, I>). Fraction bits = w - i.
@@ -21,15 +60,33 @@ pub struct Format {
 }
 
 impl Format {
+    /// Const constructor for statically-known formats. Panics on a bad
+    /// (W, I); use [`Format::try_new`] for untrusted input (CLI flags,
+    /// config files) — the pipeline builder surfaces the typed error.
     pub const fn new(w: u32, i: u32) -> Format {
-        assert!(w >= 2 && i >= 1 && i <= w);
+        assert!(w >= 2 && w <= MAX_WIDTH && i >= 1 && i <= w);
         Format { w, i }
+    }
+
+    /// Validating constructor: returns [`FormatError`] instead of panicking.
+    pub fn try_new(w: u32, i: u32) -> Result<Format, FormatError> {
+        if w >= 2 && w <= MAX_WIDTH && i >= 1 && i <= w {
+            Ok(Format { w, i })
+        } else {
+            Err(FormatError { w, i })
+        }
     }
 
     /// ap_fixed<16,6>: the usual HLS default for GNN accelerators
     /// (range ±32, ~1e-3 resolution).
     pub const fn default_datapath() -> Format {
         Format::new(16, 6)
+    }
+
+    /// ap_fixed<32,16>: the wide accumulator format DSP cascades provide
+    /// for long reductions (the MET sum over up to 256 weighted momenta).
+    pub const fn accumulator() -> Format {
+        Format::new(32, 16)
     }
 
     pub fn frac_bits(&self) -> u32 {
@@ -80,6 +137,93 @@ impl Format {
     }
 }
 
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ap_fixed<{},{}>", self.w, self.i)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arith: the pluggable datapath arithmetic
+// ---------------------------------------------------------------------------
+
+/// Datapath arithmetic mode, threaded through the model evaluation, the
+/// timed dataflow engine, and the inference backends.
+///
+/// In `Fixed` mode the datapath quantises exactly where the HLS fabric
+/// registers values (weights are quantised once at model construction):
+///
+/// 1. embedding stage: input registers (normalised features + embeddings),
+///    the hidden layer after ReLU, and the BN-folded stage output;
+/// 2. MP unit φ-MLP ([`crate::model::EdgeConvWeights::message`]): the
+///    `xv - xu` subtractor output, the hidden layer after ReLU, and the
+///    message output register;
+/// 3. NT unit writeback ([`crate::model::EdgeConvWeights::node_update`]):
+///    the mean-aggregation divider output and the residual+BN result
+///    (the message sum itself rides a wide DSP accumulator, i.e. f32 here);
+/// 4. output head: the hidden layer after ReLU and the sigmoid LUT output;
+/// 5. the MET accumulator, in the wide [`Format::accumulator`] format.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Arith {
+    /// Exact f32 reference datapath.
+    #[default]
+    F32,
+    /// ap_fixed<W, I> datapath with saturation and round-to-nearest-even.
+    Fixed(Format),
+}
+
+impl Arith {
+    /// Quantise one value to the datapath format (identity in f32 mode).
+    #[inline]
+    pub fn q(self, x: f32) -> f32 {
+        match self {
+            Arith::F32 => x,
+            Arith::Fixed(f) => f.quantize(x),
+        }
+    }
+
+    /// Quantise a slice in place (no-op in f32 mode).
+    pub fn q_slice(self, xs: &mut [f32]) {
+        if let Arith::Fixed(f) = self {
+            f.quantize_slice(xs);
+        }
+    }
+
+    /// The matching wide-accumulator arithmetic (long reductions).
+    pub fn acc(self) -> Arith {
+        match self {
+            Arith::F32 => Arith::F32,
+            Arith::Fixed(_) => Arith::Fixed(Format::accumulator()),
+        }
+    }
+
+    pub fn is_fixed(self) -> bool {
+        matches!(self, Arith::Fixed(_))
+    }
+
+    /// Validate the underlying format (struct literals can bypass
+    /// [`Format::try_new`], since the fields are public).
+    pub fn validate(self) -> Result<(), FormatError> {
+        match self {
+            Arith::F32 => Ok(()),
+            Arith::Fixed(f) => Format::try_new(f.w, f.i).map(|_| ()),
+        }
+    }
+}
+
+impl fmt::Display for Arith {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Arith::F32 => write!(f, "f32"),
+            Arith::Fixed(fmt_) => write!(f, "{fmt_}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantisation error analysis
+// ---------------------------------------------------------------------------
+
 /// Quantisation-error report for a model evaluated in fixed point.
 #[derive(Clone, Debug)]
 pub struct QuantReport {
@@ -90,50 +234,37 @@ pub struct QuantReport {
     pub met_rel_err: f32,
 }
 
-/// Evaluate the model with activations quantised after every stage —
-/// a conservative emulation of an ap_fixed datapath (weights quantised
-/// once up front, activations re-quantised at stage boundaries where the
-/// HLS pipeline would register them).
+/// A model running the full fixed-point datapath (weights quantised once at
+/// construction, activations re-quantised at every register boundary — see
+/// [`Arith`]), packaged with error analysis against the f32 reference.
+///
+/// This is now a thin wrapper over [`L1DeepMetV2::with_arith`]; it remains
+/// the entry point for precision *studies* (the sweep bench), while serving
+/// paths take precision through the pipeline builder instead.
 pub struct QuantizedModel {
     model: L1DeepMetV2,
     pub format: Format,
 }
 
 impl QuantizedModel {
-    pub fn new(cfg: ModelConfig, weights: crate::model::Weights, format: Format) -> anyhow::Result<Self> {
-        let mut w = weights;
-        // Quantise parameters once (what the bitstream would bake in).
-        for m in [&mut w.emb_pdg, &mut w.emb_q, &mut w.w1, &mut w.w2, &mut w.wo1, &mut w.wo2] {
-            format.quantize_slice(&mut m.data);
-        }
-        for v in [&mut w.b1, &mut w.b2, &mut w.bn0_scale, &mut w.bn0_shift, &mut w.bo1, &mut w.bo2]
-        {
-            format.quantize_slice(v);
-        }
-        for l in &mut w.layers {
-            format.quantize_slice(&mut l.wa.data);
-            format.quantize_slice(&mut l.ba);
-            format.quantize_slice(&mut l.wb.data);
-            format.quantize_slice(&mut l.bb);
-            format.quantize_slice(&mut l.bn_scale);
-            format.quantize_slice(&mut l.bn_shift);
-        }
-        Ok(QuantizedModel { model: L1DeepMetV2::new(cfg, w)?, format })
+    pub fn new(
+        cfg: ModelConfig,
+        weights: crate::model::Weights,
+        format: Format,
+    ) -> anyhow::Result<Self> {
+        Format::try_new(format.w, format.i)?;
+        let model = L1DeepMetV2::with_arith(cfg, weights, Arith::Fixed(format))?;
+        Ok(QuantizedModel { model, format })
     }
 
-    /// Forward pass with quantised parameters. (Activation quantisation is
-    /// approximated by quantising the final outputs; intermediate f32
-    /// accumulation mirrors the wide accumulators DSP slices provide.)
+    /// The underlying fixed-point model.
+    pub fn model(&self) -> &L1DeepMetV2 {
+        &self.model
+    }
+
+    /// Forward pass on the fixed-point datapath.
     pub fn forward(&self, g: &PaddedGraph) -> ModelOutput {
-        let mut out = self.model.forward(g);
-        self.format.quantize_slice(&mut out.weights);
-        // The MET accumulator sums up to 256 weighted momenta of O(100 GeV):
-        // HLS would give it a wide format (ap_fixed<32,16>-like), not the
-        // narrow datapath format — quantise accordingly.
-        let acc = Format::new(32, 16);
-        out.met_xy[0] = acc.quantize(out.met_xy[0]);
-        out.met_xy[1] = acc.quantize(out.met_xy[1]);
-        out
+        self.model.forward(g)
     }
 
     /// Compare against an f32 reference over one graph.
@@ -176,6 +307,23 @@ mod tests {
     }
 
     #[test]
+    fn try_new_rejects_bad_formats() {
+        assert_eq!(Format::try_new(16, 6), Ok(Format::new(16, 6)));
+        assert_eq!(Format::try_new(1, 1), Err(FormatError { w: 1, i: 1 }));
+        assert_eq!(Format::try_new(8, 0), Err(FormatError { w: 8, i: 0 }));
+        assert_eq!(Format::try_new(8, 9), Err(FormatError { w: 8, i: 9 }));
+        assert_eq!(
+            Format::try_new(MAX_WIDTH + 1, 6),
+            Err(FormatError { w: MAX_WIDTH + 1, i: 6 })
+        );
+        // the error formats usefully and converts into anyhow
+        let e = Format::try_new(8, 0).unwrap_err();
+        assert!(e.to_string().contains("<8,0>"));
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any:#}").contains("ap_fixed"));
+    }
+
+    #[test]
     fn quantize_rounds_and_saturates() {
         let f = Format::new(8, 4); // range [-8, 8), lsb 1/16
         assert_eq!(f.quantize(1.03), 1.0); // 16.48/16 rounds down
@@ -194,6 +342,23 @@ mod tests {
             let q = f.quantize(x);
             assert_eq!(f.quantize(q), q);
         }
+    }
+
+    #[test]
+    fn arith_modes() {
+        let x = 1.0009765f32; // not on the <16,6> grid
+        assert_eq!(Arith::F32.q(x), x);
+        let a = Arith::Fixed(Format::default_datapath());
+        assert_ne!(a.q(x), x);
+        assert_eq!(a.q(a.q(x)), a.q(x));
+        assert_eq!(Arith::F32.acc(), Arith::F32);
+        assert_eq!(a.acc(), Arith::Fixed(Format::accumulator()));
+        assert!(a.is_fixed() && !Arith::F32.is_fixed());
+        assert_eq!(a.to_string(), "ap_fixed<16,6>");
+        assert_eq!(Arith::F32.to_string(), "f32");
+        // struct-literal formats are caught by validate()
+        assert!(Arith::Fixed(Format { w: 4, i: 9 }).validate().is_err());
+        assert!(a.validate().is_ok());
     }
 
     #[test]

@@ -48,7 +48,11 @@
 //!   dynamic ΔR graph construction (paper Eq. 1).
 //! - [`devices`] — analytic GPU/CPU latency models for paper-shape
 //!   comparisons.
-//! - [`fixedpoint`] — ap_fixed-style quantisation study.
+//! - [`fixedpoint`] — the pluggable datapath arithmetic
+//!   ([`fixedpoint::Arith`]): f32 reference vs ap_fixed<W, I> with
+//!   saturation + round-to-nearest, threaded through the model, the timed
+//!   engine, and the backends (`Pipeline::builder().precision(..)`), with
+//!   the engine guaranteed bit-identical to the reference in every mode.
 //! - [`util`], [`config`] — from-scratch substrates (JSON, CLI, RNG, stats,
 //!   bench/property harnesses) and typed configuration.
 

@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
 use dgnnflow::dataflow::{DataflowEngine, PowerModel, ResourceModel};
+use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
 use dgnnflow::physics::{EventGenerator, GeneratorConfig};
@@ -64,6 +65,30 @@ fn print_help() {
          \u{20}  power                    Table II power estimate\n\n\
          Run `cargo run --release -- serve --events 1000 --backend pjrt`."
     );
+}
+
+/// Parse `--precision f32 | fixed | W,I` into the requested ap_fixed format
+/// (None = keep the backend's native f32). `fixed` is the paper's default
+/// datapath, ap_fixed<16,6>.
+fn parse_precision(s: &str) -> anyhow::Result<Option<Format>> {
+    match s {
+        "f32" => Ok(None),
+        "fixed" => Ok(Some(Format::default_datapath())),
+        other => {
+            let (w, i) = other.split_once(',').ok_or_else(|| {
+                anyhow::anyhow!("--precision: expected f32 | fixed | W,I — got '{other}'")
+            })?;
+            let w: u32 = w
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--precision: bad total width '{w}'"))?;
+            let i: u32 = i
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--precision: bad integer bits '{i}'"))?;
+            Ok(Some(Format::try_new(w, i)?))
+        }
+    }
 }
 
 /// Load config: --config FILE or defaults.
@@ -131,6 +156,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .arg("--batch N", "dynamic batcher max batch (default from config)")
                 .arg("--batch-timeout-us N", "batcher flush timeout (default from config)")
                 .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 5000)")
+                .arg("--precision P", "datapath arithmetic: f32 | fixed | W,I (default f32)")
                 .arg("--paced", "honour source arrival times in wall-clock")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default 60)")
@@ -166,7 +192,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown source '{other}' (synthetic | burst)"),
     };
 
-    let report = Pipeline::builder()
+    let mut builder = Pipeline::builder()
         .source(source)
         .backend(backend)
         .graph(tcfg.delta_r as f32)
@@ -176,9 +202,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .queue_capacity(tcfg.queue_capacity)
         .accept_fraction(tcfg.target_accept_hz / tcfg.input_rate_hz)
         .met_threshold(tcfg.met_threshold)
-        .paced(args.flag("paced"))
-        .build()?
-        .serve();
+        .paced(args.flag("paced"));
+    if let Some(fmt) = parse_precision(args.str_or("precision", "f32"))? {
+        builder = builder.precision(fmt);
+    }
+    let report = builder.build()?.serve();
     println!("{}", report.summary());
     println!(
         "batches: {} (mean size {:.2}, histogram {})",
@@ -192,7 +220,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
-    let model = load_model()?;
+    let mut model = load_model()?;
+    if let Some(fmt) = parse_precision(args.str_or("precision", "f32"))? {
+        model.set_arith(Arith::Fixed(fmt))?;
+    }
     let engine = DataflowEngine::new(cfg.arch.clone(), model)?;
     let mut gen = EventGenerator::with_seed(seed);
     let ev = gen.generate();
@@ -200,8 +231,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
     let r = engine.run(&padded);
     println!(
-        "event {}: {} particles, {} edges (bucket {}x{})",
-        ev.id, padded.n, padded.e, padded.bucket.n_max, padded.bucket.e_max
+        "event {}: {} particles, {} edges (bucket {}x{}), datapath {}",
+        ev.id,
+        padded.n,
+        padded.e,
+        padded.bucket.n_max,
+        padded.bucket.e_max,
+        engine.arith()
     );
     println!(
         "MET = {:.2} GeV (true {:.2}); accept decision depends on threshold",

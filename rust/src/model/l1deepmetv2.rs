@@ -5,8 +5,19 @@
 //!   1. correctness oracle for the PJRT artifact path (tests),
 //!   2. the functional payload of the dataflow simulator's MP/NT units,
 //!   3. the "CPU Baseline SW" measurement point on this testbed.
+//!
+//! The datapath arithmetic is pluggable ([`Arith`]): the default is the
+//! exact f32 reference; [`L1DeepMetV2::with_arith`] runs the same network
+//! on an ap_fixed<W, I> datapath, quantising weights once and activations
+//! at every HLS register boundary. The EdgeConv layer is deliberately
+//! written as *per-edge message + canonical in-edge-order aggregation +
+//! per-node writeback* — the exact same shared functions
+//! ([`EdgeConvWeights::message`] / [`EdgeConvWeights::node_update`]) the
+//! timed dataflow engine invokes, in the exact same f32 operation order, so
+//! the simulator's output is bit-identical to this model in every `Arith`.
 
 use crate::config::ModelConfig;
+use crate::fixedpoint::Arith;
 use crate::graph::PaddedGraph;
 
 use super::tensor::Mat;
@@ -31,13 +42,49 @@ impl ModelOutput {
 pub struct L1DeepMetV2 {
     pub cfg: ModelConfig,
     pub weights: Weights,
+    /// Datapath arithmetic; set once via [`Self::with_arith`] /
+    /// [`Self::set_arith`] (quantising weights is lossy, so it is one-way).
+    arith: Arith,
 }
 
 impl L1DeepMetV2 {
     pub fn new(cfg: ModelConfig, weights: Weights) -> anyhow::Result<Self> {
         cfg.validate()?;
         weights.validate(&cfg)?;
-        Ok(L1DeepMetV2 { cfg, weights })
+        Ok(L1DeepMetV2 { cfg, weights, arith: Arith::F32 })
+    }
+
+    /// Build a model running on the given datapath arithmetic. Fixed-point
+    /// modes quantise the weights once up front (what the bitstream bakes
+    /// in) and re-quantise activations at every register boundary.
+    pub fn with_arith(cfg: ModelConfig, weights: Weights, arith: Arith) -> anyhow::Result<Self> {
+        let mut m = Self::new(cfg, weights)?;
+        m.set_arith(arith)?;
+        Ok(m)
+    }
+
+    /// The datapath arithmetic this model evaluates in.
+    pub fn arith(&self) -> Arith {
+        self.arith
+    }
+
+    /// Switch the datapath arithmetic. Only valid from the pristine f32
+    /// state: quantising weights is lossy, so re-quantising an already
+    /// fixed-point model would silently compound rounding — rebuild from
+    /// the original weights instead.
+    pub fn set_arith(&mut self, arith: Arith) -> anyhow::Result<()> {
+        if arith == self.arith {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.arith == Arith::F32,
+            "model precision already set to {}; rebuild from f32 weights to change it",
+            self.arith
+        );
+        arith.validate()?;
+        self.weights.quantize(arith);
+        self.arith = arith;
+        Ok(())
     }
 
     /// Embedding stage: [n, 6]+[n, 2] -> x0 [n, node_dim].
@@ -45,6 +92,7 @@ impl L1DeepMetV2 {
     pub fn embed(&self, g: &PaddedGraph) -> Mat {
         let cfg = &self.cfg;
         let w = &self.weights;
+        let a = self.arith;
         let n_max = g.bucket.n_max;
         // Perf (§Perf L3): run the whole embedding chain on the live-row
         // prefix only — padded rows would get nonzero *normalised* features
@@ -64,12 +112,17 @@ impl L1DeepMetV2 {
             row[cfg.n_cont..cfg.n_cont + cfg.emb_dim].copy_from_slice(w.emb_pdg.row(pdg));
             row[cfg.n_cont + cfg.emb_dim..].copy_from_slice(w.emb_q.row(q));
         }
+        // input registers of the fabric (embedding table entries are already
+        // quantised with the weights; the normaliser output is not)
+        h0.quantize(a);
         let mut h1 = h0.matmul(&w.w1);
         h1.add_bias(&w.b1);
         h1.relu();
+        h1.quantize(a);
         let mut x_live = h1.matmul(&w.w2);
         x_live.add_bias(&w.b2);
         x_live.bn_fold(&w.bn0_scale, &w.bn0_shift);
+        x_live.quantize(a);
         // scatter the live rows into the padded output (padding stays zero,
         // which is exactly what mask_rows produced before)
         let mut x0 = Mat::zeros(n_max, cfg.node_dim);
@@ -83,67 +136,68 @@ impl L1DeepMetV2 {
 
     /// One EdgeConv layer (paper Eq. 2 + mean aggregation + residual + BN).
     ///
+    /// Structured exactly like the fabric computes it — and sharing its
+    /// code: per-live-edge [`EdgeConvWeights::message`] (the MP-unit φ
+    /// pass), message summation per target node in ascending edge-id order
+    /// (what the NT writeback sums), then [`EdgeConvWeights::node_update`]
+    /// per live node. The timed engine performs the same calls on the same
+    /// values in the same order, which is what makes simulator-vs-reference
+    /// equality *bit*-exact rather than tolerance-based.
+    ///
     /// Perf note (§Perf L3): messages are computed for the *live* edge
     /// prefix only — padded edge slots would otherwise burn the φ-MLP on
     /// garbage that the aggregation mask throws away (the padding is a
     /// leading prefix by construction, see graph::padding).
-    fn edgeconv(&self, l: usize, x: &Mat, g: &PaddedGraph) -> Mat {
+    pub fn edgeconv(&self, l: usize, x: &Mat, g: &PaddedGraph) -> Mat {
         let cfg = &self.cfg;
         let lw = &self.weights.layers[l];
+        let a = self.arith;
         let n = g.bucket.n_max;
         let d = cfg.node_dim;
+        let n_live = g.n.min(n);
         // live edges form a prefix; fall back to full scan if masks are
         // interior (hand-built graphs in tests may do that)
         let e_live = g.edge_mask.iter().take_while(|&&m| m == 1.0).count();
         let contiguous = g.edge_mask[e_live..].iter().all(|&m| m == 0.0);
         let e = if contiguous { e_live } else { g.bucket.e_max };
 
-        // Gather endpoints and build [e, 2D] message-input features.
-        let mut feat = Mat::zeros(e, 2 * d);
+        // φ-MLP per live edge (the MP-unit payload), plus in-degrees.
+        let mut msg = Mat::zeros(e.max(1), d);
+        let mut hidden = vec![0.0f32; cfg.hid_edge];
+        let mut deg = vec![0u32; n];
         for k in 0..e {
-            let (s, t) = (g.src[k] as usize, g.dst[k] as usize);
-            let xu = x.row(s);
-            let xv = x.row(t);
-            let row = feat.row_mut(k);
-            row[..d].copy_from_slice(xu);
-            for c in 0..d {
-                row[d + c] = xv[c] - xu[c];
+            if g.edge_mask[k] == 0.0 {
+                continue;
             }
+            let (s, t) = (g.src[k] as usize, g.dst[k] as usize);
+            lw.message(a, x.row(s), x.row(t), &mut hidden, msg.row_mut(k));
+            deg[t] += 1;
         }
-        // phi MLP
-        let mut h = feat.matmul(&lw.wa);
-        h.add_bias(&lw.ba);
-        h.relu();
-        let mut msg = h.matmul(&lw.wb);
-        msg.add_bias(&lw.bb);
 
-        // Masked mean aggregation into target nodes.
+        // Canonical aggregation: ascending edge id per target node — the
+        // same per-node add order the engine's NT writeback uses.
         let mut agg = Mat::zeros(n, d);
-        let mut deg = vec![0.0f32; n];
         for k in 0..e {
             if g.edge_mask[k] == 0.0 {
                 continue;
             }
             let t = g.dst[k] as usize;
-            deg[t] += 1.0;
             let arow = agg.row_mut(t);
             let mrow = msg.row(k);
             for c in 0..d {
                 arow[c] += mrow[c];
             }
         }
-        for i in 0..n {
-            let dv = deg[i].max(1.0);
-            for v in agg.row_mut(i) {
-                *v /= dv;
-            }
-        }
 
-        // Residual + BN + node mask.
-        let mut y = x.clone();
-        y.add_assign(&agg);
-        y.bn_fold(&lw.bn_scale, &lw.bn_shift);
-        y.mask_rows(&g.node_mask);
+        // Mean + residual + BN per live node (the NT-unit payload); padded
+        // and masked rows stay zero.
+        let mut y = Mat::zeros(n, d);
+        for i in 0..n_live {
+            if g.node_mask[i] == 0.0 {
+                continue;
+            }
+            lw.node_update(a, x.row(i), agg.row(i), deg[i], y.row_mut(i));
+        }
         y
     }
 
@@ -151,12 +205,16 @@ impl L1DeepMetV2 {
     /// Public: the dataflow simulator reuses it as its output stage payload.
     pub fn head(&self, x: &Mat, g: &PaddedGraph) -> Vec<f32> {
         let w = &self.weights;
+        let a = self.arith;
         let mut h = x.matmul(&w.wo1);
         h.add_bias(&w.bo1);
         h.relu();
+        h.quantize(a);
         let mut o = h.matmul(&w.wo2);
         o.add_bias(&w.bo2);
         o.sigmoid();
+        // the sigmoid is a LUT on the fabric; its output register quantises
+        o.quantize(a);
         (0..x.rows).map(|i| o.at(i, 0) * g.node_mask[i]).collect()
     }
 
@@ -170,15 +228,37 @@ impl L1DeepMetV2 {
         self.finish(&x, g)
     }
 
+    /// Forward pass that also returns the node embeddings entering each
+    /// stage: `[x0, x1, ..., xL]` (embedding output, then each EdgeConv
+    /// layer's output). Used by the golden-vector conformance suite to pin
+    /// every layer, not just the final MET.
+    pub fn forward_trace(&self, g: &PaddedGraph) -> (Vec<Mat>, ModelOutput) {
+        let cfg = &self.cfg;
+        let mut trace = Vec::with_capacity(cfg.n_layers + 1);
+        trace.push(self.embed(g));
+        for l in 0..cfg.n_layers {
+            let next = self.edgeconv(l, &trace[l], g);
+            trace.push(next);
+        }
+        let out = self.finish(trace.last().expect("trace never empty"), g);
+        (trace, out)
+    }
+
     /// Head + MET from final node embeddings (shared with the simulator).
     pub fn finish(&self, x: &Mat, g: &PaddedGraph) -> ModelOutput {
         let cfg = &self.cfg;
         let weights = self.head(x, g);
+        // The MET accumulator sums up to n_max weighted momenta of O(100
+        // GeV): the fabric gives it a wide format (Format::accumulator),
+        // not the narrow datapath format.
+        let acc = self.arith.acc();
         let mut met_xy = [0.0f32; 2];
         for i in 0..g.bucket.n_max {
             met_xy[0] += weights[i] * g.cont[i * cfg.n_cont + cfg.idx_px];
             met_xy[1] += weights[i] * g.cont[i * cfg.n_cont + cfg.idx_py];
         }
+        met_xy[0] = acc.q(met_xy[0]);
+        met_xy[1] = acc.q(met_xy[1]);
         ModelOutput { weights, met_xy }
     }
 
@@ -197,6 +277,7 @@ impl L1DeepMetV2 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixedpoint::Format;
     use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
     use crate::physics::generator::EventGenerator;
 
@@ -246,6 +327,56 @@ mod tests {
         let b = m.forward(&g);
         assert_eq!(a.weights, b.weights);
         assert_eq!(a.met_xy, b.met_xy);
+    }
+
+    #[test]
+    fn forward_trace_matches_forward() {
+        let m = model();
+        let g = sample_graph(12);
+        let (trace, out) = m.forward_trace(&g);
+        assert_eq!(trace.len(), m.cfg.n_layers + 1);
+        let plain = m.forward(&g);
+        assert_eq!(out.weights, plain.weights);
+        assert_eq!(out.met_xy, plain.met_xy);
+        // the trace really is the layer chain
+        let x1 = m.edgeconv(0, &trace[0], &g);
+        assert_eq!(x1, trace[1]);
+    }
+
+    #[test]
+    fn fixed_arith_outputs_sit_on_the_grid() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 3);
+        let fmt = Format::default_datapath();
+        let m = L1DeepMetV2::with_arith(cfg, w, Arith::Fixed(fmt)).unwrap();
+        assert_eq!(m.arith(), Arith::Fixed(fmt));
+        let g = sample_graph(13);
+        let (trace, out) = m.forward_trace(&g);
+        for x in &trace {
+            for &v in &x.data {
+                assert_eq!(fmt.quantize(v), v, "embedding off the <16,6> grid: {v}");
+            }
+        }
+        for &v in &out.weights {
+            assert_eq!(fmt.quantize(v), v, "weight off the <16,6> grid: {v}");
+        }
+        let acc = Format::accumulator();
+        assert_eq!(acc.quantize(out.met_xy[0]), out.met_xy[0]);
+        assert_eq!(acc.quantize(out.met_xy[1]), out.met_xy[1]);
+    }
+
+    #[test]
+    fn set_arith_is_one_way() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 3);
+        let mut m = L1DeepMetV2::new(cfg, w).unwrap();
+        m.set_arith(Arith::F32).unwrap(); // no-op is fine
+        m.set_arith(Arith::Fixed(Format::default_datapath())).unwrap();
+        // same precision again is a no-op
+        m.set_arith(Arith::Fixed(Format::default_datapath())).unwrap();
+        // but changing it would re-quantise lossy weights: rejected
+        assert!(m.set_arith(Arith::Fixed(Format::new(8, 4))).is_err());
+        assert!(m.set_arith(Arith::F32).is_err());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! to be readable and fast enough to serve as the CPU baseline (the matmul
 //! has a cache-friendly ikj loop; §Perf L3 measures it).
 
+use crate::fixedpoint::Arith;
+
 /// Row-major 2-D matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
@@ -131,6 +133,13 @@ impl Mat {
         }
     }
 
+    /// Quantise every element to the datapath arithmetic (identity for
+    /// [`Arith::F32`]). The model applies this at the register boundaries
+    /// of the HLS pipeline — see the list on [`Arith`].
+    pub fn quantize(&mut self, arith: Arith) {
+        arith.q_slice(&mut self.data);
+    }
+
     /// Max |a - b| over all elements.
     pub fn max_abs_diff(&self, other: &Mat) -> f32 {
         assert_eq!(self.rows, other.rows);
@@ -193,6 +202,20 @@ mod tests {
         assert_eq!(m.data, vec![3.0, 0.0, 7.0, 1.0]);
         m.mask_rows(&[1.0, 0.0]);
         assert_eq!(m.data, vec![3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn quantize_identity_in_f32_and_grids_in_fixed() {
+        use crate::fixedpoint::{Arith, Format};
+        let data = vec![0.1f32, -1.23456, 7.7];
+        let mut m = Mat::from_vec(1, 3, data.clone());
+        m.quantize(Arith::F32);
+        assert_eq!(m.data, data);
+        let f = Format::new(8, 4);
+        m.quantize(Arith::Fixed(f));
+        for x in &m.data {
+            assert_eq!(f.quantize(*x), *x, "quantised values sit on the grid");
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use std::path::Path;
 
 use crate::config::ModelConfig;
+use crate::fixedpoint::Arith;
 use crate::util::json;
 use crate::util::rng::Rng;
 
@@ -43,7 +44,14 @@ impl EdgeConvWeights {
     /// Single-edge message m_uv = phi(concat(xu, xv - xu)) — the exact
     /// computation of one Enhanced MP Unit datapath pass (paper Alg. 1
     /// steps 5-7). `hidden` is caller-provided scratch of len hid_edge.
-    pub fn message(&self, xu: &[f32], xv: &[f32], hidden: &mut [f32], out: &mut [f32]) {
+    ///
+    /// This is the *shared payload* of the reference model and the timed
+    /// dataflow engine: both call exactly this function per live edge, so
+    /// simulator-vs-reference bit-identity is structural. In fixed-point
+    /// `arith` the φ pipeline quantises at its three register points: the
+    /// `xv - xu` subtractor, the hidden layer after ReLU, and the message
+    /// output (MAC accumulation itself rides wide DSP accumulators = f32).
+    pub fn message(&self, arith: Arith, xu: &[f32], xv: &[f32], hidden: &mut [f32], out: &mut [f32]) {
         let d = xu.len();
         let h = self.ba.len();
         debug_assert_eq!(xv.len(), d);
@@ -62,7 +70,7 @@ impl EdgeConvWeights {
             }
         }
         for k in 0..d {
-            let dx = xv[k] - xu[k];
+            let dx = arith.q(xv[k] - xu[k]);
             if dx != 0.0 {
                 let wrow = self.wa.row(d + k);
                 for j in 0..h {
@@ -75,6 +83,7 @@ impl EdgeConvWeights {
                 *v = 0.0;
             }
         }
+        arith.q_slice(hidden);
         // out = hidden @ wb + bb
         out.copy_from_slice(&self.bb);
         for (k, &hv) in hidden.iter().enumerate() {
@@ -84,6 +93,25 @@ impl EdgeConvWeights {
                     *o += hv * w;
                 }
             }
+        }
+        arith.q_slice(out);
+    }
+
+    /// One NT-unit writeback: masked-mean aggregation of the node's summed
+    /// messages, residual add, folded batch-norm. Like [`Self::message`],
+    /// this is shared verbatim by the reference model and the timed engine
+    /// (both sum `agg` over the node's in-edges in ascending edge-id order
+    /// before calling it), so the two paths stay bit-identical in every
+    /// [`Arith`]. Fixed-point register points: the mean divider output and
+    /// the residual+BN result.
+    pub fn node_update(&self, arith: Arith, x: &[f32], agg: &[f32], deg: u32, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), out.len());
+        debug_assert_eq!(agg.len(), out.len());
+        debug_assert_eq!(self.bn_scale.len(), out.len());
+        let dv = (deg as f32).max(1.0);
+        for c in 0..out.len() {
+            let mean = arith.q(agg[c] / dv);
+            out[c] = arith.q((x[c] + mean) * self.bn_scale[c] + self.bn_shift[c]);
         }
     }
 }
@@ -217,6 +245,40 @@ impl Weights {
         anyhow::ensure!(self.wo1.rows == d && self.wo1.cols == cfg.hid_out, "wo1 shape");
         anyhow::ensure!(self.wo2.rows == cfg.hid_out && self.wo2.cols == 1, "wo2 shape");
         Ok(())
+    }
+
+    /// Quantise every parameter in place — what a fixed-point bitstream
+    /// bakes in once at synthesis. Called by
+    /// [`crate::model::L1DeepMetV2::set_arith`]; a no-op for [`Arith::F32`].
+    pub fn quantize(&mut self, arith: Arith) {
+        for m in [
+            &mut self.emb_pdg,
+            &mut self.emb_q,
+            &mut self.w1,
+            &mut self.w2,
+            &mut self.wo1,
+            &mut self.wo2,
+        ] {
+            arith.q_slice(&mut m.data);
+        }
+        for v in [
+            &mut self.b1,
+            &mut self.b2,
+            &mut self.bn0_scale,
+            &mut self.bn0_shift,
+            &mut self.bo1,
+            &mut self.bo2,
+        ] {
+            arith.q_slice(v);
+        }
+        for l in &mut self.layers {
+            arith.q_slice(&mut l.wa.data);
+            arith.q_slice(&mut l.ba);
+            arith.q_slice(&mut l.wb.data);
+            arith.q_slice(&mut l.bb);
+            arith.q_slice(&mut l.bn_scale);
+            arith.q_slice(&mut l.bn_shift);
+        }
     }
 
     /// Flat parameter count (for the resource/power models and docs).

@@ -18,6 +18,10 @@
 //!   iterator of per-event [`EventRecord`]s; [`RecordStream::report`] (or
 //!   [`Pipeline::serve`]) folds the stream into a [`ServeReport`] with
 //!   latency percentiles and the batch-size histogram.
+//! - **Precision is pluggable**: `.precision(Format::default_datapath())`
+//!   re-quantises the owned backend onto an ap_fixed<W, I> datapath before
+//!   serving (typed [`PipelineError`]s on invalid formats or backends that
+//!   cannot requantise); the report records which arithmetic served.
 //!
 //! ```
 //! use dgnnflow::config::ModelConfig;
@@ -51,6 +55,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::fixedpoint::{Arith, Format, FormatError};
 use crate::graph::{pad_graph, padding::DEFAULT_BUCKETS, Bucket, GraphBuilder, PaddedGraph};
 use crate::trigger::backend::InferenceBackend;
 use crate::trigger::batcher::{DynamicBatcher, Pending};
@@ -91,6 +96,8 @@ pub struct EventRecord {
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub backend: String,
+    /// Datapath arithmetic the backend served in ("f32" or "ap_fixed<W,I>").
+    pub precision: String,
     pub source: String,
     pub events: usize,
     pub wall_s: f64,
@@ -156,11 +163,12 @@ impl ServeReport {
             _ => String::new(),
         };
         format!(
-            "[{}<-{}] events={} wall={:.2}s throughput={:.0}ev/s build(median)={:.3}ms \
+            "[{}<-{} @{}] events={} wall={:.2}s throughput={:.0}ev/s build(median)={:.3}ms \
              infer(median={:.3}ms p99={:.3}ms){} batch(mean={:.2} hist={}) accept={:.1}% \
              dropped={} truncated={}",
             self.backend,
             self.source,
+            self.precision,
             self.events,
             self.wall_s,
             self.throughput_hz,
@@ -192,6 +200,12 @@ pub enum PipelineError {
     BadBatch(usize),
     BadQueueCapacity(usize),
     BadAcceptFraction(f64),
+    /// The requested ap_fixed format is structurally invalid (bad W/I).
+    BadPrecision(FormatError),
+    /// The backend cannot serve the requested datapath arithmetic (e.g. a
+    /// compiled f32 artifact, an already-quantised shared backend, or a
+    /// shared backend whose precision differs from the request).
+    PrecisionUnsupported(String),
 }
 
 impl fmt::Display for PipelineError {
@@ -211,16 +225,28 @@ impl fmt::Display for PipelineError {
             PipelineError::BadAcceptFraction(x) => {
                 write!(f, "accept fraction must be in (0, 1], got {x}")
             }
+            PipelineError::BadPrecision(e) => write!(f, "{e}"),
+            PipelineError::PrecisionUnsupported(why) => {
+                write!(f, "requested precision unsupported: {why}")
+            }
         }
     }
 }
 
 impl std::error::Error for PipelineError {}
 
+/// The backend as handed to the builder: owned backends can still be
+/// reconfigured (precision) before they are shared with the workers.
+enum BackendSlot<B> {
+    Owned(B),
+    Shared(Arc<B>),
+}
+
 /// Builder for [`Pipeline`]. See the module docs for the canonical chain.
 pub struct PipelineBuilder<B: InferenceBackend> {
     source: Option<Box<dyn EventSource>>,
-    backend: Option<Arc<B>>,
+    backend: Option<BackendSlot<B>>,
+    precision: Option<Arith>,
     delta: f32,
     buckets: Vec<Bucket>,
     max_batch: usize,
@@ -237,6 +263,7 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
         PipelineBuilder {
             source: None,
             backend: None,
+            precision: None,
             delta: 0.8,
             buckets: DEFAULT_BUCKETS.to_vec(),
             max_batch: 1,
@@ -258,14 +285,34 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
 
     /// The inference backend.
     pub fn backend(mut self, backend: B) -> Self {
-        self.backend = Some(Arc::new(backend));
+        self.backend = Some(BackendSlot::Owned(backend));
         self
     }
 
     /// A shared inference backend (to reuse one backend across several
     /// pipeline runs — e.g. `TriggerServer` serving multiple streams).
+    /// A shared backend cannot be re-quantised: combining this with
+    /// [`precision`](Self::precision) requires the backend to already run
+    /// the requested arithmetic.
     pub fn backend_arc(mut self, backend: Arc<B>) -> Self {
-        self.backend = Some(backend);
+        self.backend = Some(BackendSlot::Shared(backend));
+        self
+    }
+
+    /// Serve on an ap_fixed<W, I> fixed-point datapath: the owned backend
+    /// is re-quantised at [`build`](Self::build) (typed errors on invalid
+    /// formats or backends that cannot requantise). The default — no call —
+    /// keeps the backend's own arithmetic (f32 unless the backend was
+    /// constructed fixed-point).
+    pub fn precision(mut self, format: Format) -> Self {
+        self.precision = Some(Arith::Fixed(format));
+        self
+    }
+
+    /// Like [`precision`](Self::precision), but accepts the full
+    /// [`Arith`] (so `Arith::F32` can be requested explicitly).
+    pub fn arith(mut self, arith: Arith) -> Self {
+        self.precision = Some(arith);
         self
     }
 
@@ -330,7 +377,35 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
     /// configuration — never panics.
     pub fn build(self) -> Result<Pipeline<B>, PipelineError> {
         let source = self.source.ok_or(PipelineError::MissingSource)?;
-        let backend = self.backend.ok_or(PipelineError::MissingBackend)?;
+        let slot = self.backend.ok_or(PipelineError::MissingBackend)?;
+        let backend = match self.precision {
+            None => match slot {
+                BackendSlot::Owned(b) => Arc::new(b),
+                BackendSlot::Shared(b) => b,
+            },
+            Some(arith) => {
+                // struct-literal formats bypass Format::try_new; re-check
+                arith.validate().map_err(PipelineError::BadPrecision)?;
+                match slot {
+                    BackendSlot::Owned(mut b) => {
+                        b.set_precision(arith)
+                            .map_err(|e| PipelineError::PrecisionUnsupported(format!("{e:#}")))?;
+                        Arc::new(b)
+                    }
+                    BackendSlot::Shared(b) => {
+                        if b.precision() != arith {
+                            return Err(PipelineError::PrecisionUnsupported(format!(
+                                "shared backend '{}' runs {} but {} was requested",
+                                b.name(),
+                                b.precision(),
+                                arith
+                            )));
+                        }
+                        b
+                    }
+                }
+            }
+        };
         if self.buckets.is_empty() {
             return Err(PipelineError::NoBuckets);
         }
@@ -430,6 +505,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
     pub fn run(self) -> RecordStream {
         let t0 = Instant::now();
         let backend_name = self.backend.name().to_string();
+        let precision = self.backend.precision().to_string();
         let source_name = self.source.name().to_string();
         let dropped = Arc::new(AtomicU64::new(0));
         let rate = Arc::new(Mutex::new(RateController::new(
@@ -515,6 +591,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
             dropped,
             stop,
             backend: backend_name,
+            precision,
             source: source_name,
             max_batch: self.max_batch,
             t0,
@@ -685,6 +762,7 @@ pub struct RecordStream {
     /// abandoned stream over an unbounded source does not drain forever).
     stop: Arc<AtomicBool>,
     backend: String,
+    precision: String,
     source: String,
     max_batch: usize,
     t0: Instant,
@@ -728,6 +806,7 @@ impl RecordStream {
         let p99 = |xs: &[f64]| if xs.is_empty() { 0.0 } else { stats::percentile(xs, 99.0) };
         ServeReport {
             backend: self.backend.clone(),
+            precision: self.precision.clone(),
             source: self.source.clone(),
             events: records.len(),
             wall_s,
@@ -862,6 +941,72 @@ mod tests {
         // the error is a normal std error too
         let e: Box<dyn std::error::Error> = Box::new(PipelineError::BadWorkers(0));
         assert!(e.to_string().contains("worker"));
+    }
+
+    #[test]
+    fn builder_precision_typed_errors() {
+        use crate::fixedpoint::{Format, FormatError};
+        // structurally invalid format (struct literal bypasses try_new)
+        let err = Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend(cpu_backend(1))
+            .precision(Format { w: 16, i: 0 })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, PipelineError::BadPrecision(FormatError { w: 16, i: 0 }));
+
+        // a shared backend cannot be re-quantised by the builder
+        let shared = Arc::new(cpu_backend(2));
+        let err = Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend_arc(shared)
+            .precision(Format::default_datapath())
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, PipelineError::PrecisionUnsupported(_)),
+            "got {err:?}"
+        );
+        assert!(err.to_string().contains("precision"));
+    }
+
+    #[test]
+    fn precision_builder_serves_fixed_point_end_to_end() {
+        use crate::fixedpoint::{Arith, Format};
+        let report = Pipeline::builder()
+            .source(SyntheticSource::new(12, 5, GeneratorConfig::default()))
+            .backend(cpu_backend(81))
+            .precision(Format::default_datapath())
+            .batching(3, Duration::from_millis(5))
+            .workers(2)
+            .build()
+            .unwrap()
+            .serve();
+        assert_eq!(report.events, 12);
+        assert_eq!(report.precision, "ap_fixed<16,6>");
+        assert!(report.summary().contains("ap_fixed<16,6>"));
+        // deterministic replay through an identically-quantised model
+        let cfg = ModelConfig::default();
+        let m = L1DeepMetV2::with_arith(
+            cfg.clone(),
+            Weights::random(&cfg, 81),
+            Arith::Fixed(Format::default_datapath()),
+        )
+        .unwrap();
+        let mut gen = crate::physics::EventGenerator::new(5, GeneratorConfig::default());
+        let mut builder = GraphBuilder::new(0.8); // what the workers use
+        let mut expect: Vec<(u64, f32)> = (0..12)
+            .map(|_| {
+                let ev = gen.generate();
+                let g = pad_graph(&ev, &builder.build(&ev), &DEFAULT_BUCKETS);
+                (ev.id, m.forward(&g).met())
+            })
+            .collect();
+        expect.sort_by_key(|x| x.0);
+        let mut got: Vec<(u64, f32)> =
+            report.records.iter().map(|r| (r.event_id, r.met)).collect();
+        got.sort_by_key(|x| x.0);
+        assert_eq!(got, expect, "pipeline serves the quantised model bit-for-bit");
     }
 
     #[test]

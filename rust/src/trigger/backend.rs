@@ -8,6 +8,7 @@
 //! wrapper and is guaranteed bit-identical to a batch of one.
 
 use crate::dataflow::DataflowEngine;
+use crate::fixedpoint::Arith;
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, ModelOutput};
 use crate::runtime::PjrtService;
@@ -15,6 +16,27 @@ use crate::runtime::PjrtService;
 /// Anything that can turn padded event graphs into model outputs.
 pub trait InferenceBackend: Send + Sync {
     fn name(&self) -> &str;
+
+    /// The datapath arithmetic this backend evaluates in. Defaults to f32;
+    /// backends with a configurable datapath (the Rust reference and the
+    /// simulated fabric) report their model's [`Arith`].
+    fn precision(&self) -> Arith {
+        Arith::F32
+    }
+
+    /// Reconfigure the datapath arithmetic, called by the pipeline
+    /// builder's `.precision(..)` before the backend is shared. The default
+    /// accepts only `Arith::F32` (a no-op); backends that cannot requantise
+    /// (e.g. a compiled f32 artifact) inherit it.
+    fn set_precision(&mut self, arith: Arith) -> anyhow::Result<()> {
+        match arith {
+            Arith::F32 => Ok(()),
+            fixed => anyhow::bail!(
+                "backend '{}' runs a fixed f32 datapath; {fixed} is unsupported",
+                self.name()
+            ),
+        }
+    }
 
     /// Run inference for a whole batch, preserving order. Implementations
     /// must return exactly one output per input graph, and each output must
@@ -97,6 +119,28 @@ impl InferenceBackend for Backend {
         }
     }
 
+    fn precision(&self) -> Arith {
+        match self {
+            Backend::RustCpu(m) => m.arith(),
+            // the compiled HLO artifact is f32 end-to-end
+            Backend::Pjrt(_) => Arith::F32,
+            Backend::Fpga(engine) => engine.arith(),
+        }
+    }
+
+    fn set_precision(&mut self, arith: Arith) -> anyhow::Result<()> {
+        match self {
+            Backend::RustCpu(m) => m.set_arith(arith),
+            Backend::Pjrt(_) => match arith {
+                Arith::F32 => Ok(()),
+                fixed => anyhow::bail!(
+                    "pjrt backend executes the compiled f32 artifact; {fixed} is unsupported"
+                ),
+            },
+            Backend::Fpga(engine) => engine.model.set_arith(arith),
+        }
+    }
+
     fn infer_batch(&self, graphs: &[PaddedGraph]) -> anyhow::Result<Vec<ModelOutput>> {
         match self {
             Backend::RustCpu(m) => Ok(graphs.iter().map(|g| m.forward(g)).collect()),
@@ -145,6 +189,32 @@ mod tests {
 
     fn graph() -> PaddedGraph {
         graph_with_seed(50)
+    }
+
+    #[test]
+    fn precision_reaches_backends_and_stays_bit_identical() {
+        use crate::fixedpoint::Format;
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 55);
+        let fixed = Arith::Fixed(Format::default_datapath());
+        let mut cpu = Backend::RustCpu(L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap());
+        let mut fpga = Backend::Fpga(
+            DataflowEngine::new(ArchConfig::default(), L1DeepMetV2::new(cfg, w).unwrap())
+                .unwrap(),
+        );
+        assert_eq!(cpu.precision(), Arith::F32);
+        cpu.set_precision(fixed).unwrap();
+        fpga.set_precision(fixed).unwrap();
+        assert_eq!(cpu.precision(), fixed);
+        assert_eq!(fpga.precision(), fixed);
+        // the fixed-point fabric bit-equals the fixed-point reference
+        let g = graph_with_seed(56);
+        let a = cpu.infer(&g).unwrap();
+        let b = fpga.infer(&g).unwrap();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.met_xy, b.met_xy);
+        // switching an already-quantised backend again is rejected
+        assert!(cpu.set_precision(Arith::Fixed(Format::new(8, 4))).is_err());
     }
 
     #[test]

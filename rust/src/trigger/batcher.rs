@@ -196,6 +196,46 @@ mod tests {
     }
 
     #[test]
+    fn simultaneous_deadlines_flush_together() {
+        // Requests pushed back-to-back share (within clock resolution) one
+        // deadline window: ready_at() must stay pinned to the OLDEST of
+        // them, and a single timeout flush must take all of them — not one
+        // flush per request.
+        let mut b = DynamicBatcher::new(10, Duration::from_millis(200));
+        b.push(1);
+        let d = b.ready_at().unwrap();
+        b.push(2);
+        b.push(3);
+        assert_eq!(b.ready_at().unwrap(), d, "deadline pinned to the oldest");
+        assert!(!b.ready(Instant::now()));
+        // past the shared deadline, everything is due at once
+        let batch = b.flush(d + Duration::from_millis(1));
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+        assert!(b.ready_at().is_none(), "no deadline left after the flush");
+    }
+
+    #[test]
+    fn flush_exactly_at_size_limit() {
+        // A batch that fills to exactly max_batch is due immediately, takes
+        // exactly max_batch items, and leaves a clean (deadline-free) queue.
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(3600));
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready(Instant::now()), "partial batch must wait");
+        b.push(3);
+        let now = Instant::now();
+        assert!(b.ready(now));
+        assert!(b.ready_at().unwrap() <= now, "full batch is already due");
+        let batch = b.flush(now);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+        assert!(b.ready_at().is_none());
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
     fn drain_chunk_respects_max_batch() {
         let mut b = DynamicBatcher::new(4, Duration::from_secs(3600));
         for i in 0..10 {

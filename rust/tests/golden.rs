@@ -1,0 +1,320 @@
+//! Golden-vector conformance suite: a handful of tiny hand-built events
+//! with **bit-exact** expected per-layer node embeddings, first-layer edge
+//! messages, and final outputs, for both the f32 and the ap_fixed<16,6>
+//! datapath. Any silent numeric drift in a future refactor of the model,
+//! the fixed-point quantiser, or the timed engine fails this suite.
+//!
+//! Vectors live in `tests/golden_vectors.json`, with every f32 stored as
+//! its IEEE-754 bit pattern (a u32), so the comparison is exact — no
+//! decimal round-tripping.
+//!
+//! Bootstrap/regeneration: on the first run (file missing) the suite
+//! writes the vectors and passes with a note — commit the file. To
+//! intentionally re-baseline after a *reviewed* numeric change:
+//!
+//! ```text
+//! DGNNFLOW_GOLDEN_REGEN=1 cargo test --test golden
+//! ```
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::dataflow::{BroadcastMode, DataflowEngine};
+use dgnnflow::fixedpoint::{Arith, Format};
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS, PaddedGraph};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{Event, Particle, ParticleClass};
+use dgnnflow::util::json::{self, obj, Value};
+
+/// Weights seed shared by every golden case.
+const GOLDEN_WEIGHTS_SEED: u64 = 0xD06_F00D;
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_vectors.json")
+}
+
+/// The two datapaths the suite pins.
+fn golden_ariths() -> [Arith; 2] {
+    [Arith::F32, Arith::Fixed(Format::default_datapath())]
+}
+
+/// Hand-built deterministic event: a chain in (eta, phi) where consecutive
+/// particles sit at ΔR² = 0.45² + 0.625² ≈ 0.593 < 0.8² (connected) and
+/// second-nearest at ≈ 2.37 (not connected) — no RNG, no transcendentals,
+/// so the graph shape is stable by construction.
+fn tiny_event(id: u64, n: usize) -> Event {
+    let mut particles = Vec::with_capacity(n);
+    for i in 0..n {
+        let fi = i as f32;
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        particles.push(Particle {
+            pt: 1.5 + 2.25 * fi,
+            eta: -1.2 + 0.45 * fi,
+            phi: -2.0 + 0.625 * fi,
+            px: (1.0 + 0.5 * fi) * sign,
+            py: -0.75 + 0.375 * fi,
+            dz: 0.01 * fi,
+            class: ParticleClass::from_index(i % 8),
+            charge: [0i8, 1, -1][i % 3],
+            truth_weight: if i % 2 == 0 { 1.0 } else { 0.0 },
+        });
+    }
+    Event { id, particles, true_met_xy: [3.0, -4.0] }
+}
+
+fn golden_graphs() -> Vec<PaddedGraph> {
+    [(1u64, 4usize), (2, 6), (3, 8)]
+        .iter()
+        .map(|&(id, n)| {
+            let ev = tiny_event(id, n);
+            pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+        })
+        .collect()
+}
+
+fn golden_model(arith: Arith) -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    let w = Weights::random(&cfg, GOLDEN_WEIGHTS_SEED);
+    L1DeepMetV2::with_arith(cfg, w, arith).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact (de)serialisation helpers
+// ---------------------------------------------------------------------------
+
+fn bits_of(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|x| Value::Num(x.to_bits() as f64)).collect())
+}
+
+fn floats_from(v: &Value, what: &str) -> Vec<f32> {
+    v.as_arr()
+        .unwrap_or_else(|e| panic!("{what}: {e}"))
+        .iter()
+        .map(|x| f32::from_bits(x.as_f64().unwrap_or_else(|e| panic!("{what}: {e}")) as u32))
+        .collect()
+}
+
+fn assert_bits_equal(expect: &[f32], got: &[f32], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: length {} vs {}", expect.len(), got.len());
+    for (i, (e, g)) in expect.iter().zip(got).enumerate() {
+        assert_eq!(
+            e.to_bits(),
+            g.to_bits(),
+            "{what}[{i}]: expected {e} ({:#010x}), got {g} ({:#010x}) — numeric drift!",
+            e.to_bits(),
+            g.to_bits()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden computation
+// ---------------------------------------------------------------------------
+
+/// Everything one (case, arith) pair pins.
+struct CaseVectors {
+    /// live-node rows of x0..xL, flattened (n_live * node_dim each)
+    layers: Vec<Vec<f32>>,
+    /// layer-0 messages for the live edges, flattened (e_live * node_dim)
+    msgs0: Vec<f32>,
+    /// live prefix of the per-particle weights
+    weights: Vec<f32>,
+    met_xy: [f32; 2],
+}
+
+fn compute_case(model: &L1DeepMetV2, g: &PaddedGraph) -> CaseVectors {
+    let d = model.cfg.node_dim;
+    let (trace, out) = model.forward_trace(g);
+    let layers: Vec<Vec<f32>> = trace
+        .iter()
+        .map(|x| {
+            let mut flat = Vec::with_capacity(g.n * d);
+            for i in 0..g.n {
+                flat.extend_from_slice(x.row(i));
+            }
+            flat
+        })
+        .collect();
+    // layer-0 edge messages through the exact MP-unit payload
+    let lw = &model.weights.layers[0];
+    let mut hidden = vec![0.0f32; model.cfg.hid_edge];
+    let mut msg_row = vec![0.0f32; d];
+    let mut msgs0 = Vec::with_capacity(g.e * d);
+    for k in 0..g.e {
+        assert_eq!(g.edge_mask[k], 1.0, "golden graphs have a live edge prefix");
+        let (s, t) = (g.src[k] as usize, g.dst[k] as usize);
+        lw.message(model.arith(), trace[0].row(s), trace[0].row(t), &mut hidden, &mut msg_row);
+        msgs0.extend_from_slice(&msg_row);
+    }
+    // padding must stay exactly zero (also pinned)
+    assert!(out.weights[g.n..].iter().all(|&w| w == 0.0));
+    CaseVectors {
+        layers,
+        msgs0,
+        weights: out.weights[..g.n].to_vec(),
+        met_xy: out.met_xy,
+    }
+}
+
+fn compute_document() -> Value {
+    let graphs = golden_graphs();
+    let mut cases = Vec::new();
+    for g in &graphs {
+        let mut modes = Vec::new();
+        for arith in golden_ariths() {
+            let model = golden_model(arith);
+            let v = compute_case(&model, g);
+            modes.push((
+                arith.to_string(),
+                obj(vec![
+                    (
+                        "layers",
+                        Value::Arr(v.layers.iter().map(|l| bits_of(l)).collect()),
+                    ),
+                    ("msgs0", bits_of(&v.msgs0)),
+                    ("weights", bits_of(&v.weights)),
+                    ("met_xy", bits_of(&v.met_xy)),
+                ]),
+            ));
+        }
+        cases.push(obj(vec![
+            ("n", Value::Num(g.n as f64)),
+            ("e", Value::Num(g.e as f64)),
+            ("bucket_n", Value::Num(g.bucket.n_max as f64)),
+            ("modes", Value::Obj(modes.into_iter().collect())),
+        ]));
+    }
+    obj(vec![
+        ("suite", Value::from("dgnnflow golden vectors")),
+        ("weights_seed", Value::Num(GOLDEN_WEIGHTS_SEED as f64)),
+        ("cases", Value::Arr(cases)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// The conformance tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_vectors_match_bit_for_bit() {
+    let path = golden_path();
+    let regen = std::env::var_os("DGNNFLOW_GOLDEN_REGEN").is_some();
+    let doc = compute_document();
+    if regen || !path.exists() {
+        std::fs::write(&path, doc.to_json()).expect("write golden vectors");
+        eprintln!(
+            "golden: {} {} — commit tests/golden_vectors.json to pin the datapath",
+            if regen { "re-baselined" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let expect = json::parse_file(&path).expect("parse golden vectors");
+    let graphs = golden_graphs();
+    let exp_cases = expect.get("cases").unwrap().as_arr().unwrap();
+    assert_eq!(exp_cases.len(), graphs.len(), "golden case count");
+    for (ci, (exp_case, g)) in exp_cases.iter().zip(&graphs).enumerate() {
+        assert_eq!(exp_case.get("n").unwrap().as_usize().unwrap(), g.n, "case {ci}: n");
+        assert_eq!(exp_case.get("e").unwrap().as_usize().unwrap(), g.e, "case {ci}: e");
+        assert_eq!(
+            exp_case.get("bucket_n").unwrap().as_usize().unwrap(),
+            g.bucket.n_max,
+            "case {ci}: bucket"
+        );
+        for arith in golden_ariths() {
+            let model = golden_model(arith);
+            let got = compute_case(&model, g);
+            let exp_mode = exp_case
+                .get("modes")
+                .unwrap()
+                .get(&arith.to_string())
+                .unwrap_or_else(|e| panic!("case {ci} mode {arith}: {e}"));
+            let exp_layers = exp_mode.get("layers").unwrap().as_arr().unwrap();
+            assert_eq!(exp_layers.len(), got.layers.len(), "case {ci} {arith}: layer count");
+            for (l, (el, gl)) in exp_layers.iter().zip(&got.layers).enumerate() {
+                assert_bits_equal(
+                    &floats_from(el, "layer"),
+                    gl,
+                    &format!("case {ci} {arith} x{l}"),
+                );
+            }
+            assert_bits_equal(
+                &floats_from(exp_mode.get("msgs0").unwrap(), "msgs0"),
+                &got.msgs0,
+                &format!("case {ci} {arith} msgs0"),
+            );
+            assert_bits_equal(
+                &floats_from(exp_mode.get("weights").unwrap(), "weights"),
+                &got.weights,
+                &format!("case {ci} {arith} weights"),
+            );
+            assert_bits_equal(
+                &floats_from(exp_mode.get("met_xy").unwrap(), "met_xy"),
+                &got.met_xy,
+                &format!("case {ci} {arith} met_xy"),
+            );
+        }
+    }
+}
+
+/// The engine leg of the conformance contract, independent of the vector
+/// file: on the golden graphs, the timed fabric bit-equals the reference
+/// model in every broadcast mode and both datapaths.
+#[test]
+fn golden_cases_engine_bit_equals_reference() {
+    for arith in golden_ariths() {
+        let reference = golden_model(arith);
+        for mode in [
+            BroadcastMode::Broadcast,
+            BroadcastMode::FullReplication,
+            BroadcastMode::MulticastBus,
+        ] {
+            let engine = DataflowEngine::with_mode(
+                dgnnflow::config::ArchConfig::default(),
+                golden_model(arith),
+                mode,
+            )
+            .unwrap();
+            for (ci, g) in golden_graphs().iter().enumerate() {
+                let sim = engine.run(g);
+                let exp = reference.forward(g);
+                assert_eq!(
+                    sim.output.weights, exp.weights,
+                    "case {ci} {arith} {mode:?}: weights drifted from reference"
+                );
+                assert_eq!(
+                    sim.output.met_xy, exp.met_xy,
+                    "case {ci} {arith} {mode:?}: met drifted from reference"
+                );
+            }
+        }
+    }
+}
+
+/// Fixed-point MET must stay inside a *derived* error bound of the f32
+/// reference. Derivation (documented, conservative): the final per-weight
+/// sigmoid register rounds by at most lsb/2; upstream register rounding
+/// (embed, two EdgeConv layers, head hidden) amplifies through Lipschitz-1
+/// ReLU/sigmoid stages by a factor we bound empirically by 8. Each weight
+/// error dw_i multiplies momentum p_i, so
+///   |ΔMET| <= 8 * (lsb/2) * Σ_i (|px_i| + |py_i|)  + 0.5 GeV floor.
+#[test]
+fn golden_fixed_point_met_within_derived_bound() {
+    let f32_model = golden_model(Arith::F32);
+    let fixed = golden_model(Arith::Fixed(Format::default_datapath()));
+    let lsb = Format::default_datapath().lsb() as f32;
+    let cfg = &f32_model.cfg;
+    for (ci, g) in golden_graphs().iter().enumerate() {
+        let a = f32_model.forward(g);
+        let b = fixed.forward(g);
+        let mut p_sum = 0.0f32;
+        for i in 0..g.n {
+            p_sum += g.cont[i * cfg.n_cont + cfg.idx_px].abs()
+                + g.cont[i * cfg.n_cont + cfg.idx_py].abs();
+        }
+        let bound = 8.0 * 0.5 * lsb * p_sum + 0.5;
+        let err = (a.met() - b.met()).abs();
+        assert!(
+            err <= bound,
+            "case {ci}: |ΔMET| = {err} GeV exceeds derived bound {bound} GeV"
+        );
+    }
+}

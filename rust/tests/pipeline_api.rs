@@ -189,6 +189,71 @@ fn pjrt_pipeline_produces_batched_device_requests() {
     );
 }
 
+/// A backend that errors on every other batch — mid-stream, after some
+/// events already served, with more still to come.
+struct EveryOtherBatchFails {
+    inner: L1DeepMetV2,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl InferenceBackend for EveryOtherBatchFails {
+    fn name(&self) -> &str {
+        "every-other-batch-fails"
+    }
+    fn infer_batch(
+        &self,
+        graphs: &[PaddedGraph],
+    ) -> anyhow::Result<Vec<ModelOutput>> {
+        let c = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if c % 2 == 1 {
+            anyhow::bail!("injected fault on batch {c}");
+        }
+        Ok(graphs.iter().map(|g| self.inner.forward(g)).collect())
+    }
+}
+
+#[test]
+fn backend_errors_mid_batch_keep_event_accounting_exact() {
+    // PR 1's contract: `events + dropped` equals the number of events
+    // pulled from the source, even when whole batches fail inference.
+    let total = 24u64;
+    let report = Pipeline::builder()
+        .source(SyntheticSource::new(total as usize, 17, GeneratorConfig::default()))
+        .backend(EveryOtherBatchFails {
+            inner: model(71),
+            calls: std::sync::atomic::AtomicU64::new(0),
+        })
+        .batching(4, Duration::from_millis(5))
+        .workers(1)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(
+        report.events as u64 + report.dropped,
+        total,
+        "served {} + dropped {} must equal {total}",
+        report.events,
+        report.dropped
+    );
+    assert!(report.dropped > 0, "the injected faults must drop something");
+    assert!(report.events > 0, "the surviving batches must serve something");
+    // failed batches still count as flushes in the histogram (they occupied
+    // the batcher), so histogram events >= served events
+    let hist_events: u64 = report
+        .batch_hist
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i as u64 + 1) * c)
+        .sum();
+    assert_eq!(hist_events, total, "every pulled event was flushed exactly once");
+    assert!(hist_events >= report.events as u64);
+    // served records are unique events
+    let mut ids: Vec<u64> = report.records.iter().map(|r| r.event_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), report.events);
+}
+
 #[test]
 fn fpga_device_latency_includes_batch_occupancy() {
     let engine = DataflowEngine::new(ArchConfig::default(), model(36)).unwrap();

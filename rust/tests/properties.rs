@@ -5,7 +5,7 @@
 
 use dgnnflow::config::{ArchConfig, ModelConfig, TriggerConfig};
 use dgnnflow::dataflow::{BroadcastMode, DataflowEngine};
-use dgnnflow::fixedpoint::Format;
+use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{
     build_edges, build_edges_brute, pad_graph, padding::DEFAULT_BUCKETS, Csr, EventGraph,
 };
@@ -93,8 +93,10 @@ fn prop_padding_preserves_live_structure() {
 
 #[test]
 fn prop_simulator_equals_reference_all_modes() {
-    // The heavyweight invariant: the cycle-level fabric computes exactly
-    // the reference model, for every delivery mode and random fabrics.
+    // The heavyweight invariant, now *bit-exact*: the cycle-level fabric
+    // computes exactly the reference model (shared per-edge/per-node
+    // payloads, canonical summation order), for every delivery mode and
+    // random fabrics.
     let cfg = ModelConfig::default();
     let weights = Weights::random(&cfg, 0xBEEF);
     let reference = L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap();
@@ -119,14 +121,60 @@ fn prop_simulator_equals_reference_all_modes() {
         let engine = DataflowEngine::with_mode(arch, model, mode).unwrap();
         let sim = engine.run(&padded);
         let exp = reference.forward(&padded);
-        let mut max_err = 0.0f32;
-        for (a, b) in sim.output.weights.iter().zip(&exp.weights) {
-            max_err = max_err.max((a - b).abs());
-        }
-        assert!(
-            max_err < 1e-5,
-            "mode {mode:?} p_edge={p_edge} p_node={p_node}: err {max_err}"
+        assert_eq!(
+            sim.output.weights, exp.weights,
+            "mode {mode:?} p_edge={p_edge} p_node={p_node}: weights not bit-identical"
         );
+        assert_eq!(
+            sim.output.met_xy, exp.met_xy,
+            "mode {mode:?} p_edge={p_edge} p_node={p_node}: met not bit-identical"
+        );
+    });
+}
+
+#[test]
+fn prop_fixed_simulator_equals_reference_all_modes() {
+    // Same invariant on the fixed-point datapath: random events, random
+    // fabric shapes, random delivery modes, several ap_fixed formats — the
+    // timed engine bit-equals the same-precision reference model.
+    let cfg = ModelConfig::default();
+    let weights = Weights::random(&cfg, 0xF1DE);
+    check(0xB5, 10, |g| {
+        let fmt = *g.pick(&[Format::new(12, 6), Format::new(16, 6), Format::new(20, 8)]);
+        let arith = Arith::Fixed(fmt);
+        let ev = random_event(g);
+        let padded = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let p_edge = *g.pick(&[1usize, 2, 5, 8]);
+        let p_node = g.usize_in(1, p_edge);
+        let arch = ArchConfig {
+            p_edge,
+            p_node,
+            fifo_depth: *g.pick(&[2usize, 8, 64]),
+            ..Default::default()
+        };
+        let mode = *g.pick(&[
+            BroadcastMode::Broadcast,
+            BroadcastMode::FullReplication,
+            BroadcastMode::MulticastBus,
+        ]);
+        let reference =
+            L1DeepMetV2::with_arith(cfg.clone(), weights.clone(), arith).unwrap();
+        let model = L1DeepMetV2::with_arith(cfg.clone(), weights.clone(), arith).unwrap();
+        let engine = DataflowEngine::with_mode(arch, model, mode).unwrap();
+        let sim = engine.run(&padded);
+        let exp = reference.forward(&padded);
+        assert_eq!(
+            sim.output.weights, exp.weights,
+            "{fmt:?} mode {mode:?} p_edge={p_edge} p_node={p_node}: weights not bit-identical"
+        );
+        assert_eq!(
+            sim.output.met_xy, exp.met_xy,
+            "{fmt:?} mode {mode:?}: met not bit-identical"
+        );
+        // and every weight really sits on the format's grid
+        for &w in &sim.output.weights {
+            assert_eq!(fmt.quantize(w), w, "{fmt:?}: weight {w} off the grid");
+        }
     });
 }
 
@@ -145,6 +193,61 @@ fn prop_quantization_bounded_by_lsb() {
         );
         // idempotent
         assert_eq!(f.quantize(q), q);
+    });
+}
+
+#[test]
+fn prop_fixed_roundtrip_laws() {
+    // The ap_fixed laws the datapath relies on: quantise is idempotent,
+    // saturation clamps exactly to the format range, and in-range
+    // round-to-nearest errs by at most lsb/2.
+    check(0xB6, 200, |g| {
+        let w = g.usize_in(2, 32) as u32;
+        let i = g.usize_in(1, w as usize) as u32;
+        let f = Format::try_new(w, i).expect("domain-valid by construction");
+        let (lo, hi) = f.range();
+        // idempotence over a wide input span (including out of range)
+        let x = g.f32_in(4.0 * lo as f32, 4.0 * hi.max(1.0) as f32);
+        let q = f.quantize(x);
+        assert_eq!(f.quantize(q), q, "fmt<{w},{i}> not idempotent at {x}");
+        // saturation clamps to the exact endpoints
+        assert_eq!(f.quantize(f32::MAX), hi as f32, "fmt<{w},{i}> +sat");
+        assert_eq!(f.quantize(f32::MIN), lo as f32, "fmt<{w},{i}> -sat");
+        if (x as f64) > hi {
+            assert_eq!(q, hi as f32, "fmt<{w},{i}> must clamp {x}");
+        }
+        if (x as f64) < lo {
+            assert_eq!(q, lo as f32, "fmt<{w},{i}> must clamp {x}");
+        }
+        // RTN: in-range values move by at most half an lsb
+        if (lo..=hi).contains(&(x as f64)) {
+            assert!(
+                (q as f64 - x as f64).abs() <= f.lsb() / 2.0 + 1e-6,
+                "fmt<{w},{i}> RTN bound: x={x} q={q}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_format_try_new_matches_domain() {
+    // try_new accepts exactly the (W, I) domain new() asserts, and never
+    // panics outside it.
+    use dgnnflow::fixedpoint::MAX_WIDTH;
+    check(0xB7, 300, |g| {
+        let w = g.usize_in(0, 80) as u32;
+        let i = g.usize_in(0, 80) as u32;
+        let ok = w >= 2 && w <= MAX_WIDTH && i >= 1 && i <= w;
+        match Format::try_new(w, i) {
+            Ok(f) => {
+                assert!(ok, "try_new accepted out-of-domain <{w},{i}>");
+                assert_eq!((f.w, f.i), (w, i));
+            }
+            Err(e) => {
+                assert!(!ok, "try_new rejected valid <{w},{i}>: {e}");
+                assert_eq!((e.w, e.i), (w, i));
+            }
+        }
     });
 }
 
