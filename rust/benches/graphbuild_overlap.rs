@@ -1,0 +1,185 @@
+//! Graph-construction overlap bench: host-build-then-infer serialisation vs
+//! the fabric-overlapped GC unit, swept over graph size.
+//!
+//! For every padded-graph bucket this reports
+//!   - host build wall-clock (ΔR grid build + padding, measured),
+//!   - host-site E2E (simulated fabric, edge list over PCIe),
+//!   - serialized = host build + host-site E2E (the classic flow),
+//!   - fabric-site E2E (GC unit on-chip, overlapped with embed/layer 0,
+//!     no edge list over PCIe),
+//! and how much of the GC stage the overlap hides.
+//!
+//! Emits `BENCH_graphbuild.json` next to Cargo.toml. The headline claim —
+//! fabric-overlapped E2E strictly below host-build + infer serialisation —
+//! is recorded per bucket as `fabric_lt_serialized`.
+//!
+//!   cargo bench --bench graphbuild_overlap [-- --events-per-pileup N]
+
+use std::time::Instant;
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::{BuildSite, DataflowEngine};
+use dgnnflow::graph::{pad_graph, padding::DEFAULT_BUCKETS, GraphBuilder, PaddedGraph};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::util::bench::Table;
+use dgnnflow::util::cli::Args;
+use dgnnflow::util::json::{obj, Value};
+use dgnnflow::util::stats;
+
+const DELTA: f32 = 0.8;
+
+fn load_cfg_weights() -> (ModelConfig, Weights) {
+    let dir = ModelRuntime::artifacts_dir();
+    if dir.join("meta.json").exists() {
+        if let Ok(cfg) = ModelConfig::from_meta(&dir.join("meta.json")) {
+            if let Ok(w) = Weights::load(&dir.join("weights.json"), &cfg) {
+                return (cfg, w);
+            }
+        }
+    }
+    let cfg = ModelConfig::default();
+    let w = Weights::random(&cfg, 707);
+    (cfg, w)
+}
+
+struct Sample {
+    g: PaddedGraph,
+    host_build_s: f64,
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let per_pileup = args.usize_or("events-per-pileup", 40).unwrap_or(40);
+    println!("=== Graph-build overlap: host build→infer vs on-fabric GC ===\n");
+
+    let (cfg, weights) = load_cfg_weights();
+    let arch = ArchConfig::default();
+    let host_engine = DataflowEngine::new(
+        arch.clone(),
+        L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap(),
+    )
+    .unwrap();
+    let mut fabric_engine =
+        DataflowEngine::new(arch.clone(), L1DeepMetV2::new(cfg, weights).unwrap()).unwrap();
+    fabric_engine.set_build_site(BuildSite::Fabric, DELTA).unwrap();
+
+    // Sweep pileup to populate every size bucket; measure the host build
+    // (grid ΔR construction + padding) as the serving workers would run it.
+    let mut builder = GraphBuilder::new(DELTA);
+    let mut samples: Vec<Sample> = Vec::new();
+    for (seed, pu) in [(1u64, 20.0), (2, 45.0), (3, 70.0), (4, 100.0), (5, 140.0), (6, 190.0)] {
+        let mut gen =
+            EventGenerator::new(seed, GeneratorConfig { mean_pileup: pu, ..Default::default() });
+        for _ in 0..per_pileup {
+            let ev = gen.generate();
+            let t0 = Instant::now();
+            let graph = builder.build(&ev);
+            let g = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+            let host_build_s = t0.elapsed().as_secs_f64();
+            samples.push(Sample { g, host_build_s });
+        }
+    }
+
+    let mut table = Table::new(&[
+        "bucket",
+        "edges (med)",
+        "n",
+        "host build (us)",
+        "host E2E (us)",
+        "serialized (us)",
+        "fabric E2E (us)",
+        "saving (us)",
+        "GC cycles (med)",
+        "overlapped?",
+    ]);
+    let mut points = Vec::new();
+    let largest_n_max = DEFAULT_BUCKETS.iter().map(|b| b.n_max).max().unwrap_or(0);
+    // Some(ok) only when the *largest* bucket itself had enough samples —
+    // never silently substituted by a smaller one.
+    let mut largest: Option<bool> = None;
+    for bucket in DEFAULT_BUCKETS {
+        let sel: Vec<&Sample> =
+            samples.iter().filter(|s| s.g.bucket.n_max == bucket.n_max).collect();
+        if sel.len() < 5 {
+            continue;
+        }
+        let mut build_us = Vec::new();
+        let mut host_us = Vec::new();
+        let mut serial_us = Vec::new();
+        let mut fabric_us = Vec::new();
+        let mut gc_cycles = Vec::new();
+        let mut edges = Vec::new();
+        for s in &sel {
+            let h = host_engine.run(&s.g);
+            let f = fabric_engine.run(&s.g);
+            let b = s.host_build_s * 1e6;
+            edges.push(s.g.e as f64);
+            build_us.push(b);
+            host_us.push(h.e2e_s * 1e6);
+            serial_us.push(b + h.e2e_s * 1e6);
+            fabric_us.push(f.e2e_s * 1e6);
+            gc_cycles.push(
+                f.breakdown.gc.as_ref().map(|gc| gc.total_cycles as f64).unwrap_or(0.0),
+            );
+        }
+        let serial_med = stats::median(&serial_us);
+        let fabric_med = stats::median(&fabric_us);
+        let ok = fabric_med < serial_med;
+        if bucket.n_max == largest_n_max {
+            largest = Some(ok);
+        }
+        table.row(&[
+            format!("{}x{}", bucket.n_max, bucket.e_max),
+            format!("{:.0}", stats::median(&edges)),
+            sel.len().to_string(),
+            format!("{:.1}", stats::median(&build_us)),
+            format!("{:.1}", stats::median(&host_us)),
+            format!("{serial_med:.1}"),
+            format!("{fabric_med:.1}"),
+            format!("{:.1}", serial_med - fabric_med),
+            format!("{:.0}", stats::median(&gc_cycles)),
+            if ok { "yes".into() } else { "NO".into() },
+        ]);
+        points.push(obj(vec![
+            ("n_max", Value::Num(bucket.n_max as f64)),
+            ("e_max", Value::Num(bucket.e_max as f64)),
+            ("events", Value::Num(sel.len() as f64)),
+            ("edges_median", Value::Num(stats::median(&edges))),
+            ("host_build_us_median", Value::Num(stats::median(&build_us))),
+            ("host_e2e_us_median", Value::Num(stats::median(&host_us))),
+            ("serialized_us_median", Value::Num(serial_med)),
+            ("fabric_e2e_us_median", Value::Num(fabric_med)),
+            ("overlap_saving_us", Value::Num(serial_med - fabric_med)),
+            ("gc_cycles_median", Value::Num(stats::median(&gc_cycles))),
+            ("fabric_lt_serialized", Value::Bool(ok)),
+        ]));
+    }
+    table.print();
+    match largest {
+        Some(true) => println!(
+            "\noverlap check: fabric E2E strictly below host-build+infer \
+             serialisation in the largest bucket (n_max = {largest_n_max})"
+        ),
+        Some(false) => println!(
+            "\noverlap check FAILED for the largest bucket (n_max = {largest_n_max})"
+        ),
+        None => println!(
+            "\noverlap check NOT MEASURED: the largest bucket (n_max = {largest_n_max}) \
+             collected < 5 events — raise --events-per-pileup"
+        ),
+    }
+
+    let doc = obj(vec![
+        ("bench", Value::from("graphbuild_overlap")),
+        ("delta", Value::Num(DELTA as f64)),
+        ("events_per_pileup", Value::Num(per_pileup as f64)),
+        ("p_gc", Value::Num(arch.p_gc as f64)),
+        ("gc_bin_depth", Value::Num(arch.gc_bin_depth as f64)),
+        ("points", Value::Arr(points)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_graphbuild.json");
+    std::fs::write(&out, doc.to_json()).expect("write BENCH_graphbuild.json");
+    println!("wrote {}", out.display());
+}

@@ -3,10 +3,11 @@
 #
 #   ./ci.sh            full gate: smoke tier, then fmt, lints, release
 #                      build, and the full test suite
-#   ./ci.sh --quick    smoke tier only: compile the benches and run the
-#                      golden-vector conformance suite by itself, so
-#                      numeric regressions in the datapath fail fast
-#                      before the full test run
+#   ./ci.sh --quick    smoke tier only: compile the benches (including
+#                      graphbuild_overlap), run the golden-vector
+#                      conformance suite, and run the GC-vs-host
+#                      edge-set equality tests — numeric or graph-set
+#                      regressions fail fast before the full test run
 #
 # Requires a Rust toolchain >= 1.74 (full gate also needs rustfmt and
 # clippy components).
@@ -16,11 +17,15 @@ cd "$(dirname "$0")"
 quick=0
 [[ "${1:-}" == "--quick" ]] && quick=1
 
-echo "==> cargo bench --no-run (benches must compile)"
+echo "==> cargo bench --no-run (benches must compile, incl. graphbuild_overlap)"
 cargo bench --no-run
 
 echo "==> cargo test --test golden (golden-vector conformance suite)"
 cargo test -q --test golden
+
+echo "==> GC-vs-host edge-set equality (smoke tier)"
+cargo test -q --lib gc_edge_set
+cargo test -q --test properties prop_fabric_gc_edge_set_equals_host
 
 if [[ "$quick" == 1 ]]; then
     echo "CI OK (quick smoke tier)"

@@ -106,6 +106,15 @@ pub struct ArchConfig {
     pub pcie_bw: f64,
     /// Fixed PCIe/driver latency per transfer (seconds).
     pub pcie_lat: f64,
+    /// Graph-construction unit: parallel pair-compare lanes (the ΔR²
+    /// datapaths of the on-fabric GC unit; only exercised with
+    /// [`crate::dataflow::BuildSite::Fabric`]).
+    pub p_gc: usize,
+    /// GC bin-memory depth: particles each η-φ cell stores before spilling
+    /// (a spill costs one extra binning cycle per overflowing particle).
+    pub gc_bin_depth: usize,
+    /// GC compare-lane initiation interval (cycles per candidate pair).
+    pub gc_lane_ii: usize,
 }
 
 impl Default for ArchConfig {
@@ -122,6 +131,9 @@ impl Default for ArchConfig {
             pcie_lat: 40e-6, // XRT kernel-invocation + DMA setup per transfer
                              // (measured XRT overheads are O(50-100us); the
                              // paper's E2E includes this host-driver cost)
+            p_gc: 4,
+            gc_bin_depth: 16,
+            gc_lane_ii: 1,
         }
     }
 }
@@ -151,6 +163,9 @@ impl ArchConfig {
             dsp_per_nt: g_us("dsp_per_nt", d.dsp_per_nt)?,
             pcie_bw: g_f("pcie_bw", d.pcie_bw)?,
             pcie_lat: g_f("pcie_lat", d.pcie_lat)?,
+            p_gc: g_us("p_gc", d.p_gc)?,
+            gc_bin_depth: g_us("gc_bin_depth", d.gc_bin_depth)?,
+            gc_lane_ii: g_us("gc_lane_ii", d.gc_lane_ii)?,
         };
         c.validate()?;
         Ok(c)
@@ -165,6 +180,9 @@ impl ArchConfig {
         anyhow::ensure!(self.clock_hz > 0.0, "clock");
         anyhow::ensure!(self.fifo_depth >= 2, "fifo depth >= 2");
         anyhow::ensure!(self.lanes >= 1, "lanes");
+        anyhow::ensure!(self.p_gc >= 1, "need >= 1 GC compare lane");
+        anyhow::ensure!(self.gc_bin_depth >= 1, "GC bin depth >= 1");
+        anyhow::ensure!(self.gc_lane_ii >= 1, "GC lane II >= 1");
         Ok(())
     }
 
@@ -321,6 +339,26 @@ mod tests {
         assert_eq!(a.p_edge, 16);
         assert_eq!(a.fifo_depth, 128);
         assert_eq!(a.p_node, ArchConfig::default().p_node);
+        // pre-GC config files keep deserialising: GC fields take defaults
+        assert_eq!(a.p_gc, ArchConfig::default().p_gc);
+        assert_eq!(a.gc_bin_depth, ArchConfig::default().gc_bin_depth);
+        assert_eq!(a.gc_lane_ii, ArchConfig::default().gc_lane_ii);
+    }
+
+    #[test]
+    fn arch_gc_fields_from_json_and_validation() {
+        let v = json::parse(r#"{"p_gc": 8, "gc_bin_depth": 32, "gc_lane_ii": 2}"#).unwrap();
+        let a = ArchConfig::from_json(&v).unwrap();
+        assert_eq!((a.p_gc, a.gc_bin_depth, a.gc_lane_ii), (8, 32, 2));
+        let mut bad = ArchConfig::default();
+        bad.p_gc = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ArchConfig::default();
+        bad.gc_bin_depth = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ArchConfig::default();
+        bad.gc_lane_ii = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

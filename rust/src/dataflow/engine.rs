@@ -1,6 +1,9 @@
 //! DGNNFlow engine: composes broadcast + MP units + adapter + NT units +
 //! double-buffered NE banks into the full per-layer dataflow (paper Fig. 4)
-//! and accounts cycles at 200 MHz.
+//! and accounts cycles at 200 MHz. With [`BuildSite::Fabric`] the
+//! [`super::gc_unit`] GC unit joins the fabric: graph construction runs
+//! on-chip, overlapped with the embed stage, and streams edges into the
+//! layer-0 MP units as they are discovered.
 //!
 //! The engine is **functional and timed at once**: every simulated edge
 //! message is really computed (via the model weights) at the cycle it
@@ -28,6 +31,7 @@ use crate::model::{L1DeepMetV2, Mat, ModelOutput};
 use super::adapter::Adapter;
 use super::broadcast::{BroadcastAction, BroadcastUnit};
 use super::buffers::DoubleBuffer;
+use super::gc_unit::{BuildSite, GcRun, GcStats, GcUnit};
 use super::mp_unit::{MpEvent, MpUnit};
 use super::nt_unit::NtUnit;
 
@@ -103,6 +107,12 @@ pub struct LayerStats {
     pub fifo_max_occupancy: usize,
     /// multicast-bus mode: total deliveries the bus serialised
     pub bus_deliveries: u64,
+    /// fabric build, layer 0 only: cycles the GC edge FIFO head waited on a
+    /// full MP capture buffer
+    pub gc_feed_blocked: u64,
+    /// fabric build, layer 0 only: high-water mark of edges discovered but
+    /// not yet delivered to an MP unit (the GC edge FIFO occupancy)
+    pub gc_fifo_max_occupancy: usize,
     /// occupancy timeline (only when the engine's trace sampling is on)
     pub timeline: Vec<TimelineSample>,
 }
@@ -132,6 +142,12 @@ impl LayerStats {
 pub struct SimBreakdown {
     pub transfer_in_s: f64,
     pub embed_cycles: u64,
+    /// Fabric graph construction ([`BuildSite::Fabric`] only): the GC
+    /// unit's stage accounting. Its cycles *overlap* the embed stage and
+    /// layer-0 message passing — `total_cycles` is never `gc + layers`;
+    /// any non-hidden GC cost shows up as layer-0 stretching (or, for
+    /// graphs too small to hide it, as `total_cycles == gc.total_cycles`).
+    pub gc: Option<GcStats>,
     pub layers: Vec<LayerStats>,
     pub head_cycles: u64,
     pub swap_cycles: u64,
@@ -146,8 +162,12 @@ pub struct SimResult {
     pub breakdown: SimBreakdown,
     /// On-fabric compute time (cycles / clock).
     pub compute_s: f64,
-    /// End-to-end: PCIe in + compute + PCIe out (matches the paper's E2E
-    /// latency definition: transfer + inference, graph build excluded).
+    /// End-to-end: PCIe in + compute + PCIe out. With [`BuildSite::Host`]
+    /// this matches the paper's E2E definition (transfer + inference; the
+    /// host-side graph build is measured separately by the pipeline as
+    /// `build_s`). With [`BuildSite::Fabric`] the GC unit's cycles are part
+    /// of the timeline, overlapped with embed/layer-0 — and the edge list
+    /// drops out of the host transfer.
     pub e2e_s: f64,
     /// NE-related on-chip memory for the chosen broadcast mode (bytes).
     pub ne_memory_bytes: usize,
@@ -159,6 +179,15 @@ pub struct DataflowEngine {
     pub model: L1DeepMetV2,
     pub params: CycleParams,
     pub mode: BroadcastMode,
+    /// Where the event graph is constructed (see [`BuildSite`]). `Host`
+    /// (default) keeps the classic flow; `Fabric` runs the GC unit on-chip,
+    /// streaming edges into the layer-0 MP units as they are discovered.
+    pub build_site: BuildSite,
+    /// ΔR radius the on-fabric GC unit reproduces (must match the radius
+    /// the graphs were built with; set via [`set_build_site`]).
+    ///
+    /// [`set_build_site`]: DataflowEngine::set_build_site
+    gc_delta: f32,
     /// When Some(k), sample the fabric occupancy every k cycles into
     /// LayerStats::timeline (costs a few % of simulator speed; off in
     /// benches, on in the dataflow_trace example).
@@ -184,6 +213,8 @@ impl DataflowEngine {
             model,
             params,
             mode,
+            build_site: BuildSite::Host,
+            gc_delta: 0.8,
             trace_sample_every: None,
             max_cycles_per_layer: 500_000_000,
         })
@@ -195,10 +226,36 @@ impl DataflowEngine {
         self.model.arith()
     }
 
+    /// Select where graphs are built. For [`BuildSite::Fabric`], `delta` is
+    /// the ΔR radius (paper Eq. 1) the GC unit reproduces — it must match
+    /// the radius the incoming graphs were built with, or the GC unit's
+    /// bit-identity assertion fires at run time.
+    pub fn set_build_site(&mut self, site: BuildSite, delta: f32) -> anyhow::Result<()> {
+        if site == BuildSite::Fabric {
+            anyhow::ensure!(
+                delta > 0.0 && delta.is_finite(),
+                "fabric graph construction needs a positive finite delta, got {delta}"
+            );
+        }
+        self.build_site = site;
+        self.gc_delta = delta;
+        Ok(())
+    }
+
+    /// The ΔR radius of the on-fabric GC unit.
+    pub fn gc_delta(&self) -> f32 {
+        self.gc_delta
+    }
+
     /// Host->device transfer model (paper: E2E includes transfer time).
     fn transfer_in_s(&self, g: &PaddedGraph) -> f64 {
-        // live payload: features + edges + masks + live counts
-        let bytes = g.n * (6 * 4 + 2 * 4) + g.e * 2 * 4 + g.n * 4 + g.e * 4 + 16;
+        let bytes = match self.build_site {
+            // live payload: features + edges + masks + live counts
+            BuildSite::Host => g.n * (6 * 4 + 2 * 4) + g.e * 2 * 4 + g.n * 4 + g.e * 4 + 16,
+            // fabric build: the host ships only particles — the edge list
+            // and edge mask never cross PCIe
+            BuildSite::Fabric => g.n * (6 * 4 + 2 * 4) + g.n * 4 + 16,
+        };
         self.arch.pcie_lat + bytes as f64 / self.arch.pcie_bw
     }
 
@@ -220,6 +277,15 @@ impl DataflowEngine {
             ..Default::default()
         };
 
+        // --- on-fabric graph construction (overlapped, Fabric only) -------
+        // The GC unit starts at cycle 0, concurrent with the embed stage
+        // (it reads raw η-φ, not embeddings). Its per-edge discovery
+        // schedule gates when layer 0 may issue each edge.
+        let gc: Option<GcRun> = match self.build_site {
+            BuildSite::Host => None,
+            BuildSite::Fabric => Some(GcUnit::from_arch(&self.arch, self.gc_delta).run(g)),
+        };
+
         // --- embedding stage (NT units, formula-timed, functional) --------
         let x0 = self.model.embed(g);
         let nodes_per_nt = n_live.div_ceil(p_node);
@@ -228,8 +294,11 @@ impl DataflowEngine {
         // --- GNN layers through the fabric ---------------------------------
         let mut ne = DoubleBuffer::new(g.bucket.n_max, d);
         ne.load(x0);
+        let mut elapsed = breakdown.embed_cycles;
         for l in 0..cfg.n_layers {
-            let stats = self.run_layer(l, &mut ne, g);
+            let gc_feed = if l == 0 { gc.as_ref() } else { None };
+            let stats = self.run_layer(l, &mut ne, g, gc_feed, elapsed);
+            elapsed += stats.cycles + 1; // + NE bank swap
             breakdown.layers.push(stats);
             ne.swap();
             breakdown.swap_cycles += 1;
@@ -243,6 +312,13 @@ impl DataflowEngine {
             + breakdown.layers.iter().map(|s| s.cycles).sum::<u64>()
             + breakdown.head_cycles
             + breakdown.swap_cycles;
+        if let Some(gcr) = gc {
+            // Graphs too small to hide the GC behind embed + layer 0 (e.g.
+            // edge-free events): the decision cannot issue before the GC
+            // unit has confirmed the final edge, so GC is the critical path.
+            breakdown.total_cycles = breakdown.total_cycles.max(gcr.stats.total_cycles);
+            breakdown.gc = Some(gcr.stats);
+        }
 
         let compute_s = breakdown.total_cycles as f64 * self.arch.cycle_s();
         let e2e_s = breakdown.transfer_in_s + compute_s + breakdown.transfer_out_s;
@@ -279,7 +355,22 @@ impl DataflowEngine {
 
     /// One GNN layer through the fabric. Functional: reads ne.read(),
     /// writes the next embeddings into ne.write().
-    fn run_layer(&self, l: usize, ne: &mut DoubleBuffer, g: &PaddedGraph) -> LayerStats {
+    ///
+    /// `gc` (layer 0, fabric build only) is the GC unit's edge-discovery
+    /// schedule: edges stream from the GC FIFO into the MP capture buffers
+    /// as they are discovered (one per cycle, head-of-line on a full
+    /// buffer), replacing broadcast capture for this layer — the GC unit
+    /// already knows both endpoints, and the MP units read them from the
+    /// local NE banks. `cycle_offset` is the fabric cycle at which this
+    /// layer starts (GC ready cycles are absolute, from event start).
+    fn run_layer(
+        &self,
+        l: usize,
+        ne: &mut DoubleBuffer,
+        g: &PaddedGraph,
+        gc: Option<&GcRun>,
+        cycle_offset: u64,
+    ) -> LayerStats {
         let cfg = &self.model.cfg;
         let lw = &self.model.weights.layers[l];
         let d = cfg.node_dim;
@@ -325,8 +416,10 @@ impl DataflowEngine {
         }
 
         let mut adapter = Adapter::new(p_node);
+        // GC-fed layer: no broadcast capture — edges arrive from the GC
+        // FIFO with both endpoints known, read locally from the NE banks.
         let mut bcast = BroadcastUnit::new(
-            if self.mode == BroadcastMode::Broadcast { n_live } else { 0 },
+            if self.mode == BroadcastMode::Broadcast && gc.is_none() { n_live } else { 0 },
             self.params.beat,
         );
 
@@ -334,7 +427,7 @@ impl DataflowEngine {
         // embeddings each unit needs.
         let mut bus_queue: std::collections::VecDeque<(usize, u32)> =
             std::collections::VecDeque::new();
-        if self.mode == BroadcastMode::MulticastBus {
+        if self.mode == BroadcastMode::MulticastBus && gc.is_none() {
             // per-unit need sets, in node order
             for v in 0..n_live as u32 {
                 for (k, mp) in mps.iter().enumerate() {
@@ -349,11 +442,31 @@ impl DataflowEngine {
 
         // Full replication: all target embeddings locally available — MP
         // units start with their whole edge list pending, in target order.
-        if self.mode == BroadcastMode::FullReplication {
+        if self.mode == BroadcastMode::FullReplication && gc.is_none() {
             for mp in &mut mps {
                 mp.preload_all_pending();
             }
         }
+
+        // GC edge feed (fabric build, layer 0): live edges in discovery
+        // order. `feed_seen` tracks how many have been discovered by the
+        // current cycle (the FIFO tail), `feed_next` how many have been
+        // delivered (the FIFO head) — occupancy is the difference.
+        let mut feed: Vec<(u64, u32)> = Vec::new();
+        if let Some(gcr) = gc {
+            for k in 0..g.e {
+                if g.edge_mask[k] == 0.0 {
+                    continue;
+                }
+                debug_assert!(gcr.ready_cycle[k] != u64::MAX, "undiscovered live edge {k}");
+                feed.push((gcr.ready_cycle[k], k as u32));
+            }
+            feed.sort_unstable();
+        }
+        let mut feed_next = 0usize;
+        let mut feed_seen = 0usize;
+        let mut gc_feed_blocked = 0u64;
+        let mut gc_fifo_max = 0usize;
 
         // Functional state. Live edges form a prefix of the edge arrays
         // (graph::padding invariant), so the message matrix only needs the
@@ -442,34 +555,55 @@ impl DataflowEngine {
                 }
             }
 
-            // 4. Target-embedding delivery.
-            match self.mode {
-                BroadcastMode::Broadcast => match bcast.step() {
-                    BroadcastAction::Emit(v) => {
-                        if mps.iter().all(|m| !m.bcast_in.is_full()) {
-                            for m in mps.iter_mut() {
-                                let ok = m.bcast_in.push(v);
-                                debug_assert!(ok);
-                            }
-                            bcast.emitted();
-                        } else {
-                            bcast.stalled();
-                        }
-                    }
-                    BroadcastAction::Idle => {}
-                },
-                BroadcastMode::MulticastBus => {
-                    if bus_counter > 0 {
-                        bus_counter -= 1;
-                    } else if let Some(&(k, v)) = bus_queue.front() {
-                        if mps[k].bcast_in.push(v) {
-                            bus_queue.pop_front();
-                            bus_counter = self.params.beat - 1;
-                        }
-                        // full FIFO: bus waits (congestion)
+            // 4. Edge/embedding delivery. GC-fed layer: the edge FIFO
+            //    streams one discovered edge per cycle into the owning MP
+            //    unit's capture buffer (head-of-line blocking when that
+            //    buffer is full — the fabric's backpressure chain reaches
+            //    the GC unit).
+            if gc.is_some() {
+                let now = cycle_offset + cycles;
+                while feed_seen < feed.len() && feed[feed_seen].0 <= now {
+                    feed_seen += 1;
+                }
+                if feed_next < feed_seen {
+                    let k = feed[feed_next].1;
+                    let s = g.src[k as usize] as usize;
+                    if mps[s % p_edge].try_inject(k) {
+                        feed_next += 1;
+                    } else {
+                        gc_feed_blocked += 1;
                     }
                 }
-                BroadcastMode::FullReplication => {}
+                gc_fifo_max = gc_fifo_max.max(feed_seen - feed_next);
+            } else {
+                match self.mode {
+                    BroadcastMode::Broadcast => match bcast.step() {
+                        BroadcastAction::Emit(v) => {
+                            if mps.iter().all(|m| !m.bcast_in.is_full()) {
+                                for m in mps.iter_mut() {
+                                    let ok = m.bcast_in.push(v);
+                                    debug_assert!(ok);
+                                }
+                                bcast.emitted();
+                            } else {
+                                bcast.stalled();
+                            }
+                        }
+                        BroadcastAction::Idle => {}
+                    },
+                    BroadcastMode::MulticastBus => {
+                        if bus_counter > 0 {
+                            bus_counter -= 1;
+                        } else if let Some(&(k, v)) = bus_queue.front() {
+                            if mps[k].bcast_in.push(v) {
+                                bus_queue.pop_front();
+                                bus_counter = self.params.beat - 1;
+                            }
+                            // full FIFO: bus waits (congestion)
+                        }
+                    }
+                    BroadcastMode::FullReplication => {}
+                }
             }
 
             if nts.iter().all(|nt| nt.done()) {
@@ -485,6 +619,8 @@ impl DataflowEngine {
             adapter_blocked: adapter.blocked_cycles,
             adapter_transferred: adapter.transferred,
             bus_deliveries: bus_total,
+            gc_feed_blocked,
+            gc_fifo_max_occupancy: gc_fifo_max,
             timeline,
             ..Default::default()
         };
@@ -702,5 +838,134 @@ mod tests {
             assert_eq!(s.adapter_transferred, s.live_edges);
             assert!(s.cycles > 0);
         }
+    }
+
+    fn fabric_engine(arith: Arith) -> DataflowEngine {
+        let mut eng = engine_arith(BroadcastMode::Broadcast, arith);
+        eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+        eng
+    }
+
+    #[test]
+    fn gc_fabric_build_bit_equals_host_and_reference() {
+        // The new subsystem's load-bearing invariant: moving graph
+        // construction onto the fabric changes *when* edges reach the MP
+        // units, never *what* is computed — bit-exact in both datapaths.
+        for arith in [Arith::F32, Arith::Fixed(Format::default_datapath())] {
+            let host = engine_arith(BroadcastMode::Broadcast, arith);
+            let fabric = fabric_engine(arith);
+            let reference = reference_arith(arith);
+            for seed in [1u64, 2, 3] {
+                let g = sample(seed);
+                let a = host.run(&g);
+                let b = fabric.run(&g);
+                let exp = reference.forward(&g);
+                assert_eq!(b.output.weights, exp.weights, "{arith} seed {seed}");
+                assert_eq!(b.output.met_xy, exp.met_xy, "{arith} seed {seed}");
+                assert_eq!(a.output.weights, b.output.weights, "{arith} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn gc_fabric_stage_accounted_and_overlapped() {
+        let g = sample(12);
+        let host = engine(BroadcastMode::Broadcast).run(&g);
+        let fabric = fabric_engine(Arith::F32).run(&g);
+        assert!(host.breakdown.gc.is_none(), "host build has no GC stage");
+        let gc = fabric.breakdown.gc.as_ref().expect("fabric build runs the GC unit");
+        assert!(gc.total_cycles > 0);
+        assert_eq!(gc.edges_emitted as usize, g.e);
+        assert_eq!(gc.bin_cycles + gc.compare_cycles, gc.total_cycles);
+        // Overlap, not summation: the fabric timeline is strictly shorter
+        // than serialising GC in front of the host-build compute.
+        assert!(
+            fabric.breakdown.total_cycles < gc.total_cycles + host.breakdown.total_cycles,
+            "GC must overlap: {} !< {} + {}",
+            fabric.breakdown.total_cycles,
+            gc.total_cycles,
+            host.breakdown.total_cycles
+        );
+        // The edge list drops out of the host transfer.
+        assert!(fabric.breakdown.transfer_in_s < host.breakdown.transfer_in_s);
+        // Layer 0 was GC-fed (no broadcast), layer 1 still broadcasts.
+        assert_eq!(fabric.breakdown.layers[0].broadcast_stalls, 0);
+        assert!(fabric.breakdown.layers[0].gc_fifo_max_occupancy > 0);
+        assert_eq!(fabric.breakdown.layers[1].gc_fifo_max_occupancy, 0);
+    }
+
+    #[test]
+    fn gc_fabric_e2e_beats_host_on_every_sample() {
+        // With the default fabric the GC hides entirely under embed +
+        // layer 0, and the transfer shrinks: fabric E2E < host E2E.
+        let host = engine(BroadcastMode::Broadcast);
+        let fabric = fabric_engine(Arith::F32);
+        for seed in [5u64, 9, 13] {
+            let g = sample(seed);
+            let h = host.run(&g);
+            let f = fabric.run(&g);
+            assert!(
+                f.e2e_s < h.e2e_s,
+                "seed {seed}: fabric {} !< host {}",
+                f.e2e_s,
+                h.e2e_s
+            );
+        }
+    }
+
+    #[test]
+    fn gc_fabric_all_modes_and_fabrics_bit_exact() {
+        // GC feed replaces delivery only in layer 0; whatever mode handles
+        // the later layers, outputs stay bit-identical to the reference.
+        let reference = reference_arith(Arith::F32);
+        let g = sample(6);
+        for mode in [
+            BroadcastMode::Broadcast,
+            BroadcastMode::FullReplication,
+            BroadcastMode::MulticastBus,
+        ] {
+            for (p_edge, p_node, p_gc) in [(2usize, 2usize, 1usize), (8, 4, 4), (5, 3, 7)] {
+                let cfg = ModelConfig::default();
+                let w = Weights::random(&cfg, 11);
+                let arch = ArchConfig { p_edge, p_node, p_gc, ..Default::default() };
+                let mut eng = DataflowEngine::with_mode(
+                    arch,
+                    L1DeepMetV2::new(cfg, w).unwrap(),
+                    mode,
+                )
+                .unwrap();
+                eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+                let sim = eng.run(&g);
+                let exp = reference.forward(&g);
+                assert_eq!(sim.output.weights, exp.weights, "{mode:?} p_gc={p_gc}");
+                assert_eq!(sim.output.met_xy, exp.met_xy, "{mode:?} p_gc={p_gc}");
+            }
+        }
+    }
+
+    #[test]
+    fn gc_fabric_tiny_fifo_backpressures_but_stays_exact() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 11);
+        let arch = ArchConfig { fifo_depth: 2, ..Default::default() };
+        let mut eng =
+            DataflowEngine::new(arch, L1DeepMetV2::new(cfg, w).unwrap()).unwrap();
+        eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+        let g = sample(7);
+        let sim = eng.run(&g);
+        let exp = reference_arith(Arith::F32).forward(&g);
+        assert_eq!(sim.output.weights, exp.weights);
+        // depth-2 capture buffers force the GC FIFO to wait at least once
+        assert!(sim.breakdown.layers[0].gc_feed_blocked > 0);
+    }
+
+    #[test]
+    fn set_build_site_rejects_bad_delta() {
+        let mut eng = engine(BroadcastMode::Broadcast);
+        assert!(eng.set_build_site(super::BuildSite::Fabric, 0.0).is_err());
+        assert!(eng.set_build_site(super::BuildSite::Fabric, f32::NAN).is_err());
+        assert!(eng.set_build_site(super::BuildSite::Fabric, 0.8).is_ok());
+        assert_eq!(eng.build_site, super::BuildSite::Fabric);
+        assert_eq!(eng.gc_delta(), 0.8);
     }
 }

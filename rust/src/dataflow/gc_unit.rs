@@ -1,0 +1,339 @@
+//! On-fabric dynamic graph construction: a cycle-accurate GC unit that
+//! streams edges into the dataflow (the paper's "input dynamic graph
+//! construction auxiliary setup", §III-B.4, promoted from host code onto
+//! the simulated fabric).
+//!
+//! Architecture (binned neighbour search, after Neu et al., "Real-time
+//! Graph Building on FPGAs", arXiv:2307.07289):
+//!
+//! 1. **Bin engine** — particles stream in one per cycle and are hashed
+//!    into the η-φ grid (cell size >= δ, the *same* grid as the host
+//!    [`GraphBuilder`] — shared `cell_of`/`neighbor_cells` code, so the
+//!    candidate sets are identical by construction). Each cell stores up to
+//!    `gc_bin_depth` entries; an overflowing entry spills into the overflow
+//!    buffer at one extra cycle.
+//! 2. **`P_gc` pair-compare lanes** — lane j owns particles {u : u mod
+//!    P_gc == j}. For each owned particle the lane walks the 3x3 cell
+//!    neighbourhood and evaluates Eq. 1 for every candidate pair at an
+//!    initiation interval of `gc_lane_ii` cycles. Every simulated compare
+//!    **really evaluates** [`delta_r2`] — the GC edge set is asserted
+//!    bit-identical to the host `build_edges` set, never re-derived from a
+//!    separate code path.
+//! 3. **Edge FIFO** — discovered edges are emitted into a FIFO that feeds
+//!    the first GNN layer's MP units (layer 0 everywhere in this crate)
+//!    *as edges are discovered* (see [`super::engine::DataflowEngine`]):
+//!    graph construction overlaps the embedding stage and layer-0 message
+//!    passing instead of serialising build -> infer.
+//!
+//! Functional/timing coupling follows the engine's discipline: the unit
+//! computes real edges at the cycles it claims, so the timing model can
+//! never drift from the math.
+
+use std::collections::HashMap;
+
+use crate::config::ArchConfig;
+use crate::graph::{GraphBuilder, PaddedGraph};
+use crate::physics::event::delta_r2;
+
+/// Where the event graph is constructed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BuildSite {
+    /// The host builds the edge list (the classic flow): graph build runs
+    /// before the transfer and is *not* part of the fabric timeline (the
+    /// pipeline measures it as `build_s` wall-clock per event).
+    #[default]
+    Host,
+    /// The fabric builds the graph: the host ships only particles, the GC
+    /// unit discovers edges on-chip, overlapped with the embed stage and
+    /// layer-0 message passing, and its cycles are part of E2E latency.
+    Fabric,
+}
+
+impl std::fmt::Display for BuildSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildSite::Host => write!(f, "host"),
+            BuildSite::Fabric => write!(f, "fabric"),
+        }
+    }
+}
+
+/// Cycle/activity accounting of one GC pass.
+#[derive(Clone, Debug, Default)]
+pub struct GcStats {
+    /// Binning phase length (one particle per cycle + spill penalties).
+    pub bin_cycles: u64,
+    /// Compare phase length (slowest lane; starts after binning).
+    pub compare_cycles: u64,
+    /// bin_cycles + compare_cycles: when the last edge enters the FIFO.
+    pub total_cycles: u64,
+    /// Candidate pairs evaluated through the ΔR² datapath (all lanes).
+    pub pairs_compared: u64,
+    /// Edges streamed into the layer-0 edge FIFO.
+    pub edges_emitted: u64,
+    /// Edges discovered on-fabric but absent from the padded edge list
+    /// (the host-side padding truncated them; the fabric edge store
+    /// applies the same cap, so they are dropped, not computed on).
+    pub edges_dropped: u64,
+    /// Particles that spilled past `gc_bin_depth` during binning.
+    pub bin_overflows: u64,
+    /// Sum over lanes of cycles spent comparing.
+    pub lane_busy_cycles: u64,
+    /// Sum over lanes of cycles spent waiting for the slowest lane.
+    pub lane_idle_cycles: u64,
+}
+
+/// Result of one GC pass: the per-edge discovery schedule plus stats.
+#[derive(Clone, Debug)]
+pub struct GcRun {
+    /// `ready_cycle[k]` = fabric cycle (from event start, concurrent with
+    /// the embed stage) at which live edge `k` of the padded graph enters
+    /// the edge FIFO. Indexed by the host edge id, so the engine's
+    /// functional payload keeps the canonical edge order.
+    pub ready_cycle: Vec<u64>,
+    pub stats: GcStats,
+}
+
+/// The graph-construction unit (configuration + one `run` per event).
+#[derive(Clone, Debug)]
+pub struct GcUnit {
+    delta: f32,
+    p_gc: usize,
+    bin_depth: usize,
+    lane_ii: u64,
+}
+
+impl GcUnit {
+    pub fn from_arch(arch: &ArchConfig, delta: f32) -> GcUnit {
+        assert!(delta > 0.0 && delta.is_finite(), "GC delta must be positive");
+        GcUnit {
+            delta,
+            p_gc: arch.p_gc.max(1),
+            bin_depth: arch.gc_bin_depth.max(1),
+            lane_ii: arch.gc_lane_ii.max(1) as u64,
+        }
+    }
+
+    pub fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    /// Run the GC unit over one padded event: bin the live particles,
+    /// stream candidate pairs through the compare lanes, and schedule every
+    /// discovered edge into the layer-0 FIFO.
+    ///
+    /// Contract (asserted): the discovered edge set is **bit-identical** to
+    /// the host `build_edges` edge set — every live edge of `g` is found,
+    /// and when the padding dropped nothing, nothing extra is found.
+    pub fn run(&self, g: &PaddedGraph) -> GcRun {
+        let n = g.n;
+        let d2 = self.delta * self.delta;
+        // Same grid geometry as the host builder (shared code path).
+        let grid = GraphBuilder::new(self.delta);
+
+        // Live-node coordinates from the raw feature rows ([pt, eta, phi,
+        // px, py, dz] — the fabric receives exactly these).
+        let eta = |i: usize| g.cont[i * 6 + 1];
+        let phi = |i: usize| g.cont[i * 6 + 2];
+
+        // Host edge ids for the live prefix: the canonical indices the
+        // engine's functional payload uses.
+        let mut host_id: HashMap<(u32, u32), u32> = HashMap::with_capacity(g.e);
+        for k in 0..g.e {
+            debug_assert_eq!(g.edge_mask[k], 1.0, "live edges form a prefix");
+            host_id.insert((g.src[k] as u32, g.dst[k] as u32), k as u32);
+        }
+
+        // --- phase 1: bin engine (II = 1, spills cost one extra cycle) ----
+        let mut stats = GcStats::default();
+        let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.n_cells()];
+        let mut cycle: u64 = 0;
+        for i in 0..n {
+            cycle += 1;
+            let c = grid.cell_of(eta(i), phi(i));
+            if cells[c].len() >= self.bin_depth {
+                cycle += 1; // spill into the overflow buffer
+                stats.bin_overflows += 1;
+            }
+            cells[c].push(i as u32);
+        }
+        stats.bin_cycles = cycle;
+
+        // --- phase 2: P_gc pair-compare lanes ------------------------------
+        // Lane j owns particles {u : u mod p_gc == j} and walks them in
+        // ascending order; lanes run concurrently from the end of binning.
+        let mut ready = vec![u64::MAX; g.e];
+        let mut lane_t = vec![stats.bin_cycles; self.p_gc];
+        let mut neigh = Vec::with_capacity(9);
+        for u in 0..n {
+            let lane = u % self.p_gc;
+            let (eu, pu) = (eta(u), phi(u));
+            grid.neighbor_cells(grid.cell_of(eu, pu), &mut neigh);
+            for &c in &neigh {
+                for &v in &cells[c] {
+                    let v = v as usize;
+                    if v == u {
+                        continue;
+                    }
+                    lane_t[lane] += self.lane_ii;
+                    stats.pairs_compared += 1;
+                    // the real Eq. 1 compare — functional and timed at once
+                    if delta_r2(eu, pu, eta(v), phi(v)) < d2 {
+                        match host_id.get(&(u as u32, v as u32)) {
+                            Some(&k) => {
+                                debug_assert_eq!(
+                                    ready[k as usize],
+                                    u64::MAX,
+                                    "edge ({u},{v}) discovered twice"
+                                );
+                                ready[k as usize] = lane_t[lane];
+                                stats.edges_emitted += 1;
+                            }
+                            // Host padding truncated this edge; the fabric
+                            // edge store applies the same cap.
+                            None => stats.edges_dropped += 1,
+                        }
+                    }
+                }
+            }
+        }
+        let compare_end = lane_t.iter().copied().max().unwrap_or(stats.bin_cycles);
+        stats.compare_cycles = compare_end - stats.bin_cycles;
+        stats.total_cycles = compare_end;
+        for &t in &lane_t {
+            stats.lane_busy_cycles += t - stats.bin_cycles;
+            stats.lane_idle_cycles += compare_end - t;
+        }
+
+        // --- the bit-identity contract -------------------------------------
+        assert_eq!(
+            stats.edges_emitted as usize, g.e,
+            "GC unit discovered {} of {} host edges (delta mismatch?)",
+            stats.edges_emitted, g.e
+        );
+        if g.dropped_nodes == 0 && g.dropped_edges == 0 {
+            assert_eq!(
+                stats.edges_dropped, 0,
+                "GC unit found {} edges the host build did not",
+                stats.edges_dropped
+            );
+        }
+
+        GcRun { ready_cycle: ready, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+    use crate::physics::generator::{EventGenerator, GeneratorConfig};
+
+    fn padded(seed: u64, delta: f32) -> PaddedGraph {
+        let mut gen = EventGenerator::with_seed(seed);
+        let ev = gen.generate();
+        pad_graph(&ev, &build_edges(&ev, delta), &DEFAULT_BUCKETS)
+    }
+
+    fn unit(p_gc: usize, bin_depth: usize, lane_ii: usize, delta: f32) -> GcUnit {
+        let arch = ArchConfig {
+            p_gc,
+            gc_bin_depth: bin_depth,
+            gc_lane_ii: lane_ii,
+            ..Default::default()
+        };
+        GcUnit::from_arch(&arch, delta)
+    }
+
+    #[test]
+    fn gc_edge_set_bit_identical_to_host() {
+        for seed in [21u64, 22, 23] {
+            let g = padded(seed, 0.8);
+            let run = unit(4, 16, 1, 0.8).run(&g);
+            assert_eq!(run.stats.edges_emitted as usize, g.e);
+            assert_eq!(run.stats.edges_dropped, 0);
+            // every live edge got a discovery cycle, after binning
+            for k in 0..g.e {
+                assert!(run.ready_cycle[k] != u64::MAX, "edge {k} never discovered");
+                assert!(run.ready_cycle[k] > run.stats.bin_cycles);
+                assert!(run.ready_cycle[k] <= run.stats.total_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn gc_bin_phase_is_one_cycle_per_particle() {
+        let g = padded(24, 0.8);
+        let run = unit(4, 64, 1, 0.8).run(&g);
+        assert_eq!(run.stats.bin_overflows, 0, "depth 64 must not spill");
+        assert_eq!(run.stats.bin_cycles, g.n as u64);
+    }
+
+    #[test]
+    fn gc_bin_overflow_costs_extra_cycles() {
+        let g = padded(24, 0.8);
+        let wide = unit(4, 64, 1, 0.8).run(&g);
+        let narrow = unit(4, 1, 1, 0.8).run(&g);
+        assert!(narrow.stats.bin_overflows > 0, "depth 1 must spill");
+        assert_eq!(
+            narrow.stats.bin_cycles,
+            g.n as u64 + narrow.stats.bin_overflows
+        );
+        // spills change timing, never the edge set
+        assert_eq!(narrow.stats.edges_emitted, wide.stats.edges_emitted);
+        assert_eq!(narrow.stats.pairs_compared, wide.stats.pairs_compared);
+    }
+
+    #[test]
+    fn gc_more_lanes_discover_faster() {
+        let g = padded(25, 0.8);
+        let one = unit(1, 16, 1, 0.8).run(&g);
+        let eight = unit(8, 16, 1, 0.8).run(&g);
+        assert!(
+            eight.stats.compare_cycles < one.stats.compare_cycles,
+            "8 lanes ({}) must beat 1 ({})",
+            eight.stats.compare_cycles,
+            one.stats.compare_cycles
+        );
+        // single lane: compare phase is exactly pairs * II
+        assert_eq!(one.stats.compare_cycles, one.stats.pairs_compared);
+        assert_eq!(one.stats.lane_idle_cycles, 0);
+        // work is conserved across lane counts
+        assert_eq!(one.stats.pairs_compared, eight.stats.pairs_compared);
+        assert_eq!(eight.stats.lane_busy_cycles, eight.stats.pairs_compared);
+    }
+
+    #[test]
+    fn gc_lane_ii_scales_compare_time() {
+        let g = padded(26, 0.8);
+        let ii1 = unit(4, 16, 1, 0.8).run(&g);
+        let ii3 = unit(4, 16, 3, 0.8).run(&g);
+        assert_eq!(ii3.stats.lane_busy_cycles, 3 * ii1.stats.lane_busy_cycles);
+        assert!(ii3.stats.compare_cycles > ii1.stats.compare_cycles);
+    }
+
+    #[test]
+    fn gc_handles_truncated_graphs() {
+        // oversize event: padding drops nodes and edges; the GC unit must
+        // still schedule every surviving edge and count the truncated ones
+        let cfg = GeneratorConfig { mean_pileup: 400.0, ..Default::default() };
+        let mut gen = EventGenerator::new(27, cfg);
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        assert!(g.dropped_nodes > 0, "need a truncated event");
+        let run = unit(4, 16, 1, 0.8).run(&g);
+        assert_eq!(run.stats.edges_emitted as usize, g.e);
+        for k in 0..g.e {
+            assert!(run.ready_cycle[k] != u64::MAX);
+        }
+    }
+
+    #[test]
+    fn gc_empty_event() {
+        let ev = crate::physics::Event { id: 0, particles: vec![], true_met_xy: [0.0; 2] };
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let run = unit(4, 16, 1, 0.8).run(&g);
+        assert_eq!(run.stats.total_cycles, 0);
+        assert_eq!(run.stats.edges_emitted, 0);
+    }
+}

@@ -9,6 +9,8 @@
 //! - [`nt_unit`]   — Node Transformation units
 //! - [`buffers`]   — double-buffered NE banks (swap per layer)
 //! - [`fifo`]      — bounded streaming FIFOs with backpressure
+//! - [`gc_unit`]   — on-fabric dynamic graph construction (§III-B.4):
+//!   η-φ bin engine + P_gc pair-compare lanes streaming edges into layer 0
 //! - [`engine`]    — per-layer cycle loop + E2E latency model
 //! - [`flowgnn`]   — static-graph baseline (host-side edge recompute)
 //! - [`resource`]  — LUT/FF/BRAM/DSP estimator (Table I)
@@ -20,6 +22,7 @@ pub mod buffers;
 pub mod engine;
 pub mod fifo;
 pub mod flowgnn;
+pub mod gc_unit;
 pub mod mp_unit;
 pub mod nt_unit;
 pub mod power;
@@ -28,5 +31,6 @@ pub mod tokens;
 
 pub use engine::{BroadcastMode, CycleParams, DataflowEngine, SimResult};
 pub use flowgnn::FlowGnnBaseline;
+pub use gc_unit::{BuildSite, GcRun, GcStats, GcUnit};
 pub use power::PowerModel;
 pub use resource::ResourceModel;

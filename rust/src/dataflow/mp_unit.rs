@@ -161,6 +161,23 @@ impl MpUnit {
         !self.edges_by_target[v as usize].is_empty()
     }
 
+    /// Fabric graph construction: the GC unit streams one discovered edge
+    /// into this unit's capture buffer (both endpoints are locally readable
+    /// from the NE banks, so no broadcast capture is needed). Returns false
+    /// when the buffer is full — the GC edge FIFO then backpressures.
+    pub fn try_inject(&mut self, edge_id: u32) -> bool {
+        if self.pending.len() >= self.bcast_in.depth() {
+            return false;
+        }
+        self.pending.push_back(edge_id);
+        true
+    }
+
+    /// Current capture-buffer occupancy (GC feed backpressure accounting).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
     /// Full-replication mode: all target embeddings are locally resident,
     /// so every assigned edge is pending from cycle 0 (in target order,
     /// mirroring the broadcast arrival order).

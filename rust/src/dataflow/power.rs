@@ -40,6 +40,9 @@ pub struct PowerModel {
     pub w_per_mp_active: f64,
     /// Dynamic power per fully-busy NT unit.
     pub w_per_nt_active: f64,
+    /// Dynamic power per fully-busy GC compare lane (ΔR² datapath + bin
+    /// memory reads; only drawn under `BuildSite::Fabric`).
+    pub w_per_gc_lane_active: f64,
     /// Broadcast/adapter/FIFO fabric switching at full streaming rate.
     pub w_fabric_stream: f64,
     // GPU model (RTX A6000)
@@ -57,6 +60,7 @@ impl PowerModel {
             fpga_static_w: 3.6,
             w_per_mp_active: 0.42,
             w_per_nt_active: 0.15,
+            w_per_gc_lane_active: 0.07,
             w_fabric_stream: 0.40,
             gpu_idle_w: 22.0,
             gpu_dynamic_w: 19.0,
@@ -80,12 +84,21 @@ impl PowerModel {
         // embed/head stages run the NT MAC arrays flat out
         let nt_stage = (sim.breakdown.embed_cycles + sim.breakdown.head_cycles) as f64
             * self.arch.p_node as f64;
+        // fabric graph construction: bin engine + compare-lane activity
+        let gc_busy = sim
+            .breakdown
+            .gc
+            .as_ref()
+            .map(|gc| (gc.lane_busy_cycles + gc.bin_cycles) as f64)
+            .unwrap_or(0.0);
         let mp_util = mp_busy / (total * self.arch.p_edge as f64);
         let nt_util = (nt_activity + nt_stage) / (total * self.arch.p_node as f64);
+        let gc_util = gc_busy / (total * self.arch.p_gc as f64);
         let stream_util = stream / total;
         self.fpga_static_w
             + self.w_per_mp_active * self.arch.p_edge as f64 * mp_util.min(1.0)
             + self.w_per_nt_active * self.arch.p_node as f64 * nt_util.min(1.0)
+            + self.w_per_gc_lane_active * self.arch.p_gc as f64 * gc_util.min(1.0)
             + self.w_fabric_stream * stream_util.min(1.0)
     }
 
@@ -150,6 +163,31 @@ mod tests {
         assert!(fpga > pm.fpga_static_w, "dynamic power must be visible");
         assert!(pm.gpu_w(0.9) > pm.gpu_w(0.1));
         assert!(pm.cpu_w(1.0) > pm.cpu_w(0.0));
+    }
+
+    #[test]
+    fn fabric_build_adds_gc_power() {
+        use crate::dataflow::gc_unit::BuildSite;
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 31);
+        let model = |c: &ModelConfig| L1DeepMetV2::new(c.clone(), w.clone()).unwrap();
+        let host_eng = DataflowEngine::new(ArchConfig::default(), model(&cfg)).unwrap();
+        let mut fabric_eng = DataflowEngine::new(ArchConfig::default(), model(&cfg)).unwrap();
+        fabric_eng.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+        let mut gen = EventGenerator::with_seed(32);
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let pm = PowerModel::new(ArchConfig::default());
+        let host_w = pm.fpga_from_sim(&host_eng.run(&g));
+        let fabric_sim = fabric_eng.run(&g);
+        let fabric_w = pm.fpga_from_sim(&fabric_sim);
+        assert!(fabric_sim.breakdown.gc.is_some());
+        assert!(
+            fabric_w > host_w,
+            "GC activity must draw power: fabric {fabric_w} vs host {host_w}"
+        );
+        // still a small fraction of a watt — the aux unit, not the fabric
+        assert!(fabric_w - host_w < 0.5, "delta {}", fabric_w - host_w);
     }
 
     #[test]

@@ -75,6 +75,19 @@ const LUT_PER_BCAST_LANE: u64 = 900; // broadcast tree per MP fanout
 const REG_PER_BCAST_LANE: u64 = 1_100;
 const LUT_ADAPTER_PER_PORT: u64 = 2_400; // crossbar mux + RR arbiter
 const REG_ADAPTER_PER_PORT: u64 = 2_100;
+// GC unit (on-fabric graph construction, §III-B.4): one bin engine plus
+// P_gc ΔR² compare lanes (dη/dφ subtract, two squarers, threshold compare,
+// φ-wrap adjust) and the edge-FIFO merge tree.
+const LUT_GC_BIN_ENGINE: u64 = 3_200; // cell hash + write port + spill ctrl
+const REG_GC_BIN_ENGINE: u64 = 2_800;
+const LUT_PER_GC_LANE: u64 = 2_600; // cell walker + compare datapath ctrl
+const REG_PER_GC_LANE: u64 = 2_200;
+const DSP_PER_GC_LANE: u64 = 4; // dη², dφ² multipliers + wrap add
+/// Bin memory is sized for the default δ = 0.8 grid (7 x 7 η-φ cells) and
+/// replicated per lane for conflict-free neighbourhood reads; each entry
+/// holds (index, η, φ) = 12 bytes.
+const GC_BIN_CELLS: u64 = 49;
+const GC_BIN_ENTRY_BYTES: u64 = 12;
 
 /// 36kb BRAM blocks per buffer of `bytes`.
 fn bram_blocks(bytes: usize) -> u64 {
@@ -91,18 +104,23 @@ impl ResourceModel {
         let m = &self.model;
         let d = m.node_dim;
 
-        // --- DSP: MAC arrays --------------------------------------------------
+        // --- DSP: MAC arrays + GC compare lanes -------------------------------
         let dsp = DSP_BASE
             + (a.p_edge * a.dsp_per_mp) as u64
-            + (a.p_node * a.dsp_per_nt) as u64;
+            + (a.p_node * a.dsp_per_nt) as u64
+            + (a.p_gc as u64) * DSP_PER_GC_LANE;
 
         // --- LUT / registers -----------------------------------------------------
         let lut = LUT_BASE
             + (a.p_edge as u64) * (LUT_PER_MP + LUT_PER_BCAST_LANE)
-            + (a.p_node as u64) * (LUT_PER_NT + LUT_ADAPTER_PER_PORT);
+            + (a.p_node as u64) * (LUT_PER_NT + LUT_ADAPTER_PER_PORT)
+            + LUT_GC_BIN_ENGINE
+            + (a.p_gc as u64) * LUT_PER_GC_LANE;
         let register = REG_BASE
             + (a.p_edge as u64) * (REG_PER_MP + REG_PER_BCAST_LANE)
-            + (a.p_node as u64) * (REG_PER_NT + REG_ADAPTER_PER_PORT);
+            + (a.p_node as u64) * (REG_PER_NT + REG_ADAPTER_PER_PORT)
+            + REG_GC_BIN_ENGINE
+            + (a.p_gc as u64) * REG_PER_GC_LANE;
 
         // --- BRAM: NE buffers, weight ROMs, FIFOs, CSR/edge store ----------------
         let ne_buffer = 2 * self.n_max * d * 4; // double buffer
@@ -118,6 +136,11 @@ impl ResourceModel {
         let capture_buffer = self.n_max * d * 4;
         // host<->fabric staging (features in, weights/MET out, ping-pong)
         let staging = 2 * (self.n_max * (6 + 2) * 4 + self.e_max * 2 * 4);
+        // GC unit: per-lane bin-memory replica, the particle coordinate
+        // store (η, φ per node), and the discovered-edge FIFO.
+        let gc_bin_mem = (GC_BIN_CELLS * a.gc_bin_depth as u64 * GC_BIN_ENTRY_BYTES) as usize;
+        let gc_coord_store = self.n_max * 8;
+        let gc_edge_fifo = a.fifo_depth * 8;
         let bram = BRAM_BASE
             + bram_blocks(ne_buffer)
             + bram_blocks(bcast_copy)
@@ -128,7 +151,10 @@ impl ResourceModel {
             + bram_blocks(staging)
             + bram_blocks(fifo_bytes)
             // aggregation scratch per NT unit: agg row + degree counters
-            + (a.p_node as u64) * bram_blocks(self.n_max / a.p_node.max(1) * d * 4 + self.n_max);
+            + (a.p_node as u64) * bram_blocks(self.n_max / a.p_node.max(1) * d * 4 + self.n_max)
+            + (a.p_gc as u64) * bram_blocks(gc_bin_mem)
+            + bram_blocks(gc_coord_store)
+            + bram_blocks(gc_edge_fifo);
 
         Usage { lut, register, bram, dsp }
     }
@@ -191,6 +217,30 @@ mod tests {
         assert!(big.lut > small.lut);
         assert!(big.dsp > small.dsp);
         assert!(big.bram > small.bram);
+    }
+
+    #[test]
+    fn gc_unit_scales_with_lanes_and_bin_depth() {
+        let base = default_model().estimate();
+        let more_lanes = ResourceModel::new(
+            ArchConfig { p_gc: 16, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(more_lanes.lut > base.lut);
+        assert!(more_lanes.dsp > base.dsp);
+        assert!(more_lanes.bram > base.bram, "bin replicas cost BRAM");
+        let deeper_bins = ResourceModel::new(
+            ArchConfig { gc_bin_depth: 256, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(deeper_bins.bram > base.bram);
+        assert_eq!(deeper_bins.dsp, base.dsp, "bin depth is memory, not compute");
     }
 
     #[test]

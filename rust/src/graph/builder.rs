@@ -60,6 +60,21 @@ impl GraphBuilder {
         self.delta
     }
 
+    /// Number of η rows in the grid.
+    pub fn n_eta(&self) -> usize {
+        self.n_eta
+    }
+
+    /// Number of φ columns in the grid.
+    pub fn n_phi(&self) -> usize {
+        self.n_phi
+    }
+
+    /// Total number of grid cells.
+    pub fn n_cells(&self) -> usize {
+        self.n_eta * self.n_phi
+    }
+
     #[inline]
     fn eta_cell(&self, eta: f32) -> usize {
         let x = (eta + ETA_MAX) / (2.0 * ETA_MAX) * self.n_eta as f32;
@@ -71,6 +86,45 @@ impl GraphBuilder {
         let two_pi = 2.0 * std::f32::consts::PI;
         let x = (wrap_phi(phi) + std::f32::consts::PI) / two_pi * self.n_phi as f32;
         (x.floor() as isize).clamp(0, self.n_phi as isize - 1) as usize
+    }
+
+    /// Flat cell index of an (eta, phi) coordinate. Shared by the host
+    /// builder and the on-fabric GC unit ([`crate::dataflow::gc_unit`]), so
+    /// both hash particles into the identical grid.
+    #[inline]
+    pub fn cell_of(&self, eta: f32, phi: f32) -> usize {
+        self.eta_cell(eta) * self.n_phi + self.phi_cell(phi)
+    }
+
+    /// The <= 9 distinct cells of `cell`'s 3x3 neighbourhood, appended to
+    /// `out` (cleared first). η clamps at the acceptance edge; φ wraps
+    /// cyclically. On degenerate grids (n_phi <= 3, i.e. delta near 2π or
+    /// larger) several φ offsets alias to the same column — each cell is
+    /// emitted exactly once, so callers never double-visit a bucket.
+    pub fn neighbor_cells(&self, cell: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let ec = (cell / self.n_phi) as isize;
+        let pc = (cell % self.n_phi) as isize;
+        for de in -1..=1isize {
+            let e = ec + de;
+            if e < 0 || e >= self.n_eta as isize {
+                continue; // eta does not wrap
+            }
+            // φ columns of this row, deduplicated (dp = -1/0/+1 can alias
+            // when the grid has <= 2 columns — and with exactly one column
+            // all three do).
+            let mut cols = [usize::MAX; 3];
+            let mut n_cols = 0usize;
+            for dp in -1..=1isize {
+                let p = (pc + dp).rem_euclid(self.n_phi as isize) as usize;
+                if cols[..n_cols].contains(&p) {
+                    continue;
+                }
+                cols[n_cols] = p;
+                n_cols += 1;
+                out.push((e as usize) * self.n_phi + p);
+            }
+        }
     }
 
     /// Build the event graph (same edge set as `build_edges_brute`).
@@ -85,7 +139,7 @@ impl GraphBuilder {
         self.cell_next.clear();
         self.cell_next.resize(n, -1);
         for (i, p) in event.particles.iter().enumerate() {
-            let c = self.eta_cell(p.eta) * self.n_phi + self.phi_cell(p.phi);
+            let c = self.cell_of(p.eta, p.phi);
             self.cell_next[i] = self.cell_heads[c];
             self.cell_heads[c] = i as i32;
         }
@@ -93,36 +147,22 @@ impl GraphBuilder {
         // Average degree with default delta is ~8-12; reserve accordingly.
         let mut src = Vec::with_capacity(n * 12);
         let mut dst = Vec::with_capacity(n * 12);
+        let mut cells = Vec::with_capacity(9);
         for u in 0..n {
             let pu = &event.particles[u];
-            let ec = self.eta_cell(pu.eta) as isize;
-            let pc = self.phi_cell(pu.phi) as isize;
-            for de in -1..=1isize {
-                let e = ec + de;
-                if e < 0 || e >= self.n_eta as isize {
-                    continue; // eta does not wrap
-                }
-                for dp in -1..=1isize {
-                    // phi wraps cyclically
-                    let p = (pc + dp).rem_euclid(self.n_phi as isize);
-                    // Avoid double-visiting cells when the phi grid is tiny
-                    // (n_phi <= 2 makes -1 and +1 alias).
-                    if self.n_phi <= 2 && dp == 1 && (pc - 1).rem_euclid(self.n_phi as isize) == p {
-                        continue;
-                    }
-                    let cell = (e as usize) * self.n_phi + p as usize;
-                    let mut v = self.cell_heads[cell];
-                    while v >= 0 {
-                        let vi = v as usize;
-                        if vi != u {
-                            let pv = &event.particles[vi];
-                            if delta_r2(pu.eta, pu.phi, pv.eta, pv.phi) < d2 {
-                                src.push(u as u32);
-                                dst.push(vi as u32);
-                            }
+            self.neighbor_cells(self.cell_of(pu.eta, pu.phi), &mut cells);
+            for &cell in &cells {
+                let mut v = self.cell_heads[cell];
+                while v >= 0 {
+                    let vi = v as usize;
+                    if vi != u {
+                        let pv = &event.particles[vi];
+                        if delta_r2(pu.eta, pu.phi, pv.eta, pv.phi) < d2 {
+                            src.push(u as u32);
+                            dst.push(vi as u32);
                         }
-                        v = self.cell_next[vi];
                     }
+                    v = self.cell_next[vi];
                 }
             }
         }
@@ -231,6 +271,60 @@ mod tests {
         // Undirected graph as two directed edges: in-degree == out-degree.
         assert_eq!(din, dout);
         assert_eq!(din.iter().map(|&x| x as usize).sum::<usize>(), g.n_edges());
+    }
+
+    #[test]
+    fn degenerate_grid_no_duplicate_edges() {
+        // Regression: delta >= 2π collapses the φ grid to a single column
+        // (n_phi == 1), where dp = -1, 0, +1 all alias the same cell. The
+        // old guard only skipped dp = +1, so every neighbour was visited
+        // twice and each edge emitted twice. The visited-cell dedup in
+        // neighbor_cells must keep the edge set exact.
+        let mut gen = EventGenerator::with_seed(18);
+        for delta in [6.4f32, 7.0, 10.0] {
+            let mut gb = GraphBuilder::new(delta);
+            assert_eq!(gb.n_phi(), 1, "delta={delta} must degenerate the phi grid");
+            let mut ev = gen.generate();
+            ev.particles.truncate(12);
+            let grid = gb.build(&ev);
+            grid.validate().unwrap(); // rejects duplicate edges
+            let brute = build_edges_brute(&ev, delta);
+            assert_eq!(edge_set(&grid), edge_set(&brute), "delta={delta}");
+            assert_eq!(grid.n_edges(), brute.n_edges(), "delta={delta} multiplicity");
+        }
+    }
+
+    #[test]
+    fn two_column_grid_no_duplicate_edges() {
+        // n_phi == 2 (2π/3 < delta <= π): dp = -1 and +1 alias.
+        let mut gen = EventGenerator::with_seed(19);
+        for delta in [2.2f32, 2.8, 3.1] {
+            let mut gb = GraphBuilder::new(delta);
+            assert_eq!(gb.n_phi(), 2, "delta={delta}");
+            let mut ev = gen.generate();
+            ev.particles.truncate(16);
+            let grid = gb.build(&ev);
+            grid.validate().unwrap();
+            assert_eq!(edge_set(&grid), edge_set(&build_edges_brute(&ev, delta)));
+            assert_eq!(grid.n_edges(), build_edges_brute(&ev, delta).n_edges());
+        }
+    }
+
+    #[test]
+    fn neighbor_cells_distinct_and_in_range() {
+        for delta in [0.3f32, 0.8, 2.0, 3.5, 7.0] {
+            let gb = GraphBuilder::new(delta);
+            let mut cells = Vec::new();
+            for c in 0..gb.n_cells() {
+                gb.neighbor_cells(c, &mut cells);
+                let mut sorted = cells.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), cells.len(), "delta={delta} cell {c}: dup neighbour");
+                assert!(cells.iter().all(|&x| x < gb.n_cells()));
+                assert!(cells.contains(&c), "neighbourhood must include the cell itself");
+            }
+        }
     }
 
     #[test]

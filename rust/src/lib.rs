@@ -35,7 +35,14 @@
 //!   sources, streaming `EventRecord` results, `ServeReport` aggregation.
 //! - [`dataflow`] — the paper's contribution: a cycle-approximate simulator
 //!   of the DGNNFlow fabric (Enhanced MP units, Node Embedding Broadcast,
-//!   double-buffered NE banks) plus resource and power models.
+//!   double-buffered NE banks) plus resource and power models, and the
+//!   on-fabric graph-construction unit ([`dataflow::gc_unit`]): with
+//!   [`dataflow::BuildSite::Fabric`] the η-φ bin engine and P_gc
+//!   pair-compare lanes discover edges on-chip, streaming them into the
+//!   layer-0 MP units overlapped with the embed stage — completing the
+//!   paper's "input dynamic graph construction auxiliary setup" inside the
+//!   simulated fabric (`Pipeline::builder().build_site(..)`, CLI
+//!   `--build-site host|fabric`).
 //! - [`trigger`] — the serving components the pipeline composes: batch-first
 //!   inference backends, the dynamic batcher, the accept-rate controller,
 //!   and the classic `TriggerServer` compatibility wrapper.

@@ -12,7 +12,7 @@
 use std::time::Duration;
 
 use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
-use dgnnflow::dataflow::{DataflowEngine, PowerModel, ResourceModel};
+use dgnnflow::dataflow::{BuildSite, DataflowEngine, PowerModel, ResourceModel};
 use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
@@ -91,6 +91,15 @@ fn parse_precision(s: &str) -> anyhow::Result<Option<Format>> {
     }
 }
 
+/// Parse `--build-site host | fabric`.
+fn parse_build_site(s: &str) -> anyhow::Result<BuildSite> {
+    match s {
+        "host" => Ok(BuildSite::Host),
+        "fabric" => Ok(BuildSite::Fabric),
+        other => anyhow::bail!("--build-site: expected host | fabric — got '{other}'"),
+    }
+}
+
 /// Load config: --config FILE or defaults.
 fn load_config(args: &Args) -> anyhow::Result<Config> {
     match args.opt_str("config") {
@@ -157,6 +166,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .arg("--batch-timeout-us N", "batcher flush timeout (default from config)")
                 .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 5000)")
                 .arg("--precision P", "datapath arithmetic: f32 | fixed | W,I (default f32)")
+                .arg("--build-site S", "graph construction: host | fabric (fpga backend only)")
                 .arg("--paced", "honour source arrival times in wall-clock")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default 60)")
@@ -202,7 +212,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .queue_capacity(tcfg.queue_capacity)
         .accept_fraction(tcfg.target_accept_hz / tcfg.input_rate_hz)
         .met_threshold(tcfg.met_threshold)
-        .paced(args.flag("paced"));
+        .paced(args.flag("paced"))
+        .build_site(parse_build_site(args.str_or("build-site", "host"))?);
     if let Some(fmt) = parse_precision(args.str_or("precision", "f32"))? {
         builder = builder.precision(fmt);
     }
@@ -224,21 +235,38 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(fmt) = parse_precision(args.str_or("precision", "f32"))? {
         model.set_arith(Arith::Fixed(fmt))?;
     }
-    let engine = DataflowEngine::new(cfg.arch.clone(), model)?;
+    let mut engine = DataflowEngine::new(cfg.arch.clone(), model)?;
+    engine.set_build_site(
+        parse_build_site(args.str_or("build-site", "host"))?,
+        cfg.trigger.delta_r as f32,
+    )?;
     let mut gen = EventGenerator::with_seed(seed);
     let ev = gen.generate();
     let graph = build_edges(&ev, cfg.trigger.delta_r as f32);
     let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
     let r = engine.run(&padded);
     println!(
-        "event {}: {} particles, {} edges (bucket {}x{}), datapath {}",
+        "event {}: {} particles, {} edges (bucket {}x{}), datapath {}, graph build: {}",
         ev.id,
         padded.n,
         padded.e,
         padded.bucket.n_max,
         padded.bucket.e_max,
-        engine.arith()
+        engine.arith(),
+        engine.build_site
     );
+    if let Some(gc) = &r.breakdown.gc {
+        println!(
+            "gc unit: bin={} + compare={} cycles ({} pairs via {} lanes, {} edges streamed, \
+             fifo high-water {})",
+            gc.bin_cycles,
+            gc.compare_cycles,
+            gc.pairs_compared,
+            cfg.arch.p_gc,
+            gc.edges_emitted,
+            r.breakdown.layers.first().map(|l| l.gc_fifo_max_occupancy).unwrap_or(0)
+        );
+    }
     println!(
         "MET = {:.2} GeV (true {:.2}); accept decision depends on threshold",
         r.output.met(),

@@ -55,6 +55,8 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+pub use crate::dataflow::BuildSite;
+
 use crate::fixedpoint::{Arith, Format, FormatError};
 use crate::graph::{pad_graph, padding::DEFAULT_BUCKETS, Bucket, GraphBuilder, PaddedGraph};
 use crate::trigger::backend::InferenceBackend;
@@ -98,11 +100,20 @@ pub struct ServeReport {
     pub backend: String,
     /// Datapath arithmetic the backend served in ("f32" or "ap_fixed<W,I>").
     pub precision: String,
+    /// Where event graphs were constructed ("host" or "fabric"). With
+    /// "fabric" the host still derives the edge list (the simulator needs
+    /// it for padding and as the GC unit's bit-identity oracle), but the
+    /// modelled device timeline builds the graph on-chip.
+    pub build_site: String,
     pub source: String,
     pub events: usize,
     pub wall_s: f64,
     pub throughput_hz: f64,
+    /// Host graph-build wall-clock (build + pad), p50 over served events.
     pub build_median_ms: f64,
+    /// Host graph-build wall-clock, p99 — together with the median this
+    /// makes host-vs-fabric build measurable end-to-end under `serve()`.
+    pub build_p99_ms: f64,
     pub queue_median_ms: f64,
     pub infer_median_ms: f64,
     pub infer_p99_ms: f64,
@@ -163,7 +174,8 @@ impl ServeReport {
             _ => String::new(),
         };
         format!(
-            "[{}<-{} @{}] events={} wall={:.2}s throughput={:.0}ev/s build(median)={:.3}ms \
+            "[{}<-{} @{}] events={} wall={:.2}s throughput={:.0}ev/s \
+             graph_build[{}](p50={:.3}ms p99={:.3}ms) \
              infer(median={:.3}ms p99={:.3}ms){} batch(mean={:.2} hist={}) accept={:.1}% \
              dropped={} truncated={}",
             self.backend,
@@ -172,7 +184,9 @@ impl ServeReport {
             self.events,
             self.wall_s,
             self.throughput_hz,
+            self.build_site,
             self.build_median_ms,
+            self.build_p99_ms,
             self.infer_median_ms,
             self.infer_p99_ms,
             dev,
@@ -206,6 +220,10 @@ pub enum PipelineError {
     /// compiled f32 artifact, an already-quantised shared backend, or a
     /// shared backend whose precision differs from the request).
     PrecisionUnsupported(String),
+    /// The backend cannot build graphs at the requested site (only the
+    /// simulated DGNNFlow fabric has an on-chip GC unit), or a shared
+    /// backend is configured for a different site than requested.
+    BuildSiteUnsupported(String),
 }
 
 impl fmt::Display for PipelineError {
@@ -229,6 +247,9 @@ impl fmt::Display for PipelineError {
             PipelineError::PrecisionUnsupported(why) => {
                 write!(f, "requested precision unsupported: {why}")
             }
+            PipelineError::BuildSiteUnsupported(why) => {
+                write!(f, "requested build site unsupported: {why}")
+            }
         }
     }
 }
@@ -247,6 +268,7 @@ pub struct PipelineBuilder<B: InferenceBackend> {
     source: Option<Box<dyn EventSource>>,
     backend: Option<BackendSlot<B>>,
     precision: Option<Arith>,
+    build_site: BuildSite,
     delta: f32,
     buckets: Vec<Bucket>,
     max_batch: usize,
@@ -264,6 +286,7 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
             source: None,
             backend: None,
             precision: None,
+            build_site: BuildSite::Host,
             delta: 0.8,
             buckets: DEFAULT_BUCKETS.to_vec(),
             max_batch: 1,
@@ -322,6 +345,18 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
         self
     }
 
+    /// Where event graphs are constructed. [`BuildSite::Host`] (default)
+    /// builds on the worker threads; [`BuildSite::Fabric`] asks the owned
+    /// backend to model on-device construction with the pipeline's ΔR
+    /// radius (typed [`PipelineError::BuildSiteUnsupported`] if the backend
+    /// has no GC unit). Host graph build still runs per event — the
+    /// simulator needs the padded graph, and `build_s`/`graph_build`
+    /// percentiles keep host-vs-fabric build measurable side by side.
+    pub fn build_site(mut self, site: BuildSite) -> Self {
+        self.build_site = site;
+        self
+    }
+
     /// Artifact padding size buckets.
     pub fn buckets(mut self, buckets: impl Into<Vec<Bucket>>) -> Self {
         self.buckets = buckets.into();
@@ -377,35 +412,7 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
     /// configuration — never panics.
     pub fn build(self) -> Result<Pipeline<B>, PipelineError> {
         let source = self.source.ok_or(PipelineError::MissingSource)?;
-        let slot = self.backend.ok_or(PipelineError::MissingBackend)?;
-        let backend = match self.precision {
-            None => match slot {
-                BackendSlot::Owned(b) => Arc::new(b),
-                BackendSlot::Shared(b) => b,
-            },
-            Some(arith) => {
-                // struct-literal formats bypass Format::try_new; re-check
-                arith.validate().map_err(PipelineError::BadPrecision)?;
-                match slot {
-                    BackendSlot::Owned(mut b) => {
-                        b.set_precision(arith)
-                            .map_err(|e| PipelineError::PrecisionUnsupported(format!("{e:#}")))?;
-                        Arc::new(b)
-                    }
-                    BackendSlot::Shared(b) => {
-                        if b.precision() != arith {
-                            return Err(PipelineError::PrecisionUnsupported(format!(
-                                "shared backend '{}' runs {} but {} was requested",
-                                b.name(),
-                                b.precision(),
-                                arith
-                            )));
-                        }
-                        b
-                    }
-                }
-            }
-        };
+        let mut slot = self.backend.ok_or(PipelineError::MissingBackend)?;
         if self.buckets.is_empty() {
             return Err(PipelineError::NoBuckets);
         }
@@ -424,6 +431,70 @@ impl<B: InferenceBackend + 'static> PipelineBuilder<B> {
         if !(self.accept_fraction > 0.0 && self.accept_fraction <= 1.0) {
             return Err(PipelineError::BadAcceptFraction(self.accept_fraction));
         }
+        if let Some(arith) = self.precision {
+            // struct-literal formats bypass Format::try_new; re-check
+            arith.validate().map_err(PipelineError::BadPrecision)?;
+            match &mut slot {
+                BackendSlot::Owned(b) => {
+                    b.set_precision(arith)
+                        .map_err(|e| PipelineError::PrecisionUnsupported(format!("{e:#}")))?;
+                }
+                BackendSlot::Shared(b) => {
+                    if b.precision() != arith {
+                        return Err(PipelineError::PrecisionUnsupported(format!(
+                            "shared backend '{}' runs {} but {} was requested",
+                            b.name(),
+                            b.precision(),
+                            arith
+                        )));
+                    }
+                }
+            }
+        }
+        // Apply / reconcile the graph-construction site. An owned backend
+        // is (re)configured with the *pipeline's* ΔR radius whenever the
+        // fabric will build graphs — including a backend that arrived
+        // pre-configured for fabric build — so a stale radius can never
+        // survive to trip the GC unit's bit-identity assertion at serve
+        // time. A shared backend cannot be reconfigured: its site (when one
+        // was requested) and its GC radius must already match.
+        match &mut slot {
+            BackendSlot::Owned(b) => {
+                let site = if self.build_site == BuildSite::Fabric {
+                    BuildSite::Fabric
+                } else {
+                    b.build_site()
+                };
+                if site == BuildSite::Fabric {
+                    b.set_build_site(site, self.delta)
+                        .map_err(|e| PipelineError::BuildSiteUnsupported(format!("{e:#}")))?;
+                }
+            }
+            BackendSlot::Shared(b) => {
+                if self.build_site != BuildSite::Host && b.build_site() != self.build_site {
+                    return Err(PipelineError::BuildSiteUnsupported(format!(
+                        "shared backend '{}' builds on the {} but {} was requested",
+                        b.name(),
+                        b.build_site(),
+                        self.build_site
+                    )));
+                }
+                if let Some(d) = b.build_delta() {
+                    if d != self.delta {
+                        return Err(PipelineError::BuildSiteUnsupported(format!(
+                            "shared backend '{}' GC radius {d} differs from the \
+                             pipeline's delta {}",
+                            b.name(),
+                            self.delta
+                        )));
+                    }
+                }
+            }
+        }
+        let backend = match slot {
+            BackendSlot::Owned(b) => Arc::new(b),
+            BackendSlot::Shared(b) => b,
+        };
         Ok(Pipeline {
             source,
             backend,
@@ -506,6 +577,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
         let t0 = Instant::now();
         let backend_name = self.backend.name().to_string();
         let precision = self.backend.precision().to_string();
+        let build_site = self.backend.build_site().to_string();
         let source_name = self.source.name().to_string();
         let dropped = Arc::new(AtomicU64::new(0));
         let rate = Arc::new(Mutex::new(RateController::new(
@@ -592,6 +664,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
             stop,
             backend: backend_name,
             precision,
+            build_site,
             source: source_name,
             max_batch: self.max_batch,
             t0,
@@ -763,6 +836,7 @@ pub struct RecordStream {
     stop: Arc<AtomicBool>,
     backend: String,
     precision: String,
+    build_site: String,
     source: String,
     max_batch: usize,
     t0: Instant,
@@ -807,11 +881,13 @@ impl RecordStream {
         ServeReport {
             backend: self.backend.clone(),
             precision: self.precision.clone(),
+            build_site: self.build_site.clone(),
             source: self.source.clone(),
             events: records.len(),
             wall_s,
             throughput_hz: records.len() as f64 / wall_s.max(1e-12),
             build_median_ms: med(&build),
+            build_p99_ms: p99(&build),
             queue_median_ms: med(&queue),
             infer_median_ms: med(&infer),
             infer_p99_ms: p99(&infer),
@@ -1007,6 +1083,139 @@ mod tests {
             report.records.iter().map(|r| (r.event_id, r.met)).collect();
         got.sort_by_key(|x| x.0);
         assert_eq!(got, expect, "pipeline serves the quantised model bit-for-bit");
+    }
+
+    #[test]
+    fn build_site_fabric_serves_end_to_end() {
+        use crate::config::ArchConfig;
+        use crate::dataflow::DataflowEngine;
+        let cfg = ModelConfig::default();
+        let make_backend = || {
+            Backend::Fpga(
+                DataflowEngine::new(
+                    ArchConfig::default(),
+                    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 71)).unwrap(),
+                )
+                .unwrap(),
+            )
+        };
+        let serve = |site: BuildSite| {
+            Pipeline::builder()
+                .source(SyntheticSource::new(10, 4, GeneratorConfig::default()))
+                .backend(make_backend())
+                .build_site(site)
+                .workers(2)
+                .build()
+                .unwrap()
+                .serve()
+        };
+        let host = serve(BuildSite::Host);
+        let fabric = serve(BuildSite::Fabric);
+        assert_eq!(host.build_site, "host");
+        assert_eq!(fabric.build_site, "fabric");
+        assert_eq!(fabric.events, 10);
+        assert!(fabric.summary().contains("graph_build[fabric]"));
+        // host graph-build timing is still measured in both site modes
+        assert!(fabric.build_median_ms > 0.0);
+        assert!(fabric.build_p99_ms >= fabric.build_median_ms);
+        // the physics is site-independent: same events, same MET
+        let key = |r: &ServeReport| {
+            let mut v: Vec<(u64, f32)> = r.records.iter().map(|x| (x.event_id, x.met)).collect();
+            v.sort_by_key(|x| x.0);
+            v
+        };
+        assert_eq!(key(&host), key(&fabric));
+        // and the modelled device is faster with the overlapped GC
+        let dev = |r: &ServeReport| r.device_median_ms.expect("fpga models a device");
+        assert!(dev(&fabric) < dev(&host), "{} !< {}", dev(&fabric), dev(&host));
+    }
+
+    #[test]
+    fn build_site_typed_errors() {
+        // a CPU backend has no GC unit
+        let err = Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend(cpu_backend(1))
+            .build_site(BuildSite::Fabric)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PipelineError::BuildSiteUnsupported(_)), "got {err:?}");
+        assert!(err.to_string().contains("build site"));
+
+        // a shared backend cannot be reconfigured by the builder
+        let shared = Arc::new(cpu_backend(2));
+        let err = Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend_arc(shared)
+            .build_site(BuildSite::Fabric)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PipelineError::BuildSiteUnsupported(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn build_site_delta_reconciliation() {
+        use crate::config::ArchConfig;
+        use crate::dataflow::DataflowEngine;
+        let cfg = ModelConfig::default();
+        let fabric_engine = |delta: f32| {
+            let mut e = DataflowEngine::new(
+                ArchConfig::default(),
+                L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 73)).unwrap(),
+            )
+            .unwrap();
+            e.set_build_site(BuildSite::Fabric, delta).unwrap();
+            Backend::Fpga(e)
+        };
+        // An owned backend pre-configured with a stale radius is resynced
+        // to the pipeline's delta at build() — no serve-time GC assert.
+        let report = Pipeline::builder()
+            .source(SyntheticSource::new(6, 8, GeneratorConfig::default()))
+            .backend(fabric_engine(0.4))
+            .graph(0.8)
+            .workers(1)
+            .build()
+            .unwrap()
+            .serve();
+        assert_eq!(report.events, 6);
+        assert_eq!(report.build_site, "fabric");
+        // A shared fabric backend with a mismatched radius is a typed error.
+        let shared = Arc::new(fabric_engine(0.4));
+        let err = Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend_arc(shared)
+            .graph(0.8)
+            .build_site(BuildSite::Fabric)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PipelineError::BuildSiteUnsupported(_)), "got {err:?}");
+        assert!(err.to_string().contains("radius"), "{err}");
+        // ...and a matching one builds fine.
+        let shared = Arc::new(fabric_engine(0.8));
+        assert!(Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend_arc(shared)
+            .graph(0.8)
+            .build_site(BuildSite::Fabric)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn report_carries_graph_build_percentiles() {
+        let report = Pipeline::builder()
+            .source(SyntheticSource::new(20, 6, GeneratorConfig::default()))
+            .backend(cpu_backend(72))
+            .workers(2)
+            .build()
+            .unwrap()
+            .serve();
+        assert_eq!(report.build_site, "host");
+        assert!(report.build_median_ms > 0.0);
+        assert!(report.build_p99_ms >= report.build_median_ms);
+        assert!(report.summary().contains("graph_build[host]"));
+        // per-event build_s backs the percentiles
+        assert!(report.records.iter().all(|r| r.build_s > 0.0));
     }
 
     #[test]

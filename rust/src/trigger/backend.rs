@@ -7,7 +7,7 @@
 //! Rust reference simply loops. Single-graph `infer` is a convenience
 //! wrapper and is guaranteed bit-identical to a batch of one.
 
-use crate::dataflow::DataflowEngine;
+use crate::dataflow::{BuildSite, DataflowEngine};
 use crate::fixedpoint::Arith;
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, ModelOutput};
@@ -36,6 +36,38 @@ pub trait InferenceBackend: Send + Sync {
                 self.name()
             ),
         }
+    }
+
+    /// Where this backend expects event graphs to be constructed. Host
+    /// (the default) means the serving path builds edge lists before
+    /// inference; Fabric means the backend models on-device construction
+    /// (only the simulated DGNNFlow fabric supports it).
+    fn build_site(&self) -> BuildSite {
+        BuildSite::Host
+    }
+
+    /// Reconfigure the graph-construction site, called by the pipeline
+    /// builder's `.build_site(..)` before the backend is shared. `delta` is
+    /// the pipeline's ΔR radius (paper Eq. 1) — the on-fabric GC unit must
+    /// reproduce exactly the radius the serving path pads graphs with. The
+    /// default accepts only `BuildSite::Host` (a no-op).
+    fn set_build_site(&mut self, site: BuildSite, _delta: f32) -> anyhow::Result<()> {
+        match site {
+            BuildSite::Host => Ok(()),
+            BuildSite::Fabric => anyhow::bail!(
+                "backend '{}' has no on-fabric graph-construction unit",
+                self.name()
+            ),
+        }
+    }
+
+    /// The ΔR radius the backend's on-fabric GC unit is configured for.
+    /// None when graphs are host-built or the backend has no GC unit. The
+    /// pipeline builder uses this to reject a shared fabric backend whose
+    /// radius differs from the pipeline's — a mismatch would otherwise
+    /// trip the GC unit's bit-identity assertion at serve time.
+    fn build_delta(&self) -> Option<f32> {
+        None
     }
 
     /// Run inference for a whole batch, preserving order. Implementations
@@ -141,6 +173,35 @@ impl InferenceBackend for Backend {
         }
     }
 
+    fn build_site(&self) -> BuildSite {
+        match self {
+            Backend::Fpga(engine) => engine.build_site,
+            _ => BuildSite::Host,
+        }
+    }
+
+    fn set_build_site(&mut self, site: BuildSite, delta: f32) -> anyhow::Result<()> {
+        match self {
+            Backend::Fpga(engine) => engine.set_build_site(site, delta),
+            other => match site {
+                BuildSite::Host => Ok(()),
+                BuildSite::Fabric => anyhow::bail!(
+                    "backend '{}' has no on-fabric graph-construction unit",
+                    other.name()
+                ),
+            },
+        }
+    }
+
+    fn build_delta(&self) -> Option<f32> {
+        match self {
+            Backend::Fpga(engine) if engine.build_site == BuildSite::Fabric => {
+                Some(engine.gc_delta())
+            }
+            _ => None,
+        }
+    }
+
     fn infer_batch(&self, graphs: &[PaddedGraph]) -> anyhow::Result<Vec<ModelOutput>> {
         match self {
             Backend::RustCpu(m) => Ok(graphs.iter().map(|g| m.forward(g)).collect()),
@@ -215,6 +276,36 @@ mod tests {
         assert_eq!(a.met_xy, b.met_xy);
         // switching an already-quantised backend again is rejected
         assert!(cpu.set_precision(Arith::Fixed(Format::new(8, 4))).is_err());
+    }
+
+    #[test]
+    fn build_site_reaches_the_fabric_and_stays_bit_identical() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 57);
+        let cpu = Backend::RustCpu(L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap());
+        let mut fpga = Backend::Fpga(
+            DataflowEngine::new(ArchConfig::default(), L1DeepMetV2::new(cfg, w).unwrap())
+                .unwrap(),
+        );
+        assert_eq!(fpga.build_site(), BuildSite::Host);
+        fpga.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+        assert_eq!(fpga.build_site(), BuildSite::Fabric);
+        let g = graph_with_seed(58);
+        let a = cpu.infer(&g).unwrap();
+        let b = fpga.infer(&g).unwrap();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.met_xy, b.met_xy);
+    }
+
+    #[test]
+    fn non_fabric_backends_reject_fabric_build() {
+        let cfg = ModelConfig::default();
+        let mut cpu =
+            Backend::RustCpu(L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 59)).unwrap());
+        assert!(cpu.set_build_site(BuildSite::Host, 0.8).is_ok());
+        let err = cpu.set_build_site(BuildSite::Fabric, 0.8).unwrap_err();
+        assert!(err.to_string().contains("graph-construction"), "{err}");
+        assert_eq!(cpu.build_site(), BuildSite::Host);
     }
 
     #[test]

@@ -289,6 +289,40 @@ fn golden_cases_engine_bit_equals_reference() {
     }
 }
 
+/// The on-fabric graph-construction leg: with `BuildSite::Fabric` the GC
+/// unit discovers the golden graphs' edges on-chip (bit-identical edge set,
+/// asserted inside the unit) and the engine output stays bit-exact against
+/// the reference in both datapaths — moving graph build onto the fabric is
+/// a pure scheduling change.
+#[test]
+fn golden_cases_fabric_build_site_stays_bit_exact() {
+    use dgnnflow::dataflow::BuildSite;
+    for arith in golden_ariths() {
+        let reference = golden_model(arith);
+        let mut engine = DataflowEngine::new(
+            dgnnflow::config::ArchConfig::default(),
+            golden_model(arith),
+        )
+        .unwrap();
+        engine.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+        for (ci, g) in golden_graphs().iter().enumerate() {
+            let sim = engine.run(g);
+            let exp = reference.forward(g);
+            assert_eq!(
+                sim.output.weights, exp.weights,
+                "case {ci} {arith} fabric build: weights drifted from reference"
+            );
+            assert_eq!(
+                sim.output.met_xy, exp.met_xy,
+                "case {ci} {arith} fabric build: met drifted from reference"
+            );
+            let gc = sim.breakdown.gc.as_ref().expect("fabric build runs the GC unit");
+            assert_eq!(gc.edges_emitted as usize, g.e, "case {ci}: GC edge count");
+            assert_eq!(gc.edges_dropped, 0, "case {ci}: golden graphs drop nothing");
+        }
+    }
+}
+
 /// Fixed-point MET must stay inside a *derived* error bound of the f32
 /// reference. Derivation (documented, conservative): the final per-weight
 /// sigmoid register rounds by at most lsb/2; upstream register rounding

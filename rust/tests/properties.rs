@@ -42,6 +42,89 @@ fn prop_graph_builder_matches_brute_force() {
 }
 
 #[test]
+fn prop_grid_matches_brute_degenerate_deltas() {
+    // Satellite coverage for the alias-guard fix: random deltas including
+    // degenerate grids (delta near and beyond 2π, so n_phi collapses to
+    // 2 or 1, and delta near 2·ETA_MAX, collapsing the η rows), with
+    // particles forced exactly onto the ±π φ seam and the ±ETA_MAX edges.
+    use dgnnflow::physics::event::ETA_MAX;
+    use std::f32::consts::PI;
+    check(0xC1, 40, |g| {
+        let delta = *g.pick(&[
+            0.25f32,
+            0.8,
+            1.9,
+            2.5,                 // n_phi == 2
+            PI,                  // n_phi == 2 boundary
+            2.0 * ETA_MAX - 0.1, // n_eta == 1, n_phi == 1
+            2.0 * PI - 0.05,     // just under 2π
+            2.0 * PI,            // exactly 2π
+            7.5,                 // beyond every span
+        ]);
+        let mut ev = random_event(g);
+        ev.particles.truncate(40); // keep the brute-force O(N²) cheap
+        if ev.particles.len() >= 6 {
+            // φ seam straddlers (both representations of the boundary)
+            ev.particles[0].phi = PI;
+            ev.particles[0].eta = 0.3;
+            ev.particles[1].phi = -PI + 1e-4;
+            ev.particles[1].eta = 0.35;
+            ev.particles[2].phi = -PI;
+            ev.particles[2].eta = -0.2;
+            // η acceptance edges
+            ev.particles[3].eta = ETA_MAX;
+            ev.particles[4].eta = -ETA_MAX;
+            ev.particles[5].eta = ETA_MAX - 1e-4;
+        }
+        let grid = build_edges(&ev, delta);
+        grid.validate().unwrap_or_else(|e| {
+            panic!("delta={delta} n={}: invalid graph: {e}", ev.n_particles())
+        });
+        let brute = build_edges_brute(&ev, delta);
+        let mut a: Vec<(u32, u32)> =
+            grid.src.iter().zip(&grid.dst).map(|(&s, &d)| (s, d)).collect();
+        let mut b: Vec<(u32, u32)> =
+            brute.src.iter().zip(&brute.dst).map(|(&s, &d)| (s, d)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "delta={delta} n={}", ev.n_particles());
+        // multiplicity too: the duplicate-edge bug produced a correct *set*
+        // with doubled entries, which only the raw lists expose
+        assert_eq!(grid.n_edges(), brute.n_edges(), "delta={delta} edge multiplicity");
+    });
+}
+
+#[test]
+fn prop_fabric_gc_edge_set_equals_host() {
+    // The GC unit's bit-identity contract over random events, deltas, and
+    // GC fabric shapes: every host edge is discovered exactly once (the
+    // assertions inside GcUnit::run fire on any mismatch), scheduled after
+    // binning, and nothing extra survives when padding dropped nothing.
+    use dgnnflow::dataflow::GcUnit;
+    check(0xC2, 15, |g| {
+        let ev = random_event(g);
+        let delta = g.f32_in(0.3, 1.2);
+        let graph = build_edges(&ev, delta);
+        let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        let arch = ArchConfig {
+            p_gc: g.usize_in(1, 12),
+            gc_bin_depth: *g.pick(&[1usize, 4, 16, 64]),
+            gc_lane_ii: g.usize_in(1, 3),
+            ..Default::default()
+        };
+        let run = GcUnit::from_arch(&arch, delta).run(&padded);
+        assert_eq!(run.stats.edges_emitted as usize, padded.e);
+        if padded.dropped_nodes == 0 && padded.dropped_edges == 0 {
+            assert_eq!(run.stats.edges_dropped, 0);
+        }
+        for k in 0..padded.e {
+            assert!(run.ready_cycle[k] > run.stats.bin_cycles);
+            assert!(run.ready_cycle[k] <= run.stats.total_cycles);
+        }
+    });
+}
+
+#[test]
 fn prop_graphs_always_valid() {
     check(0xA2, 30, |g| {
         let ev = random_event(g);
