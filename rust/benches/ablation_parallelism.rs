@@ -1,63 +1,154 @@
-//! Ablation C: parallelism sweep — latency vs resources over (P_edge,
-//! P_node). Shows the knee the paper's configuration sits on: more MP
-//! units cut cycles until broadcast/adapter serialisation dominates, while
-//! DSP/LUT grow linearly.
+//! Ablation C: parallelism sweep — latency vs resources over the
+//! (P_edge, P_node) × P_gc × build-site grid. Shows the knee the paper's
+//! configuration sits on: more MP units cut cycles until broadcast/adapter
+//! serialisation dominates, while DSP/LUT grow linearly — and, on the
+//! fabric-build legs, how many GC compare lanes the pipelined bin/compare
+//! schedule needs before the edge feed stops being the layer-0 bottleneck.
+//!
+//! Per fabric-build point the sweep also prices the PR 3 serialized GC
+//! schedule (`gc_serialized_cycles`, from the same run) so the pipelining
+//! win is visible per configuration, plus the per-lane feed backpressure
+//! (`gc_feed_blocked`, `gc_fifo_stall_cycles`). Host-site timing is
+//! independent of P_gc, so each (P_edge, P_node) point carries exactly one
+//! host leg (at the default P_gc) instead of duplicating it per lane count.
+//!
+//! Resource caveat: `ResourceModel` prices the *instantiated* fabric, which
+//! includes the GC unit (lanes, bin memories, edge FIFOs, merge) whether or
+//! not a run uses it — so the resource columns depend on P_gc but not on
+//! the build site; the site axis differentiates timing, not area.
+//!
+//! Emits `BENCH_parallelism.json` next to Cargo.toml.
+//!
+//!   cargo bench --bench ablation_parallelism
 
 use dgnnflow::config::{ArchConfig, ModelConfig};
 use dgnnflow::dataflow::resource::{ResourceModel, ALVEO_U50};
-use dgnnflow::dataflow::DataflowEngine;
+use dgnnflow::dataflow::{BuildSite, DataflowEngine, SimResult};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
 use dgnnflow::physics::{EventGenerator, GeneratorConfig};
 use dgnnflow::util::bench::Table;
+use dgnnflow::util::json::{obj, Value};
+
+const DELTA: f32 = 0.8;
 
 fn model() -> L1DeepMetV2 {
     let cfg = ModelConfig::default();
     L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 99)).unwrap()
 }
 
+/// One grid point: table row + JSON point (shared by the host and fabric
+/// legs so the two stay column-compatible).
+fn emit_point(
+    t: &mut Table,
+    points: &mut Vec<Value>,
+    arch: &ArchConfig,
+    site: BuildSite,
+    r: &SimResult,
+    base_cycles: u64,
+) {
+    let gc = r.breakdown.gc.as_ref();
+    let gc_cycles = gc.map(|s| s.total_cycles).unwrap_or(0);
+    let gc_serial = gc.map(|s| s.serialized_total_cycles).unwrap_or(0);
+    let gc_stalls = gc.map(|s| s.fifo_stall_cycles).unwrap_or(0);
+    let feed_blocked = r.breakdown.layers.first().map(|l| l.gc_feed_blocked).unwrap_or(0);
+    let u = ResourceModel::new(arch.clone(), ModelConfig::default(), 256, 12288).estimate();
+    t.row(&[
+        arch.p_edge.to_string(),
+        arch.p_node.to_string(),
+        arch.p_gc.to_string(),
+        site.to_string(),
+        r.breakdown.total_cycles.to_string(),
+        format!("{:.1}", r.e2e_s * 1e6),
+        format!("{:.2}x", base_cycles as f64 / r.breakdown.total_cycles as f64),
+        gc_cycles.to_string(),
+        gc_serial.to_string(),
+        feed_blocked.to_string(),
+        u.dsp.to_string(),
+        u.lut.to_string(),
+        if u.fits(&ALVEO_U50) { "yes".into() } else { "NO".into() },
+    ]);
+    points.push(obj(vec![
+        ("p_edge", Value::Num(arch.p_edge as f64)),
+        ("p_node", Value::Num(arch.p_node as f64)),
+        ("p_gc", Value::Num(arch.p_gc as f64)),
+        ("build_site", Value::from(site.to_string())),
+        ("total_cycles", Value::Num(r.breakdown.total_cycles as f64)),
+        ("e2e_us", Value::Num(r.e2e_s * 1e6)),
+        ("gc_cycles", Value::Num(gc_cycles as f64)),
+        ("gc_serialized_cycles", Value::Num(gc_serial as f64)),
+        ("gc_fifo_stall_cycles", Value::Num(gc_stalls as f64)),
+        ("gc_feed_blocked", Value::Num(feed_blocked as f64)),
+        ("dsp", Value::Num(u.dsp as f64)),
+        ("lut", Value::Num(u.lut as f64)),
+        ("bram", Value::Num(u.bram as f64)),
+        ("fits_u50", Value::Bool(u.fits(&ALVEO_U50))),
+    ]));
+}
+
 fn main() {
-    println!("=== Ablation C: parallelism sweep (P_edge, P_node) ===\n");
+    println!("=== Ablation C: parallelism sweep (P_edge, P_node) x P_gc x build-site ===\n");
     let mut gen =
         EventGenerator::new(17, GeneratorConfig { mean_pileup: 90.0, ..Default::default() });
     let ev = gen.generate();
-    let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+    let g = pad_graph(&ev, &build_edges(&ev, DELTA), &DEFAULT_BUCKETS);
     println!("workload: {} nodes, {} edges\n", g.n, g.e);
 
     let mut t = Table::new(&[
         "P_edge",
         "P_node",
+        "P_gc",
+        "site",
         "total cycles",
         "E2E (us)",
         "speedup vs 1x1",
+        "GC cycles",
+        "GC serial",
+        "feed blk",
         "DSP",
         "LUT",
         "fits U50",
     ]);
+    let mut points = Vec::new();
     let mut base_cycles = 0u64;
-    for (pe, pn) in [(1usize, 1usize), (2, 1), (4, 2), (8, 4), (16, 8), (32, 16)] {
-        let arch = ArchConfig { p_edge: pe, p_node: pn, ..Default::default() };
-        let eng = DataflowEngine::new(arch.clone(), model()).unwrap();
-        let r = eng.run(&g);
-        if pe == 1 {
-            base_cycles = r.breakdown.total_cycles;
+    for (pe, pn) in [(1usize, 1usize), (4, 2), (8, 4), (16, 8)] {
+        // one host leg per (P_edge, P_node): host-build timing is P_gc-
+        // independent (the GC unit sits idle), so sweeping it would only
+        // duplicate identical timing points
+        let host_arch = ArchConfig { p_edge: pe, p_node: pn, ..Default::default() };
+        {
+            let eng = DataflowEngine::new(host_arch.clone(), model()).unwrap();
+            let r = eng.run(&g);
+            if pe == 1 {
+                base_cycles = r.breakdown.total_cycles;
+            }
+            emit_point(&mut t, &mut points, &host_arch, BuildSite::Host, &r, base_cycles);
         }
-        let u = ResourceModel::new(arch, ModelConfig::default(), 256, 12288).estimate();
-        t.row(&[
-            pe.to_string(),
-            pn.to_string(),
-            r.breakdown.total_cycles.to_string(),
-            format!("{:.1}", r.e2e_s * 1e6),
-            format!("{:.2}x", base_cycles as f64 / r.breakdown.total_cycles as f64),
-            u.dsp.to_string(),
-            u.lut.to_string(),
-            if u.fits(&ALVEO_U50) { "yes".into() } else { "NO".into() },
-        ]);
+        for p_gc in [1usize, 4, 8] {
+            let arch = ArchConfig { p_edge: pe, p_node: pn, p_gc, ..Default::default() };
+            let mut eng = DataflowEngine::new(arch.clone(), model()).unwrap();
+            eng.set_build_site(BuildSite::Fabric, DELTA).unwrap();
+            let r = eng.run(&g);
+            emit_point(&mut t, &mut points, &arch, BuildSite::Fabric, &r, base_cycles);
+        }
     }
     t.print();
     println!(
         "\nexpected shape: near-linear speedup at low parallelism, diminishing\n\
-         returns as the broadcast stream and adapter ports saturate; the paper's\n\
-         8x4 point balances speedup against U50 resources."
+         returns as the broadcast stream and adapter ports saturate; on the\n\
+         fabric legs the pipelined GC never exceeds its serialized price, and\n\
+         the per-lane feed counters show when P_gc outruns min(P_gc, P_edge)\n\
+         merge bandwidth. The paper's 8x4 point balances speedup vs U50 area."
     );
+
+    let doc = obj(vec![
+        ("bench", Value::from("ablation_parallelism")),
+        ("delta", Value::Num(DELTA as f64)),
+        ("workload_nodes", Value::Num(g.n as f64)),
+        ("workload_edges", Value::Num(g.e as f64)),
+        ("points", Value::Arr(points)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_parallelism.json");
+    std::fs::write(&out, doc.to_json()).expect("write BENCH_parallelism.json");
+    println!("wrote {}", out.display());
 }

@@ -4,9 +4,12 @@
 #   ./ci.sh            full gate: smoke tier, then fmt, lints, release
 #                      build, and the full test suite
 #   ./ci.sh --quick    smoke tier only: compile the benches (including
-#                      graphbuild_overlap), run the golden-vector
-#                      conformance suite, and run the GC-vs-host
-#                      edge-set equality tests — numeric or graph-set
+#                      graphbuild_overlap and the extended p_gc x p_edge
+#                      x build-site parallelism sweep), run the
+#                      golden-vector conformance suite, the GC-vs-host
+#                      edge-set equality tests, the pipelined-vs-serialized
+#                      GC schedule property, and a `--build-site fabric`
+#                      serve smoke — numeric, graph-set, or GC timing
 #                      regressions fail fast before the full test run
 #
 # Requires a Rust toolchain >= 1.74 (full gate also needs rustfmt and
@@ -17,7 +20,7 @@ cd "$(dirname "$0")"
 quick=0
 [[ "${1:-}" == "--quick" ]] && quick=1
 
-echo "==> cargo bench --no-run (benches must compile, incl. graphbuild_overlap)"
+echo "==> cargo bench --no-run (benches must compile, incl. graphbuild_overlap + parallelism sweep)"
 cargo bench --no-run
 
 echo "==> cargo test --test golden (golden-vector conformance suite)"
@@ -26,6 +29,13 @@ cargo test -q --test golden
 echo "==> GC-vs-host edge-set equality (smoke tier)"
 cargo test -q --lib gc_edge_set
 cargo test -q --test properties prop_fabric_gc_edge_set_equals_host
+
+echo "==> pipelined GC schedule never slower than the PR 3 barrier (smoke tier)"
+cargo test -q --test properties prop_gc_pipelined_discovery_never_slower_than_serialized
+cargo test -q --lib gc_pipelined_engine_never_slower_than_serialized
+
+echo "==> serve smoke: --build-site fabric (GC timing/edge-set regressions)"
+cargo run -q -- serve --events 20 --backend fpga --build-site fabric --workers 2 --pileup 30
 
 if [[ "$quick" == 1 ]]; then
     echo "CI OK (quick smoke tier)"

@@ -115,6 +115,11 @@ pub struct ArchConfig {
     pub gc_bin_depth: usize,
     /// GC compare-lane initiation interval (cycles per candidate pair).
     pub gc_lane_ii: usize,
+    /// Per-lane GC edge-FIFO depth (entries) between each compare lane and
+    /// the round-robin merge at the layer-0 MP boundary. A full lane FIFO
+    /// stalls the owning compare lane (backpressure), so this bounds the
+    /// edge store the GC unit needs on-chip.
+    pub gc_fifo_depth: usize,
 }
 
 impl Default for ArchConfig {
@@ -134,6 +139,7 @@ impl Default for ArchConfig {
             p_gc: 4,
             gc_bin_depth: 16,
             gc_lane_ii: 1,
+            gc_fifo_depth: 64,
         }
     }
 }
@@ -166,6 +172,7 @@ impl ArchConfig {
             p_gc: g_us("p_gc", d.p_gc)?,
             gc_bin_depth: g_us("gc_bin_depth", d.gc_bin_depth)?,
             gc_lane_ii: g_us("gc_lane_ii", d.gc_lane_ii)?,
+            gc_fifo_depth: g_us("gc_fifo_depth", d.gc_fifo_depth)?,
         };
         c.validate()?;
         Ok(c)
@@ -183,6 +190,7 @@ impl ArchConfig {
         anyhow::ensure!(self.p_gc >= 1, "need >= 1 GC compare lane");
         anyhow::ensure!(self.gc_bin_depth >= 1, "GC bin depth >= 1");
         anyhow::ensure!(self.gc_lane_ii >= 1, "GC lane II >= 1");
+        anyhow::ensure!(self.gc_fifo_depth >= 1, "GC lane FIFO depth >= 1");
         Ok(())
     }
 
@@ -343,13 +351,18 @@ mod tests {
         assert_eq!(a.p_gc, ArchConfig::default().p_gc);
         assert_eq!(a.gc_bin_depth, ArchConfig::default().gc_bin_depth);
         assert_eq!(a.gc_lane_ii, ArchConfig::default().gc_lane_ii);
+        assert_eq!(a.gc_fifo_depth, ArchConfig::default().gc_fifo_depth);
     }
 
     #[test]
     fn arch_gc_fields_from_json_and_validation() {
-        let v = json::parse(r#"{"p_gc": 8, "gc_bin_depth": 32, "gc_lane_ii": 2}"#).unwrap();
+        let v = json::parse(
+            r#"{"p_gc": 8, "gc_bin_depth": 32, "gc_lane_ii": 2, "gc_fifo_depth": 16}"#,
+        )
+        .unwrap();
         let a = ArchConfig::from_json(&v).unwrap();
         assert_eq!((a.p_gc, a.gc_bin_depth, a.gc_lane_ii), (8, 32, 2));
+        assert_eq!(a.gc_fifo_depth, 16);
         let mut bad = ArchConfig::default();
         bad.p_gc = 0;
         assert!(bad.validate().is_err());
@@ -358,6 +371,9 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = ArchConfig::default();
         bad.gc_lane_ii = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ArchConfig::default();
+        bad.gc_fifo_depth = 0;
         assert!(bad.validate().is_err());
     }
 

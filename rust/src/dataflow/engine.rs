@@ -2,8 +2,13 @@
 //! double-buffered NE banks into the full per-layer dataflow (paper Fig. 4)
 //! and accounts cycles at 200 MHz. With [`BuildSite::Fabric`] the
 //! [`super::gc_unit`] GC unit joins the fabric: graph construction runs
-//! on-chip, overlapped with the embed stage, and streams edges into the
-//! layer-0 MP units as they are discovered.
+//! on-chip, overlapped with the embed stage (and, under the default
+//! [`GcSchedule::Pipelined`], with its own bin phase), and streams edges
+//! into the layer-0 MP units as they are discovered — through bounded
+//! per-lane edge FIFOs whose round-robin merge delivers up to
+//! min(P_gc, P_edge) edges per cycle, and whose full-FIFO backpressure
+//! stalls the owning compare lane (measured per lane in the layer-0
+//! [`LayerStats`] and folded back into [`GcStats`]).
 //!
 //! The engine is **functional and timed at once**: every simulated edge
 //! message is really computed (via the model weights) at the cycle it
@@ -31,7 +36,8 @@ use crate::model::{L1DeepMetV2, Mat, ModelOutput};
 use super::adapter::Adapter;
 use super::broadcast::{BroadcastAction, BroadcastUnit};
 use super::buffers::DoubleBuffer;
-use super::gc_unit::{BuildSite, GcRun, GcStats, GcUnit};
+use super::fifo::Fifo;
+use super::gc_unit::{BuildSite, GcRun, GcSchedule, GcStats, GcUnit};
 use super::mp_unit::{MpEvent, MpUnit};
 use super::nt_unit::NtUnit;
 
@@ -107,12 +113,26 @@ pub struct LayerStats {
     pub fifo_max_occupancy: usize,
     /// multicast-bus mode: total deliveries the bus serialised
     pub bus_deliveries: u64,
-    /// fabric build, layer 0 only: cycles the GC edge FIFO head waited on a
-    /// full MP capture buffer
+    /// fabric build, layer 0 only: cycles a GC edge-FIFO head waited on a
+    /// full MP capture buffer or a busy MP write port (summed over lanes;
+    /// see `gc_lane_feed_blocked` for the per-lane measurement)
     pub gc_feed_blocked: u64,
     /// fabric build, layer 0 only: high-water mark of edges discovered but
-    /// not yet delivered to an MP unit (the GC edge FIFO occupancy)
+    /// not yet delivered to an MP unit (max over the per-lane edge FIFOs;
+    /// see `gc_lane_fifo_max_occupancy` for the per-lane measurement)
     pub gc_fifo_max_occupancy: usize,
+    /// fabric build, layer 0, [`GcSchedule::Pipelined`] only: per-lane
+    /// blocked-delivery cycles of each GC edge FIFO's head
+    pub gc_lane_feed_blocked: Vec<u64>,
+    /// per-lane GC edge-FIFO occupancy high-water marks
+    pub gc_lane_fifo_max_occupancy: Vec<usize>,
+    /// per-lane cycles the owning compare lane sat stalled on its full
+    /// edge FIFO (the backpressure chain reaching into the GC unit)
+    pub gc_lane_stall_cycles: Vec<u64>,
+    /// per-lane fabric cycle at which the lane's last edge actually
+    /// entered its FIFO (a direct measurement from the feed; 0 for lanes
+    /// that emitted nothing)
+    pub gc_lane_last_emit_cycle: Vec<u64>,
     /// occupancy timeline (only when the engine's trace sampling is on)
     pub timeline: Vec<TimelineSample>,
 }
@@ -188,6 +208,12 @@ pub struct DataflowEngine {
     ///
     /// [`set_build_site`]: DataflowEngine::set_build_site
     gc_delta: f32,
+    /// GC bin/compare phase schedule (fabric build only). The default
+    /// [`GcSchedule::Pipelined`] overlaps binning with comparing and feeds
+    /// layer 0 through bounded per-lane edge FIFOs with a round-robin
+    /// merge; [`GcSchedule::Serialized`] keeps the PR 3 barrier schedule
+    /// and its single merged 1-edge-per-cycle feed, as a measured baseline.
+    pub gc_schedule: GcSchedule,
     /// When Some(k), sample the fabric occupancy every k cycles into
     /// LayerStats::timeline (costs a few % of simulator speed; off in
     /// benches, on in the dataflow_trace example).
@@ -215,6 +241,7 @@ impl DataflowEngine {
             mode,
             build_site: BuildSite::Host,
             gc_delta: 0.8,
+            gc_schedule: GcSchedule::default(),
             trace_sample_every: None,
             max_cycles_per_layer: 500_000_000,
         })
@@ -232,10 +259,9 @@ impl DataflowEngine {
     /// bit-identity assertion fires at run time.
     pub fn set_build_site(&mut self, site: BuildSite, delta: f32) -> anyhow::Result<()> {
         if site == BuildSite::Fabric {
-            anyhow::ensure!(
-                delta > 0.0 && delta.is_finite(),
-                "fabric graph construction needs a positive finite delta, got {delta}"
-            );
+            // shared typed validation with direct GcUnit users: a bad delta
+            // is a reported GcDeltaError, never a panic
+            GcUnit::from_arch(&self.arch, delta).map_err(anyhow::Error::from)?;
         }
         self.build_site = site;
         self.gc_delta = delta;
@@ -283,7 +309,11 @@ impl DataflowEngine {
         // schedule gates when layer 0 may issue each edge.
         let gc: Option<GcRun> = match self.build_site {
             BuildSite::Host => None,
-            BuildSite::Fabric => Some(GcUnit::from_arch(&self.arch, self.gc_delta).run(g)),
+            BuildSite::Fabric => Some(
+                GcUnit::from_arch(&self.arch, self.gc_delta)
+                    .expect("gc delta validated by set_build_site")
+                    .run_scheduled(g, self.gc_schedule),
+            ),
         };
 
         // --- embedding stage (NT units, formula-timed, functional) --------
@@ -313,11 +343,40 @@ impl DataflowEngine {
             + breakdown.head_cycles
             + breakdown.swap_cycles;
         if let Some(gcr) = gc {
+            let mut gstats = gcr.stats.clone();
+            // Fold the layer-0 feed's measured backpressure into the GC
+            // stage accounting: a full lane FIFO stalled the owning compare
+            // lane, shifting its whole remaining schedule (emissions AND
+            // the trailing negative compares after its last edge).
+            let mut gc_finish = gstats.total_cycles;
+            if let Some(l0) = breakdown.layers.first() {
+                if !l0.gc_lane_stall_cycles.is_empty() {
+                    gstats.fifo_stall_cycles = l0.gc_lane_stall_cycles.iter().sum();
+                    // the feed records each lane's last FIFO push directly
+                    gstats.emit_end_cycle = gstats
+                        .emit_end_cycle
+                        .max(l0.gc_lane_last_emit_cycle.iter().copied().max().unwrap_or(0));
+                    // a lane's actual finish is its compare end shifted by
+                    // its final stall (stalls stop growing once the lane's
+                    // last edge is pushed, and only compares remain after)
+                    gc_finish = gcr
+                        .lane_end
+                        .iter()
+                        .zip(&l0.gc_lane_stall_cycles)
+                        .map(|(&end, &stall)| end + stall)
+                        .max()
+                        .unwrap_or(0)
+                        .max(gstats.bin_cycles);
+                }
+            }
             // Graphs too small to hide the GC behind embed + layer 0 (e.g.
             // edge-free events): the decision cannot issue before the GC
-            // unit has confirmed the final edge, so GC is the critical path.
-            breakdown.total_cycles = breakdown.total_cycles.max(gcr.stats.total_cycles);
-            breakdown.gc = Some(gcr.stats);
+            // unit has confirmed the final (possibly negative) compare, so
+            // the GC's *measured* finish — backpressure shifts included —
+            // bounds the critical path. (gstats.total_cycles stays the
+            // unconstrained discovery-schedule end, as documented.)
+            breakdown.total_cycles = breakdown.total_cycles.max(gc_finish);
+            breakdown.gc = Some(gstats);
         }
 
         let compute_s = breakdown.total_cycles as f64 * self.arch.cycle_s();
@@ -357,12 +416,15 @@ impl DataflowEngine {
     /// writes the next embeddings into ne.write().
     ///
     /// `gc` (layer 0, fabric build only) is the GC unit's edge-discovery
-    /// schedule: edges stream from the GC FIFO into the MP capture buffers
-    /// as they are discovered (one per cycle, head-of-line on a full
-    /// buffer), replacing broadcast capture for this layer — the GC unit
-    /// already knows both endpoints, and the MP units read them from the
-    /// local NE banks. `cycle_offset` is the fabric cycle at which this
-    /// layer starts (GC ready cycles are absolute, from event start).
+    /// schedule: edges stream from the per-lane GC edge FIFOs into the MP
+    /// capture buffers as they are discovered (round-robin merge, up to
+    /// min(P_gc, P_edge) per cycle, one per MP write port; a full lane
+    /// FIFO stalls the owning compare lane — under the serialized PR 3
+    /// baseline, one merged feed drained at 1 edge/cycle instead),
+    /// replacing broadcast capture for this layer — the GC unit already
+    /// knows both endpoints, and the MP units read them from the local NE
+    /// banks. `cycle_offset` is the fabric cycle at which this layer
+    /// starts (GC ready cycles are absolute, from event start).
     fn run_layer(
         &self,
         l: usize,
@@ -448,20 +510,39 @@ impl DataflowEngine {
             }
         }
 
-        // GC edge feed (fabric build, layer 0): live edges in discovery
-        // order. `feed_seen` tracks how many have been discovered by the
-        // current cycle (the FIFO tail), `feed_next` how many have been
-        // delivered (the FIFO head) — occupancy is the difference.
+        // GC edge feed (fabric build, layer 0). Pipelined schedule: each
+        // compare lane pushes its discovered edges into its own bounded
+        // FIFO, drained by a round-robin merge at the MP boundary
+        // ([`GcFeed`] below). Serialized schedule (PR 3 baseline): one
+        // merged feed in global discovery order, drained at 1 edge/cycle —
+        // `feed_seen` tracks how many edges have been discovered by the
+        // current cycle (the feed tail), `feed_next` how many have been
+        // delivered (the head); occupancy is the difference.
+        let mut lane_feed: Option<GcFeed> = match (gc, self.gc_schedule) {
+            (Some(gcr), GcSchedule::Pipelined) => Some(GcFeed::new(
+                gcr,
+                g,
+                self.arch.p_gc.max(1),
+                self.arch.gc_fifo_depth.max(1),
+                p_edge,
+            )),
+            _ => None,
+        };
         let mut feed: Vec<(u64, u32)> = Vec::new();
         if let Some(gcr) = gc {
-            for k in 0..g.e {
-                if g.edge_mask[k] == 0.0 {
-                    continue;
+            if lane_feed.is_none() {
+                for k in 0..g.e {
+                    if g.edge_mask[k] == 0.0 {
+                        continue;
+                    }
+                    debug_assert!(
+                        gcr.ready_cycle[k] != u64::MAX,
+                        "undiscovered live edge {k}"
+                    );
+                    feed.push((gcr.ready_cycle[k], k as u32));
                 }
-                debug_assert!(gcr.ready_cycle[k] != u64::MAX, "undiscovered live edge {k}");
-                feed.push((gcr.ready_cycle[k], k as u32));
+                feed.sort_unstable();
             }
-            feed.sort_unstable();
         }
         let mut feed_next = 0usize;
         let mut feed_seen = 0usize;
@@ -555,12 +636,20 @@ impl DataflowEngine {
                 }
             }
 
-            // 4. Edge/embedding delivery. GC-fed layer: the edge FIFO
-            //    streams one discovered edge per cycle into the owning MP
-            //    unit's capture buffer (head-of-line blocking when that
-            //    buffer is full — the fabric's backpressure chain reaches
-            //    the GC unit).
-            if gc.is_some() {
+            // 4. Edge/embedding delivery. GC-fed layer, pipelined: the
+            //    compare lanes emit into their bounded per-lane FIFOs
+            //    (advance_to, covering the embed-stage cycles on the first
+            //    iteration — a full FIFO stalls the owning lane), and the
+            //    round-robin merge delivers up to min(P_gc, P_edge) edges
+            //    into the MP capture buffers, one per MP write port per
+            //    cycle. Serialized baseline: one merged unbounded feed
+            //    drained at 1 edge/cycle, head-of-line on a full capture
+            //    buffer — exactly the PR 3 model.
+            if let Some(f) = lane_feed.as_mut() {
+                let now = cycle_offset + cycles;
+                f.advance_to(now);
+                f.deliver(&mut mps, p_edge);
+            } else if gc.is_some() {
                 let now = cycle_offset + cycles;
                 while feed_seen < feed.len() && feed[feed_seen].0 <= now {
                     feed_seen += 1;
@@ -624,6 +713,18 @@ impl DataflowEngine {
             timeline,
             ..Default::default()
         };
+        if let Some(f) = lane_feed.take() {
+            debug_assert!(f.all_delivered(), "layer ended with undelivered GC edges");
+            for lane in &f.lanes {
+                stats.gc_feed_blocked += lane.blocked;
+                stats.gc_fifo_max_occupancy =
+                    stats.gc_fifo_max_occupancy.max(lane.fifo.max_occupancy);
+                stats.gc_lane_feed_blocked.push(lane.blocked);
+                stats.gc_lane_fifo_max_occupancy.push(lane.fifo.max_occupancy);
+                stats.gc_lane_stall_cycles.push(lane.stall);
+                stats.gc_lane_last_emit_cycle.push(lane.last_push);
+            }
+        }
         for mp in &mps {
             stats.mp_busy_cycles += mp.busy_cycles;
             stats.mp_idle_cycles += mp.idle_cycles;
@@ -644,6 +745,137 @@ impl DataflowEngine {
 /// Does this MP unit have any edge targeting v? (multicast-bus need set)
 fn mp_needs(mp: &MpUnit, v: u32) -> bool {
     mp.has_target(v)
+}
+
+/// One GC compare lane's edge stream into layer 0: its discovery schedule
+/// (from [`GcRun`]), a cumulative backpressure shift, and the bounded edge
+/// FIFO between the lane and the merge.
+struct GcLane {
+    /// (discovery cycle, edge id, owning MP unit) in discovery order —
+    /// within a lane the cycles are strictly increasing, so at most one
+    /// edge becomes due per cycle.
+    feed: Vec<(u64, u32, u32)>,
+    /// next feed entry still inside the compare lane
+    next: usize,
+    /// cycles this lane's remaining schedule has been pushed back by full-
+    /// FIFO stalls (the lane cannot compare while its emission waits)
+    stall: u64,
+    /// (edge id, owning MP unit) entries awaiting the merge
+    fifo: Fifo<(u32, u32)>,
+    /// cycles this lane's FIFO head waited on the merge (full MP capture
+    /// buffer, busy MP write port, or merge bandwidth)
+    blocked: u64,
+    /// fabric cycle of this lane's most recent successful FIFO push
+    /// (directly measured; 0 until the lane emits)
+    last_push: u64,
+}
+
+/// Fabric-build layer-0 edge feed under [`GcSchedule::Pipelined`]: per-lane
+/// bounded FIFOs between the GC compare lanes and the MP capture buffers,
+/// drained by a round-robin merge delivering up to min(P_gc, P_edge) edges
+/// per cycle (one per MP write port). A full lane FIFO stalls the owning
+/// compare lane, shifting that lane's remaining discovery schedule — the
+/// backpressure chain the GC module doc promises, now measured per lane.
+struct GcFeed {
+    lanes: Vec<GcLane>,
+    /// fabric cycles already simulated for the lane→FIFO emissions
+    clock: u64,
+    /// round-robin merge pointer
+    rr: usize,
+    /// per-MP write-port-in-use scratch (one injection per MP per cycle)
+    port_used: Vec<bool>,
+}
+
+impl GcFeed {
+    fn new(
+        gcr: &GcRun,
+        g: &PaddedGraph,
+        p_gc: usize,
+        fifo_depth: usize,
+        p_edge: usize,
+    ) -> GcFeed {
+        let mut lanes: Vec<GcLane> = (0..p_gc)
+            .map(|_| GcLane {
+                feed: Vec::new(),
+                next: 0,
+                stall: 0,
+                fifo: Fifo::new(fifo_depth),
+                blocked: 0,
+                last_push: 0,
+            })
+            .collect();
+        for k in 0..g.e {
+            if g.edge_mask[k] == 0.0 {
+                continue;
+            }
+            debug_assert!(gcr.ready_cycle[k] != u64::MAX, "undiscovered live edge {k}");
+            let src = g.src[k] as usize;
+            lanes[src % p_gc]
+                .feed
+                .push((gcr.ready_cycle[k], k as u32, (src % p_edge) as u32));
+        }
+        for lane in &mut lanes {
+            lane.feed.sort_unstable();
+        }
+        GcFeed { lanes, clock: 0, rr: 0, port_used: vec![false; p_edge] }
+    }
+
+    /// Simulate the lane→FIFO emissions up to fabric cycle `now` (the first
+    /// layer-0 iteration fast-forwards through the embed stage, during
+    /// which the FIFOs fill with no consumer). One emission per lane per
+    /// cycle; a full FIFO stalls the lane, pushing its remaining schedule
+    /// back one cycle.
+    fn advance_to(&mut self, now: u64) {
+        while self.clock < now {
+            self.clock += 1;
+            let t = self.clock;
+            for lane in &mut self.lanes {
+                let Some(&(ready, k, mp)) = lane.feed.get(lane.next) else {
+                    continue;
+                };
+                if ready + lane.stall > t {
+                    continue;
+                }
+                if lane.fifo.push((k, mp)) {
+                    lane.next += 1;
+                    lane.last_push = t;
+                } else {
+                    lane.stall += 1; // compare lane stalled this cycle
+                }
+            }
+        }
+    }
+
+    /// One merge cycle: round-robin over the lane FIFO heads, delivering up
+    /// to min(P_gc, P_edge) edges into the MP capture buffers, at most one
+    /// per MP write port. Waiting heads count their blocked cycles.
+    fn deliver(&mut self, mps: &mut [MpUnit], p_edge: usize) {
+        let width = self.lanes.len().min(p_edge);
+        self.port_used.fill(false);
+        let mut delivered = 0usize;
+        let n_lanes = self.lanes.len();
+        for off in 0..n_lanes {
+            let j = (self.rr + off) % n_lanes;
+            let lane = &mut self.lanes[j];
+            let Some(&(k, mp)) = lane.fifo.peek() else { continue };
+            let mp = mp as usize;
+            if delivered < width && !self.port_used[mp] && mps[mp].try_inject(k) {
+                lane.fifo.pop();
+                self.port_used[mp] = true;
+                delivered += 1;
+            } else {
+                lane.blocked += 1;
+            }
+        }
+        self.rr = (self.rr + 1) % n_lanes;
+    }
+
+    /// Every discovered edge has left its lane FIFO for an MP unit.
+    fn all_delivered(&self) -> bool {
+        self.lanes
+            .iter()
+            .all(|l| l.next == l.feed.len() && l.fifo.is_empty())
+    }
 }
 
 #[cfg(test)]
@@ -876,7 +1108,34 @@ mod tests {
         let gc = fabric.breakdown.gc.as_ref().expect("fabric build runs the GC unit");
         assert!(gc.total_cycles > 0);
         assert_eq!(gc.edges_emitted as usize, g.e);
-        assert_eq!(gc.bin_cycles + gc.compare_cycles, gc.total_cycles);
+        // bin and compare phases overlap (no barrier), and the pipelined
+        // schedule never exceeds the PR 3 barrier schedule
+        assert!(gc.total_cycles <= gc.bin_cycles + gc.compare_cycles);
+        assert!(gc.total_cycles <= gc.serialized_total_cycles);
+        // the layer-0 feed measured real per-lane backpressure state
+        let l0 = &fabric.breakdown.layers[0];
+        let p_gc = ArchConfig::default().p_gc;
+        assert_eq!(l0.gc_lane_fifo_max_occupancy.len(), p_gc);
+        assert_eq!(l0.gc_lane_feed_blocked.len(), p_gc);
+        assert_eq!(l0.gc_lane_stall_cycles.len(), p_gc);
+        assert_eq!(l0.gc_lane_last_emit_cycle.len(), p_gc);
+        assert_eq!(
+            l0.gc_feed_blocked,
+            l0.gc_lane_feed_blocked.iter().sum::<u64>(),
+            "aggregate is the sum of the per-lane measurements"
+        );
+        assert_eq!(
+            l0.gc_fifo_max_occupancy,
+            l0.gc_lane_fifo_max_occupancy.iter().copied().max().unwrap(),
+        );
+        assert_eq!(gc.fifo_stall_cycles, l0.gc_lane_stall_cycles.iter().sum::<u64>());
+        // the reported last emission is the feed's direct measurement
+        assert!(gc.emit_end_cycle > 0, "edges were emitted, so the last-emit cycle is set");
+        assert_eq!(
+            gc.emit_end_cycle,
+            l0.gc_lane_last_emit_cycle.iter().copied().max().unwrap(),
+            "emit_end_cycle is the measured last FIFO push"
+        );
         // Overlap, not summation: the fabric timeline is strictly shorter
         // than serialising GC in front of the host-build compute.
         assert!(
@@ -957,6 +1216,97 @@ mod tests {
         assert_eq!(sim.output.weights, exp.weights);
         // depth-2 capture buffers force the GC FIFO to wait at least once
         assert!(sim.breakdown.layers[0].gc_feed_blocked > 0);
+    }
+
+    #[test]
+    fn gc_pipelined_engine_never_slower_than_serialized() {
+        // The PR's headline regression gate: against the preserved PR 3
+        // barrier schedule (serialized bin -> compare, single merged
+        // 1-edge-per-cycle feed), the pipelined GC keeps the output
+        // bit-identical and the fabric timeline at least as short.
+        let reference = reference_arith(Arith::F32);
+        let pipelined = fabric_engine(Arith::F32);
+        let mut serialized = fabric_engine(Arith::F32);
+        serialized.gc_schedule = super::GcSchedule::Serialized;
+        for seed in [1u64, 2, 3, 5, 9, 12, 13] {
+            let g = sample(seed);
+            let p = pipelined.run(&g);
+            let s = serialized.run(&g);
+            let exp = reference.forward(&g);
+            // the schedule moves cycles, never the math
+            assert_eq!(p.output.weights, s.output.weights, "seed {seed}");
+            assert_eq!(p.output.weights, exp.weights, "seed {seed}");
+            assert_eq!(p.output.met_xy, s.output.met_xy, "seed {seed}");
+            // and never backwards: pipelined is at least as fast end to end
+            assert!(
+                p.breakdown.total_cycles <= s.breakdown.total_cycles,
+                "seed {seed}: pipelined {} !<= serialized {}",
+                p.breakdown.total_cycles,
+                s.breakdown.total_cycles
+            );
+            let pg = p.breakdown.gc.as_ref().unwrap();
+            let sg = s.breakdown.gc.as_ref().unwrap();
+            assert!(pg.total_cycles <= sg.total_cycles, "seed {seed}");
+            assert_eq!(pg.serialized_total_cycles, sg.total_cycles, "seed {seed}");
+            assert_eq!(pg.edges_emitted, sg.edges_emitted, "seed {seed}");
+            // the serialized baseline keeps the PR 3 phase identity
+            assert_eq!(sg.bin_cycles + sg.compare_cycles, sg.total_cycles);
+        }
+    }
+
+    #[test]
+    fn gc_tiny_lane_fifo_backpressure_stalls_lanes_not_math() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 11);
+        let arch = ArchConfig { gc_fifo_depth: 1, ..Default::default() };
+        let mut eng =
+            DataflowEngine::new(arch, L1DeepMetV2::new(cfg, w).unwrap()).unwrap();
+        eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+        let g = sample(7);
+        let sim = eng.run(&g);
+        let exp = reference_arith(Arith::F32).forward(&g);
+        assert_eq!(sim.output.weights, exp.weights);
+        let gc = sim.breakdown.gc.as_ref().unwrap();
+        // depth-1 lane FIFOs with no consumer during the embed stage stall
+        // the compare lanes: the last edge enters its FIFO well after the
+        // unconstrained discovery schedule says it was found
+        assert!(gc.fifo_stall_cycles > 0, "depth-1 lane FIFOs must stall");
+        assert!(gc.emit_end_cycle > gc.total_cycles);
+        let l0 = &sim.breakdown.layers[0];
+        assert!(l0.gc_lane_stall_cycles.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn gc_edge_free_event_makes_gc_the_critical_path() {
+        // An edge-free event with heavy compare work: the fabric has no
+        // layer-0 edges to hide the GC behind, so the decision waits for
+        // the GC unit's final (negative) compare — the
+        // `total_cycles.max(gc.total_cycles)` critical-path branch.
+        let ev = crate::physics::event::test_fixtures::lattice_event_spacing_0p9();
+        let graph = build_edges(&ev, 0.8);
+        assert_eq!(graph.n_edges(), 0, "lattice spacing must defeat the radius");
+        let g = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 11);
+        let arch = ArchConfig { p_gc: 1, gc_lane_ii: 128, ..Default::default() };
+        let mut eng =
+            DataflowEngine::new(arch, L1DeepMetV2::new(cfg, w).unwrap()).unwrap();
+        eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+        let sim = eng.run(&g);
+        let gc = sim.breakdown.gc.as_ref().expect("fabric build runs the GC unit");
+        assert_eq!(gc.edges_emitted, 0);
+        assert!(gc.pairs_compared > 0, "window mates must be compared");
+        let stage_sum = sim.breakdown.embed_cycles
+            + sim.breakdown.layers.iter().map(|s| s.cycles).sum::<u64>()
+            + sim.breakdown.head_cycles
+            + sim.breakdown.swap_cycles;
+        assert!(
+            gc.total_cycles > stage_sum,
+            "GC must dominate: {} !> {stage_sum}",
+            gc.total_cycles
+        );
+        assert_eq!(sim.breakdown.total_cycles, gc.total_cycles);
+        assert!(sim.output.met().is_finite());
     }
 
     #[test]

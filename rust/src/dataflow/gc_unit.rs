@@ -4,7 +4,8 @@
 //! the simulated fabric).
 //!
 //! Architecture (binned neighbour search, after Neu et al., "Real-time
-//! Graph Building on FPGAs", arXiv:2307.07289):
+//! Graph Building on FPGAs", arXiv:2307.07289 — who overlap binning with
+//! pair comparison instead of serialising the two phases):
 //!
 //! 1. **Bin engine** — particles stream in one per cycle and are hashed
 //!    into the η-φ grid (cell size >= δ, the *same* grid as the host
@@ -15,19 +16,38 @@
 //! 2. **`P_gc` pair-compare lanes** — lane j owns particles {u : u mod
 //!    P_gc == j}. For each owned particle the lane walks the 3x3 cell
 //!    neighbourhood and evaluates Eq. 1 for every candidate pair at an
-//!    initiation interval of `gc_lane_ii` cycles. Every simulated compare
-//!    **really evaluates** [`delta_r2`] — the GC edge set is asserted
-//!    bit-identical to the host `build_edges` set, never re-derived from a
-//!    separate code path.
-//! 3. **Edge FIFO** — discovered edges are emitted into a FIFO that feeds
-//!    the first GNN layer's MP units (layer 0 everywhere in this crate)
-//!    *as edges are discovered* (see [`super::engine::DataflowEngine`]):
-//!    graph construction overlaps the embedding stage and layer-0 message
-//!    passing instead of serialising build -> infer.
+//!    initiation interval of `gc_lane_ii` cycles. Under the default
+//!    [`GcSchedule::Pipelined`] a lane may start comparing particle `u` as
+//!    soon as every cell of `u`'s 3x3 neighbourhood holds its final
+//!    contents — binning and comparing overlap; there is no global
+//!    end-of-binning barrier. [`GcSchedule::Serialized`] keeps the PR 3
+//!    barrier as a measured baseline, and
+//!    [`GcStats::serialized_total_cycles`] carries the barrier schedule's
+//!    cost on every run so the pipelining win is checkable per event.
+//!    Every simulated compare **really evaluates** [`delta_r2`] — the GC
+//!    edge set is asserted bit-identical to the host `build_edges` set,
+//!    never re-derived from a separate code path, under either schedule.
+//! 3. **Per-lane edge FIFOs** — each compare lane emits its discovered
+//!    edges into its own bounded FIFO ([`gc_fifo_depth`]); a round-robin
+//!    merge at the MP boundary delivers up to min(P_gc, P_edge) edges per
+//!    cycle (one per MP-unit write port) into the layer-0 capture buffers.
+//!    A full lane FIFO stalls the owning compare lane — the fabric's
+//!    backpressure chain reaches each GC lane individually. The FIFO and
+//!    merge timing live in [`super::engine::DataflowEngine`], which
+//!    consumes the discovery schedule computed here: this unit reports the
+//!    unconstrained schedule (free-draining consumer), and the engine
+//!    folds the measured backpressure back into [`GcStats`]
+//!    (`fifo_stall_cycles`, `emit_end_cycle`) and the per-lane feed
+//!    counters on the layer-0 [`super::engine::LayerStats`].
 //!
 //! Functional/timing coupling follows the engine's discipline: the unit
 //! computes real edges at the cycles it claims, so the timing model can
-//! never drift from the math.
+//! never drift from the math. The pipelined schedule is provably never
+//! slower than the serialised one — a lane starts every particle no later
+//! than the barrier schedule would, and spends the same compare cycles —
+//! which the property suite asserts across random events and GC shapes.
+//!
+//! [`gc_fifo_depth`]: crate::config::ArchConfig::gc_fifo_depth
 
 use std::collections::HashMap;
 
@@ -58,18 +78,79 @@ impl std::fmt::Display for BuildSite {
     }
 }
 
+/// How the GC unit's bin and compare phases are scheduled.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GcSchedule {
+    /// PR 3 baseline: every compare lane waits for the global end of
+    /// binning before its first pair (bin -> barrier -> compare).
+    Serialized,
+    /// A lane starts comparing particle u as soon as u's 3x3 neighbourhood
+    /// cells are fully binned (Neu et al. overlap binning and comparing).
+    /// Never slower than [`GcSchedule::Serialized`]; the default.
+    #[default]
+    Pipelined,
+}
+
+impl std::fmt::Display for GcSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GcSchedule::Serialized => write!(f, "serialized"),
+            GcSchedule::Pipelined => write!(f, "pipelined"),
+        }
+    }
+}
+
+/// Typed error for an invalid GC ΔR radius (non-positive or non-finite) —
+/// the `Format::try_new` precedent: construction reports instead of
+/// asserting, and the pipeline surfaces it through a typed
+/// [`crate::pipeline::PipelineError`] instead of aborting mid-serve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GcDeltaError {
+    pub delta: f32,
+}
+
+impl std::fmt::Display for GcDeltaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "GC graph radius delta must be positive and finite, got {}",
+            self.delta
+        )
+    }
+}
+
+impl std::error::Error for GcDeltaError {}
+
 /// Cycle/activity accounting of one GC pass.
 #[derive(Clone, Debug, Default)]
 pub struct GcStats {
     /// Binning phase length (one particle per cycle + spill penalties).
     pub bin_cycles: u64,
-    /// Compare phase length (slowest lane; starts after binning).
+    /// Compare phase span: from the first pair issued to the last lane's
+    /// final compare. Under [`GcSchedule::Serialized`] the phase starts at
+    /// `bin_cycles`, so `bin_cycles + compare_cycles == total_cycles`;
+    /// under [`GcSchedule::Pipelined`] the phases overlap and
+    /// `total_cycles <= bin_cycles + compare_cycles`.
     pub compare_cycles: u64,
-    /// bin_cycles + compare_cycles: when the last edge enters the FIFO.
+    /// Discovery-schedule end: the cycle the last lane finishes (with a
+    /// free-draining consumer — backpressure from full lane FIFOs is
+    /// measured by the engine into `fifo_stall_cycles`/`emit_end_cycle`).
     pub total_cycles: u64,
+    /// What the PR 3 barrier schedule would cost for this event (always
+    /// computed, whichever schedule ran): `total_cycles` never exceeds it.
+    pub serialized_total_cycles: u64,
+    /// Engine-filled: sum over lanes of cycles a compare lane sat stalled
+    /// on its full edge FIFO (0 until an engine run measures the feed).
+    pub fifo_stall_cycles: u64,
+    /// The cycle the last discovered edge entered its lane FIFO. From
+    /// `run_scheduled` this is the unconstrained discovery value (the
+    /// largest `ready_cycle`; 0 with no edges); an engine run replaces it
+    /// with the feed's directly measured last push, which backpressure
+    /// stalls can only move later.
+    pub emit_end_cycle: u64,
     /// Candidate pairs evaluated through the ΔR² datapath (all lanes).
     pub pairs_compared: u64,
-    /// Edges streamed into the layer-0 edge FIFO.
+    /// Edges streamed into the layer-0 edge FIFOs.
     pub edges_emitted: u64,
     /// Edges discovered on-fabric but absent from the padded edge list
     /// (the host-side padding truncated them; the fabric edge store
@@ -77,9 +158,11 @@ pub struct GcStats {
     pub edges_dropped: u64,
     /// Particles that spilled past `gc_bin_depth` during binning.
     pub bin_overflows: u64,
-    /// Sum over lanes of cycles spent comparing.
+    /// Sum over lanes of cycles spent comparing (schedule-independent).
     pub lane_busy_cycles: u64,
-    /// Sum over lanes of cycles spent waiting for the slowest lane.
+    /// Sum over lanes of cycles spent waiting — for neighbourhood bins to
+    /// complete (pipelined) or for the slowest lane — between a lane's
+    /// first compare opportunity and `total_cycles`.
     pub lane_idle_cycles: u64,
 }
 
@@ -87,10 +170,18 @@ pub struct GcStats {
 #[derive(Clone, Debug)]
 pub struct GcRun {
     /// `ready_cycle[k]` = fabric cycle (from event start, concurrent with
-    /// the embed stage) at which live edge `k` of the padded graph enters
-    /// the edge FIFO. Indexed by the host edge id, so the engine's
+    /// the embed stage) at which live edge `k` of the padded graph leaves
+    /// its compare lane (enters that lane's edge FIFO, backpressure
+    /// permitting). Indexed by the host edge id, so the engine's
     /// functional payload keeps the canonical edge order.
     pub ready_cycle: Vec<u64>,
+    /// Per-lane compare-phase end cycle under the chosen schedule (lane j
+    /// owns particles {u : u mod P_gc == j}; 0 for pipelined lanes that
+    /// never compared). Backpressure shifts a lane's whole remaining
+    /// schedule, so the engine prices the lane's *actual* finish — the
+    /// trailing negative compares included — as `lane_end + stall` when it
+    /// bounds the critical path.
+    pub lane_end: Vec<u64>,
     pub stats: GcStats,
 }
 
@@ -104,28 +195,40 @@ pub struct GcUnit {
 }
 
 impl GcUnit {
-    pub fn from_arch(arch: &ArchConfig, delta: f32) -> GcUnit {
-        assert!(delta > 0.0 && delta.is_finite(), "GC delta must be positive");
-        GcUnit {
+    /// Build a GC unit for the fabric shape in `arch` and the ΔR radius
+    /// `delta` (paper Eq. 1). A non-positive or non-finite radius is a
+    /// typed [`GcDeltaError`] — never a panic.
+    pub fn from_arch(arch: &ArchConfig, delta: f32) -> Result<GcUnit, GcDeltaError> {
+        if !(delta > 0.0 && delta.is_finite()) {
+            return Err(GcDeltaError { delta });
+        }
+        Ok(GcUnit {
             delta,
             p_gc: arch.p_gc.max(1),
             bin_depth: arch.gc_bin_depth.max(1),
             lane_ii: arch.gc_lane_ii.max(1) as u64,
-        }
+        })
     }
 
     pub fn delta(&self) -> f32 {
         self.delta
     }
 
+    /// Run the GC unit over one padded event under the default
+    /// [`GcSchedule::Pipelined`] phase schedule.
+    pub fn run(&self, g: &PaddedGraph) -> GcRun {
+        self.run_scheduled(g, GcSchedule::Pipelined)
+    }
+
     /// Run the GC unit over one padded event: bin the live particles,
-    /// stream candidate pairs through the compare lanes, and schedule every
-    /// discovered edge into the layer-0 FIFO.
+    /// stream candidate pairs through the compare lanes (under `schedule`),
+    /// and schedule every discovered edge into its lane's edge FIFO.
     ///
     /// Contract (asserted): the discovered edge set is **bit-identical** to
     /// the host `build_edges` edge set — every live edge of `g` is found,
-    /// and when the padding dropped nothing, nothing extra is found.
-    pub fn run(&self, g: &PaddedGraph) -> GcRun {
+    /// and when the padding dropped nothing, nothing extra is found. The
+    /// schedule moves cycles, never the edge set.
+    pub fn run_scheduled(&self, g: &PaddedGraph, schedule: GcSchedule) -> GcRun {
         let n = g.n;
         let d2 = self.delta * self.delta;
         // Same grid geometry as the host builder (shared code path).
@@ -147,6 +250,10 @@ impl GcUnit {
         // --- phase 1: bin engine (II = 1, spills cost one extra cycle) ----
         let mut stats = GcStats::default();
         let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.n_cells()];
+        // bin_done[c] = cycle at which cell c received its final particle
+        // (0 for cells that stay empty): the pipelined schedule's
+        // per-neighbourhood completion gate.
+        let mut bin_done: Vec<u64> = vec![0; grid.n_cells()];
         let mut cycle: u64 = 0;
         for i in 0..n {
             cycle += 1;
@@ -156,26 +263,47 @@ impl GcUnit {
                 stats.bin_overflows += 1;
             }
             cells[c].push(i as u32);
+            bin_done[c] = cycle;
         }
         stats.bin_cycles = cycle;
 
         // --- phase 2: P_gc pair-compare lanes ------------------------------
         // Lane j owns particles {u : u mod p_gc == j} and walks them in
-        // ascending order; lanes run concurrently from the end of binning.
+        // ascending order. Serialized: every lane starts at the global end
+        // of binning. Pipelined: a lane starts particle u once u's 3x3
+        // neighbourhood cells hold their final contents (so the candidate
+        // walk below reads exactly the fully-binned cells either way).
+        let p = self.p_gc;
         let mut ready = vec![u64::MAX; g.e];
-        let mut lane_t = vec![stats.bin_cycles; self.p_gc];
+        // pipelined and serialized lane clocks, advanced side by side so
+        // serialized_total_cycles is exact on every run
+        let mut pip_t = vec![0u64; p];
+        let mut ser_t = vec![stats.bin_cycles; p];
+        let mut lane_busy = vec![0u64; p];
+        let mut first_start = vec![u64::MAX; p];
         let mut neigh = Vec::with_capacity(9);
         for u in 0..n {
-            let lane = u % self.p_gc;
+            let lane = u % p;
             let (eu, pu) = (eta(u), phi(u));
             grid.neighbor_cells(grid.cell_of(eu, pu), &mut neigh);
+            // neighbourhood completion gate (includes u's own cell)
+            let mut ready_u = 0u64;
+            for &c in &neigh {
+                ready_u = ready_u.max(bin_done[c]);
+            }
+            let start = pip_t[lane].max(ready_u);
+            let mut t_pip = start;
+            let mut candidates = 0usize;
             for &c in &neigh {
                 for &v in &cells[c] {
                     let v = v as usize;
                     if v == u {
                         continue;
                     }
-                    lane_t[lane] += self.lane_ii;
+                    candidates += 1;
+                    t_pip += self.lane_ii;
+                    ser_t[lane] += self.lane_ii;
+                    lane_busy[lane] += self.lane_ii;
                     stats.pairs_compared += 1;
                     // the real Eq. 1 compare — functional and timed at once
                     if delta_r2(eu, pu, eta(v), phi(v)) < d2 {
@@ -186,7 +314,10 @@ impl GcUnit {
                                     u64::MAX,
                                     "edge ({u},{v}) discovered twice"
                                 );
-                                ready[k as usize] = lane_t[lane];
+                                ready[k as usize] = match schedule {
+                                    GcSchedule::Pipelined => t_pip,
+                                    GcSchedule::Serialized => ser_t[lane],
+                                };
                                 stats.edges_emitted += 1;
                             }
                             // Host padding truncated this edge; the fabric
@@ -196,14 +327,45 @@ impl GcUnit {
                     }
                 }
             }
+            if candidates > 0 {
+                pip_t[lane] = t_pip;
+                if first_start[lane] == u64::MAX {
+                    first_start[lane] = start;
+                }
+            }
         }
-        let compare_end = lane_t.iter().copied().max().unwrap_or(stats.bin_cycles);
-        stats.compare_cycles = compare_end - stats.bin_cycles;
-        stats.total_cycles = compare_end;
-        for &t in &lane_t {
-            stats.lane_busy_cycles += t - stats.bin_cycles;
-            stats.lane_idle_cycles += compare_end - t;
+
+        let lane_end = match schedule {
+            GcSchedule::Pipelined => pip_t,
+            GcSchedule::Serialized => ser_t.clone(),
+        };
+        let compare_end = lane_end.iter().copied().max().unwrap_or(0);
+        stats.serialized_total_cycles =
+            ser_t.iter().copied().max().unwrap_or(stats.bin_cycles);
+        stats.total_cycles = compare_end.max(stats.bin_cycles);
+        // every live edge's ready cycle is set (asserted below), so the
+        // unconstrained last emission is simply the largest of them
+        stats.emit_end_cycle = ready.iter().copied().max().unwrap_or(0);
+        // Compare-phase span + per-lane wait accounting: a lane is "in the
+        // compare phase" from its first opportunity (bin_cycles under the
+        // barrier; its first neighbourhood-complete start when pipelined).
+        let mut compare_start = stats.total_cycles;
+        for j in 0..p {
+            let start_j = match schedule {
+                GcSchedule::Serialized => stats.bin_cycles,
+                GcSchedule::Pipelined => {
+                    if first_start[j] == u64::MAX {
+                        stats.total_cycles // lane never worked: no span
+                    } else {
+                        first_start[j]
+                    }
+                }
+            };
+            compare_start = compare_start.min(start_j);
+            stats.lane_busy_cycles += lane_busy[j];
+            stats.lane_idle_cycles += stats.total_cycles - start_j - lane_busy[j];
         }
+        stats.compare_cycles = stats.total_cycles - compare_start;
 
         // --- the bit-identity contract -------------------------------------
         assert_eq!(
@@ -219,7 +381,7 @@ impl GcUnit {
             );
         }
 
-        GcRun { ready_cycle: ready, stats }
+        GcRun { ready_cycle: ready, lane_end, stats }
     }
 }
 
@@ -227,7 +389,9 @@ impl GcUnit {
 mod tests {
     use super::*;
     use crate::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+    use crate::physics::event::test_fixtures::particle_at;
     use crate::physics::generator::{EventGenerator, GeneratorConfig};
+    use crate::physics::Event;
 
     fn padded(seed: u64, delta: f32) -> PaddedGraph {
         let mut gen = EventGenerator::with_seed(seed);
@@ -242,7 +406,22 @@ mod tests {
             gc_lane_ii: lane_ii,
             ..Default::default()
         };
-        GcUnit::from_arch(&arch, delta)
+        GcUnit::from_arch(&arch, delta).unwrap()
+    }
+
+    /// Two dense clusters at opposite η ends, binned one cluster after the
+    /// other: the first cluster's 3x3 windows are fully binned at half the
+    /// bin phase, so pipelined lanes provably discover its edges *before*
+    /// binning completes.
+    fn two_cluster_event() -> Event {
+        let mut particles = Vec::new();
+        for i in 0..10 {
+            particles.push(particle_at(-2.5 + i as f32 * 0.01, -0.3 + i as f32 * 0.06));
+        }
+        for i in 0..10 {
+            particles.push(particle_at(2.5 + i as f32 * 0.01, -0.3 + i as f32 * 0.06));
+        }
+        Event { id: 0, particles, true_met_xy: [0.0; 2] }
     }
 
     #[test]
@@ -252,13 +431,98 @@ mod tests {
             let run = unit(4, 16, 1, 0.8).run(&g);
             assert_eq!(run.stats.edges_emitted as usize, g.e);
             assert_eq!(run.stats.edges_dropped, 0);
-            // every live edge got a discovery cycle, after binning
+            // every live edge got a discovery cycle within the schedule
             for k in 0..g.e {
                 assert!(run.ready_cycle[k] != u64::MAX, "edge {k} never discovered");
-                assert!(run.ready_cycle[k] > run.stats.bin_cycles);
+                assert!(run.ready_cycle[k] > 0);
                 assert!(run.ready_cycle[k] <= run.stats.total_cycles);
             }
+            // the barrier schedule keeps the PR 3 shape: compares strictly
+            // after binning, same edge set
+            let ser = unit(4, 16, 1, 0.8).run_scheduled(&g, GcSchedule::Serialized);
+            assert_eq!(ser.stats.edges_emitted as usize, g.e);
+            for k in 0..g.e {
+                assert!(ser.ready_cycle[k] > ser.stats.bin_cycles);
+                assert!(ser.ready_cycle[k] <= ser.stats.total_cycles);
+            }
         }
+    }
+
+    #[test]
+    fn gc_pipelined_never_slower_than_serialized() {
+        for seed in [21u64, 24, 27] {
+            let g = padded(seed, 0.8);
+            let u = unit(4, 16, 1, 0.8);
+            let pip = u.run(&g);
+            let ser = u.run_scheduled(&g, GcSchedule::Serialized);
+            // identical work and edge set, schedule moves only cycles
+            assert_eq!(pip.stats.pairs_compared, ser.stats.pairs_compared);
+            assert_eq!(pip.stats.edges_emitted, ser.stats.edges_emitted);
+            assert_eq!(pip.stats.lane_busy_cycles, ser.stats.lane_busy_cycles);
+            // per-edge and total: pipelined discovery is never later
+            for k in 0..g.e {
+                assert!(pip.ready_cycle[k] <= ser.ready_cycle[k], "edge {k}");
+            }
+            assert!(pip.stats.total_cycles <= ser.stats.total_cycles);
+            // both runs agree on what the barrier schedule costs
+            assert_eq!(pip.stats.serialized_total_cycles, ser.stats.total_cycles);
+            // unit-level emit end = unconstrained last discovery
+            assert_eq!(
+                pip.stats.emit_end_cycle,
+                pip.ready_cycle.iter().copied().max().unwrap_or(0)
+            );
+            assert_eq!(ser.stats.serialized_total_cycles, ser.stats.total_cycles);
+            // serialized keeps the PR 3 phase identity; pipelined overlaps
+            assert_eq!(
+                ser.stats.bin_cycles + ser.stats.compare_cycles,
+                ser.stats.total_cycles
+            );
+            assert!(
+                pip.stats.total_cycles
+                    <= pip.stats.bin_cycles + pip.stats.compare_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn gc_pipelined_overlaps_binning_deterministically() {
+        // Cluster A (particles 0..10) is fully binned by cycle 10 while
+        // cluster B is still streaming in until cycle 20 — A's 3x3 windows
+        // complete early, so its edges are discovered before bin_cycles.
+        let ev = two_cluster_event();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        assert!(g.e > 0, "clusters must be dense enough to produce edges");
+        let u = unit(4, 16, 1, 0.8);
+        let pip = u.run(&g);
+        assert_eq!(pip.stats.bin_cycles, 20);
+        let first = pip.ready_cycle[..g.e].iter().copied().min().unwrap();
+        assert!(
+            first < pip.stats.bin_cycles,
+            "pipelined discovery must start before binning ends: {} !< {}",
+            first,
+            pip.stats.bin_cycles
+        );
+        // and the barrier schedule cannot do that
+        let ser = u.run_scheduled(&g, GcSchedule::Serialized);
+        let ser_first = ser.ready_cycle[..g.e].iter().copied().min().unwrap();
+        assert!(ser_first > ser.stats.bin_cycles);
+        assert!(pip.stats.total_cycles < ser.stats.total_cycles);
+    }
+
+    #[test]
+    fn gc_from_arch_rejects_bad_delta_with_typed_error() {
+        let arch = ArchConfig::default();
+        for bad in [0.0f32, -1.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = GcUnit::from_arch(&arch, bad).unwrap_err();
+            // NaN != NaN, so compare the payload bit-wise
+            assert_eq!(err.delta.to_bits(), bad.to_bits());
+            assert!(err.to_string().contains("delta"), "{err}");
+        }
+        assert_eq!(
+            GcUnit::from_arch(&arch, -1.0).unwrap_err(),
+            GcDeltaError { delta: -1.0 }
+        );
+        assert!(GcUnit::from_arch(&arch, 0.8).is_ok());
     }
 
     #[test]
@@ -290,17 +554,20 @@ mod tests {
         let one = unit(1, 16, 1, 0.8).run(&g);
         let eight = unit(8, 16, 1, 0.8).run(&g);
         assert!(
-            eight.stats.compare_cycles < one.stats.compare_cycles,
+            eight.stats.total_cycles < one.stats.total_cycles,
             "8 lanes ({}) must beat 1 ({})",
-            eight.stats.compare_cycles,
-            one.stats.compare_cycles
+            eight.stats.total_cycles,
+            one.stats.total_cycles
         );
-        // single lane: compare phase is exactly pairs * II
-        assert_eq!(one.stats.compare_cycles, one.stats.pairs_compared);
-        assert_eq!(one.stats.lane_idle_cycles, 0);
         // work is conserved across lane counts
         assert_eq!(one.stats.pairs_compared, eight.stats.pairs_compared);
+        assert_eq!(one.stats.lane_busy_cycles, one.stats.pairs_compared);
         assert_eq!(eight.stats.lane_busy_cycles, eight.stats.pairs_compared);
+        // the barrier baseline keeps the exact PR 3 single-lane identity:
+        // compare phase = pairs * II, no idle
+        let ser = unit(1, 16, 1, 0.8).run_scheduled(&g, GcSchedule::Serialized);
+        assert_eq!(ser.stats.compare_cycles, ser.stats.pairs_compared);
+        assert_eq!(ser.stats.lane_idle_cycles, 0);
     }
 
     #[test]
@@ -310,6 +577,7 @@ mod tests {
         let ii3 = unit(4, 16, 3, 0.8).run(&g);
         assert_eq!(ii3.stats.lane_busy_cycles, 3 * ii1.stats.lane_busy_cycles);
         assert!(ii3.stats.compare_cycles > ii1.stats.compare_cycles);
+        assert!(ii3.stats.total_cycles > ii1.stats.total_cycles);
     }
 
     #[test]
@@ -330,10 +598,14 @@ mod tests {
 
     #[test]
     fn gc_empty_event() {
-        let ev = crate::physics::Event { id: 0, particles: vec![], true_met_xy: [0.0; 2] };
+        let ev = Event { id: 0, particles: vec![], true_met_xy: [0.0; 2] };
         let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
-        let run = unit(4, 16, 1, 0.8).run(&g);
-        assert_eq!(run.stats.total_cycles, 0);
-        assert_eq!(run.stats.edges_emitted, 0);
+        for schedule in [GcSchedule::Pipelined, GcSchedule::Serialized] {
+            let run = unit(4, 16, 1, 0.8).run_scheduled(&g, schedule);
+            assert_eq!(run.stats.total_cycles, 0);
+            assert_eq!(run.stats.serialized_total_cycles, 0);
+            assert_eq!(run.stats.edges_emitted, 0);
+            assert_eq!(run.stats.compare_cycles, 0);
+        }
     }
 }

@@ -10,7 +10,8 @@
 //! - [`buffers`]   — double-buffered NE banks (swap per layer)
 //! - [`fifo`]      — bounded streaming FIFOs with backpressure
 //! - [`gc_unit`]   — on-fabric dynamic graph construction (§III-B.4):
-//!   η-φ bin engine + P_gc pair-compare lanes streaming edges into layer 0
+//!   η-φ bin engine pipelined against P_gc pair-compare lanes, streaming
+//!   edges into layer 0 through bounded per-lane FIFOs
 //! - [`engine`]    — per-layer cycle loop + E2E latency model
 //! - [`flowgnn`]   — static-graph baseline (host-side edge recompute)
 //! - [`resource`]  — LUT/FF/BRAM/DSP estimator (Table I)
@@ -31,6 +32,6 @@ pub mod tokens;
 
 pub use engine::{BroadcastMode, CycleParams, DataflowEngine, SimResult};
 pub use flowgnn::FlowGnnBaseline;
-pub use gc_unit::{BuildSite, GcRun, GcStats, GcUnit};
+pub use gc_unit::{BuildSite, GcDeltaError, GcRun, GcSchedule, GcStats, GcUnit};
 pub use power::PowerModel;
 pub use resource::ResourceModel;

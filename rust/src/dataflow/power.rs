@@ -43,6 +43,9 @@ pub struct PowerModel {
     /// Dynamic power per fully-busy GC compare lane (ΔR² datapath + bin
     /// memory reads; only drawn under `BuildSite::Fabric`).
     pub w_per_gc_lane_active: f64,
+    /// Dynamic power per fully-streaming GC edge FIFO + its round-robin
+    /// merge leg (one per lane; push + pop per discovered edge).
+    pub w_per_gc_fifo_active: f64,
     /// Broadcast/adapter/FIFO fabric switching at full streaming rate.
     pub w_fabric_stream: f64,
     // GPU model (RTX A6000)
@@ -61,6 +64,7 @@ impl PowerModel {
             w_per_mp_active: 0.42,
             w_per_nt_active: 0.15,
             w_per_gc_lane_active: 0.07,
+            w_per_gc_fifo_active: 0.02,
             w_fabric_stream: 0.40,
             gpu_idle_w: 22.0,
             gpu_dynamic_w: 19.0,
@@ -84,21 +88,30 @@ impl PowerModel {
         // embed/head stages run the NT MAC arrays flat out
         let nt_stage = (sim.breakdown.embed_cycles + sim.breakdown.head_cycles) as f64
             * self.arch.p_node as f64;
-        // fabric graph construction: bin engine + compare-lane activity
+        // fabric graph construction: bin engine + compare-lane activity,
+        // plus the per-lane edge FIFOs (one push + one pop per edge)
         let gc_busy = sim
             .breakdown
             .gc
             .as_ref()
             .map(|gc| (gc.lane_busy_cycles + gc.bin_cycles) as f64)
             .unwrap_or(0.0);
+        let gc_fifo_ops = sim
+            .breakdown
+            .gc
+            .as_ref()
+            .map(|gc| 2.0 * gc.edges_emitted as f64)
+            .unwrap_or(0.0);
         let mp_util = mp_busy / (total * self.arch.p_edge as f64);
         let nt_util = (nt_activity + nt_stage) / (total * self.arch.p_node as f64);
         let gc_util = gc_busy / (total * self.arch.p_gc as f64);
+        let gc_fifo_util = gc_fifo_ops / (total * self.arch.p_gc as f64);
         let stream_util = stream / total;
         self.fpga_static_w
             + self.w_per_mp_active * self.arch.p_edge as f64 * mp_util.min(1.0)
             + self.w_per_nt_active * self.arch.p_node as f64 * nt_util.min(1.0)
             + self.w_per_gc_lane_active * self.arch.p_gc as f64 * gc_util.min(1.0)
+            + self.w_per_gc_fifo_active * self.arch.p_gc as f64 * gc_fifo_util.min(1.0)
             + self.w_fabric_stream * stream_util.min(1.0)
     }
 

@@ -83,6 +83,10 @@ const REG_GC_BIN_ENGINE: u64 = 2_800;
 const LUT_PER_GC_LANE: u64 = 2_600; // cell walker + compare datapath ctrl
 const REG_PER_GC_LANE: u64 = 2_200;
 const DSP_PER_GC_LANE: u64 = 4; // dη², dφ² multipliers + wrap add
+// per-lane edge-FIFO port + its slice of the round-robin merge at the MP
+// boundary (RR arbiter leg + MP-port mux)
+const LUT_GC_MERGE_PER_LANE: u64 = 350;
+const REG_GC_MERGE_PER_LANE: u64 = 300;
 /// Bin memory is sized for the default δ = 0.8 grid (7 x 7 η-φ cells) and
 /// replicated per lane for conflict-free neighbourhood reads; each entry
 /// holds (index, η, φ) = 12 bytes.
@@ -115,12 +119,12 @@ impl ResourceModel {
             + (a.p_edge as u64) * (LUT_PER_MP + LUT_PER_BCAST_LANE)
             + (a.p_node as u64) * (LUT_PER_NT + LUT_ADAPTER_PER_PORT)
             + LUT_GC_BIN_ENGINE
-            + (a.p_gc as u64) * LUT_PER_GC_LANE;
+            + (a.p_gc as u64) * (LUT_PER_GC_LANE + LUT_GC_MERGE_PER_LANE);
         let register = REG_BASE
             + (a.p_edge as u64) * (REG_PER_MP + REG_PER_BCAST_LANE)
             + (a.p_node as u64) * (REG_PER_NT + REG_ADAPTER_PER_PORT)
             + REG_GC_BIN_ENGINE
-            + (a.p_gc as u64) * REG_PER_GC_LANE;
+            + (a.p_gc as u64) * (REG_PER_GC_LANE + REG_GC_MERGE_PER_LANE);
 
         // --- BRAM: NE buffers, weight ROMs, FIFOs, CSR/edge store ----------------
         let ne_buffer = 2 * self.n_max * d * 4; // double buffer
@@ -137,10 +141,11 @@ impl ResourceModel {
         // host<->fabric staging (features in, weights/MET out, ping-pong)
         let staging = 2 * (self.n_max * (6 + 2) * 4 + self.e_max * 2 * 4);
         // GC unit: per-lane bin-memory replica, the particle coordinate
-        // store (η, φ per node), and the discovered-edge FIFO.
+        // store (η, φ per node), and one bounded discovered-edge FIFO per
+        // compare lane (entries hold (edge id, MP target) = 8 bytes).
         let gc_bin_mem = (GC_BIN_CELLS * a.gc_bin_depth as u64 * GC_BIN_ENTRY_BYTES) as usize;
         let gc_coord_store = self.n_max * 8;
-        let gc_edge_fifo = a.fifo_depth * 8;
+        let gc_lane_fifo = a.gc_fifo_depth * 8;
         let bram = BRAM_BASE
             + bram_blocks(ne_buffer)
             + bram_blocks(bcast_copy)
@@ -154,7 +159,7 @@ impl ResourceModel {
             + (a.p_node as u64) * bram_blocks(self.n_max / a.p_node.max(1) * d * 4 + self.n_max)
             + (a.p_gc as u64) * bram_blocks(gc_bin_mem)
             + bram_blocks(gc_coord_store)
-            + bram_blocks(gc_edge_fifo);
+            + (a.p_gc as u64) * bram_blocks(gc_lane_fifo);
 
         Usage { lut, register, bram, dsp }
     }
@@ -241,6 +246,29 @@ mod tests {
         .estimate();
         assert!(deeper_bins.bram > base.bram);
         assert_eq!(deeper_bins.dsp, base.dsp, "bin depth is memory, not compute");
+    }
+
+    #[test]
+    fn gc_lane_fifos_cost_bram_per_lane() {
+        let base = default_model().estimate();
+        // deep per-lane edge FIFOs: BRAM grows with p_gc * depth
+        let deep = ResourceModel::new(
+            ArchConfig { gc_fifo_depth: 8192, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(deep.bram > base.bram, "lane FIFOs must cost BRAM");
+        assert_eq!(deep.dsp, base.dsp, "FIFO depth is memory, not compute");
+        let deep_wide = ResourceModel::new(
+            ArchConfig { gc_fifo_depth: 8192, p_gc: 16, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(deep_wide.bram > deep.bram, "FIFO memory replicates per lane");
     }
 
     #[test]

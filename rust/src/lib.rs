@@ -38,11 +38,13 @@
 //!   double-buffered NE banks) plus resource and power models, and the
 //!   on-fabric graph-construction unit ([`dataflow::gc_unit`]): with
 //!   [`dataflow::BuildSite::Fabric`] the η-φ bin engine and P_gc
-//!   pair-compare lanes discover edges on-chip, streaming them into the
-//!   layer-0 MP units overlapped with the embed stage — completing the
-//!   paper's "input dynamic graph construction auxiliary setup" inside the
-//!   simulated fabric (`Pipeline::builder().build_site(..)`, CLI
-//!   `--build-site host|fabric`).
+//!   pair-compare lanes discover edges on-chip — binning pipelined against
+//!   comparing ([`dataflow::GcSchedule`]) — streaming them into the
+//!   layer-0 MP units through bounded per-lane edge FIFOs, overlapped with
+//!   the embed stage, completing the paper's "input dynamic graph
+//!   construction auxiliary setup" inside the simulated fabric
+//!   (`Pipeline::builder().build_site(..)`, CLI `--build-site host|fabric`,
+//!   `--gc-schedule pipelined|serialized`).
 //! - [`trigger`] — the serving components the pipeline composes: batch-first
 //!   inference backends, the dynamic batcher, the accept-rate controller,
 //!   and the classic `TriggerServer` compatibility wrapper.

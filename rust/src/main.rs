@@ -12,7 +12,7 @@
 use std::time::Duration;
 
 use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
-use dgnnflow::dataflow::{BuildSite, DataflowEngine, PowerModel, ResourceModel};
+use dgnnflow::dataflow::{BuildSite, DataflowEngine, GcSchedule, PowerModel, ResourceModel};
 use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
@@ -100,6 +100,27 @@ fn parse_build_site(s: &str) -> anyhow::Result<BuildSite> {
     }
 }
 
+/// Parse `--gc-schedule pipelined | serialized` (fabric build only).
+fn parse_gc_schedule(s: &str) -> anyhow::Result<GcSchedule> {
+    match s {
+        "pipelined" => Ok(GcSchedule::Pipelined),
+        "serialized" => Ok(GcSchedule::Serialized),
+        other => {
+            anyhow::bail!("--gc-schedule: expected pipelined | serialized — got '{other}'")
+        }
+    }
+}
+
+/// Apply the GC-related CLI overrides onto a loaded `ArchConfig`.
+fn apply_gc_overrides(args: &Args, arch: &mut ArchConfig) -> anyhow::Result<()> {
+    arch.p_gc = args.usize_or("p-gc", arch.p_gc).map_err(anyhow::Error::msg)?;
+    arch.gc_fifo_depth = args
+        .usize_or("gc-fifo-depth", arch.gc_fifo_depth)
+        .map_err(anyhow::Error::msg)?;
+    arch.validate()?;
+    Ok(())
+}
+
 /// Load config: --config FILE or defaults.
 fn load_config(args: &Args) -> anyhow::Result<Config> {
     match args.opt_str("config") {
@@ -167,6 +188,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 5000)")
                 .arg("--precision P", "datapath arithmetic: f32 | fixed | W,I (default f32)")
                 .arg("--build-site S", "graph construction: host | fabric (fpga backend only)")
+                .arg("--delta X", "ΔR graph radius (paper Eq. 1; default from config)")
+                .arg("--p-gc N", "GC compare lanes (fabric build; default from config)")
+                .arg("--gc-fifo-depth N", "per-lane GC edge FIFO depth (default from config)")
+                .arg("--gc-schedule S", "GC phases: pipelined | serialized (default pipelined)")
                 .arg("--paced", "honour source arrival times in wall-clock")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default 60)")
@@ -186,10 +211,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .u64_or("batch-timeout-us", tcfg.batch_timeout_us)
         .map_err(anyhow::Error::msg)?;
 
+    let delta = args.f64_or("delta", tcfg.delta_r).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        delta > 0.0 && delta.is_finite(),
+        "--delta must be positive and finite, got {delta}"
+    );
+    let mut arch = cfg.arch.clone();
+    apply_gc_overrides(args, &mut arch)?;
+    // validated for every backend (a typo'd value must not pass silently);
+    // only the simulated fabric actually has a GC unit to schedule
+    let gc_schedule = parse_gc_schedule(args.str_or("gc-schedule", "pipelined"))?;
     let backend = match args.str_or("backend", "fpga") {
         "rust-cpu" => Backend::RustCpu(load_model()?),
         "pjrt" => Backend::Pjrt(PjrtService::start_default()?),
-        "fpga" => Backend::Fpga(DataflowEngine::new(cfg.arch.clone(), load_model()?)?),
+        "fpga" => {
+            let mut engine = DataflowEngine::new(arch, load_model()?)?;
+            engine.gc_schedule = gc_schedule;
+            Backend::Fpga(engine)
+        }
         other => anyhow::bail!("unknown backend '{other}'"),
     };
 
@@ -205,7 +244,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut builder = Pipeline::builder()
         .source(source)
         .backend(backend)
-        .graph(tcfg.delta_r as f32)
+        .graph(delta as f32)
         .buckets(DEFAULT_BUCKETS.to_vec())
         .batching(tcfg.max_batch, Duration::from_micros(tcfg.batch_timeout_us))
         .workers(tcfg.workers)
@@ -231,18 +270,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let delta = args.f64_or("delta", cfg.trigger.delta_r).map_err(anyhow::Error::msg)?;
+    // host-site builds hit GraphBuilder directly, so reject a bad radius
+    // here (the fabric site reports through GcDeltaError either way)
+    anyhow::ensure!(
+        delta > 0.0 && delta.is_finite(),
+        "--delta must be positive and finite, got {delta}"
+    );
+    let mut arch = cfg.arch.clone();
+    apply_gc_overrides(args, &mut arch)?;
     let mut model = load_model()?;
     if let Some(fmt) = parse_precision(args.str_or("precision", "f32"))? {
         model.set_arith(Arith::Fixed(fmt))?;
     }
-    let mut engine = DataflowEngine::new(cfg.arch.clone(), model)?;
+    let mut engine = DataflowEngine::new(arch.clone(), model)?;
+    engine.gc_schedule = parse_gc_schedule(args.str_or("gc-schedule", "pipelined"))?;
     engine.set_build_site(
         parse_build_site(args.str_or("build-site", "host"))?,
-        cfg.trigger.delta_r as f32,
+        delta as f32,
     )?;
     let mut gen = EventGenerator::with_seed(seed);
     let ev = gen.generate();
-    let graph = build_edges(&ev, cfg.trigger.delta_r as f32);
+    let graph = build_edges(&ev, delta as f32);
     let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
     let r = engine.run(&padded);
     println!(
@@ -257,15 +306,28 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     );
     if let Some(gc) = &r.breakdown.gc {
         println!(
-            "gc unit: bin={} + compare={} cycles ({} pairs via {} lanes, {} edges streamed, \
-             fifo high-water {})",
+            "gc unit [{}]: bin={} compare={} total={} cycles (serialized schedule would \
+             take {}; {} pairs via {} lanes, {} edges streamed)",
+            engine.gc_schedule,
             gc.bin_cycles,
             gc.compare_cycles,
+            gc.total_cycles,
+            gc.serialized_total_cycles,
             gc.pairs_compared,
-            cfg.arch.p_gc,
+            arch.p_gc,
             gc.edges_emitted,
-            r.breakdown.layers.first().map(|l| l.gc_fifo_max_occupancy).unwrap_or(0)
         );
+        if let Some(l0) = r.breakdown.layers.first() {
+            println!(
+                "gc feed: blocked={} fifo high-water={} per-lane occupancy={:?} \
+                 per-lane stalls={:?} (last edge emitted at cycle {})",
+                l0.gc_feed_blocked,
+                l0.gc_fifo_max_occupancy,
+                l0.gc_lane_fifo_max_occupancy,
+                l0.gc_lane_stall_cycles,
+                gc.emit_end_cycle,
+            );
+        }
     }
     println!(
         "MET = {:.2} GeV (true {:.2}); accept decision depends on threshold",

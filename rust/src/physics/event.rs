@@ -126,6 +126,44 @@ pub fn delta_r2(eta1: f32, phi1: f32, eta2: f32, phi2: f32) -> f32 {
     de * de + dp * dp
 }
 
+/// Hand-built event fixtures shared by the crate's unit tests (the GC
+/// unit, the dataflow engine, and the pipeline all need the same
+/// deterministic geometries — keeping them here stops the copies drifting).
+#[cfg(test)]
+pub mod test_fixtures {
+    use super::*;
+
+    /// A particle at (η, φ) with neutral bookkeeping fields: geometry is
+    /// all that matters to graph construction.
+    pub fn particle_at(eta: f32, phi: f32) -> Particle {
+        Particle {
+            pt: 5.0,
+            eta,
+            phi,
+            px: 5.0,
+            py: 0.0,
+            dz: 0.0,
+            class: ParticleClass::Photon,
+            charge: 0,
+            truth_weight: 0.0,
+        }
+    }
+
+    /// 7x7 η-φ lattice spaced 0.9 (η and φ in -2.7..=2.7): every point is
+    /// compared against its 3x3-grid-window mates — including across the
+    /// φ seam, where the wrap gap is 2π - 5.4 ≈ 0.883 — but no pair is
+    /// within ΔR = 0.8. An edge-free event with heavy GC compare work.
+    pub fn lattice_event_spacing_0p9() -> Event {
+        let mut particles = Vec::new();
+        for i in 0..7 {
+            for j in 0..7 {
+                particles.push(particle_at(-2.7 + i as f32 * 0.9, -2.7 + j as f32 * 0.9));
+            }
+        }
+        Event { id: 9, particles, true_met_xy: [0.0; 2] }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1131,6 +1131,75 @@ mod tests {
     }
 
     #[test]
+    fn fabric_serve_handles_empty_and_edge_free_events() {
+        use crate::config::ArchConfig;
+        use crate::dataflow::DataflowEngine;
+        use crate::physics::event::test_fixtures::lattice_event_spacing_0p9;
+        use crate::physics::Event;
+        // An empty event plus an edge-free 7x7 lattice (spacing 0.9 > ΔR):
+        // with one slow GC compare lane the lattice event's decision waits
+        // on the GC unit's final negative compare — the engine's
+        // `total_cycles.max(gc.total_cycles)` critical-path branch (pinned
+        // directly by dataflow::engine's edge-free test) — and both events
+        // must flow through Pipeline::serve without drops or panics.
+        let mut lattice = lattice_event_spacing_0p9();
+        lattice.id = 1;
+        let empty = Event { id: 0, particles: vec![], true_met_xy: [0.0; 2] };
+        let cfg = ModelConfig::default();
+        let arch = ArchConfig { p_gc: 1, gc_lane_ii: 128, ..Default::default() };
+        let engine = DataflowEngine::new(
+            arch,
+            L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 91)).unwrap(),
+        )
+        .unwrap();
+        let report = Pipeline::builder()
+            .source(ReplaySource::new(vec![empty, lattice]))
+            .backend(crate::trigger::Backend::Fpga(engine))
+            .graph(0.8)
+            .build_site(BuildSite::Fabric)
+            .workers(1)
+            .build()
+            .unwrap()
+            .serve();
+        assert_eq!(report.events, 2, "both degenerate events must be served");
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.build_site, "fabric");
+        assert!(report.device_median_ms.expect("fpga models a device") > 0.0);
+        for r in &report.records {
+            assert_eq!(r.n_edges, 0, "event {} must be edge-free", r.event_id);
+            assert!(r.met.is_finite());
+        }
+    }
+
+    #[test]
+    fn bad_graph_delta_reports_typed_error_not_abort() {
+        use crate::config::ArchConfig;
+        use crate::dataflow::DataflowEngine;
+        let cfg = ModelConfig::default();
+        let make_engine = || {
+            DataflowEngine::new(
+                ArchConfig::default(),
+                L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 92)).unwrap(),
+            )
+            .unwrap()
+        };
+        // the builder rejects a NaN radius with a typed error...
+        let err = Pipeline::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .backend(crate::trigger::Backend::Fpga(make_engine()))
+            .graph(f32::NAN)
+            .build_site(BuildSite::Fabric)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PipelineError::BadDelta(_)), "got {err:?}");
+        // ...and the engine itself reports the typed GcDeltaError instead
+        // of asserting when configured directly with a bad --delta
+        let mut engine = make_engine();
+        let err = engine.set_build_site(BuildSite::Fabric, -0.5).unwrap_err();
+        assert!(err.to_string().contains("delta"), "{err}");
+    }
+
+    #[test]
     fn build_site_typed_errors() {
         // a CPU backend has no GC unit
         let err = Pipeline::builder()

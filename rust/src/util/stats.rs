@@ -69,12 +69,16 @@ impl Summary {
 
 /// Percentile of a sample set (linear interpolation, p in [0, 100]).
 /// Sorts a copy; use `percentile_sorted` on pre-sorted data in hot paths.
+/// NaN samples are tolerated, never a panic: IEEE total order sorts them
+/// after +inf, so they behave like oversized samples — each NaN biases
+/// interpolated ranks upward by one position and the top percentiles
+/// surface NaN itself. Filter NaNs first when that bias matters.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -105,7 +109,7 @@ pub fn quantile_resolution(residuals: &[f64]) -> f64 {
         return f64::NAN;
     }
     let mut v = residuals.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     (percentile_sorted(&v, 84.135) - percentile_sorted(&v, 15.865)) / 2.0
 }
 
@@ -241,6 +245,27 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_and_resolution_tolerate_nan_samples() {
+        // Regression: partial_cmp().unwrap() panicked on NaN inputs (e.g.
+        // a profile bin whose statistic came back NaN). total_cmp sorts
+        // NaN after +inf: each NaN acts as an oversized sample (biasing
+        // interpolated ranks upward — p50 of [1, NaN, 3] lands on 3, not
+        // the finite median 2) and the top percentiles surface the NaN
+        // itself, instead of aborting the bench.
+        let xs = [1.0, f64::NAN, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
+        // quantile_resolution: finite bulk with a NaN tail must not panic
+        let mut residuals: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();
+        residuals.push(f64::NAN);
+        let r = quantile_resolution(&residuals);
+        assert!(r.is_finite() && r > 0.0, "r={r}");
+        assert!(quantile_resolution(&[f64::NAN, f64::NAN]).is_nan());
     }
 
     #[test]

@@ -98,9 +98,11 @@ fn prop_grid_matches_brute_degenerate_deltas() {
 fn prop_fabric_gc_edge_set_equals_host() {
     // The GC unit's bit-identity contract over random events, deltas, and
     // GC fabric shapes: every host edge is discovered exactly once (the
-    // assertions inside GcUnit::run fire on any mismatch), scheduled after
-    // binning, and nothing extra survives when padding dropped nothing.
-    use dgnnflow::dataflow::GcUnit;
+    // assertions inside GcUnit::run fire on any mismatch), inside the
+    // schedule, and nothing extra survives when padding dropped nothing.
+    // The serialized baseline additionally keeps the PR 3 phase barrier
+    // (every discovery strictly after binning).
+    use dgnnflow::dataflow::{GcSchedule, GcUnit};
     check(0xC2, 15, |g| {
         let ev = random_event(g);
         let delta = g.f32_in(0.3, 1.2);
@@ -112,15 +114,62 @@ fn prop_fabric_gc_edge_set_equals_host() {
             gc_lane_ii: g.usize_in(1, 3),
             ..Default::default()
         };
-        let run = GcUnit::from_arch(&arch, delta).run(&padded);
+        let unit = GcUnit::from_arch(&arch, delta).unwrap();
+        let run = unit.run(&padded);
         assert_eq!(run.stats.edges_emitted as usize, padded.e);
         if padded.dropped_nodes == 0 && padded.dropped_edges == 0 {
             assert_eq!(run.stats.edges_dropped, 0);
         }
         for k in 0..padded.e {
-            assert!(run.ready_cycle[k] > run.stats.bin_cycles);
+            assert!(run.ready_cycle[k] > 0);
             assert!(run.ready_cycle[k] <= run.stats.total_cycles);
         }
+        let ser = unit.run_scheduled(&padded, GcSchedule::Serialized);
+        assert_eq!(ser.stats.edges_emitted as usize, padded.e);
+        for k in 0..padded.e {
+            assert!(ser.ready_cycle[k] > ser.stats.bin_cycles);
+            assert!(ser.ready_cycle[k] <= ser.stats.total_cycles);
+        }
+    });
+}
+
+#[test]
+fn prop_gc_pipelined_discovery_never_slower_than_serialized() {
+    // The pipelined bin/compare schedule discovers *the same edge set* as
+    // the PR 3 barrier schedule, and never later: per edge and in total,
+    // across random events, deltas, and GC fabric shapes.
+    use dgnnflow::dataflow::{GcSchedule, GcUnit};
+    check(0xC4, 15, |g| {
+        let ev = random_event(g);
+        let delta = g.f32_in(0.3, 1.2);
+        let graph = build_edges(&ev, delta);
+        let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
+        let arch = ArchConfig {
+            p_gc: g.usize_in(1, 12),
+            gc_bin_depth: *g.pick(&[1usize, 4, 16, 64]),
+            gc_lane_ii: g.usize_in(1, 3),
+            ..Default::default()
+        };
+        let unit = GcUnit::from_arch(&arch, delta).unwrap();
+        let pip = unit.run(&padded);
+        let ser = unit.run_scheduled(&padded, GcSchedule::Serialized);
+        // unchanged edge set and work
+        assert_eq!(pip.stats.edges_emitted, ser.stats.edges_emitted);
+        assert_eq!(pip.stats.edges_dropped, ser.stats.edges_dropped);
+        assert_eq!(pip.stats.pairs_compared, ser.stats.pairs_compared);
+        assert_eq!(pip.stats.lane_busy_cycles, ser.stats.lane_busy_cycles);
+        // never later, edge by edge and in total
+        for k in 0..padded.e {
+            assert!(
+                pip.ready_cycle[k] <= ser.ready_cycle[k],
+                "edge {k}: pipelined {} !<= serialized {}",
+                pip.ready_cycle[k],
+                ser.ready_cycle[k]
+            );
+        }
+        assert!(pip.stats.total_cycles <= ser.stats.total_cycles);
+        // both runs price the barrier schedule identically
+        assert_eq!(pip.stats.serialized_total_cycles, ser.stats.total_cycles);
     });
 }
 
