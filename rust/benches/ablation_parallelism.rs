@@ -1,9 +1,12 @@
 //! Ablation C: parallelism sweep — latency vs resources over the
-//! (P_edge, P_node) × P_gc × build-site grid. Shows the knee the paper's
-//! configuration sits on: more MP units cut cycles until broadcast/adapter
-//! serialisation dominates, while DSP/LUT grow linearly — and, on the
-//! fabric-build legs, how many GC compare lanes the pipelined bin/compare
-//! schedule needs before the edge feed stops being the layer-0 bottleneck.
+//! (P_edge, P_node) × P_gc × build-site × GC-lane-policy grid. Shows the
+//! knee the paper's configuration sits on: more MP units cut cycles until
+//! broadcast/adapter serialisation dominates, while DSP/LUT grow linearly
+//! — and, on the fabric-build legs, how many GC compare lanes the
+//! pipelined bin/compare schedule needs before the edge feed stops being
+//! the layer-0 bottleneck, plus what skip-on-stall lane re-arbitration
+//! buys over the in-order (PR 4-exact) controller per configuration (the
+//! new `sched` column / `gc_policy` JSON field).
 //!
 //! Per fabric-build point the sweep also prices the PR 3 serialized GC
 //! schedule (`gc_serialized_cycles`, from the same run) so the pipelining
@@ -38,12 +41,15 @@ fn model() -> L1DeepMetV2 {
 }
 
 /// One grid point: table row + JSON point (shared by the host and fabric
-/// legs so the two stay column-compatible).
+/// legs so the two stay column-compatible). `policy` is the co-simulated
+/// GC lane policy of a fabric leg ("-" on host legs, where the GC unit
+/// sits idle).
 fn emit_point(
     t: &mut Table,
     points: &mut Vec<Value>,
     arch: &ArchConfig,
     site: BuildSite,
+    policy: &str,
     r: &SimResult,
     base_cycles: u64,
 ) {
@@ -58,6 +64,7 @@ fn emit_point(
         arch.p_node.to_string(),
         arch.p_gc.to_string(),
         site.to_string(),
+        policy.to_string(),
         r.breakdown.total_cycles.to_string(),
         format!("{:.1}", r.e2e_s * 1e6),
         format!("{:.2}x", base_cycles as f64 / r.breakdown.total_cycles as f64),
@@ -73,6 +80,7 @@ fn emit_point(
         ("p_node", Value::Num(arch.p_node as f64)),
         ("p_gc", Value::Num(arch.p_gc as f64)),
         ("build_site", Value::from(site.to_string())),
+        ("gc_policy", Value::from(policy)),
         ("total_cycles", Value::Num(r.breakdown.total_cycles as f64)),
         ("e2e_us", Value::Num(r.e2e_s * 1e6)),
         ("gc_cycles", Value::Num(gc_cycles as f64)),
@@ -99,6 +107,7 @@ fn main() {
         "P_node",
         "P_gc",
         "site",
+        "sched",
         "total cycles",
         "E2E (us)",
         "speedup vs 1x1",
@@ -122,14 +131,24 @@ fn main() {
             if pe == 1 {
                 base_cycles = r.breakdown.total_cycles;
             }
-            emit_point(&mut t, &mut points, &host_arch, BuildSite::Host, &r, base_cycles);
+            emit_point(&mut t, &mut points, &host_arch, BuildSite::Host, "-", &r, base_cycles);
         }
+        // fabric legs sweep the co-simulated lane policy too: in-order (the
+        // PR 4-exact controller) vs skip-on-stall re-arbitration
         for p_gc in [1usize, 4, 8] {
-            let arch = ArchConfig { p_edge: pe, p_node: pn, p_gc, ..Default::default() };
-            let mut eng = DataflowEngine::new(arch.clone(), model()).unwrap();
-            eng.set_build_site(BuildSite::Fabric, DELTA).unwrap();
-            let r = eng.run(&g);
-            emit_point(&mut t, &mut points, &arch, BuildSite::Fabric, &r, base_cycles);
+            for (policy, skip) in [("in-order", false), ("skip-on-stall", true)] {
+                let arch = ArchConfig {
+                    p_edge: pe,
+                    p_node: pn,
+                    p_gc,
+                    gc_skip_on_stall: skip,
+                    ..Default::default()
+                };
+                let mut eng = DataflowEngine::new(arch.clone(), model()).unwrap();
+                eng.set_build_site(BuildSite::Fabric, DELTA).unwrap();
+                let r = eng.run(&g);
+                emit_point(&mut t, &mut points, &arch, BuildSite::Fabric, policy, &r, base_cycles);
+            }
         }
     }
     t.print();

@@ -1,57 +1,113 @@
 #!/usr/bin/env bash
 # CI gate for the rust crate.
 #
-#   ./ci.sh            full gate: smoke tier, then fmt, lints, release
-#                      build, and the full test suite
-#   ./ci.sh --quick    smoke tier only: compile the benches (including
-#                      graphbuild_overlap and the extended p_gc x p_edge
-#                      x build-site parallelism sweep), run the
-#                      golden-vector conformance suite, the GC-vs-host
-#                      edge-set equality tests, the pipelined-vs-serialized
-#                      GC schedule property, and a `--build-site fabric`
-#                      serve smoke — numeric, graph-set, or GC timing
-#                      regressions fail fast before the full test run
+#   ./ci.sh                full gate: the quick tier, the bench-regression
+#                          gate, a release build, and the full test suite
+#   ./ci.sh --quick        smoke tier: cargo fmt --check and clippy
+#                          (warnings are errors) so lint drift fails fast,
+#                          bench compilation, the golden-vector conformance
+#                          suite, the GC-vs-host edge-set equality tests,
+#                          the pipelined-vs-serialized schedule property,
+#                          the co-sim-vs-PR 4-replay regression pins, and a
+#                          `--build-site fabric` serve smoke whose report
+#                          line must show dropped=0 and an on-fabric build
+#   ./ci.sh --bench-check  bench-regression gate: run ablation_parallelism
+#                          and graphbuild_overlap on their pinned seeds and
+#                          exact-compare the emitted BENCH_*.json cycle
+#                          counts / edge totals against rust/baselines/
+#                          (a missing baseline is bootstrapped — commit it;
+#                          DGNNFLOW_BENCH_REBASE=1 re-baselines after a
+#                          reviewed timing change)
 #
-# Requires a Rust toolchain >= 1.74 (full gate also needs rustfmt and
-# clippy components).
+# Every cargo invocation is --locked against the committed Cargo.lock, and
+# builds are offline-friendly: the only dependency is vendored in
+# rust/vendor (CI sets CARGO_NET_OFFLINE=true).
+#
+# Requires a Rust toolchain >= 1.74 with the rustfmt and clippy components.
 set -euo pipefail
 cd "$(dirname "$0")"
 
-quick=0
-[[ "${1:-}" == "--quick" ]] && quick=1
+tier="full"
+case "${1:-}" in
+    "") tier="full" ;;
+    --quick) tier="quick" ;;
+    --bench-check) tier="bench" ;;
+    *)
+        echo "usage: ci.sh [--quick|--bench-check]" >&2
+        exit 2
+        ;;
+esac
 
-echo "==> cargo bench --no-run (benches must compile, incl. graphbuild_overlap + parallelism sweep)"
-cargo bench --no-run
+quick_tier() {
+    echo "==> cargo fmt --check"
+    cargo fmt --check
 
-echo "==> cargo test --test golden (golden-vector conformance suite)"
-cargo test -q --test golden
+    echo "==> cargo clippy (all targets, warnings are errors)"
+    cargo clippy --locked --all-targets -- -D warnings
 
-echo "==> GC-vs-host edge-set equality (smoke tier)"
-cargo test -q --lib gc_edge_set
-cargo test -q --test properties prop_fabric_gc_edge_set_equals_host
+    echo "==> cargo bench --no-run (benches must compile, incl. graphbuild_overlap + parallelism/policy sweep)"
+    cargo bench --locked --no-run
 
-echo "==> pipelined GC schedule never slower than the PR 3 barrier (smoke tier)"
-cargo test -q --test properties prop_gc_pipelined_discovery_never_slower_than_serialized
-cargo test -q --lib gc_pipelined_engine_never_slower_than_serialized
+    echo "==> cargo test --test golden (golden-vector conformance suite)"
+    cargo test --locked -q --test golden
 
-echo "==> serve smoke: --build-site fabric (GC timing/edge-set regressions)"
-cargo run -q -- serve --events 20 --backend fpga --build-site fabric --workers 2 --pileup 30
+    echo "==> GC-vs-host edge-set equality (smoke tier)"
+    cargo test --locked -q --lib gc_edge_set
+    cargo test --locked -q --test properties prop_fabric_gc_edge_set_equals_host
 
-if [[ "$quick" == 1 ]]; then
-    echo "CI OK (quick smoke tier)"
-    exit 0
-fi
+    echo "==> pipelined GC schedule never slower than the PR 3 barrier (smoke tier)"
+    cargo test --locked -q --test properties prop_gc_pipelined_discovery_never_slower_than_serialized
+    cargo test --locked -q --lib gc_pipelined_engine_never_slower_than_serialized
 
-echo "==> cargo fmt --check"
-cargo fmt --check
+    echo "==> co-simulated GC reproduces the PR 4 replay exactly (smoke tier)"
+    cargo test --locked -q --test properties prop_gc_cosim_inorder_replays_pr4_discovery_schedule
+    cargo test --locked -q --lib gc_cosim_reproduces_pr4_replay_exactly
 
-echo "==> cargo clippy (all targets, warnings are errors)"
-cargo clippy --all-targets -- -D warnings
+    echo "==> serve smoke: --build-site fabric (report must gate on serving health)"
+    smoke="$(cargo run --locked -q -- serve --events 20 --backend fpga --build-site fabric --workers 2 --pileup 30)"
+    echo "$smoke"
+    if ! grep -q 'graph_build\[fabric\]' <<<"$smoke"; then
+        echo "FAIL: serve smoke did not build graphs on the fabric" >&2
+        exit 1
+    fi
+    if ! grep -Eq 'dropped=0( |$)' <<<"$smoke"; then
+        echo "FAIL: serve smoke dropped events" >&2
+        exit 1
+    fi
+    if ! grep -q 'gc\[pipelined-cosim\]' <<<"$smoke"; then
+        echo "FAIL: serve smoke did not run the co-simulated GC feed" >&2
+        exit 1
+    fi
+}
 
-echo "==> cargo build --release"
-cargo build --release
+bench_tier() {
+    echo "==> bench-regression gate: pinned-seed benches"
+    cargo bench --locked --bench ablation_parallelism
+    cargo bench --locked --bench graphbuild_overlap
 
-echo "==> cargo test -q"
-cargo test -q
+    echo "==> bench-check: exact cycle-count/edge-total compare vs rust/baselines"
+    cargo run --locked -q -- bench-check
+}
 
-echo "CI OK"
+case "$tier" in
+    quick)
+        quick_tier
+        echo "CI OK (quick smoke tier)"
+        ;;
+    bench)
+        bench_tier
+        echo "CI OK (bench-regression gate)"
+        ;;
+    full)
+        quick_tier
+
+        echo "==> cargo build --release"
+        cargo build --locked --release
+
+        echo "==> cargo test -q"
+        cargo test --locked -q
+
+        bench_tier
+        echo "CI OK"
+        ;;
+esac

@@ -120,6 +120,21 @@ pub struct ArchConfig {
     /// stalls the owning compare lane (backpressure), so this bounds the
     /// edge store the GC unit needs on-chip.
     pub gc_fifo_depth: usize,
+    /// GC compare-lane issue policy (co-simulated feed only): when true, a
+    /// lane whose next in-order particle is still waiting for its 3x3
+    /// neighbourhood to finish binning yields the issue slot to its next
+    /// *ready* owned particle instead of idling (a per-lane walk-state
+    /// scoreboard re-arbitrates every issue slot — priced in
+    /// [`crate::dataflow::ResourceModel`]). Off by default: the in-order
+    /// controller reproduces the PR 4 schedule exactly.
+    pub gc_skip_on_stall: bool,
+    /// Cross-event GC pipelining (co-simulated feed only): when true, the
+    /// bin engine streams event *i+1* into the spare bin-memory bank while
+    /// event *i*'s compare lanes drain, so the next event's compares start
+    /// earlier ([`crate::dataflow::DataflowEngine::run_stream`]; surfaced
+    /// as `GcStats::cross_event_overlap_cycles`). Costs a second bin-memory
+    /// bank per lane. Off by default.
+    pub gc_cross_event: bool,
 }
 
 impl Default for ArchConfig {
@@ -140,6 +155,8 @@ impl Default for ArchConfig {
             gc_bin_depth: 16,
             gc_lane_ii: 1,
             gc_fifo_depth: 64,
+            gc_skip_on_stall: false,
+            gc_cross_event: false,
         }
     }
 }
@@ -159,6 +176,12 @@ impl ArchConfig {
                 None => dft,
             })
         };
+        let g_b = |k: &str, dft: bool| -> anyhow::Result<bool> {
+            Ok(match v.opt(k) {
+                Some(x) => x.as_bool()?,
+                None => dft,
+            })
+        };
         let c = ArchConfig {
             p_edge: g_us("p_edge", d.p_edge)?,
             p_node: g_us("p_node", d.p_node)?,
@@ -173,6 +196,8 @@ impl ArchConfig {
             gc_bin_depth: g_us("gc_bin_depth", d.gc_bin_depth)?,
             gc_lane_ii: g_us("gc_lane_ii", d.gc_lane_ii)?,
             gc_fifo_depth: g_us("gc_fifo_depth", d.gc_fifo_depth)?,
+            gc_skip_on_stall: g_b("gc_skip_on_stall", d.gc_skip_on_stall)?,
+            gc_cross_event: g_b("gc_cross_event", d.gc_cross_event)?,
         };
         c.validate()?;
         Ok(c)
@@ -352,17 +377,23 @@ mod tests {
         assert_eq!(a.gc_bin_depth, ArchConfig::default().gc_bin_depth);
         assert_eq!(a.gc_lane_ii, ArchConfig::default().gc_lane_ii);
         assert_eq!(a.gc_fifo_depth, ArchConfig::default().gc_fifo_depth);
+        // the co-sim controller flags default off (PR 4-exact schedule)
+        assert!(!a.gc_skip_on_stall);
+        assert!(!a.gc_cross_event);
     }
 
     #[test]
     fn arch_gc_fields_from_json_and_validation() {
         let v = json::parse(
-            r#"{"p_gc": 8, "gc_bin_depth": 32, "gc_lane_ii": 2, "gc_fifo_depth": 16}"#,
+            r#"{"p_gc": 8, "gc_bin_depth": 32, "gc_lane_ii": 2, "gc_fifo_depth": 16,
+                "gc_skip_on_stall": true, "gc_cross_event": true}"#,
         )
         .unwrap();
         let a = ArchConfig::from_json(&v).unwrap();
         assert_eq!((a.p_gc, a.gc_bin_depth, a.gc_lane_ii), (8, 32, 2));
         assert_eq!(a.gc_fifo_depth, 16);
+        assert!(a.gc_skip_on_stall);
+        assert!(a.gc_cross_event);
         let mut bad = ArchConfig::default();
         bad.p_gc = 0;
         assert!(bad.validate().is_err());

@@ -10,6 +10,30 @@
 //! stalls the owning compare lane (measured per lane in the layer-0
 //! [`LayerStats`] and folded back into [`GcStats`]).
 //!
+//! ## The GC cycle-loop contract
+//!
+//! Under the default [`GcFeedModel::Cosim`] the GC bin engine and compare
+//! lanes are first-class steppable units ([`super::gc_unit::GcCosim`])
+//! advanced by this engine's own layer-0 cycle loop: each engine cycle
+//! steps every lane once (`step(cycle) -> LaneEvent`) and then runs one
+//! round-robin merge cycle, so a full lane FIFO stalls its compare lane
+//! *at that cycle* — causal backpressure, not a post-hoc schedule offset.
+//! That unlocks two scheduling axes the replayed schedule cannot express:
+//! skip-on-stall lane re-arbitration
+//! ([`crate::config::ArchConfig::gc_skip_on_stall`]) and cross-event GC
+//! pipelining ([`crate::config::ArchConfig::gc_cross_event`], consumed by
+//! [`DataflowEngine::run_stream`]: event *i+1*'s bin phase runs in the
+//! spare bin-memory bank while event *i*'s compare lanes drain).
+//!
+//! The earlier models remain reproducible as pinned baselines:
+//! [`GcFeedModel::Replay`] replays the PR 4 precomputed pipelined
+//! discovery schedule with per-lane stall offsets, and
+//! [`GcSchedule::Serialized`] keeps the PR 3 barrier schedule with its
+//! single merged 1-edge-per-cycle feed. With skip-on-stall and cross-event
+//! both off, the co-simulated engine reproduces the PR 4 replay **exactly**
+//! — cycle counts, per-lane feed counters, outputs — pinned by a
+//! regression test.
+//!
 //! The engine is **functional and timed at once**: every simulated edge
 //! message is really computed (via the model weights) at the cycle it
 //! issues, and every node writeback really produces the next-layer
@@ -37,9 +61,37 @@ use super::adapter::Adapter;
 use super::broadcast::{BroadcastAction, BroadcastUnit};
 use super::buffers::DoubleBuffer;
 use super::fifo::Fifo;
-use super::gc_unit::{BuildSite, GcRun, GcSchedule, GcStats, GcUnit};
+use super::gc_unit::{
+    BuildSite, GcCosim, GcLanePolicy, GcRun, GcSchedule, GcStats, GcUnit,
+};
 use super::mp_unit::{MpEvent, MpUnit};
 use super::nt_unit::NtUnit;
+
+/// How the engine times the pipelined GC edge feed (fabric builds only;
+/// [`GcSchedule::Serialized`] always replays the PR 3 barrier model).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GcFeedModel {
+    /// Co-simulate the bin engine and compare lanes inside the engine's
+    /// cycle loop (causal backpressure; enables
+    /// [`crate::config::ArchConfig::gc_skip_on_stall`] and
+    /// [`crate::config::ArchConfig::gc_cross_event`]). The default.
+    #[default]
+    Cosim,
+    /// Replay the PR 4 precomputed discovery schedule, shifting each
+    /// lane's remaining schedule by its accumulated stall cycles — kept as
+    /// a pinned baseline (cycle-identical to `Cosim` with both co-sim
+    /// flags off).
+    Replay,
+}
+
+impl std::fmt::Display for GcFeedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GcFeedModel::Cosim => write!(f, "cosim"),
+            GcFeedModel::Replay => write!(f, "replay"),
+        }
+    }
+}
 
 /// How target embeddings reach the MP units (§III-B.3 design alternatives).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -214,6 +266,10 @@ pub struct DataflowEngine {
     /// merge; [`GcSchedule::Serialized`] keeps the PR 3 barrier schedule
     /// and its single merged 1-edge-per-cycle feed, as a measured baseline.
     pub gc_schedule: GcSchedule,
+    /// How the pipelined GC feed is timed: co-simulated inside the cycle
+    /// loop (default) or replayed from the PR 4 precomputed schedule (a
+    /// pinned baseline). See [`GcFeedModel`].
+    pub gc_feed: GcFeedModel,
     /// When Some(k), sample the fabric occupancy every k cycles into
     /// LayerStats::timeline (costs a few % of simulator speed; off in
     /// benches, on in the dataflow_trace example).
@@ -242,6 +298,7 @@ impl DataflowEngine {
             build_site: BuildSite::Host,
             gc_delta: 0.8,
             gc_schedule: GcSchedule::default(),
+            gc_feed: GcFeedModel::default(),
             trace_sample_every: None,
             max_cycles_per_layer: 500_000_000,
         })
@@ -292,6 +349,86 @@ impl DataflowEngine {
 
     /// Run one padded graph through the simulated fabric.
     pub fn run(&self, g: &PaddedGraph) -> SimResult {
+        self.run_inner(g, 0)
+    }
+
+    /// Run a back-to-back event stream through the fabric, carrying the
+    /// cross-event GC window between consecutive events when
+    /// [`crate::config::ArchConfig::gc_cross_event`] is set (co-simulated
+    /// pipelined fabric builds only): event *i+1*'s bin phase runs in the
+    /// spare bin-memory bank while event *i*'s compare lanes drain, so the
+    /// next event's GC schedule starts up to `bin_cycles` early — recorded
+    /// per event as [`GcStats::cross_event_overlap_cycles`], so per-event
+    /// stats stay separable. With the flag off (or for host builds) this
+    /// is exactly a sequence of independent [`run`]s.
+    ///
+    /// Host staging is double-buffered (the same assumption
+    /// [`sustained_throughput_hz`] makes), so event *i+1*'s particles are
+    /// on-chip while event *i* computes.
+    ///
+    /// [`run`]: DataflowEngine::run
+    /// [`sustained_throughput_hz`]: DataflowEngine::sustained_throughput_hz
+    pub fn run_stream(&self, gs: &[PaddedGraph]) -> Vec<SimResult> {
+        let mut window = 0u64;
+        gs.iter()
+            .map(|g| {
+                let r = self.run_inner(g, window);
+                window = match (&r.breakdown.gc, self.cross_event_active()) {
+                    (Some(gc), true) => {
+                        // the bin engine frees after its span in this
+                        // event's timeline; the rest of the event is the
+                        // next event's binning window
+                        let bin_span = gc.bin_cycles - gc.cross_event_overlap_cycles;
+                        r.breakdown.total_cycles.saturating_sub(bin_span)
+                    }
+                    _ => 0,
+                };
+                r
+            })
+            .collect()
+    }
+
+    /// Does this engine overlap event *i+1*'s GC binning with event *i*'s
+    /// compare drain in [`run_stream`](DataflowEngine::run_stream)?
+    fn cross_event_active(&self) -> bool {
+        self.arch.gc_cross_event
+            && self.build_site == BuildSite::Fabric
+            && self.gc_schedule == GcSchedule::Pipelined
+            && self.gc_feed == GcFeedModel::Cosim
+    }
+
+    /// Human-readable GC scheduling mode for serving reports: `None` for
+    /// host builds, otherwise the *configured* schedule, feed model, and
+    /// co-sim flags (e.g. `"pipelined-cosim+skip+xevent"`). Like the rest
+    /// of the mode string this reports configuration, not observation —
+    /// `+xevent` in particular only materialises across streamed events
+    /// ([`run_stream`](DataflowEngine::run_stream)); what actually
+    /// overlapped is recorded per event in
+    /// [`GcStats::cross_event_overlap_cycles`].
+    pub fn gc_mode(&self) -> Option<String> {
+        if self.build_site != BuildSite::Fabric {
+            return None;
+        }
+        Some(match (self.gc_schedule, self.gc_feed) {
+            (GcSchedule::Serialized, _) => "serialized".to_string(),
+            (GcSchedule::Pipelined, GcFeedModel::Replay) => "pipelined-replay".to_string(),
+            (GcSchedule::Pipelined, GcFeedModel::Cosim) => {
+                let mut s = String::from("pipelined-cosim");
+                if self.arch.gc_skip_on_stall {
+                    s.push_str("+skip");
+                }
+                if self.arch.gc_cross_event {
+                    s.push_str("+xevent");
+                }
+                s
+            }
+        })
+    }
+
+    /// One event through the fabric. `gc_window` is the cross-event bin
+    /// window inherited from the previous event's drain (0 for standalone
+    /// runs; threaded by [`run_stream`](DataflowEngine::run_stream)).
+    fn run_inner(&self, g: &PaddedGraph, gc_window: u64) -> SimResult {
         let cfg = &self.model.cfg;
         let d = cfg.node_dim;
         let n_live = g.n;
@@ -305,16 +442,42 @@ impl DataflowEngine {
 
         // --- on-fabric graph construction (overlapped, Fabric only) -------
         // The GC unit starts at cycle 0, concurrent with the embed stage
-        // (it reads raw η-φ, not embeddings). Its per-edge discovery
-        // schedule gates when layer 0 may issue each edge.
-        let gc: Option<GcRun> = match self.build_site {
-            BuildSite::Host => None,
-            BuildSite::Fabric => Some(
-                GcUnit::from_arch(&self.arch, self.gc_delta)
-                    .expect("gc delta validated by set_build_site")
-                    .run_scheduled(g, self.gc_schedule),
-            ),
-        };
+        // (it reads raw η-φ, not embeddings). Under the default co-sim
+        // feed the bin engine + compare lanes are steppable units the
+        // layer-0 cycle loop advances; the replayed baselines precompute
+        // the discovery schedule instead.
+        let mut gc: Option<GcRun> = None;
+        let mut gc_cosim: Option<GcCosim> = None;
+        if self.build_site == BuildSite::Fabric {
+            let unit = GcUnit::from_arch(&self.arch, self.gc_delta)
+                .expect("gc delta validated by set_build_site");
+            match (self.gc_schedule, self.gc_feed) {
+                // PR 3 baseline: barrier schedule, single merged feed.
+                (GcSchedule::Serialized, _) => {
+                    gc = Some(unit.run_scheduled(g, GcSchedule::Serialized));
+                }
+                // PR 4 baseline: replayed pipelined discovery schedule.
+                (GcSchedule::Pipelined, GcFeedModel::Replay) => {
+                    gc = Some(unit.run_scheduled(g, GcSchedule::Pipelined));
+                }
+                // The co-simulated default.
+                (GcSchedule::Pipelined, GcFeedModel::Cosim) => {
+                    let policy = if self.arch.gc_skip_on_stall {
+                        GcLanePolicy::SkipOnStall
+                    } else {
+                        GcLanePolicy::InOrder
+                    };
+                    gc_cosim = Some(GcCosim::new(
+                        &unit,
+                        g,
+                        policy,
+                        self.arch.gc_fifo_depth.max(1),
+                        self.arch.p_edge,
+                        gc_window,
+                    ));
+                }
+            }
+        }
 
         // --- embedding stage (NT units, formula-timed, functional) --------
         let x0 = self.model.embed(g);
@@ -326,8 +489,12 @@ impl DataflowEngine {
         ne.load(x0);
         let mut elapsed = breakdown.embed_cycles;
         for l in 0..cfg.n_layers {
-            let gc_feed = if l == 0 { gc.as_ref() } else { None };
-            let stats = self.run_layer(l, &mut ne, g, gc_feed, elapsed);
+            let (gc_feed, cosim_feed) = if l == 0 {
+                (gc.as_ref(), gc_cosim.as_mut())
+            } else {
+                (None, None)
+            };
+            let stats = self.run_layer(l, &mut ne, g, gc_feed, cosim_feed, elapsed);
             elapsed += stats.cycles + 1; // + NE bank swap
             breakdown.layers.push(stats);
             ne.swap();
@@ -342,7 +509,15 @@ impl DataflowEngine {
             + breakdown.layers.iter().map(|s| s.cycles).sum::<u64>()
             + breakdown.head_cycles
             + breakdown.swap_cycles;
-        if let Some(gcr) = gc {
+        if let Some(mut cosim) = gc_cosim {
+            // Drain the trailing (negative or padding-dropped) compares,
+            // assert the bit-identity contract, and let the measured lane
+            // finishes — causal backpressure included — bound the critical
+            // path when the graph is too small to hide the GC.
+            cosim.finish();
+            breakdown.total_cycles = breakdown.total_cycles.max(cosim.finish_cycle());
+            breakdown.gc = Some(cosim.stats());
+        } else if let Some(gcr) = gc {
             let mut gstats = gcr.stats.clone();
             // Fold the layer-0 feed's measured backpressure into the GC
             // stage accounting: a full lane FIFO stalled the owning compare
@@ -415,22 +590,30 @@ impl DataflowEngine {
     /// One GNN layer through the fabric. Functional: reads ne.read(),
     /// writes the next embeddings into ne.write().
     ///
-    /// `gc` (layer 0, fabric build only) is the GC unit's edge-discovery
-    /// schedule: edges stream from the per-lane GC edge FIFOs into the MP
-    /// capture buffers as they are discovered (round-robin merge, up to
-    /// min(P_gc, P_edge) per cycle, one per MP write port; a full lane
-    /// FIFO stalls the owning compare lane — under the serialized PR 3
-    /// baseline, one merged feed drained at 1 edge/cycle instead),
+    /// `gc` / `cosim` (layer 0, fabric build only) select the GC edge feed
     /// replacing broadcast capture for this layer — the GC unit already
     /// knows both endpoints, and the MP units read them from the local NE
-    /// banks. `cycle_offset` is the fabric cycle at which this layer
-    /// starts (GC ready cycles are absolute, from event start).
+    /// banks:
+    ///
+    /// - `cosim`: the steppable GC subsystem; every engine cycle advances
+    ///   the bin engine and compare lanes one cycle and then runs one
+    ///   round-robin merge cycle (up to min(P_gc, P_edge) edges, one per
+    ///   MP write port; a full lane FIFO stalls the owning compare lane at
+    ///   that cycle).
+    /// - `gc` (replay baselines): the precomputed discovery schedule —
+    ///   per-lane FIFO replay with stall offsets for the PR 4 pipelined
+    ///   schedule, one merged feed drained at 1 edge/cycle for the PR 3
+    ///   serialized schedule.
+    ///
+    /// `cycle_offset` is the fabric cycle at which this layer starts (GC
+    /// ready cycles are absolute, from event start).
     fn run_layer(
         &self,
         l: usize,
         ne: &mut DoubleBuffer,
         g: &PaddedGraph,
         gc: Option<&GcRun>,
+        mut cosim: Option<&mut GcCosim>,
         cycle_offset: u64,
     ) -> LayerStats {
         let cfg = &self.model.cfg;
@@ -480,8 +663,9 @@ impl DataflowEngine {
         let mut adapter = Adapter::new(p_node);
         // GC-fed layer: no broadcast capture — edges arrive from the GC
         // FIFO with both endpoints known, read locally from the NE banks.
+        let gc_fed = gc.is_some() || cosim.is_some();
         let mut bcast = BroadcastUnit::new(
-            if self.mode == BroadcastMode::Broadcast && gc.is_none() { n_live } else { 0 },
+            if self.mode == BroadcastMode::Broadcast && !gc_fed { n_live } else { 0 },
             self.params.beat,
         );
 
@@ -489,7 +673,7 @@ impl DataflowEngine {
         // embeddings each unit needs.
         let mut bus_queue: std::collections::VecDeque<(usize, u32)> =
             std::collections::VecDeque::new();
-        if self.mode == BroadcastMode::MulticastBus && gc.is_none() {
+        if self.mode == BroadcastMode::MulticastBus && !gc_fed {
             // per-unit need sets, in node order
             for v in 0..n_live as u32 {
                 for (k, mp) in mps.iter().enumerate() {
@@ -504,7 +688,7 @@ impl DataflowEngine {
 
         // Full replication: all target embeddings locally available — MP
         // units start with their whole edge list pending, in target order.
-        if self.mode == BroadcastMode::FullReplication && gc.is_none() {
+        if self.mode == BroadcastMode::FullReplication && !gc_fed {
             for mp in &mut mps {
                 mp.preload_all_pending();
             }
@@ -636,16 +820,24 @@ impl DataflowEngine {
                 }
             }
 
-            // 4. Edge/embedding delivery. GC-fed layer, pipelined: the
-            //    compare lanes emit into their bounded per-lane FIFOs
-            //    (advance_to, covering the embed-stage cycles on the first
-            //    iteration — a full FIFO stalls the owning lane), and the
-            //    round-robin merge delivers up to min(P_gc, P_edge) edges
-            //    into the MP capture buffers, one per MP write port per
-            //    cycle. Serialized baseline: one merged unbounded feed
-            //    drained at 1 edge/cycle, head-of-line on a full capture
-            //    buffer — exactly the PR 3 model.
-            if let Some(f) = lane_feed.as_mut() {
+            // 4. Edge/embedding delivery. GC-fed layer, co-simulated
+            //    (default): the engine's cycle loop advances the steppable
+            //    bin engine + compare lanes one cycle (advance_to covers
+            //    the formula-timed embed stage on the first iteration —
+            //    the FIFOs fill with no consumer) and then runs one
+            //    round-robin merge cycle delivering up to
+            //    min(P_gc, P_edge) edges into the MP capture buffers, one
+            //    per MP write port. Replay baseline: same FIFO/merge
+            //    model, but emissions follow the precomputed PR 4
+            //    discovery schedule shifted by per-lane stall offsets.
+            //    Serialized baseline: one merged unbounded feed drained at
+            //    1 edge/cycle, head-of-line on a full capture buffer —
+            //    exactly the PR 3 model.
+            if let Some(c) = cosim.as_deref_mut() {
+                let now = cycle_offset + cycles;
+                c.advance_to(now);
+                c.deliver(&mut |mp, k| mps[mp].try_inject(k));
+            } else if let Some(f) = lane_feed.as_mut() {
                 let now = cycle_offset + cycles;
                 f.advance_to(now);
                 f.deliver(&mut mps, p_edge);
@@ -725,6 +917,18 @@ impl DataflowEngine {
                 stats.gc_lane_last_emit_cycle.push(lane.last_push);
             }
         }
+        if let Some(c) = cosim {
+            debug_assert!(c.all_delivered(), "layer ended with undelivered GC edges");
+            for lane in &c.lanes {
+                let (blocked, fifo_max, stall, last_push) = lane.feed_stats();
+                stats.gc_feed_blocked += blocked;
+                stats.gc_fifo_max_occupancy = stats.gc_fifo_max_occupancy.max(fifo_max);
+                stats.gc_lane_feed_blocked.push(blocked);
+                stats.gc_lane_fifo_max_occupancy.push(fifo_max);
+                stats.gc_lane_stall_cycles.push(stall);
+                stats.gc_lane_last_emit_cycle.push(last_push);
+            }
+        }
         for mp in &mps {
             stats.mp_busy_cycles += mp.busy_cycles;
             stats.mp_idle_cycles += mp.idle_cycles;
@@ -768,6 +972,15 @@ struct GcLane {
     /// fabric cycle of this lane's most recent successful FIFO push
     /// (directly measured; 0 until the lane emits)
     last_push: u64,
+}
+
+impl super::gc_unit::MergeLane for GcLane {
+    fn fifo(&mut self) -> &mut Fifo<(u32, u32)> {
+        &mut self.fifo
+    }
+    fn count_blocked(&mut self) {
+        self.blocked += 1;
+    }
 }
 
 /// Fabric-build layer-0 edge feed under [`GcSchedule::Pipelined`]: per-lane
@@ -848,26 +1061,18 @@ impl GcFeed {
 
     /// One merge cycle: round-robin over the lane FIFO heads, delivering up
     /// to min(P_gc, P_edge) edges into the MP capture buffers, at most one
-    /// per MP write port. Waiting heads count their blocked cycles.
+    /// per MP write port. Waiting heads count their blocked cycles. The
+    /// merge itself is [`super::gc_unit::rr_merge`] — the single
+    /// implementation shared with the co-simulated lanes, which the
+    /// cosim-vs-replay cycle-exactness pin relies on.
     fn deliver(&mut self, mps: &mut [MpUnit], p_edge: usize) {
-        let width = self.lanes.len().min(p_edge);
-        self.port_used.fill(false);
-        let mut delivered = 0usize;
-        let n_lanes = self.lanes.len();
-        for off in 0..n_lanes {
-            let j = (self.rr + off) % n_lanes;
-            let lane = &mut self.lanes[j];
-            let Some(&(k, mp)) = lane.fifo.peek() else { continue };
-            let mp = mp as usize;
-            if delivered < width && !self.port_used[mp] && mps[mp].try_inject(k) {
-                lane.fifo.pop();
-                self.port_used[mp] = true;
-                delivered += 1;
-            } else {
-                lane.blocked += 1;
-            }
-        }
-        self.rr = (self.rr + 1) % n_lanes;
+        super::gc_unit::rr_merge(
+            &mut self.lanes,
+            &mut self.rr,
+            &mut self.port_used,
+            p_edge,
+            &mut |mp, k| mps[mp].try_inject(k),
+        );
     }
 
     /// Every discovered edge has left its lane FIFO for an MP unit.
@@ -1317,5 +1522,197 @@ mod tests {
         assert!(eng.set_build_site(super::BuildSite::Fabric, 0.8).is_ok());
         assert_eq!(eng.build_site, super::BuildSite::Fabric);
         assert_eq!(eng.gc_delta(), 0.8);
+    }
+
+    fn fabric_engine_arch(arch: ArchConfig) -> DataflowEngine {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 11);
+        let mut eng =
+            DataflowEngine::new(arch, L1DeepMetV2::new(cfg, w).unwrap()).unwrap();
+        eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+        eng
+    }
+
+    #[test]
+    fn gc_cosim_reproduces_pr4_replay_exactly() {
+        // The tentpole's compatibility pin: with skip-on-stall and
+        // cross-event both off, the co-simulated engine reproduces the
+        // replayed PR 4 schedule cycle for cycle — total cycles, every
+        // GcStats field, and the per-lane layer-0 feed measurements —
+        // across backpressured and relaxed fabric shapes.
+        let arches = [
+            ArchConfig::default(),
+            // lane-FIFO backpressure reaching into the compare lanes
+            ArchConfig { gc_fifo_depth: 1, ..Default::default() },
+            // MP capture backpressure blocking the merge
+            ArchConfig { fifo_depth: 2, gc_fifo_depth: 2, ..Default::default() },
+            // odd shapes: more lanes than write ports, slower compares
+            ArchConfig { p_edge: 5, p_node: 3, p_gc: 7, gc_lane_ii: 2, ..Default::default() },
+        ];
+        for arch in arches {
+            let mut cosim = fabric_engine_arch(arch.clone());
+            cosim.gc_feed = GcFeedModel::Cosim;
+            let mut replay = fabric_engine_arch(arch.clone());
+            replay.gc_feed = GcFeedModel::Replay;
+            for seed in [1u64, 7, 12] {
+                let g = sample(seed);
+                let a = cosim.run(&g);
+                let b = replay.run(&g);
+                let ctx = format!("seed {seed} p_gc={} gc_fifo={}", arch.p_gc, arch.gc_fifo_depth);
+                assert_eq!(a.output.weights, b.output.weights, "{ctx}");
+                assert_eq!(a.output.met_xy, b.output.met_xy, "{ctx}");
+                assert_eq!(a.breakdown.total_cycles, b.breakdown.total_cycles, "{ctx}");
+                for (la, lb) in a.breakdown.layers.iter().zip(&b.breakdown.layers) {
+                    assert_eq!(la.cycles, lb.cycles, "{ctx}");
+                    assert_eq!(la.gc_feed_blocked, lb.gc_feed_blocked, "{ctx}");
+                    assert_eq!(la.gc_fifo_max_occupancy, lb.gc_fifo_max_occupancy, "{ctx}");
+                    assert_eq!(la.gc_lane_feed_blocked, lb.gc_lane_feed_blocked, "{ctx}");
+                    assert_eq!(
+                        la.gc_lane_fifo_max_occupancy,
+                        lb.gc_lane_fifo_max_occupancy,
+                        "{ctx}"
+                    );
+                    assert_eq!(la.gc_lane_stall_cycles, lb.gc_lane_stall_cycles, "{ctx}");
+                    assert_eq!(la.gc_lane_last_emit_cycle, lb.gc_lane_last_emit_cycle, "{ctx}");
+                }
+                let ga = a.breakdown.gc.as_ref().unwrap();
+                let gb = b.breakdown.gc.as_ref().unwrap();
+                // whole-struct equality: every GcStats field — including
+                // any added later — must match the replay exactly
+                assert_eq!(ga, gb, "{ctx}");
+                assert_eq!(ga.cross_event_overlap_cycles, 0, "{ctx}");
+            }
+        }
+    }
+
+    #[test]
+    fn gc_skip_on_stall_keeps_bit_identity_under_backpressure() {
+        // Depth-1 lane FIFOs with re-arbitrating lanes: the harshest
+        // co-sim configuration still computes exactly the reference model
+        // and accounts its stalls.
+        let arch = ArchConfig {
+            gc_fifo_depth: 1,
+            gc_skip_on_stall: true,
+            ..Default::default()
+        };
+        let eng = fabric_engine_arch(arch);
+        assert_eq!(eng.gc_mode().as_deref(), Some("pipelined-cosim+skip"));
+        let reference = reference_arith(Arith::F32);
+        for seed in [3u64, 7] {
+            let g = sample(seed);
+            let sim = eng.run(&g);
+            let exp = reference.forward(&g);
+            assert_eq!(sim.output.weights, exp.weights, "seed {seed}");
+            assert_eq!(sim.output.met_xy, exp.met_xy, "seed {seed}");
+            let gc = sim.breakdown.gc.as_ref().unwrap();
+            assert_eq!(gc.edges_emitted as usize, g.e, "seed {seed}");
+            assert!(gc.fifo_stall_cycles > 0, "depth-1 lane FIFOs must stall");
+            let l0 = &sim.breakdown.layers[0];
+            assert_eq!(
+                gc.fifo_stall_cycles,
+                l0.gc_lane_stall_cycles.iter().sum::<u64>()
+            );
+            assert_eq!(
+                gc.emit_end_cycle,
+                l0.gc_lane_last_emit_cycle.iter().copied().max().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn run_stream_equals_independent_runs_without_cross_event() {
+        let eng = fabric_engine_arch(ArchConfig::default());
+        let gs = [sample(1), sample(2), sample(3)];
+        let stream = eng.run_stream(&gs);
+        assert_eq!(stream.len(), 3);
+        for (r, g) in stream.iter().zip(&gs) {
+            let solo = eng.run(g);
+            assert_eq!(r.output.weights, solo.output.weights);
+            assert_eq!(r.breakdown.total_cycles, solo.breakdown.total_cycles);
+            let gc = r.breakdown.gc.as_ref().unwrap();
+            assert_eq!(gc.cross_event_overlap_cycles, 0);
+        }
+    }
+
+    #[test]
+    fn gc_cross_event_overlaps_next_bin_with_previous_drain() {
+        // Deep lane FIFOs (no stalls) so the GC discovery arithmetic is
+        // provably monotone in the head start; identical events make the
+        // expected overlap exact.
+        let arch = ArchConfig {
+            gc_cross_event: true,
+            gc_fifo_depth: 1 << 14,
+            ..Default::default()
+        };
+        let eng = fabric_engine_arch(arch);
+        assert_eq!(eng.gc_mode().as_deref(), Some("pipelined-cosim+xevent"));
+        let g = sample(12);
+        let stream = eng.run_stream(&[g.clone(), g.clone()]);
+        let (r0, r1) = (&stream[0], &stream[1]);
+        let g0 = r0.breakdown.gc.as_ref().unwrap();
+        let g1 = r1.breakdown.gc.as_ref().unwrap();
+        // the first event of a stream has no drain window to inherit
+        assert_eq!(g0.cross_event_overlap_cycles, 0);
+        // event 1's bin phase ran entirely during event 0's drain: the
+        // window (total - bin) dwarfs the bin phase for a real event
+        assert_eq!(g1.cross_event_overlap_cycles, g1.bin_cycles);
+        assert!(g1.bin_cycles > 0);
+        // per-event stats stay separable: same event, same work, same
+        // barrier price — only the gating moved
+        assert_eq!(g1.bin_cycles, g0.bin_cycles);
+        assert_eq!(g1.pairs_compared, g0.pairs_compared);
+        assert_eq!(g1.edges_emitted, g0.edges_emitted);
+        assert_eq!(g1.serialized_total_cycles, g0.serialized_total_cycles);
+        // and the overlapped event's GC discovery ends strictly earlier
+        assert!(
+            g1.total_cycles < g0.total_cycles,
+            "overlapped GC {} !< standalone GC {}",
+            g1.total_cycles,
+            g0.total_cycles
+        );
+        // outputs are untouched — the schedule moves cycles, never math
+        assert_eq!(r0.output.weights, r1.output.weights);
+        // the standalone leg matches a plain run
+        let solo = eng.run(&g);
+        assert_eq!(r0.breakdown.total_cycles, solo.breakdown.total_cycles);
+    }
+
+    #[test]
+    fn gc_cross_event_shortens_e2e_when_gc_is_critical() {
+        // The E2E overlap accounting: on a GC-critical event (edge-free,
+        // heavy compare load) the hidden bin phase shortens the fabric
+        // timeline and therefore E2E latency for every event after the
+        // first.
+        let ev = crate::physics::event::test_fixtures::lattice_event_spacing_0p9();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let arch = ArchConfig {
+            p_gc: 1,
+            gc_lane_ii: 128,
+            gc_cross_event: true,
+            ..Default::default()
+        };
+        let eng = fabric_engine_arch(arch);
+        let stream = eng.run_stream(&[g.clone(), g.clone()]);
+        let (r0, r1) = (&stream[0], &stream[1]);
+        assert!(r1.breakdown.gc.as_ref().unwrap().cross_event_overlap_cycles > 0);
+        assert!(
+            r1.breakdown.total_cycles < r0.breakdown.total_cycles,
+            "cross-event must shorten a GC-critical timeline: {} !< {}",
+            r1.breakdown.total_cycles,
+            r0.breakdown.total_cycles
+        );
+        assert!(r1.e2e_s < r0.e2e_s);
+    }
+
+    #[test]
+    fn gc_mode_strings_cover_schedules_and_feeds() {
+        let mut eng = engine(BroadcastMode::Broadcast);
+        assert_eq!(eng.gc_mode(), None, "host builds report no GC mode");
+        eng.set_build_site(super::BuildSite::Fabric, 0.8).unwrap();
+        assert_eq!(eng.gc_mode().as_deref(), Some("pipelined-cosim"));
+        eng.gc_feed = GcFeedModel::Replay;
+        assert_eq!(eng.gc_mode().as_deref(), Some("pipelined-replay"));
+        eng.gc_schedule = super::GcSchedule::Serialized;
+        assert_eq!(eng.gc_mode().as_deref(), Some("serialized"));
     }
 }

@@ -32,13 +32,46 @@
 //!    merge at the MP boundary delivers up to min(P_gc, P_edge) edges per
 //!    cycle (one per MP-unit write port) into the layer-0 capture buffers.
 //!    A full lane FIFO stalls the owning compare lane — the fabric's
-//!    backpressure chain reaches each GC lane individually. The FIFO and
-//!    merge timing live in [`super::engine::DataflowEngine`], which
-//!    consumes the discovery schedule computed here: this unit reports the
-//!    unconstrained schedule (free-draining consumer), and the engine
-//!    folds the measured backpressure back into [`GcStats`]
-//!    (`fifo_stall_cycles`, `emit_end_cycle`) and the per-lane feed
-//!    counters on the layer-0 [`super::engine::LayerStats`].
+//!    backpressure chain reaches each GC lane individually.
+//!
+//! ## The cycle-loop contract (co-simulation)
+//!
+//! Since the steppable refactor the bin engine and the compare lanes are
+//! **first-class steppable units**: [`GcCosim`] packages a [`GcBinEngine`]
+//! plus `P_gc` [`GcCompareLane`]s, and the engine's own cycle loop advances
+//! them — each lane exposes `step(cycle) -> `[`LaneEvent`], evaluating the
+//! real Eq. 1 compare at the cycle it completes and pushing the discovered
+//! edge into its bounded FIFO *that same cycle*. Backpressure is causal: a
+//! full lane FIFO stalls the lane at the cycle the push fails, not as a
+//! post-hoc offset on a precomputed schedule. Two controller policies
+//! ([`GcLanePolicy`]):
+//!
+//! - [`GcLanePolicy::InOrder`] (default) — the lane walks its owned
+//!   particles in ascending order and a stall freezes the lane's whole
+//!   controller (gating waits included). This reproduces the PR 4 replayed
+//!   schedule **cycle-exactly** (pinned by `run_cosim`-vs-`run_scheduled`
+//!   property tests and an engine-level cosim-vs-replay regression test).
+//! - [`GcLanePolicy::SkipOnStall`] — a lane whose lowest in-order particle
+//!   is still waiting for its neighbourhood to finish binning yields the
+//!   issue slot to its next *ready* owned particle (a per-lane walk-state
+//!   scoreboard re-arbitrates every issue slot). At the paper's fully
+//!   pipelined compare datapath (`gc_lane_ii == 1`) this never discovers
+//!   fewer edges by any cycle than in-order stalling (property-tested); at
+//!   II > 1 a non-preemptible in-flight compare can transiently delay a
+//!   just-ready lower-index particle, so only the lane finish times and
+//!   the edge set are guaranteed.
+//!
+//! Cross-event pipelining: [`GcCosim::new`] accepts a *head start* — the
+//! number of bin cycles already executed while the previous event's compare
+//! lanes drained (the bin engine double-buffers its bin memories). The
+//! engine's [`run_stream`] threads that window between consecutive events
+//! when [`gc_cross_event`] is set, and `GcStats::cross_event_overlap_cycles`
+//! records it per event, so per-event stats stay separable.
+//!
+//! The PR 3/4 schedules remain reproducible as baselines:
+//! [`GcUnit::run_scheduled`] still computes the replayed discovery schedule
+//! (serialized barrier or pipelined, free-draining consumer) that the
+//! engine's replay feed and the bench baselines pin against.
 //!
 //! Functional/timing coupling follows the engine's discipline: the unit
 //! computes real edges at the cycles it claims, so the timing model can
@@ -48,12 +81,16 @@
 //! which the property suite asserts across random events and GC shapes.
 //!
 //! [`gc_fifo_depth`]: crate::config::ArchConfig::gc_fifo_depth
+//! [`gc_cross_event`]: crate::config::ArchConfig::gc_cross_event
+//! [`run_stream`]: super::engine::DataflowEngine::run_stream
 
 use std::collections::HashMap;
 
 use crate::config::ArchConfig;
 use crate::graph::{GraphBuilder, PaddedGraph};
 use crate::physics::event::delta_r2;
+
+use super::fifo::Fifo;
 
 /// Where the event graph is constructed.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -100,6 +137,47 @@ impl std::fmt::Display for GcSchedule {
     }
 }
 
+/// Issue policy of a co-simulated compare lane (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GcLanePolicy {
+    /// Walk owned particles in ascending order; any stall (a full edge
+    /// FIFO, or a neighbourhood still binning) freezes the whole lane
+    /// controller. Cycle-exact with the PR 4 replayed schedule.
+    #[default]
+    InOrder,
+    /// Re-arbitrate every issue slot: the lane issues the compare of its
+    /// lowest-indexed *ready* owned particle, so a particle still waiting
+    /// for its neighbourhood bins yields its slot instead of blocking the
+    /// lane (a full edge FIFO still freezes the lane — every owned
+    /// particle emits into the same FIFO).
+    SkipOnStall,
+}
+
+impl std::fmt::Display for GcLanePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GcLanePolicy::InOrder => write!(f, "in-order"),
+            GcLanePolicy::SkipOnStall => write!(f, "skip-on-stall"),
+        }
+    }
+}
+
+/// Externally visible outcome of one [`GcCompareLane::step`] cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneEvent {
+    /// Nothing completed this cycle (pipeline filling, or waiting for a
+    /// neighbourhood to finish binning).
+    Idle,
+    /// The lane sat frozen on its full edge FIFO (causal backpressure).
+    Stalled,
+    /// A compare completed this cycle; `edge` is the host edge id when the
+    /// pair passed Eq. 1 and survived the padding cap (its emission enters
+    /// the lane FIFO this cycle, backpressure permitting).
+    Compared { edge: Option<u32> },
+    /// Every owned candidate pair has been compared and emitted.
+    Done,
+}
+
 /// Typed error for an invalid GC ΔR radius (non-positive or non-finite) —
 /// the `Format::try_new` precedent: construction reports instead of
 /// asserting, and the pipeline surfaces it through a typed
@@ -121,8 +199,11 @@ impl std::fmt::Display for GcDeltaError {
 
 impl std::error::Error for GcDeltaError {}
 
-/// Cycle/activity accounting of one GC pass.
-#[derive(Clone, Debug, Default)]
+/// Cycle/activity accounting of one GC pass. `PartialEq`/`Eq` exist for
+/// the schedule-equivalence pins (cosim vs replay): whole-struct equality
+/// keeps every *future* field covered by the compatibility tests
+/// automatically.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct GcStats {
     /// Binning phase length (one particle per cycle + spill penalties).
     pub bin_cycles: u64,
@@ -164,6 +245,12 @@ pub struct GcStats {
     /// complete (pipelined) or for the slowest lane — between a lane's
     /// first compare opportunity and `total_cycles`.
     pub lane_idle_cycles: u64,
+    /// Cross-event pipelining only: bin cycles of *this* event that ran
+    /// while the previous event's compare lanes drained (the bin engine's
+    /// head start into the spare bin-memory bank). 0 unless the engine ran
+    /// this event through [`super::engine::DataflowEngine::run_stream`]
+    /// with [`crate::config::ArchConfig::gc_cross_event`] set.
+    pub cross_event_overlap_cycles: u64,
 }
 
 /// Result of one GC pass: the per-edge discovery schedule plus stats.
@@ -233,39 +320,19 @@ impl GcUnit {
         let d2 = self.delta * self.delta;
         // Same grid geometry as the host builder (shared code path).
         let grid = GraphBuilder::new(self.delta);
-
-        // Live-node coordinates from the raw feature rows ([pt, eta, phi,
-        // px, py, dz] — the fabric receives exactly these).
-        let eta = |i: usize| g.cont[i * 6 + 1];
-        let phi = |i: usize| g.cont[i * 6 + 2];
-
-        // Host edge ids for the live prefix: the canonical indices the
-        // engine's functional payload uses.
-        let mut host_id: HashMap<(u32, u32), u32> = HashMap::with_capacity(g.e);
-        for k in 0..g.e {
-            debug_assert_eq!(g.edge_mask[k], 1.0, "live edges form a prefix");
-            host_id.insert((g.src[k] as u32, g.dst[k] as u32), k as u32);
-        }
+        let coords = live_coords(g);
+        let eta = |i: usize| coords[i].0;
+        let phi = |i: usize| coords[i].1;
+        let host_id = host_edge_ids(g);
 
         // --- phase 1: bin engine (II = 1, spills cost one extra cycle) ----
+        // Shared with the steppable co-simulation, so the two models can
+        // never disagree on the bin schedule.
         let mut stats = GcStats::default();
-        let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.n_cells()];
-        // bin_done[c] = cycle at which cell c received its final particle
-        // (0 for cells that stay empty): the pipelined schedule's
-        // per-neighbourhood completion gate.
-        let mut bin_done: Vec<u64> = vec![0; grid.n_cells()];
-        let mut cycle: u64 = 0;
-        for i in 0..n {
-            cycle += 1;
-            let c = grid.cell_of(eta(i), phi(i));
-            if cells[c].len() >= self.bin_depth {
-                cycle += 1; // spill into the overflow buffer
-                stats.bin_overflows += 1;
-            }
-            cells[c].push(i as u32);
-            bin_done[c] = cycle;
-        }
-        stats.bin_cycles = cycle;
+        let bin = bin_phase(&grid, &coords, self.bin_depth);
+        let BinPhase { cells, bin_done, .. } = &bin;
+        stats.bin_overflows = bin.overflows;
+        stats.bin_cycles = bin.cycles;
 
         // --- phase 2: P_gc pair-compare lanes ------------------------------
         // Lane j owns particles {u : u mod p_gc == j} and walks them in
@@ -382,6 +449,735 @@ impl GcUnit {
         }
 
         GcRun { ready_cycle: ready, lane_end, stats }
+    }
+
+    /// Run the steppable co-simulation over one padded event with a
+    /// free-draining consumer (every lane FIFO is drained each cycle), and
+    /// return the measured discovery schedule as a [`GcRun`].
+    ///
+    /// With [`GcLanePolicy::InOrder`] this reproduces
+    /// `run_scheduled(g, GcSchedule::Pipelined)` **exactly** — ready
+    /// cycles, lane ends, and stats — which the property suite pins; with
+    /// [`GcLanePolicy::SkipOnStall`] lanes re-arbitrate around
+    /// neighbourhood-gating waits (see the module docs for what is and is
+    /// not guaranteed at `gc_lane_ii > 1`).
+    pub fn run_cosim(&self, g: &PaddedGraph, policy: GcLanePolicy) -> GcRun {
+        let mut cosim = GcCosim::new(self, g, policy, g.e.max(1), 1, 0);
+        let mut ready = vec![u64::MAX; g.e];
+        let mut t: u64 = 0;
+        while !cosim.lanes_done() {
+            t += 1;
+            assert!(t < 500_000_000, "free-drain GC co-sim ran away");
+            cosim.advance_to(t);
+            // free-draining consumer: empty every lane FIFO each cycle, so
+            // a push can never fail (depth >= the total edge count anyway)
+            for lane in &mut cosim.lanes {
+                while let Some((k, _)) = lane.fifo.pop() {
+                    debug_assert_eq!(ready[k as usize], u64::MAX);
+                    ready[k as usize] = t;
+                }
+            }
+        }
+        cosim.finish();
+        let lane_end = cosim.lanes.iter().map(|l| l.unconstrained_end()).collect();
+        let stats = cosim.stats();
+        GcRun { ready_cycle: ready, lane_end, stats }
+    }
+}
+
+/// Live-node (η, φ) coordinates from the raw feature rows ([pt, eta, phi,
+/// px, py, dz] — the fabric receives exactly these).
+fn live_coords(g: &PaddedGraph) -> Vec<(f32, f32)> {
+    (0..g.n).map(|i| (g.cont[i * 6 + 1], g.cont[i * 6 + 2])).collect()
+}
+
+/// Host edge ids for the live prefix: the canonical indices the engine's
+/// functional payload uses.
+fn host_edge_ids(g: &PaddedGraph) -> HashMap<(u32, u32), u32> {
+    let mut host_id: HashMap<(u32, u32), u32> = HashMap::with_capacity(g.e);
+    for k in 0..g.e {
+        debug_assert_eq!(g.edge_mask[k], 1.0, "live edges form a prefix");
+        host_id.insert((g.src[k] as u32, g.dst[k] as u32), k as u32);
+    }
+    host_id
+}
+
+/// The bin engine's deterministic streaming schedule: one particle per
+/// cycle, one extra cycle per `bin_depth` overflow. `bin_done[c]` is the
+/// cycle at which cell `c` received its final particle (0 for cells that
+/// stay empty) — the per-neighbourhood completion gate of the pipelined
+/// schedules. Shared by the replayed schedule and the co-simulation.
+struct BinPhase {
+    cells: Vec<Vec<u32>>,
+    bin_done: Vec<u64>,
+    cycles: u64,
+    overflows: u64,
+}
+
+fn bin_phase(grid: &GraphBuilder, coords: &[(f32, f32)], bin_depth: usize) -> BinPhase {
+    let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.n_cells()];
+    let mut bin_done: Vec<u64> = vec![0; grid.n_cells()];
+    let mut cycle: u64 = 0;
+    let mut overflows: u64 = 0;
+    for (i, &(eta, phi)) in coords.iter().enumerate() {
+        cycle += 1;
+        let c = grid.cell_of(eta, phi);
+        if cells[c].len() >= bin_depth {
+            cycle += 1; // spill into the overflow buffer
+            overflows += 1;
+        }
+        cells[c].push(i as u32);
+        bin_done[c] = cycle;
+    }
+    BinPhase { cells, bin_done, cycles: cycle, overflows }
+}
+
+// ---------------------------------------------------------------------------
+// Steppable co-simulation: the bin engine and compare lanes as first-class
+// units advanced by the engine's cycle loop.
+// ---------------------------------------------------------------------------
+
+/// Read-only per-event context shared by the compare lanes.
+struct GcEventData {
+    coords: Vec<(f32, f32)>,
+    host_id: HashMap<(u32, u32), u32>,
+    d2: f32,
+    /// compare initiation interval (cycles per candidate pair)
+    ii: u64,
+    /// MP write ports: edge (u, v) targets port `u % p_edge`
+    p_edge: usize,
+}
+
+/// One owned particle's candidate walk (zero-candidate particles cost no
+/// cycles in any schedule and are dropped at construction).
+struct OwnedParticle {
+    u: u32,
+    /// cycle at which every cell of u's 3x3 neighbourhood holds its final
+    /// contents, shifted left by any cross-event head start. The sim knows
+    /// this completion oracle up front; the hardware equivalent is the bin
+    /// engine's per-cell "no more arrivals" flags (Neu et al.).
+    ready: u64,
+    cands: Vec<u32>,
+}
+
+/// The steppable bin engine: streams particles into the η-φ grid at one
+/// per cycle (plus spill penalties). Its schedule has no inputs from the
+/// MP side, so stepping it is a cursor over the precomputed [`BinPhase`];
+/// the cross-event head start records how many of its cycles already ran
+/// in the previous event's drain window (spare bin-memory bank).
+pub struct GcBinEngine {
+    /// full bin-phase length for this event (head start *not* subtracted)
+    total_cycles: u64,
+    head_start: u64,
+    overflows: u64,
+    /// bin cycles executed so far in *this event's* timeline (the cursor
+    /// [`step`](GcBinEngine::step) advances; saturates at
+    /// [`remaining_cycles`](GcBinEngine::remaining_cycles))
+    streamed: u64,
+}
+
+impl GcBinEngine {
+    /// Advance to `cycle`; returns true while the bin engine is still
+    /// streaming particles in this event's timeline. (Its schedule takes
+    /// no inputs from the MP side, so the step is a cursor over the
+    /// deterministic [`BinPhase`] — the lanes gate on the per-cell
+    /// completion oracle it establishes.)
+    pub fn step(&mut self, cycle: u64) -> bool {
+        let active = cycle <= self.remaining_cycles();
+        if active {
+            self.streamed = self.streamed.max(cycle);
+        }
+        active
+    }
+
+    /// Bin cycles this event's timeline has executed so far (excludes the
+    /// cross-event head start, which ran in the previous event's window).
+    pub fn streamed_cycles(&self) -> u64 {
+        self.streamed
+    }
+
+    /// Bin cycles left in this event's own timeline (after the head start).
+    pub fn remaining_cycles(&self) -> u64 {
+        self.total_cycles - self.head_start
+    }
+
+    /// The cross-event head start: bin cycles already executed into the
+    /// spare bank while the previous event's compare lanes drained.
+    pub fn head_start(&self) -> u64 {
+        self.head_start
+    }
+}
+
+/// One steppable `P_gc` compare lane: owned particle walks, the policy
+/// state machine, and the bounded edge FIFO toward the round-robin merge.
+pub struct GcCompareLane {
+    parts: Vec<OwnedParticle>,
+    policy: GcLanePolicy,
+    // --- in-order controller state -----------------------------------------
+    /// current particle (index into `parts`) and candidate cursor
+    cur: usize,
+    pos: usize,
+    /// virtual compare clock: the lane's unconstrained schedule position
+    /// (the PR 4 `pip_t`); actual completions happen at virtual + `debt`
+    vt: u64,
+    start_v: u64,
+    // --- skip-on-stall controller state ------------------------------------
+    /// per-particle walk cursors (the scoreboard) + remaining-compare count
+    pos_by_part: Vec<usize>,
+    remaining: usize,
+    /// compare in flight: (particle idx, candidate idx, completion cycle)
+    inflight: Option<(usize, usize, u64)>,
+    // --- shared -------------------------------------------------------------
+    /// cumulative cycles the lane sat frozen on its full edge FIFO
+    debt: u64,
+    /// discovered edge (id, MP port) waiting for FIFO space
+    pending: Option<(u32, u32)>,
+    pub(crate) fifo: Fifo<(u32, u32)>,
+    /// merge-side blocked cycles (filled by [`GcCosim::deliver`])
+    pub(crate) blocked: u64,
+    last_push: u64,
+    /// first compare issue: virtual for in-order, actual for skip-on-stall
+    first_start: u64,
+    /// measured completion cycle of the lane's last compare so far
+    finish: u64,
+    busy: u64,
+    pairs: u64,
+    emitted: u64,
+    dropped: u64,
+}
+
+impl GcCompareLane {
+    fn new(policy: GcLanePolicy, fifo_depth: usize) -> GcCompareLane {
+        GcCompareLane {
+            parts: Vec::new(),
+            policy,
+            cur: 0,
+            pos: 0,
+            vt: 0,
+            start_v: 0,
+            pos_by_part: Vec::new(),
+            remaining: 0,
+            inflight: None,
+            debt: 0,
+            pending: None,
+            fifo: Fifo::new(fifo_depth),
+            blocked: 0,
+            last_push: 0,
+            first_start: u64::MAX,
+            finish: 0,
+            busy: 0,
+            pairs: 0,
+            emitted: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Evaluate one candidate pair through the real ΔR² datapath at cycle
+    /// `t` and, on a hit, push the edge into the lane FIFO this cycle (a
+    /// failed push freezes the lane from the next cycle on).
+    fn compare(&mut self, u: u32, v: u32, t: u64, ev: &GcEventData) -> Option<u32> {
+        self.pairs += 1;
+        self.busy += ev.ii;
+        self.finish = t;
+        let (eu, pu) = ev.coords[u as usize];
+        let (evx, pv) = ev.coords[v as usize];
+        if delta_r2(eu, pu, evx, pv) >= ev.d2 {
+            return None;
+        }
+        match ev.host_id.get(&(u, v)) {
+            Some(&k) => {
+                self.emitted += 1;
+                let em = (k, (u as usize % ev.p_edge) as u32);
+                if self.fifo.push(em) {
+                    self.last_push = t;
+                } else {
+                    self.debt += 1;
+                    self.pending = Some(em);
+                }
+                Some(k)
+            }
+            // Host padding truncated this edge; the fabric edge store
+            // applies the same cap.
+            None => {
+                self.dropped += 1;
+                None
+            }
+        }
+    }
+
+    /// Advance the lane one cycle. Called by [`GcCosim::advance_to`] for
+    /// every fabric cycle in order, so a compare completion is never
+    /// skipped over.
+    pub(crate) fn step(&mut self, t: u64, ev: &GcEventData) -> LaneEvent {
+        if let Some(em) = self.pending {
+            if self.fifo.push(em) {
+                self.pending = None;
+                self.last_push = t;
+                // a successful retry frees the emission register within the
+                // cycle; the compare pipeline resumes below
+            } else {
+                self.debt += 1;
+                return LaneEvent::Stalled;
+            }
+        }
+        match self.policy {
+            GcLanePolicy::InOrder => self.step_inorder(t, ev),
+            GcLanePolicy::SkipOnStall => self.step_skip(t, ev),
+        }
+    }
+
+    /// In-order controller: the lane's unconstrained schedule (the PR 4
+    /// arithmetic — `start = max(vt, ready)`, completions II apart) shifted
+    /// rigidly by `debt` frozen cycles.
+    fn step_inorder(&mut self, t: u64, ev: &GcEventData) -> LaneEvent {
+        let Some(part) = self.parts.get(self.cur) else {
+            return LaneEvent::Done;
+        };
+        if self.pos == 0 {
+            // idempotent while waiting: vt and ready are both fixed here
+            self.start_v = self.vt.max(part.ready);
+        }
+        let due = self.start_v + (self.pos as u64 + 1) * ev.ii + self.debt;
+        if t < due {
+            return LaneEvent::Idle;
+        }
+        debug_assert_eq!(t, due, "in-order lane missed a compare completion");
+        if self.first_start == u64::MAX {
+            self.first_start = self.start_v;
+        }
+        let u = part.u;
+        let v = part.cands[self.pos];
+        let n_cands = part.cands.len();
+        self.pos += 1;
+        if self.pos == n_cands {
+            self.vt = self.start_v + n_cands as u64 * ev.ii;
+            self.cur += 1;
+            self.pos = 0;
+        }
+        let edge = self.compare(u, v, t, ev);
+        LaneEvent::Compared { edge }
+    }
+
+    /// Skip-on-stall controller: every issue slot picks the lowest-indexed
+    /// owned particle whose neighbourhood is final and whose walk has
+    /// candidates left (the scoreboard re-arbitration).
+    fn step_skip(&mut self, t: u64, ev: &GcEventData) -> LaneEvent {
+        if let Some((pi, ci, done_at)) = self.inflight {
+            if t < done_at {
+                return LaneEvent::Idle;
+            }
+            debug_assert_eq!(t, done_at, "skip lane missed a compare completion");
+            self.inflight = None;
+            self.remaining -= 1;
+            let (u, v) = (self.parts[pi].u, self.parts[pi].cands[ci]);
+            let edge = self.compare(u, v, t, ev);
+            // chain the next issue into the same cycle (II spacing is kept
+            // by the completion time) unless the emission register is held
+            if self.pending.is_none() {
+                self.issue(t, ev);
+            }
+            return LaneEvent::Compared { edge };
+        }
+        if self.remaining == 0 {
+            return LaneEvent::Done;
+        }
+        self.issue(t, ev);
+        LaneEvent::Idle
+    }
+
+    fn issue(&mut self, t: u64, ev: &GcEventData) {
+        debug_assert!(self.inflight.is_none() && self.pending.is_none());
+        for (pi, part) in self.parts.iter().enumerate() {
+            let pos = self.pos_by_part[pi];
+            if pos < part.cands.len() && part.ready <= t {
+                self.pos_by_part[pi] = pos + 1;
+                self.inflight = Some((pi, pos, t + ev.ii));
+                if self.first_start == u64::MAX {
+                    self.first_start = t;
+                }
+                return;
+            }
+        }
+    }
+
+    /// All compares done and every discovered edge handed to the FIFO (the
+    /// FIFO itself may still hold entries for the merge).
+    fn done_emitting(&self) -> bool {
+        if self.pending.is_some() {
+            return false;
+        }
+        match self.policy {
+            GcLanePolicy::InOrder => self.cur >= self.parts.len(),
+            GcLanePolicy::SkipOnStall => self.remaining == 0 && self.inflight.is_none(),
+        }
+    }
+
+    /// Fast-forward the lane's remaining compares without cycle stepping.
+    /// Only valid once no further emission can block (the engine calls it
+    /// after layer 0 drained the feed, so what remains are compares that
+    /// discover nothing live — trailing negatives and padding-dropped
+    /// positives; a live discovery here still lands in the FIFO and trips
+    /// the delivery debug assertions).
+    fn fast_drain(&mut self, ev: &GcEventData) {
+        debug_assert!(self.pending.is_none(), "fast_drain with a blocked emission");
+        match self.policy {
+            GcLanePolicy::InOrder => {
+                while let Some(part) = self.parts.get(self.cur) {
+                    let u = part.u;
+                    let n_cands = part.cands.len();
+                    let cands = std::mem::take(&mut self.parts[self.cur].cands);
+                    if self.pos == 0 {
+                        self.start_v = self.vt.max(self.parts[self.cur].ready);
+                    }
+                    if self.first_start == u64::MAX && !cands.is_empty() {
+                        self.first_start = self.start_v;
+                    }
+                    while self.pos < n_cands {
+                        let t = self.start_v + (self.pos as u64 + 1) * ev.ii + self.debt;
+                        let v = cands[self.pos];
+                        self.pos += 1;
+                        self.compare(u, v, t, ev);
+                    }
+                    self.parts[self.cur].cands = cands;
+                    self.vt = self.start_v + n_cands as u64 * ev.ii;
+                    self.cur += 1;
+                    self.pos = 0;
+                }
+            }
+            GcLanePolicy::SkipOnStall => {
+                let mut t = self.finish;
+                if let Some((pi, ci, done_at)) = self.inflight.take() {
+                    self.remaining -= 1;
+                    let (u, v) = (self.parts[pi].u, self.parts[pi].cands[ci]);
+                    self.compare(u, v, done_at, ev);
+                    t = done_at;
+                }
+                while self.remaining > 0 {
+                    // issue slot at `t`: lowest-indexed ready particle, or
+                    // jump the clock to the earliest upcoming readiness
+                    let mut pick: Option<usize> = None;
+                    let mut next_ready = u64::MAX;
+                    for (pi, part) in self.parts.iter().enumerate() {
+                        if self.pos_by_part[pi] >= part.cands.len() {
+                            continue;
+                        }
+                        if part.ready <= t {
+                            pick = Some(pi);
+                            break;
+                        }
+                        next_ready = next_ready.min(part.ready);
+                    }
+                    let pi = match pick {
+                        Some(pi) => pi,
+                        None => {
+                            t = next_ready;
+                            continue;
+                        }
+                    };
+                    let ci = self.pos_by_part[pi];
+                    self.pos_by_part[pi] = ci + 1;
+                    self.remaining -= 1;
+                    if self.first_start == u64::MAX {
+                        self.first_start = t;
+                    }
+                    t += ev.ii;
+                    let (u, v) = (self.parts[pi].u, self.parts[pi].cands[ci]);
+                    self.compare(u, v, t, ev);
+                }
+            }
+        }
+    }
+
+    /// The lane's unconstrained schedule end: the virtual clock for the
+    /// in-order controller (PR 4 `lane_end` semantics — measured finish
+    /// minus frozen cycles), the measured finish for skip-on-stall (which
+    /// has no meaningful unconstrained schedule once it re-arbitrates).
+    fn unconstrained_end(&self) -> u64 {
+        match self.policy {
+            GcLanePolicy::InOrder => self.vt,
+            GcLanePolicy::SkipOnStall => self.finish,
+        }
+    }
+
+    /// Measured finish of the lane's work, frozen cycles included: for the
+    /// in-order controller this is the rigid schedule end plus every
+    /// frozen cycle (`vt + debt` — the PR 4 `lane_end + stall` price,
+    /// which covers stalls spent pushing the final edge after its compare
+    /// completed); for skip-on-stall, the later of the last compare
+    /// completion and the last successful push.
+    fn measured_end(&self) -> u64 {
+        match self.policy {
+            GcLanePolicy::InOrder => self.vt + self.debt,
+            GcLanePolicy::SkipOnStall => self.finish.max(self.last_push),
+        }
+    }
+
+    pub(crate) fn feed_stats(&self) -> (u64, usize, u64, u64) {
+        (self.blocked, self.fifo.max_occupancy, self.debt, self.last_push)
+    }
+}
+
+/// A lane the round-robin merge can drain: the bounded edge FIFO holding
+/// `(edge id, MP port)` entries plus the blocked-cycle counter. The ONE
+/// merge implementation, [`rr_merge`], is shared by the co-simulated
+/// lanes and the engine's PR 4 replay feed — the cosim-vs-replay
+/// cycle-exactness pin depends on the two using identical merge timing,
+/// so there is exactly one copy to tweak.
+pub(crate) trait MergeLane {
+    fn fifo(&mut self) -> &mut Fifo<(u32, u32)>;
+    /// The lane's FIFO head waited this cycle (full MP capture buffer,
+    /// busy MP write port, or merge bandwidth).
+    fn count_blocked(&mut self);
+}
+
+impl MergeLane for GcCompareLane {
+    fn fifo(&mut self) -> &mut Fifo<(u32, u32)> {
+        &mut self.fifo
+    }
+    fn count_blocked(&mut self) {
+        self.blocked += 1;
+    }
+}
+
+/// One round-robin merge cycle over the lane FIFO heads: deliver up to
+/// min(lanes, P_edge) edges, at most one per MP write port (`sink`
+/// returns false when the target refuses the edge); waiting heads count
+/// their blocked cycles, and the round-robin pointer advances one lane.
+pub(crate) fn rr_merge<L: MergeLane>(
+    lanes: &mut [L],
+    rr: &mut usize,
+    port_used: &mut [bool],
+    p_edge: usize,
+    sink: &mut dyn FnMut(usize, u32) -> bool,
+) {
+    let width = lanes.len().min(p_edge);
+    port_used.fill(false);
+    let mut delivered = 0usize;
+    let n_lanes = lanes.len();
+    for off in 0..n_lanes {
+        let j = (*rr + off) % n_lanes;
+        let lane = &mut lanes[j];
+        let Some(&(k, mp)) = lane.fifo().peek() else { continue };
+        let mp = mp as usize;
+        if delivered < width && !port_used[mp] && sink(mp, k) {
+            lane.fifo().pop();
+            port_used[mp] = true;
+            delivered += 1;
+        } else {
+            lane.count_blocked();
+        }
+    }
+    *rr = (*rr + 1) % n_lanes;
+}
+
+/// The co-simulated GC subsystem: one [`GcBinEngine`] plus `P_gc`
+/// [`GcCompareLane`]s and the round-robin merge, advanced by the engine's
+/// own cycle loop (`advance_to` catches the lanes up through the
+/// formula-timed embed stage; from layer 0 on it advances one cycle per
+/// engine cycle, followed by one [`deliver`](GcCosim::deliver) merge
+/// cycle).
+pub struct GcCosim {
+    data: GcEventData,
+    pub bin: GcBinEngine,
+    pub(crate) lanes: Vec<GcCompareLane>,
+    clock: u64,
+    rr: usize,
+    port_used: Vec<bool>,
+    /// bit-identity bookkeeping (asserted in [`finish`](GcCosim::finish))
+    expected_edges: usize,
+    expect_no_extra: bool,
+}
+
+impl GcCosim {
+    /// Build the steppable units for one padded event. `head_start` is the
+    /// cross-event window: bin cycles already executed while the previous
+    /// event's compare lanes drained (clamped to this event's bin phase).
+    pub fn new(
+        unit: &GcUnit,
+        g: &PaddedGraph,
+        policy: GcLanePolicy,
+        fifo_depth: usize,
+        p_edge: usize,
+        head_start: u64,
+    ) -> GcCosim {
+        let grid = GraphBuilder::new(unit.delta);
+        let coords = live_coords(g);
+        let host_id = host_edge_ids(g);
+        let bin = bin_phase(&grid, &coords, unit.bin_depth);
+        let head_start = head_start.min(bin.cycles);
+
+        let p = unit.p_gc;
+        let mut lanes: Vec<GcCompareLane> =
+            (0..p).map(|_| GcCompareLane::new(policy, fifo_depth)).collect();
+        let mut neigh = Vec::with_capacity(9);
+        for u in 0..g.n {
+            let (eu, pu) = coords[u];
+            grid.neighbor_cells(grid.cell_of(eu, pu), &mut neigh);
+            let mut ready: u64 = 0;
+            let mut cands = Vec::new();
+            for &c in &neigh {
+                ready = ready.max(bin.bin_done[c]);
+                for &v in &bin.cells[c] {
+                    if v as usize != u {
+                        cands.push(v);
+                    }
+                }
+            }
+            if cands.is_empty() {
+                continue; // costs no cycles in any schedule
+            }
+            let lane = &mut lanes[u % p];
+            lane.remaining += cands.len();
+            lane.pos_by_part.push(0);
+            lane.parts.push(OwnedParticle {
+                u: u as u32,
+                ready: ready.saturating_sub(head_start),
+                cands,
+            });
+        }
+
+        let data = GcEventData {
+            coords,
+            host_id,
+            d2: unit.delta * unit.delta,
+            ii: unit.lane_ii,
+            p_edge: p_edge.max(1),
+        };
+        // A cross-event head start can open neighbourhood gates at cycle 0
+        // (ready == 0). The in-order schedule's max(vt, ready) arithmetic
+        // issues such a compare before the first stepped cycle; give the
+        // re-arbitrating controller the same cycle-0 issue slot, or a
+        // skip lane would complete its first compare one cycle after the
+        // in-order lane it must dominate.
+        if policy == GcLanePolicy::SkipOnStall {
+            for lane in &mut lanes {
+                lane.issue(0, &data);
+            }
+        }
+        GcCosim {
+            data,
+            bin: GcBinEngine {
+                total_cycles: bin.cycles,
+                head_start,
+                overflows: bin.overflows,
+                streamed: 0,
+            },
+            lanes,
+            clock: 0,
+            rr: 0,
+            port_used: vec![false; p_edge.max(1)],
+            expected_edges: g.e,
+            expect_no_extra: g.dropped_nodes == 0 && g.dropped_edges == 0,
+        }
+    }
+
+    /// Advance the bin engine and every compare lane through fabric cycle
+    /// `now` (the engine's first layer-0 iteration catches up through the
+    /// embed stage, during which the lane FIFOs fill with no consumer).
+    pub fn advance_to(&mut self, now: u64) {
+        while self.clock < now {
+            self.clock += 1;
+            let t = self.clock;
+            self.bin.step(t);
+            for lane in &mut self.lanes {
+                lane.step(t, &self.data);
+            }
+        }
+    }
+
+    /// One merge cycle: round-robin over the lane FIFO heads, delivering up
+    /// to min(P_gc, P_edge) edges, at most one per MP write port (`sink`
+    /// returns false when the target MP capture buffer refuses the edge).
+    /// Waiting heads count their blocked cycles. P_edge is the value fixed
+    /// at construction — the same modulus that tagged every edge's port.
+    pub fn deliver(&mut self, sink: &mut dyn FnMut(usize, u32) -> bool) {
+        rr_merge(&mut self.lanes, &mut self.rr, &mut self.port_used, self.data.p_edge, sink);
+    }
+
+    /// Every edge discovered *so far* has left its lane FIFO for an MP
+    /// unit (lanes may still owe trailing compares that discover nothing
+    /// live — [`finish`](GcCosim::finish) drains those and asserts the
+    /// full edge-set contract).
+    pub fn all_delivered(&self) -> bool {
+        self.lanes.iter().all(|l| l.pending.is_none() && l.fifo.is_empty())
+    }
+
+    fn lanes_done(&self) -> bool {
+        self.lanes.iter().all(|l| l.done_emitting())
+    }
+
+    /// Drain every lane's remaining compares (trailing negatives and
+    /// padding-dropped positives) and assert the bit-identity contract:
+    /// the discovered edge set equals the host `build_edges` set.
+    pub fn finish(&mut self) {
+        for lane in &mut self.lanes {
+            lane.fast_drain(&self.data);
+        }
+        let emitted: u64 = self.lanes.iter().map(|l| l.emitted).sum();
+        let dropped: u64 = self.lanes.iter().map(|l| l.dropped).sum();
+        assert_eq!(
+            emitted as usize, self.expected_edges,
+            "GC co-sim discovered {} of {} host edges (delta mismatch?)",
+            emitted, self.expected_edges
+        );
+        if self.expect_no_extra {
+            assert_eq!(
+                dropped, 0,
+                "GC co-sim found {dropped} edges the host build did not"
+            );
+        }
+    }
+
+    /// The measured GC finish for the engine's critical path: every lane's
+    /// last compare completion (frozen cycles included), bounded below by
+    /// the bin engine's span in this event's timeline.
+    pub fn finish_cycle(&self) -> u64 {
+        let lanes = self.lanes.iter().map(|l| l.measured_end()).max().unwrap_or(0);
+        lanes.max(self.bin.remaining_cycles())
+    }
+
+    /// Assemble [`GcStats`] (call after [`finish`](GcCosim::finish)). Field
+    /// semantics match the replayed schedules: `total_cycles` is the
+    /// unconstrained discovery end for the in-order policy (measured finish
+    /// for skip-on-stall, which has no unconstrained schedule), and
+    /// `fifo_stall_cycles` / `emit_end_cycle` carry the feed's direct
+    /// measurements.
+    pub fn stats(&self) -> GcStats {
+        let mut s = GcStats {
+            bin_cycles: self.bin.total_cycles,
+            bin_overflows: self.bin.overflows,
+            cross_event_overlap_cycles: self.bin.head_start,
+            ..GcStats::default()
+        };
+        let bin_term = self.bin.remaining_cycles();
+        let mut max_busy: u64 = 0;
+        for lane in &self.lanes {
+            s.pairs_compared += lane.pairs;
+            s.edges_emitted += lane.emitted;
+            s.edges_dropped += lane.dropped;
+            s.lane_busy_cycles += lane.busy;
+            s.fifo_stall_cycles += lane.debt;
+            max_busy = max_busy.max(lane.busy);
+        }
+        let ends = self.lanes.iter().map(|l| l.unconstrained_end()).max().unwrap_or(0);
+        s.total_cycles = ends.max(bin_term);
+        // the PR 3 barrier price is backpressure- and overlap-independent:
+        // every lane starts at the global end of binning and compares
+        // back-to-back
+        s.serialized_total_cycles = s.bin_cycles + max_busy;
+        s.emit_end_cycle = self.lanes.iter().map(|l| l.last_push).max().unwrap_or(0);
+        let mut compare_start = s.total_cycles;
+        for lane in &self.lanes {
+            let start_j = if lane.first_start == u64::MAX {
+                s.total_cycles // lane never worked: no span
+            } else {
+                lane.first_start
+            };
+            compare_start = compare_start.min(start_j);
+            s.lane_idle_cycles += s.total_cycles.saturating_sub(start_j + lane.busy);
+        }
+        s.compare_cycles = s.total_cycles - compare_start;
+        s
     }
 }
 
@@ -607,5 +1403,199 @@ mod tests {
             assert_eq!(run.stats.edges_emitted, 0);
             assert_eq!(run.stats.compare_cycles, 0);
         }
+        for policy in [GcLanePolicy::InOrder, GcLanePolicy::SkipOnStall] {
+            let run = unit(4, 16, 1, 0.8).run_cosim(&g, policy);
+            assert_eq!(run.stats.total_cycles, 0);
+            assert_eq!(run.stats.edges_emitted, 0);
+        }
+    }
+
+    /// Compare a co-simulated run against a replayed schedule: the whole
+    /// [`GcStats`] struct must match (so future fields are covered
+    /// automatically), and a free-draining co-sim never stalls.
+    fn assert_runs_identical(cos: &GcRun, rep: &GcRun) {
+        assert_eq!(cos.ready_cycle, rep.ready_cycle);
+        assert_eq!(cos.lane_end, rep.lane_end);
+        assert_eq!(cos.stats, rep.stats);
+        assert_eq!(cos.stats.fifo_stall_cycles, 0);
+        assert_eq!(cos.stats.cross_event_overlap_cycles, 0);
+    }
+
+    #[test]
+    fn gc_cosim_inorder_reproduces_replayed_pipelined_schedule() {
+        // The refactor's compatibility pin at unit level: the steppable
+        // in-order co-simulation with a free-draining consumer IS the PR 4
+        // discovery schedule, cycle for cycle (the property suite extends
+        // this over random events and shapes).
+        for (seed, p_gc, depth, ii) in
+            [(21u64, 4usize, 16usize, 1usize), (24, 1, 1, 2), (27, 7, 4, 3)]
+        {
+            let g = padded(seed, 0.8);
+            let u = unit(p_gc, depth, ii, 0.8);
+            let cos = u.run_cosim(&g, GcLanePolicy::InOrder);
+            let rep = u.run_scheduled(&g, GcSchedule::Pipelined);
+            assert_runs_identical(&cos, &rep);
+        }
+    }
+
+    /// Particle 0's 3x3 window only completes at the very end of binning
+    /// (its cluster mate is the last particle in), while particles 1..=10
+    /// form a dense cluster that is fully binned by cycle 11 — the
+    /// in-order lane idles on particle 0, the skip-on-stall lane works.
+    fn straggler_event() -> Event {
+        let mut particles = vec![particle_at(2.5, 0.0)];
+        for i in 0..10 {
+            particles.push(particle_at(-2.5 + i as f32 * 0.01, -0.3 + i as f32 * 0.06));
+        }
+        particles.push(particle_at(2.55, 0.05));
+        Event { id: 0, particles, true_met_xy: [0.0; 2] }
+    }
+
+    #[test]
+    fn gc_skip_on_stall_discovers_earlier_on_straggler_event() {
+        let ev = straggler_event();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        assert!(g.e > 2, "need cluster edges plus the straggler pair");
+        let u = unit(1, 16, 1, 0.8);
+        let ino = u.run_cosim(&g, GcLanePolicy::InOrder);
+        let skip = u.run_cosim(&g, GcLanePolicy::SkipOnStall);
+        // identical work and edge set
+        assert_eq!(skip.stats.pairs_compared, ino.stats.pairs_compared);
+        assert_eq!(skip.stats.edges_emitted, ino.stats.edges_emitted);
+        assert_eq!(skip.stats.lane_busy_cycles, ino.stats.lane_busy_cycles);
+        // cumulative discovery dominance (II = 1): by any cycle the skip
+        // lane has found at least as many edges — sorted discovery times
+        // are elementwise no later
+        let mut a: Vec<u64> = skip.ready_cycle.clone();
+        let mut b: Vec<u64> = ino.ready_cycle.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x <= y, "skip discovery {x} later than in-order {y}");
+        }
+        // and on this event the win is strict: the in-order lane idles on
+        // the straggler window while the skip lane compares the cluster
+        assert!(
+            skip.stats.total_cycles < ino.stats.total_cycles,
+            "skip {} !< in-order {}",
+            skip.stats.total_cycles,
+            ino.stats.total_cycles
+        );
+    }
+
+    #[test]
+    fn gc_compare_lane_step_reports_lane_events() {
+        // Drive one lane by hand through the step(cycle) -> LaneEvent
+        // interface: every compare must surface as Compared (edge or not),
+        // a full depth-1 FIFO must surface as Stalled until drained, and
+        // the lane must settle into Done — with the event stream's compare
+        // count matching the stats it produced.
+        let g = padded(21, 0.8);
+        let u = unit(1, 16, 1, 0.8);
+        let mut c = GcCosim::new(&u, &g, GcLanePolicy::InOrder, 1, 1, 0);
+        let (mut compared, mut stalled, mut idle) = (0u64, 0u64, 0u64);
+        let mut done = false;
+        let mut t = 0u64;
+        while t < 500_000 {
+            t += 1;
+            match c.lanes[0].step(t, &c.data) {
+                LaneEvent::Compared { .. } => compared += 1,
+                LaneEvent::Stalled => {
+                    stalled += 1;
+                    // drain one entry: the retry must succeed next cycle
+                    assert!(c.lanes[0].fifo.pop().is_some());
+                }
+                LaneEvent::Idle => idle += 1,
+                LaneEvent::Done => {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        assert!(done, "lane never finished");
+        assert!(idle > 0, "binning gates the first compares");
+        assert!(stalled > 0, "a depth-1 FIFO with a lazy consumer must stall");
+        while c.lanes[0].fifo.pop().is_some() {}
+        c.finish();
+        assert_eq!(compared, c.stats().pairs_compared, "every compare is reported");
+    }
+
+    #[test]
+    fn gc_skip_with_full_head_start_matches_inorder_exactly() {
+        // Cross-event + skip-on-stall: with every neighbourhood gate open
+        // at cycle 0 both controllers are back-to-back from the cycle-0
+        // issue slot, so the re-arbitrating lane must finish exactly with
+        // the in-order lane — never a cycle behind it (the cycle-0 issue
+        // regression this test pins).
+        let g = padded(21, 0.8);
+        let u = unit(2, 16, 1, 0.8);
+        let head = u64::MAX; // clamped to the full bin phase
+        let mut ino = GcCosim::new(&u, &g, GcLanePolicy::InOrder, g.e.max(1), 1, head);
+        ino.finish();
+        let mut skip = GcCosim::new(&u, &g, GcLanePolicy::SkipOnStall, g.e.max(1), 1, head);
+        skip.finish();
+        assert_eq!(skip.stats().pairs_compared, ino.stats().pairs_compared);
+        assert_eq!(skip.stats().edges_emitted, ino.stats().edges_emitted);
+        assert_eq!(
+            skip.finish_cycle(),
+            ino.finish_cycle(),
+            "open gates: both controllers run back-to-back from cycle 0"
+        );
+        assert_eq!(skip.stats().total_cycles, ino.stats().total_cycles);
+    }
+
+    #[test]
+    fn gc_bin_engine_step_is_a_real_cursor() {
+        // seed 24 at depth 64 never spills (pinned by
+        // gc_bin_phase_is_one_cycle_per_particle), so the bin span is
+        // exactly one cycle per live particle.
+        let g = padded(24, 0.8);
+        let u = unit(4, 64, 1, 0.8);
+        let mut cosim = GcCosim::new(&u, &g, GcLanePolicy::InOrder, g.e.max(1), 1, 0);
+        let span = cosim.bin.remaining_cycles();
+        assert_eq!(span, g.n as u64, "one particle per cycle, no spills");
+        assert_eq!(cosim.bin.streamed_cycles(), 0);
+        for t in 1..=span {
+            assert!(cosim.bin.step(t), "still streaming at cycle {t}");
+            assert_eq!(cosim.bin.streamed_cycles(), t);
+        }
+        // past the span the engine is idle and the cursor saturates
+        assert!(!cosim.bin.step(span + 1));
+        assert_eq!(cosim.bin.streamed_cycles(), span);
+        // a cross-event head start shrinks the span in this timeline
+        let warm = GcCosim::new(&u, &g, GcLanePolicy::InOrder, g.e.max(1), 1, 5);
+        assert_eq!(warm.bin.remaining_cycles(), span - 5);
+        assert_eq!(warm.bin.head_start(), 5);
+    }
+
+    #[test]
+    fn gc_cosim_head_start_shifts_gating_left() {
+        // Cross-event pipelining at unit level: with the whole bin phase
+        // executed during the previous event's drain window, every
+        // neighbourhood is final at cycle 0 and discovery waits only on
+        // the compare chains.
+        let g = padded(21, 0.8);
+        let u = unit(4, 16, 1, 0.8);
+        let base = u.run_cosim(&g, GcLanePolicy::InOrder);
+        let head = base.stats.bin_cycles;
+        let mut cosim = GcCosim::new(&u, &g, GcLanePolicy::InOrder, g.e.max(1), 1, head);
+        cosim.finish();
+        let s = cosim.stats();
+        assert_eq!(s.cross_event_overlap_cycles, head);
+        // same math, same work, same barrier price
+        assert_eq!(s.pairs_compared, base.stats.pairs_compared);
+        assert_eq!(s.edges_emitted, base.stats.edges_emitted);
+        assert_eq!(s.bin_cycles, base.stats.bin_cycles);
+        assert_eq!(s.serialized_total_cycles, base.stats.serialized_total_cycles);
+        // but the discovery schedule moves left, strictly
+        assert!(
+            s.total_cycles < base.stats.total_cycles,
+            "head-started {} !< standalone {}",
+            s.total_cycles,
+            base.stats.total_cycles
+        );
+        // the head start is clamped to the bin phase
+        let clamped = GcCosim::new(&u, &g, GcLanePolicy::InOrder, g.e.max(1), 1, u64::MAX);
+        assert_eq!(clamped.bin.head_start(), head);
     }
 }

@@ -11,7 +11,9 @@
 //! - [`fifo`]      — bounded streaming FIFOs with backpressure
 //! - [`gc_unit`]   — on-fabric dynamic graph construction (§III-B.4):
 //!   η-φ bin engine pipelined against P_gc pair-compare lanes, streaming
-//!   edges into layer 0 through bounded per-lane FIFOs
+//!   edges into layer 0 through bounded per-lane FIFOs; steppable units
+//!   ([`gc_unit::GcCosim`]) co-simulated by the engine's cycle loop, with
+//!   the PR 3/4 replayed schedules kept as pinned baselines
 //! - [`engine`]    — per-layer cycle loop + E2E latency model
 //! - [`flowgnn`]   — static-graph baseline (host-side edge recompute)
 //! - [`resource`]  — LUT/FF/BRAM/DSP estimator (Table I)
@@ -30,8 +32,15 @@ pub mod power;
 pub mod resource;
 pub mod tokens;
 
-pub use engine::{BroadcastMode, CycleParams, DataflowEngine, SimResult};
+pub use engine::{BroadcastMode, CycleParams, DataflowEngine, GcFeedModel, SimResult};
 pub use flowgnn::FlowGnnBaseline;
-pub use gc_unit::{BuildSite, GcDeltaError, GcRun, GcSchedule, GcStats, GcUnit};
+// GcCompareLane/LaneEvent stay behind the gc_unit:: path: the lane step
+// interface is driven by the engine's cycle loop (its event context is
+// crate-internal), so the crate root re-exports only the API external
+// code can actually drive.
+pub use gc_unit::{
+    BuildSite, GcBinEngine, GcCosim, GcDeltaError, GcLanePolicy, GcRun, GcSchedule, GcStats,
+    GcUnit,
+};
 pub use power::PowerModel;
 pub use resource::ResourceModel;

@@ -46,6 +46,10 @@ pub struct PowerModel {
     /// Dynamic power per fully-streaming GC edge FIFO + its round-robin
     /// merge leg (one per lane; push + pop per discovered edge).
     pub w_per_gc_fifo_active: f64,
+    /// Dynamic power per skip-on-stall lane scoreboard (walk-state table
+    /// reads + the priority re-arbitration mux, toggling every issue
+    /// slot; only drawn when `ArchConfig::gc_skip_on_stall` is set).
+    pub w_per_gc_scoreboard_active: f64,
     /// Broadcast/adapter/FIFO fabric switching at full streaming rate.
     pub w_fabric_stream: f64,
     // GPU model (RTX A6000)
@@ -65,6 +69,7 @@ impl PowerModel {
             w_per_nt_active: 0.15,
             w_per_gc_lane_active: 0.07,
             w_per_gc_fifo_active: 0.02,
+            w_per_gc_scoreboard_active: 0.015,
             w_fabric_stream: 0.40,
             gpu_idle_w: 22.0,
             gpu_dynamic_w: 19.0,
@@ -107,11 +112,18 @@ impl PowerModel {
         let gc_util = gc_busy / (total * self.arch.p_gc as f64);
         let gc_fifo_util = gc_fifo_ops / (total * self.arch.p_gc as f64);
         let stream_util = stream / total;
+        // the skip-on-stall scoreboard toggles with the compare lanes
+        let scoreboard_w = if self.arch.gc_skip_on_stall {
+            self.w_per_gc_scoreboard_active * self.arch.p_gc as f64 * gc_util.min(1.0)
+        } else {
+            0.0
+        };
         self.fpga_static_w
             + self.w_per_mp_active * self.arch.p_edge as f64 * mp_util.min(1.0)
             + self.w_per_nt_active * self.arch.p_node as f64 * nt_util.min(1.0)
             + self.w_per_gc_lane_active * self.arch.p_gc as f64 * gc_util.min(1.0)
             + self.w_per_gc_fifo_active * self.arch.p_gc as f64 * gc_fifo_util.min(1.0)
+            + scoreboard_w
             + self.w_fabric_stream * stream_util.min(1.0)
     }
 
@@ -201,6 +213,28 @@ mod tests {
         );
         // still a small fraction of a watt — the aux unit, not the fabric
         assert!(fabric_w - host_w < 0.5, "delta {}", fabric_w - host_w);
+    }
+
+    #[test]
+    fn skip_on_stall_scoreboard_draws_power_on_fabric_builds() {
+        use crate::dataflow::gc_unit::BuildSite;
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 31);
+        let mut eng = DataflowEngine::new(
+            ArchConfig { gc_skip_on_stall: true, ..Default::default() },
+            L1DeepMetV2::new(cfg, w).unwrap(),
+        )
+        .unwrap();
+        eng.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+        let mut gen = EventGenerator::with_seed(32);
+        let ev = gen.generate();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let sim = eng.run(&g);
+        let base = PowerModel::new(ArchConfig::default()).fpga_from_sim(&sim);
+        let skip = PowerModel::new(ArchConfig { gc_skip_on_stall: true, ..Default::default() })
+            .fpga_from_sim(&sim);
+        assert!(skip > base, "scoreboard must draw power: {skip} !> {base}");
+        assert!(skip - base < 0.1, "but only a sliver of a watt");
     }
 
     #[test]

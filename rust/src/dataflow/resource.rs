@@ -87,6 +87,18 @@ const DSP_PER_GC_LANE: u64 = 4; // dη², dφ² multipliers + wrap add
 // boundary (RR arbiter leg + MP-port mux)
 const LUT_GC_MERGE_PER_LANE: u64 = 350;
 const REG_GC_MERGE_PER_LANE: u64 = 300;
+// Skip-on-stall lane scoreboard (co-simulated feed): the per-lane
+// walk-state table (ready flag + candidate cursor per owned particle) and
+// the priority mux that re-arbitrates the lowest-indexed ready walk every
+// issue slot.
+const LUT_GC_SCOREBOARD_PER_LANE: u64 = 1_500;
+const REG_GC_SCOREBOARD_PER_LANE: u64 = 1_200;
+/// scoreboard entry: candidate cursor + ready flag per owned particle
+const GC_SCOREBOARD_ENTRY_BYTES: u64 = 8;
+// Cross-event GC pipelining: bank-select control for the ping-pong bin
+// memories (the second bank itself shows up as doubled bin BRAM).
+const LUT_GC_XEVENT_CTRL: u64 = 900;
+const REG_GC_XEVENT_CTRL: u64 = 800;
 /// Bin memory is sized for the default δ = 0.8 grid (7 x 7 η-φ cells) and
 /// replicated per lane for conflict-free neighbourhood reads; each entry
 /// holds (index, η, φ) = 12 bytes.
@@ -115,16 +127,24 @@ impl ResourceModel {
             + (a.p_gc as u64) * DSP_PER_GC_LANE;
 
         // --- LUT / registers -----------------------------------------------------
-        let lut = LUT_BASE
+        let mut lut = LUT_BASE
             + (a.p_edge as u64) * (LUT_PER_MP + LUT_PER_BCAST_LANE)
             + (a.p_node as u64) * (LUT_PER_NT + LUT_ADAPTER_PER_PORT)
             + LUT_GC_BIN_ENGINE
             + (a.p_gc as u64) * (LUT_PER_GC_LANE + LUT_GC_MERGE_PER_LANE);
-        let register = REG_BASE
+        let mut register = REG_BASE
             + (a.p_edge as u64) * (REG_PER_MP + REG_PER_BCAST_LANE)
             + (a.p_node as u64) * (REG_PER_NT + REG_ADAPTER_PER_PORT)
             + REG_GC_BIN_ENGINE
             + (a.p_gc as u64) * (REG_PER_GC_LANE + REG_GC_MERGE_PER_LANE);
+        if a.gc_skip_on_stall {
+            lut += (a.p_gc as u64) * LUT_GC_SCOREBOARD_PER_LANE;
+            register += (a.p_gc as u64) * REG_GC_SCOREBOARD_PER_LANE;
+        }
+        if a.gc_cross_event {
+            lut += LUT_GC_XEVENT_CTRL;
+            register += REG_GC_XEVENT_CTRL;
+        }
 
         // --- BRAM: NE buffers, weight ROMs, FIFOs, CSR/edge store ----------------
         let ne_buffer = 2 * self.n_max * d * 4; // double buffer
@@ -140,12 +160,21 @@ impl ResourceModel {
         let capture_buffer = self.n_max * d * 4;
         // host<->fabric staging (features in, weights/MET out, ping-pong)
         let staging = 2 * (self.n_max * (6 + 2) * 4 + self.e_max * 2 * 4);
-        // GC unit: per-lane bin-memory replica, the particle coordinate
-        // store (η, φ per node), and one bounded discovered-edge FIFO per
-        // compare lane (entries hold (edge id, MP target) = 8 bytes).
+        // GC unit: per-lane bin-memory replica (two ping-pong banks when
+        // cross-event pipelining bins event i+1 during event i's drain),
+        // the particle coordinate store (η, φ per node), one bounded
+        // discovered-edge FIFO per compare lane (entries hold (edge id,
+        // MP target) = 8 bytes), and — for skip-on-stall lanes — the
+        // per-lane walk-state scoreboard over the owned particles.
+        let gc_bin_banks: u64 = if a.gc_cross_event { 2 } else { 1 };
         let gc_bin_mem = (GC_BIN_CELLS * a.gc_bin_depth as u64 * GC_BIN_ENTRY_BYTES) as usize;
         let gc_coord_store = self.n_max * 8;
         let gc_lane_fifo = a.gc_fifo_depth * 8;
+        let gc_scoreboard = if a.gc_skip_on_stall {
+            self.n_max.div_ceil(a.p_gc.max(1)) * GC_SCOREBOARD_ENTRY_BYTES as usize
+        } else {
+            0
+        };
         let bram = BRAM_BASE
             + bram_blocks(ne_buffer)
             + bram_blocks(bcast_copy)
@@ -157,9 +186,10 @@ impl ResourceModel {
             + bram_blocks(fifo_bytes)
             // aggregation scratch per NT unit: agg row + degree counters
             + (a.p_node as u64) * bram_blocks(self.n_max / a.p_node.max(1) * d * 4 + self.n_max)
-            + (a.p_gc as u64) * bram_blocks(gc_bin_mem)
+            + (a.p_gc as u64) * gc_bin_banks * bram_blocks(gc_bin_mem)
             + bram_blocks(gc_coord_store)
-            + (a.p_gc as u64) * bram_blocks(gc_lane_fifo);
+            + (a.p_gc as u64) * bram_blocks(gc_lane_fifo)
+            + (a.p_gc as u64) * bram_blocks(gc_scoreboard);
 
         Usage { lut, register, bram, dsp }
     }
@@ -269,6 +299,37 @@ mod tests {
         )
         .estimate();
         assert!(deep_wide.bram > deep.bram, "FIFO memory replicates per lane");
+    }
+
+    #[test]
+    fn skip_on_stall_scoreboard_costs_lut_reg_and_bram() {
+        let base = default_model().estimate();
+        let skip = ResourceModel::new(
+            ArchConfig { gc_skip_on_stall: true, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(skip.lut > base.lut, "scoreboard mux costs LUT");
+        assert!(skip.register > base.register);
+        assert!(skip.bram >= base.bram, "walk-state table costs memory");
+        assert_eq!(skip.dsp, base.dsp, "re-arbitration is control, not compute");
+    }
+
+    #[test]
+    fn cross_event_doubles_bin_banks() {
+        let base = default_model().estimate();
+        let xevent = ResourceModel::new(
+            ArchConfig { gc_cross_event: true, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(xevent.bram > base.bram, "ping-pong bin banks cost BRAM");
+        assert!(xevent.lut > base.lut, "bank-select control costs LUT");
+        assert_eq!(xevent.dsp, base.dsp);
     }
 
     #[test]

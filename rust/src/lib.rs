@@ -39,12 +39,17 @@
 //!   on-fabric graph-construction unit ([`dataflow::gc_unit`]): with
 //!   [`dataflow::BuildSite::Fabric`] the η-φ bin engine and P_gc
 //!   pair-compare lanes discover edges on-chip — binning pipelined against
-//!   comparing ([`dataflow::GcSchedule`]) — streaming them into the
-//!   layer-0 MP units through bounded per-lane edge FIFOs, overlapped with
-//!   the embed stage, completing the paper's "input dynamic graph
-//!   construction auxiliary setup" inside the simulated fabric
+//!   comparing ([`dataflow::GcSchedule`]), the lanes co-simulated as
+//!   steppable units inside the engine's own cycle loop
+//!   ([`dataflow::GcCosim`]; causal FIFO backpressure, skip-on-stall lane
+//!   re-arbitration, cross-event GC pipelining via
+//!   `DataflowEngine::run_stream`) — streaming edges into the layer-0 MP
+//!   units through bounded per-lane edge FIFOs, overlapped with the embed
+//!   stage, completing the paper's "input dynamic graph construction
+//!   auxiliary setup" inside the simulated fabric
 //!   (`Pipeline::builder().build_site(..)`, CLI `--build-site host|fabric`,
-//!   `--gc-schedule pipelined|serialized`).
+//!   `--gc-schedule pipelined|serialized`, `--gc-skip-on-stall`,
+//!   `--gc-cross-event`).
 //! - [`trigger`] — the serving components the pipeline composes: batch-first
 //!   inference backends, the dynamic batcher, the accept-rate controller,
 //!   and the classic `TriggerServer` compatibility wrapper.
@@ -63,7 +68,20 @@
 //!   engine, and the backends (`Pipeline::builder().precision(..)`), with
 //!   the engine guaranteed bit-identical to the reference in every mode.
 //! - [`util`], [`config`] — from-scratch substrates (JSON, CLI, RNG, stats,
-//!   bench/property harnesses) and typed configuration.
+//!   bench/property harnesses, the bench-regression gate
+//!   [`util::benchgate`]) and typed configuration.
+//!
+//! ## CI
+//!
+//! `../rust/ci.sh` is the whole gate, run by GitHub Actions
+//! (`.github/workflows/ci.yml`) and locally: `--quick` for the smoke tier
+//! (fmt, clippy `-D warnings`, golden suite, GC schedule/co-sim pins, a
+//! fabric serve smoke), `--bench-check` for the bench-regression gate
+//! (pinned-seed benches exact-compared against `baselines/*.json`; see
+//! `baselines/README.md` for the `DGNNFLOW_BENCH_REBASE=1` flow), and no
+//! argument for everything including a release build and the full test
+//! suite. All cargo invocations are `--locked` and offline (the single
+//! dependency is vendored).
 
 pub mod config;
 pub mod dataflow;

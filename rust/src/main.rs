@@ -21,6 +21,7 @@ use dgnnflow::pipeline::{BurstSource, EventSource, Pipeline, SyntheticSource};
 use dgnnflow::runtime::{ModelRuntime, PjrtService};
 use dgnnflow::trigger::Backend;
 use dgnnflow::util::bench::Table;
+use dgnnflow::util::benchgate;
 use dgnnflow::util::cli::{Args, Help};
 
 fn main() {
@@ -37,6 +38,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("resources") => cmd_resources(&args),
         Some("power") => cmd_power(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -62,7 +64,8 @@ fn print_help() {
          \u{20}  serve [--backend B]      trigger pipeline over synthetic events\n\
          \u{20}  simulate [--seed N]      one event through the simulated fabric\n\
          \u{20}  resources                Table I resource estimate\n\
-         \u{20}  power                    Table II power estimate\n\n\
+         \u{20}  power                    Table II power estimate\n\
+         \u{20}  bench-check              diff emitted BENCH_*.json against baselines/\n\n\
          Run `cargo run --release -- serve --events 1000 --backend pjrt`."
     );
 }
@@ -117,6 +120,12 @@ fn apply_gc_overrides(args: &Args, arch: &mut ArchConfig) -> anyhow::Result<()> 
     arch.gc_fifo_depth = args
         .usize_or("gc-fifo-depth", arch.gc_fifo_depth)
         .map_err(anyhow::Error::msg)?;
+    if args.flag("gc-skip-on-stall") {
+        arch.gc_skip_on_stall = true;
+    }
+    if args.flag("gc-cross-event") {
+        arch.gc_cross_event = true;
+    }
     arch.validate()?;
     Ok(())
 }
@@ -192,6 +201,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .arg("--p-gc N", "GC compare lanes (fabric build; default from config)")
                 .arg("--gc-fifo-depth N", "per-lane GC edge FIFO depth (default from config)")
                 .arg("--gc-schedule S", "GC phases: pipelined | serialized (default pipelined)")
+                .arg("--gc-skip-on-stall", "GC lanes yield gating waits to ready particles")
+                .arg("--gc-cross-event", "bin event i+1 while event i's GC lanes drain")
                 .arg("--paced", "honour source arrival times in wall-clock")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default 60)")
@@ -308,7 +319,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         println!(
             "gc unit [{}]: bin={} compare={} total={} cycles (serialized schedule would \
              take {}; {} pairs via {} lanes, {} edges streamed)",
-            engine.gc_schedule,
+            engine.gc_mode().unwrap_or_else(|| engine.gc_schedule.to_string()),
             gc.bin_cycles,
             gc.compare_cycles,
             gc.total_cycles,
@@ -347,6 +358,72 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         r.e2e_s * 1e6,
         r.breakdown.transfer_in_s * 1e6,
         r.breakdown.transfer_out_s * 1e6
+    );
+    Ok(())
+}
+
+/// `bench-check`: exact-compare the deterministic fields (cycle counts,
+/// edge totals, resource counts) of the emitted `BENCH_*.json` files
+/// against the checked-in `baselines/*.json`. Wall-clock fields are
+/// excluded — the simulator is deterministic, the host is not. A missing
+/// baseline is bootstrapped from the emitted file (commit it);
+/// `DGNNFLOW_BENCH_REBASE=1` re-baselines after a reviewed timing change.
+fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            Help::new("bench-check", "bench-regression gate over BENCH_*.json cycle counts")
+                .arg("--dir D", "directory holding BENCH_*.json and baselines/ (default .)")
+                .render()
+        );
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.str_or("dir", "."));
+    let rebase = std::env::var("DGNNFLOW_BENCH_REBASE").as_deref() == Ok("1");
+    // In CI (the runner sets CI=1) a missing baseline is a FAILURE, not a
+    // bootstrap: otherwise every fresh runner would re-bootstrap and the
+    // gate could never catch drift (and a deleted baseline would silently
+    // un-pin it). DGNNFLOW_BENCH_BOOTSTRAP=1 accepts a bootstrap once.
+    let in_ci = matches!(std::env::var("CI").as_deref(), Ok("true") | Ok("1"));
+    let allow_bootstrap = std::env::var("DGNNFLOW_BENCH_BOOTSTRAP").as_deref() == Ok("1");
+    let pairs = [
+        ("BENCH_parallelism.json", "baselines/BENCH_parallelism.json"),
+        ("BENCH_graphbuild.json", "baselines/BENCH_graphbuild.json"),
+    ];
+    let mut failures = 0usize;
+    for (emitted, baseline) in pairs {
+        let outcome = benchgate::run_gate(&dir.join(emitted), &dir.join(baseline), rebase)?;
+        match outcome {
+            benchgate::GateOutcome::Pass => println!("bench-check: {emitted} matches {baseline}"),
+            benchgate::GateOutcome::Bootstrapped if in_ci && !allow_bootstrap => {
+                eprintln!(
+                    "bench-check: {baseline} was MISSING in CI — the gate pinned nothing. \
+                     Run ./rust/ci.sh --bench-check locally and commit rust/baselines/ \
+                     (this run's bootstrap is uploaded as the bench-baselines artifact), \
+                     or set DGNNFLOW_BENCH_BOOTSTRAP=1 to accept this bootstrap."
+                );
+                failures += 1;
+            }
+            benchgate::GateOutcome::Bootstrapped => println!(
+                "bench-check: bootstrapped {baseline} from {emitted} — review and commit it \
+                 so CI pins these cycle counts"
+            ),
+            benchgate::GateOutcome::Rebased => {
+                println!("bench-check: re-baselined {baseline} (DGNNFLOW_BENCH_REBASE=1)")
+            }
+            benchgate::GateOutcome::Fail(diffs) => {
+                eprintln!("bench-check: {emitted} DRIFTED from {baseline}:");
+                for d in &diffs {
+                    eprintln!("  {d}");
+                }
+                failures += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        failures == 0,
+        "bench-check failed for {failures} bench file(s); if the timing change is intended \
+         and reviewed, re-baseline with DGNNFLOW_BENCH_REBASE=1 and commit baselines/"
     );
     Ok(())
 }

@@ -105,6 +105,12 @@ pub struct ServeReport {
     /// it for padding and as the GC unit's bit-identity oracle), but the
     /// modelled device timeline builds the graph on-chip.
     pub build_site: String,
+    /// GC scheduling mode of a fabric-building backend (e.g.
+    /// "pipelined-cosim", "pipelined-cosim+skip+xevent", "serialized");
+    /// None for host builds. This is the *configured* mode — "+xevent"
+    /// overlap only materialises across batched events, and what actually
+    /// overlapped is measured per event by the engine's GC stats.
+    pub gc_mode: Option<String>,
     pub source: String,
     pub events: usize,
     pub wall_s: f64,
@@ -173,9 +179,13 @@ impl ServeReport {
             (Some(m), Some(p)) => format!(" device(median={m:.3}ms p99={p:.3}ms)"),
             _ => String::new(),
         };
+        let gc = match &self.gc_mode {
+            Some(mode) => format!(" gc[{mode}]"),
+            None => String::new(),
+        };
         format!(
             "[{}<-{} @{}] events={} wall={:.2}s throughput={:.0}ev/s \
-             graph_build[{}](p50={:.3}ms p99={:.3}ms) \
+             graph_build[{}](p50={:.3}ms p99={:.3}ms){} \
              infer(median={:.3}ms p99={:.3}ms){} batch(mean={:.2} hist={}) accept={:.1}% \
              dropped={} truncated={}",
             self.backend,
@@ -187,6 +197,7 @@ impl ServeReport {
             self.build_site,
             self.build_median_ms,
             self.build_p99_ms,
+            gc,
             self.infer_median_ms,
             self.infer_p99_ms,
             dev,
@@ -578,6 +589,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
         let backend_name = self.backend.name().to_string();
         let precision = self.backend.precision().to_string();
         let build_site = self.backend.build_site().to_string();
+        let gc_mode = self.backend.gc_mode();
         let source_name = self.source.name().to_string();
         let dropped = Arc::new(AtomicU64::new(0));
         let rate = Arc::new(Mutex::new(RateController::new(
@@ -665,6 +677,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
             backend: backend_name,
             precision,
             build_site,
+            gc_mode,
             source: source_name,
             max_batch: self.max_batch,
             t0,
@@ -837,6 +850,7 @@ pub struct RecordStream {
     backend: String,
     precision: String,
     build_site: String,
+    gc_mode: Option<String>,
     source: String,
     max_batch: usize,
     t0: Instant,
@@ -882,6 +896,7 @@ impl RecordStream {
             backend: self.backend.clone(),
             precision: self.precision.clone(),
             build_site: self.build_site.clone(),
+            gc_mode: self.gc_mode.clone(),
             source: self.source.clone(),
             events: records.len(),
             wall_s,
@@ -1115,6 +1130,11 @@ mod tests {
         assert_eq!(fabric.build_site, "fabric");
         assert_eq!(fabric.events, 10);
         assert!(fabric.summary().contains("graph_build[fabric]"));
+        // the report carries the backend's GC scheduling mode (co-sim is
+        // the default); host builds report none
+        assert_eq!(host.gc_mode, None);
+        assert_eq!(fabric.gc_mode.as_deref(), Some("pipelined-cosim"));
+        assert!(fabric.summary().contains("gc[pipelined-cosim]"));
         // host graph-build timing is still measured in both site modes
         assert!(fabric.build_median_ms > 0.0);
         assert!(fabric.build_p99_ms >= fabric.build_median_ms);

@@ -70,6 +70,13 @@ pub trait InferenceBackend: Send + Sync {
         None
     }
 
+    /// Human-readable GC scheduling mode for serving reports (e.g.
+    /// `"pipelined-cosim+xevent"`). None when graphs are host-built or the
+    /// backend has no GC unit — only the simulated fabric reports one.
+    fn gc_mode(&self) -> Option<String> {
+        None
+    }
+
     /// Run inference for a whole batch, preserving order. Implementations
     /// must return exactly one output per input graph, and each output must
     /// bit-equal what a singleton call on that graph would produce (the
@@ -124,7 +131,10 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Fused functional + timing pass over the simulated fabric.
+    /// Fused functional + timing pass over the simulated fabric. Batches
+    /// stream back-to-back through [`DataflowEngine::run_stream`], so with
+    /// `ArchConfig::gc_cross_event` set the fabric bins graph *i+1* while
+    /// graph *i*'s GC compare lanes drain (a no-op otherwise).
     fn fpga_batch(
         engine: &DataflowEngine,
         graphs: &[PaddedGraph],
@@ -132,8 +142,7 @@ impl Backend {
         let mut outputs = Vec::with_capacity(graphs.len());
         let mut done_at = Vec::with_capacity(graphs.len());
         let mut occupied_s = 0.0;
-        for g in graphs {
-            let r = engine.run(g);
+        for r in engine.run_stream(graphs) {
             occupied_s += r.e2e_s;
             outputs.push(r.output);
             done_at.push(occupied_s);
@@ -198,6 +207,13 @@ impl InferenceBackend for Backend {
             Backend::Fpga(engine) if engine.build_site == BuildSite::Fabric => {
                 Some(engine.gc_delta())
             }
+            _ => None,
+        }
+    }
+
+    fn gc_mode(&self) -> Option<String> {
+        match self {
+            Backend::Fpga(engine) => engine.gc_mode(),
             _ => None,
         }
     }
@@ -345,6 +361,43 @@ mod tests {
         assert!((batch[0] - single1).abs() < 1e-12);
         // graph 2 waits for graph 1 on the single fabric
         assert!((batch[1] - (single1 + single2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fpga_batch_cross_event_overlaps_gc_critical_graphs() {
+        // With cross-event GC pipelining on, a batch streams through
+        // run_stream: on GC-critical graphs (edge-free, heavy compare
+        // load) every graph after the first is strictly cheaper because
+        // its bin phase hid under the previous graph's compare drain.
+        use crate::physics::event::test_fixtures::lattice_event_spacing_0p9;
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 60);
+        let arch = ArchConfig {
+            p_gc: 1,
+            gc_lane_ii: 128,
+            gc_cross_event: true,
+            ..Default::default()
+        };
+        let mut engine =
+            DataflowEngine::new(arch, L1DeepMetV2::new(cfg, w).unwrap()).unwrap();
+        engine.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+        let fpga = Backend::Fpga(engine);
+        assert_eq!(fpga.gc_mode().as_deref(), Some("pipelined-cosim+xevent"));
+        let ev = lattice_event_spacing_0p9();
+        let g = pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS);
+        let batch = fpga.device_batch_latency_s(&[g.clone(), g.clone()]).unwrap();
+        let first = batch[0];
+        let second = batch[1] - batch[0];
+        assert!(
+            second < first,
+            "cross-event batch: second graph {second} !< first {first}"
+        );
+        // the non-fabric backends keep reporting no GC mode
+        let cfg = ModelConfig::default();
+        let cpu = Backend::RustCpu(
+            L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 61)).unwrap(),
+        );
+        assert_eq!(cpu.gc_mode(), None);
     }
 
     #[test]

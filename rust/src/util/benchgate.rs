@@ -1,0 +1,359 @@
+//! Bench-regression gate: exact comparison of the *deterministic* fields
+//! of emitted `BENCH_*.json` documents against checked-in baselines.
+//!
+//! The cycle simulator is deterministic, so cycle counts, edge totals, and
+//! resource counts must match the committed baseline bit for bit — a
+//! single-cycle drift fails the gate. Wall-clock fields (host build
+//! medians, E2E microseconds derived from `Instant`) are *not* compared:
+//! only the whitelisted keys below gate the build, so the gate is stable
+//! across machines while still pinning every simulated number.
+//!
+//! Flow (driven by `dgnnflow bench-check`, wired into `ci.sh
+//! --bench-check`):
+//!
+//! - baseline missing → bootstrap it from the emitted file (the golden
+//!   suite's precedent) and tell the operator to commit it;
+//! - `DGNNFLOW_BENCH_REBASE=1` → overwrite the baseline (the documented
+//!   re-baseline path after a reviewed timing change);
+//! - otherwise → exact compare, listing every drifted field on failure.
+
+use std::path::Path;
+
+use crate::util::json::{self, Value};
+
+/// Whitelisted keys for one known bench document: document-level keys,
+/// per-point identity keys (must match pairwise, in order), and per-point
+/// compared keys (the deterministic measurements the gate pins).
+struct KeySet {
+    doc: &'static [&'static str],
+    point_id: &'static [&'static str],
+    point_cmp: &'static [&'static str],
+}
+
+fn keyset(bench: &str) -> Option<KeySet> {
+    match bench {
+        "ablation_parallelism" => Some(KeySet {
+            doc: &["delta", "workload_nodes", "workload_edges"],
+            point_id: &["p_edge", "p_node", "p_gc", "build_site", "gc_policy"],
+            point_cmp: &[
+                "total_cycles",
+                "gc_cycles",
+                "gc_serialized_cycles",
+                "gc_fifo_stall_cycles",
+                "gc_feed_blocked",
+                "dsp",
+                "lut",
+                "bram",
+                "fits_u50",
+            ],
+        }),
+        "graphbuild_overlap" => Some(KeySet {
+            doc: &["delta", "events_per_pileup", "p_gc", "gc_bin_depth"],
+            point_id: &["n_max", "e_max"],
+            point_cmp: &["events", "edges_median", "gc_cycles_median"],
+        }),
+        _ => None,
+    }
+}
+
+fn render(v: Option<&Value>) -> String {
+    match v {
+        Some(v) => v.to_json(),
+        None => "<missing>".to_string(),
+    }
+}
+
+fn diff_keys(ctx: &str, keys: &[&str], emitted: &Value, baseline: &Value, out: &mut Vec<String>) {
+    for key in keys {
+        let (e, b) = (emitted.opt(key), baseline.opt(key));
+        if e != b {
+            out.push(format!("{ctx}: {key} = {} (baseline {})", render(e), render(b)));
+        }
+    }
+}
+
+/// Compare two bench documents over the whitelisted deterministic keys.
+/// Returns the list of drifted fields (empty = identical).
+pub fn compare_docs(emitted: &Value, baseline: &Value) -> anyhow::Result<Vec<String>> {
+    let name = emitted
+        .get("bench")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .map_err(|e| anyhow::anyhow!("emitted bench doc: {e}"))?;
+    let mut diffs = Vec::new();
+    match baseline.opt("bench").and_then(|v| v.as_str().ok()) {
+        Some(b) if b == name => {}
+        other => {
+            diffs.push(format!(
+                "bench name: \"{name}\" (baseline {})",
+                other.unwrap_or("<missing>")
+            ));
+            return Ok(diffs);
+        }
+    }
+    let keys = keyset(&name)
+        .ok_or_else(|| anyhow::anyhow!("no bench-gate whitelist for '{name}'"))?;
+    diff_keys("doc", keys.doc, emitted, baseline, &mut diffs);
+    let e_points = emitted
+        .get("points")
+        .and_then(|v| v.as_arr())
+        .map_err(|e| anyhow::anyhow!("emitted bench doc points: {e}"))?;
+    let b_points = baseline
+        .get("points")
+        .and_then(|v| v.as_arr())
+        .map_err(|e| anyhow::anyhow!("baseline bench doc points: {e}"))?;
+    if e_points.len() != b_points.len() {
+        diffs.push(format!(
+            "points: {} emitted vs {} baseline (grid changed? re-baseline deliberately)",
+            e_points.len(),
+            b_points.len()
+        ));
+        return Ok(diffs);
+    }
+    for (i, (e, b)) in e_points.iter().zip(b_points).enumerate() {
+        let ctx = format!("points[{i}]");
+        diff_keys(&ctx, keys.point_id, e, b, &mut diffs);
+        diff_keys(&ctx, keys.point_cmp, e, b, &mut diffs);
+    }
+    Ok(diffs)
+}
+
+/// Every whitelisted key must be present in an emitted bench document —
+/// otherwise the gate would silently stop pinning the missing field.
+fn validate_whitelist(emitted: &Value) -> anyhow::Result<()> {
+    let name = emitted
+        .get("bench")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .map_err(|e| anyhow::anyhow!("emitted bench doc: {e}"))?;
+    let keys = keyset(&name)
+        .ok_or_else(|| anyhow::anyhow!("no bench-gate whitelist for '{name}'"))?;
+    let mut missing = Vec::new();
+    for key in keys.doc {
+        if emitted.opt(key).is_none() {
+            missing.push(format!("doc key '{key}'"));
+        }
+    }
+    let points = emitted
+        .get("points")
+        .and_then(|v| v.as_arr())
+        .map_err(|e| anyhow::anyhow!("emitted bench doc points: {e}"))?;
+    for (i, point) in points.iter().enumerate() {
+        for key in keys.point_id.iter().chain(keys.point_cmp) {
+            if point.opt(key).is_none() {
+                missing.push(format!("points[{i}] key '{key}'"));
+            }
+        }
+    }
+    anyhow::ensure!(
+        missing.is_empty(),
+        "emitted '{name}' doc is missing whitelisted fields (bench refactor \
+         without a gate update?): {missing:?}"
+    );
+    Ok(())
+}
+
+/// Outcome of one emitted-vs-baseline gate run.
+#[derive(Debug, PartialEq)]
+pub enum GateOutcome {
+    /// Every deterministic field matches the baseline.
+    Pass,
+    /// No baseline existed; it was created from the emitted file.
+    Bootstrapped,
+    /// `rebase` was set; the baseline was overwritten.
+    Rebased,
+    /// Drifted fields (the gate should fail the build).
+    Fail(Vec<String>),
+}
+
+/// Gate one emitted bench file against its baseline path.
+pub fn run_gate(
+    emitted_path: &Path,
+    baseline_path: &Path,
+    rebase: bool,
+) -> anyhow::Result<GateOutcome> {
+    let emitted = json::parse_file(emitted_path).map_err(|e| {
+        anyhow::anyhow!("{e} (run the bench first: cargo bench --bench <name>)")
+    })?;
+    // Validate the emitted doc carries every whitelisted key *before*
+    // adopting it as (or comparing it to) a baseline: a bench refactor
+    // that drops a pinned field must fail loudly here, not silently stop
+    // gating that field via None == None comparisons.
+    validate_whitelist(&emitted)?;
+    if !baseline_path.exists() || rebase {
+        if let Some(parent) = baseline_path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::copy(emitted_path, baseline_path)?;
+        return Ok(if rebase { GateOutcome::Rebased } else { GateOutcome::Bootstrapped });
+    }
+    let baseline = json::parse_file(baseline_path)?;
+    let diffs = compare_docs(&emitted, &baseline)?;
+    Ok(if diffs.is_empty() { GateOutcome::Pass } else { GateOutcome::Fail(diffs) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parallelism_doc(total_cycles: u64, e2e_us: f64) -> Value {
+        json::parse(&format!(
+            r#"{{
+                "bench": "ablation_parallelism",
+                "delta": 0.8,
+                "workload_nodes": 210,
+                "workload_edges": 1900,
+                "points": [
+                    {{"p_edge": 8, "p_node": 4, "p_gc": 4, "build_site": "fabric",
+                      "gc_policy": "in-order", "total_cycles": {total_cycles},
+                      "e2e_us": {e2e_us}, "gc_cycles": 310,
+                      "gc_serialized_cycles": 705, "gc_fifo_stall_cycles": 0,
+                      "gc_feed_blocked": 12, "dsp": 561, "lut": 231000,
+                      "bram": 402, "fits_u50": true}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    fn graphbuild_doc(gc_median: f64, build_us: f64) -> Value {
+        json::parse(&format!(
+            r#"{{
+                "bench": "graphbuild_overlap",
+                "delta": 0.8,
+                "events_per_pileup": 40,
+                "p_gc": 4,
+                "gc_bin_depth": 16,
+                "points": [
+                    {{"n_max": 128, "e_max": 2048, "events": 40,
+                      "edges_median": 400, "gc_cycles_median": {gc_median},
+                      "host_build_us_median": {build_us},
+                      "fabric_e2e_us_median": 93.5}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_docs_pass() {
+        let a = parallelism_doc(5000, 123.4);
+        let b = parallelism_doc(5000, 123.4);
+        assert!(compare_docs(&a, &b).unwrap().is_empty());
+    }
+
+    #[test]
+    fn one_cycle_perturbation_fails() {
+        let a = parallelism_doc(5000, 123.4);
+        let b = parallelism_doc(5001, 123.4);
+        let diffs = compare_docs(&a, &b).unwrap();
+        assert_eq!(diffs.len(), 1, "{diffs:?}");
+        assert!(diffs[0].contains("total_cycles"), "{}", diffs[0]);
+        assert!(diffs[0].contains("5000") && diffs[0].contains("5001"));
+    }
+
+    #[test]
+    fn wall_clock_drift_is_ignored() {
+        // e2e_us / host_build_us_median are host-dependent: the gate must
+        // not pin them
+        let a = parallelism_doc(5000, 123.4);
+        let b = parallelism_doc(5000, 999.9);
+        assert!(compare_docs(&a, &b).unwrap().is_empty());
+        let a = graphbuild_doc(250.0, 12.0);
+        let b = graphbuild_doc(250.0, 512.0);
+        assert!(compare_docs(&a, &b).unwrap().is_empty());
+    }
+
+    #[test]
+    fn deterministic_median_drift_fails() {
+        let a = graphbuild_doc(250.0, 12.0);
+        let b = graphbuild_doc(250.5, 12.0);
+        let diffs = compare_docs(&a, &b).unwrap();
+        assert_eq!(diffs.len(), 1, "{diffs:?}");
+        assert!(diffs[0].contains("gc_cycles_median"));
+    }
+
+    #[test]
+    fn grid_shape_change_is_reported() {
+        let a = parallelism_doc(5000, 1.0);
+        let mut b = parallelism_doc(5000, 1.0);
+        if let Value::Obj(m) = &mut b {
+            m.insert("points".into(), Value::Arr(vec![]));
+        }
+        let diffs = compare_docs(&a, &b).unwrap();
+        assert!(diffs[0].contains("points"), "{diffs:?}");
+    }
+
+    #[test]
+    fn unknown_bench_name_is_an_error() {
+        let doc = json::parse(r#"{"bench": "mystery", "points": []}"#).unwrap();
+        assert!(compare_docs(&doc, &doc).is_err());
+    }
+
+    #[test]
+    fn run_gate_bootstraps_rebases_and_fails() {
+        let dir = std::env::temp_dir().join(format!(
+            "dgnnflow_benchgate_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let emitted = dir.join("BENCH_parallelism.json");
+        let baseline = dir.join("baselines/BENCH_parallelism.json");
+        std::fs::write(&emitted, parallelism_doc(5000, 1.0).to_json()).unwrap();
+        // 1. no baseline: bootstrap (and create the directory)
+        assert_eq!(run_gate(&emitted, &baseline, false).unwrap(), GateOutcome::Bootstrapped);
+        assert!(baseline.exists());
+        // 2. unchanged: pass
+        assert_eq!(run_gate(&emitted, &baseline, false).unwrap(), GateOutcome::Pass);
+        // 3. a one-cycle perturbation in the emitted file: fail, naming it
+        std::fs::write(&emitted, parallelism_doc(5001, 1.0).to_json()).unwrap();
+        match run_gate(&emitted, &baseline, false).unwrap() {
+            GateOutcome::Fail(diffs) => {
+                assert!(diffs.iter().any(|d| d.contains("total_cycles")), "{diffs:?}")
+            }
+            other => panic!("expected Fail, got {other:?}"),
+        }
+        // 4. explicit rebase adopts the new numbers...
+        assert_eq!(run_gate(&emitted, &baseline, true).unwrap(), GateOutcome::Rebased);
+        // ...after which the gate passes again
+        assert_eq!(run_gate(&emitted, &baseline, false).unwrap(), GateOutcome::Pass);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_gate_rejects_emitted_doc_missing_whitelisted_fields() {
+        // a bench refactor that drops a pinned field must fail the gate
+        // loudly, never bootstrap a baseline that silently stops gating it
+        let dir = std::env::temp_dir().join(format!(
+            "dgnnflow_benchgate_missing_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut doc = parallelism_doc(5000, 1.0);
+        if let Value::Obj(m) = &mut doc {
+            if let Some(Value::Arr(points)) = m.get_mut("points") {
+                if let Value::Obj(p) = &mut points[0] {
+                    p.remove("gc_cycles");
+                }
+            }
+        }
+        let emitted = dir.join("BENCH_parallelism.json");
+        let baseline = dir.join("baselines/BENCH_parallelism.json");
+        std::fs::write(&emitted, doc.to_json()).unwrap();
+        let err = run_gate(&emitted, &baseline, false).unwrap_err();
+        assert!(err.to_string().contains("gc_cycles"), "{err}");
+        assert!(!baseline.exists(), "must not bootstrap a degraded baseline");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_gate_missing_emitted_is_a_clear_error() {
+        let err = run_gate(
+            Path::new("/nonexistent/BENCH_parallelism.json"),
+            Path::new("/nonexistent/baselines/BENCH_parallelism.json"),
+            false,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("run the bench"), "{err}");
+    }
+}

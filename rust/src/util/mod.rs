@@ -2,6 +2,7 @@
 //! clap/serde/rand/criterion/proptest, so we build what we need).
 
 pub mod bench;
+pub mod benchgate;
 pub mod cli;
 pub mod json;
 pub mod prop;
