@@ -1,0 +1,332 @@
+//! Farm soak bench: sharded serving under sustained synthetic traffic.
+//!
+//! Three legs, one emitted document (`BENCH_farm.json`):
+//!
+//! 1. **Deterministic smoke (gated).** An unpaced farm replays the same
+//!    pinned-seed event set through every shard-count × routing-policy
+//!    combination. Unpaced = blocking backpressure, so every offered event
+//!    must be served with zero rejects/sheds/failures regardless of host
+//!    speed — those counts are exact-compared by `dgnnflow bench-check`.
+//! 2. **Capacity sweep (informative).** Paced bursty arrivals through
+//!    `PacedBackend` shards with a fixed modelled service time; for each
+//!    configuration a doubling-then-bisection search finds the max
+//!    sustainable arrival rate (zero failures, negligible loss, p999
+//!    within the SLO). The headline claim — JSQ max sustainable rate grows
+//!    monotonically from 1 to 4 shards — is recorded as `jsq_monotonic`.
+//! 3. **Admission comparison (informative).** The 4-shard JSQ farm driven
+//!    30% past its measured capacity with harsher bursts, tail-drop vs
+//!    deadline shedding: the deadline policy should trade served events
+//!    for a p999 that stays near the SLO instead of blowing through it.
+//!
+//! Legs 2 and 3 are wall-clock-shaped and are *not* gated (they live in
+//! the extra `sweep` / `admission` arrays the bench gate ignores).
+//!
+//!   cargo bench --bench farm_soak [-- --secs-per-point S --slo-ms MS --seed N]
+
+use std::time::Duration;
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::farm::{AdmissionPolicy, Farm, FarmReport, PacedBackend, RoutingPolicy};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::GeneratorConfig;
+use dgnnflow::pipeline::{BurstSource, ReplaySource};
+use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::trigger::Backend;
+use dgnnflow::util::bench::Table;
+use dgnnflow::util::cli::Args;
+use dgnnflow::util::json::{obj, Value};
+
+/// Modelled per-event device service time for the paced legs: 2 ms/event
+/// = 500 events/s of capacity per shard, far below host CPU speed so the
+/// sweep measures routing/admission policy, not the machine.
+const SERVICE_US: u64 = 2000;
+const SMOKE_EVENTS: usize = 64;
+
+fn load_cfg_weights() -> (ModelConfig, Weights) {
+    let dir = ModelRuntime::artifacts_dir();
+    if dir.join("meta.json").exists() {
+        if let Ok(cfg) = ModelConfig::from_meta(&dir.join("meta.json")) {
+            if let Ok(w) = Weights::load(&dir.join("weights.json"), &cfg) {
+                return (cfg, w);
+            }
+        }
+    }
+    let cfg = ModelConfig::default();
+    let w = Weights::random(&cfg, 707);
+    (cfg, w)
+}
+
+fn gen_cfg() -> GeneratorConfig {
+    GeneratorConfig { mean_pileup: 10.0, ..Default::default() }
+}
+
+fn shard_backends(
+    n: usize,
+    cfg: &ModelConfig,
+    weights: &Weights,
+    service: Duration,
+) -> Vec<PacedBackend<Backend>> {
+    (0..n)
+        .map(|_| {
+            let model = L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap();
+            PacedBackend::new(Backend::RustCpu(model), service)
+        })
+        .collect()
+}
+
+/// One paced trial: bursty arrivals at `rate_hz` through `shards` paced
+/// backends for roughly `secs_per_point` of traffic.
+#[allow(clippy::too_many_arguments)]
+fn paced_trial(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    shards: usize,
+    routing: RoutingPolicy,
+    admission: AdmissionPolicy,
+    rate_hz: f64,
+    burst_factor: f64,
+    seed: u64,
+    secs_per_point: f64,
+) -> FarmReport {
+    let n = ((rate_hz * secs_per_point) as usize).max(40);
+    let source = BurstSource::new(n, seed, gen_cfg(), rate_hz).with_burst_factor(burst_factor);
+    Farm::builder()
+        .shards(shard_backends(shards, cfg, weights, Duration::from_micros(SERVICE_US)))
+        .source(source)
+        .routing(routing)
+        .admission(admission)
+        .shard_queue_capacity(32)
+        .batching(1, Duration::from_micros(100))
+        .paced(true)
+        .build()
+        .unwrap()
+        .serve()
+}
+
+/// Sustainable = nothing broke and the farm kept up: no inference
+/// failures, loss (rejected + shed) within 1%, and p999 within the SLO.
+fn sustainable(r: &FarmReport, slo_ms: f64) -> bool {
+    let loss = (r.rejected + r.shed) as f64 / (r.offered.max(1)) as f64;
+    r.accounting_ok() && r.failed == 0 && r.events > 0 && loss <= 0.01 && r.latency_p999_ms <= slo_ms
+}
+
+/// Doubling-then-bisection search for the max sustainable arrival rate.
+#[allow(clippy::too_many_arguments)]
+fn max_sustainable_rate(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    shards: usize,
+    routing: RoutingPolicy,
+    slo_ms: f64,
+    seed: u64,
+    secs_per_point: f64,
+) -> (f64, FarmReport) {
+    let capacity_hz = shards as f64 / (SERVICE_US as f64 * 1e-6);
+    let trial = |rate: f64| {
+        paced_trial(
+            cfg,
+            weights,
+            shards,
+            routing,
+            AdmissionPolicy::TailDrop,
+            rate,
+            2.0,
+            seed,
+            secs_per_point,
+        )
+    };
+    let mut lo = 0.3 * capacity_hz;
+    let mut best = trial(lo);
+    if !sustainable(&best, slo_ms) {
+        return (0.0, best);
+    }
+    // geometric growth until the farm falls over (or we give up)
+    let mut hi = None;
+    let mut rate = lo;
+    for _ in 0..5 {
+        rate *= 2.0;
+        let r = trial(rate);
+        if sustainable(&r, slo_ms) {
+            lo = rate;
+            best = r;
+        } else {
+            hi = Some(rate);
+            break;
+        }
+    }
+    if let Some(mut hi) = hi {
+        for _ in 0..3 {
+            let mid = 0.5 * (lo + hi);
+            let r = trial(mid);
+            if sustainable(&r, slo_ms) {
+                lo = mid;
+                best = r;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    (lo, best)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let seed = args.u64_or("seed", 1).unwrap_or(1);
+    let slo_ms = args.f64_or("slo-ms", 20.0).unwrap_or(20.0);
+    let secs_per_point = args.f64_or("secs-per-point", 0.5).unwrap_or(0.5);
+    println!("=== Farm soak: shard scaling, routing and admission policies ===\n");
+
+    let (cfg, weights) = load_cfg_weights();
+
+    // --- leg 1: deterministic smoke (gated) --------------------------------
+    // Unpaced replay of one pinned event set: blocking backpressure, no
+    // admission loss, every event served — exact counts gate the build.
+    let mut smoke_table =
+        Table::new(&["shards", "routing", "offered", "served", "failed", "rejected", "shed"]);
+    let mut points = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        for routing in RoutingPolicy::ALL {
+            let report = Farm::builder()
+                .shards(shard_backends(shards, &cfg, &weights, Duration::ZERO))
+                .source(ReplaySource::from_seed(seed, gen_cfg(), SMOKE_EVENTS))
+                .routing(routing)
+                .batching(2, Duration::from_micros(100))
+                .build()
+                .unwrap()
+                .serve();
+            assert!(report.accounting_ok(), "{}", report.summary());
+            smoke_table.row(&[
+                shards.to_string(),
+                routing.to_string(),
+                report.offered.to_string(),
+                report.events.to_string(),
+                report.failed.to_string(),
+                report.rejected.to_string(),
+                report.shed.to_string(),
+            ]);
+            points.push(obj(vec![
+                ("shards", Value::Num(shards as f64)),
+                ("routing", Value::Str(routing.to_string())),
+                ("admission", Value::Str(report.admission.to_string())),
+                ("offered", Value::Num(report.offered as f64)),
+                ("served", Value::Num(report.events as f64)),
+                ("failed", Value::Num(report.failed as f64)),
+                ("rejected", Value::Num(report.rejected as f64)),
+                ("shed", Value::Num(report.shed as f64)),
+                ("wall_s", Value::Num(report.wall_s)),
+            ]));
+        }
+    }
+    smoke_table.print();
+
+    // --- leg 2: capacity sweep (informative) -------------------------------
+    println!("\ncapacity sweep: max sustainable rate (p999 <= {slo_ms}ms, <=1% loss)");
+    let mut sweep_table =
+        Table::new(&["shards", "routing", "max rate (ev/s)", "p999 (ms)", "capacity used"]);
+    let mut sweep = Vec::new();
+    let mut jsq_rates = Vec::new();
+    let configs = [
+        (1usize, RoutingPolicy::JoinShortestQueue),
+        (2, RoutingPolicy::JoinShortestQueue),
+        (4, RoutingPolicy::JoinShortestQueue),
+        (8, RoutingPolicy::JoinShortestQueue),
+        (4, RoutingPolicy::RoundRobin),
+        (4, RoutingPolicy::LatencyEwma),
+    ];
+    for (shards, routing) in configs {
+        let (rate, report) =
+            max_sustainable_rate(&cfg, &weights, shards, routing, slo_ms, seed, secs_per_point);
+        let capacity_hz = shards as f64 / (SERVICE_US as f64 * 1e-6);
+        if routing == RoutingPolicy::JoinShortestQueue && shards <= 4 {
+            jsq_rates.push((shards, rate));
+        }
+        sweep_table.row(&[
+            shards.to_string(),
+            routing.to_string(),
+            format!("{rate:.0}"),
+            format!("{:.3}", report.latency_p999_ms),
+            format!("{:.0}%", 100.0 * rate / capacity_hz),
+        ]);
+        sweep.push(obj(vec![
+            ("shards", Value::Num(shards as f64)),
+            ("routing", Value::Str(routing.to_string())),
+            ("max_sustainable_hz", Value::Num(rate)),
+            ("p999_ms", Value::Num(report.latency_p999_ms)),
+            ("offered", Value::Num(report.offered as f64)),
+            ("served", Value::Num(report.events as f64)),
+        ]));
+    }
+    sweep_table.print();
+    let jsq_monotonic = jsq_rates.windows(2).all(|w| w[0].1 < w[1].1);
+    if jsq_monotonic {
+        println!(
+            "\nscaling check: JSQ max sustainable rate increases monotonically \
+             1 -> 2 -> 4 shards"
+        );
+    } else {
+        println!("\nscaling check FAILED: JSQ rates not monotonic: {jsq_rates:?}");
+    }
+
+    // --- leg 3: admission comparison (informative) -------------------------
+    let (jsq4_rate, _) = jsq_rates
+        .iter()
+        .find(|(s, _)| *s == 4)
+        .copied()
+        .unwrap_or((4, 4.0 / (SERVICE_US as f64 * 1e-6)));
+    let overload_hz = (1.3 * jsq4_rate).max(100.0);
+    println!(
+        "\nadmission comparison: 4 shards, JSQ, {overload_hz:.0} ev/s \
+         (130% of measured capacity), burst factor 4"
+    );
+    let mut adm_table =
+        Table::new(&["admission", "served", "rejected", "shed", "p999 (ms)", "loss"]);
+    let mut admission_points = Vec::new();
+    for admission in [AdmissionPolicy::TailDrop, AdmissionPolicy::Deadline { slo_ms }] {
+        let r = paced_trial(
+            &cfg,
+            &weights,
+            4,
+            RoutingPolicy::JoinShortestQueue,
+            admission,
+            overload_hz,
+            4.0,
+            seed,
+            2.0 * secs_per_point,
+        );
+        assert!(r.accounting_ok(), "{}", r.summary());
+        let loss = (r.rejected + r.shed) as f64 / r.offered.max(1) as f64;
+        adm_table.row(&[
+            admission.to_string(),
+            r.events.to_string(),
+            r.rejected.to_string(),
+            r.shed.to_string(),
+            format!("{:.3}", r.latency_p999_ms),
+            format!("{:.1}%", 100.0 * loss),
+        ]);
+        admission_points.push(obj(vec![
+            ("admission", Value::Str(admission.to_string())),
+            ("served", Value::Num(r.events as f64)),
+            ("rejected", Value::Num(r.rejected as f64)),
+            ("shed", Value::Num(r.shed as f64)),
+            ("p999_ms", Value::Num(r.latency_p999_ms)),
+            ("loss_frac", Value::Num(loss)),
+        ]));
+    }
+    adm_table.print();
+
+    let doc = obj(vec![
+        ("bench", Value::from("farm_soak")),
+        ("seed", Value::Num(seed as f64)),
+        ("smoke_events", Value::Num(SMOKE_EVENTS as f64)),
+        ("service_us", Value::Num(SERVICE_US as f64)),
+        ("slo_ms", Value::Num(slo_ms)),
+        ("secs_per_point", Value::Num(secs_per_point)),
+        ("points", Value::Arr(points)),
+        ("sweep", Value::Arr(sweep)),
+        ("admission", Value::Arr(admission_points)),
+        ("jsq_monotonic", Value::Bool(jsq_monotonic)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_farm.json");
+    std::fs::write(&out, doc.to_json()).expect("write BENCH_farm.json");
+    println!("wrote {}", out.display());
+}

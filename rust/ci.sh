@@ -8,13 +8,16 @@
 #                          bench compilation, the golden-vector conformance
 #                          suite, the GC-vs-host edge-set equality tests,
 #                          the pipelined-vs-serialized schedule property,
-#                          the co-sim-vs-PR 4-replay regression pins, and a
+#                          the co-sim-vs-PR 4-replay regression pins, a
 #                          `--build-site fabric` serve smoke whose report
-#                          line must show dropped=0 and an on-fabric build
-#   ./ci.sh --bench-check  bench-regression gate: run ablation_parallelism
-#                          and graphbuild_overlap on their pinned seeds and
-#                          exact-compare the emitted BENCH_*.json cycle
-#                          counts / edge totals against rust/baselines/
+#                          line must show dropped=0 and an on-fabric build,
+#                          and a 2-shard farm smoke whose report must show
+#                          zero failures and consistent admission accounting
+#   ./ci.sh --bench-check  bench-regression gate: run ablation_parallelism,
+#                          graphbuild_overlap, and farm_soak on their
+#                          pinned seeds and exact-compare the emitted
+#                          BENCH_*.json deterministic fields against
+#                          rust/baselines/
 #                          (a missing baseline is bootstrapped — commit it;
 #                          DGNNFLOW_BENCH_REBASE=1 re-baselines after a
 #                          reviewed timing change)
@@ -78,12 +81,30 @@ quick_tier() {
         echo "FAIL: serve smoke did not run the co-simulated GC feed" >&2
         exit 1
     fi
+
+    echo "==> farm smoke: 2 shards, paced, admission accounting must close"
+    farm="$(cargo run --locked -q -- farm --shards 2 --events 40 --paced \
+        --rate 2000 --service-us 500 --pileup 10)"
+    echo "$farm"
+    if ! grep -q 'shards=2' <<<"$farm"; then
+        echo "FAIL: farm smoke did not run 2 shards" >&2
+        exit 1
+    fi
+    if ! grep -Eq 'failed=0( |$)' <<<"$farm"; then
+        echo "FAIL: farm smoke lost events to inference failures" >&2
+        exit 1
+    fi
+    if ! grep -q 'accounting=ok' <<<"$farm"; then
+        echo "FAIL: farm smoke admission accounting does not close" >&2
+        exit 1
+    fi
 }
 
 bench_tier() {
     echo "==> bench-regression gate: pinned-seed benches"
     cargo bench --locked --bench ablation_parallelism
     cargo bench --locked --bench graphbuild_overlap
+    cargo bench --locked --bench farm_soak
 
     echo "==> bench-check: exact cycle-count/edge-total compare vs rust/baselines"
     cargo run --locked -q -- bench-check

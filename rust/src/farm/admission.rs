@@ -1,0 +1,113 @@
+//! Admission control: decide at enqueue time whether an arriving event is
+//! worth serving, before it occupies shard buffer space.
+
+use std::fmt;
+
+/// When the farm sheds load. Only active in paced mode — an unpaced farm
+/// has no real-time deadline, so it applies blocking backpressure instead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Admit everything; the only loss is the shard queue itself filling
+    /// (a tail-queue *reject*, counted in `FarmReport::rejected`). The
+    /// baseline: simple, but an overloaded queue serves events that are
+    /// already hopelessly late.
+    TailDrop,
+    /// Deadline-aware shedding: drop at the door (`FarmReport::shed`) when
+    /// the predicted completion time `(backlog + 1) × EWMA service time`
+    /// already exceeds the SLO — the event would miss its deadline anyway,
+    /// and serving it would push every queued event further past theirs.
+    Deadline { slo_ms: f64 },
+}
+
+/// The dispatcher-side verdict for one arriving event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Admit {
+    Enqueue,
+    Shed,
+}
+
+impl AdmissionPolicy {
+    /// Parse `tail-drop` or `deadline:<ms>` (an optional `ms` suffix on the
+    /// number is accepted, matching the `Display` form).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "tail-drop" {
+            return Ok(AdmissionPolicy::TailDrop);
+        }
+        if let Some(rest) = s.strip_prefix("deadline:") {
+            let num = rest.strip_suffix("ms").unwrap_or(rest);
+            let slo_ms: f64 = num
+                .parse()
+                .map_err(|_| format!("bad deadline '{rest}' (want e.g. deadline:5ms)"))?;
+            if !(slo_ms > 0.0 && slo_ms.is_finite()) {
+                return Err(format!("deadline SLO must be positive and finite, got {slo_ms}"));
+            }
+            return Ok(AdmissionPolicy::Deadline { slo_ms });
+        }
+        Err(format!("unknown admission policy '{s}' (want tail-drop | deadline:<ms>)"))
+    }
+
+    /// Judge one arrival against the chosen shard's current state.
+    pub(crate) fn decide(&self, backlog: usize, ewma_service_s: f64) -> Admit {
+        match *self {
+            AdmissionPolicy::TailDrop => Admit::Enqueue,
+            AdmissionPolicy::Deadline { slo_ms } => {
+                // No measurement yet: admit and learn (shedding on zero
+                // information would starve a cold farm forever).
+                if ewma_service_s <= 0.0 {
+                    return Admit::Enqueue;
+                }
+                let predicted_ms = (backlog as f64 + 1.0) * ewma_service_s * 1e3;
+                if predicted_ms > slo_ms {
+                    Admit::Shed
+                } else {
+                    Admit::Enqueue
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionPolicy::TailDrop => write!(f, "tail-drop"),
+            AdmissionPolicy::Deadline { slo_ms } => write!(f, "deadline:{slo_ms}ms"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_drop_always_admits() {
+        let p = AdmissionPolicy::TailDrop;
+        assert_eq!(p.decide(0, 0.0), Admit::Enqueue);
+        assert_eq!(p.decide(1_000_000, 10.0), Admit::Enqueue);
+    }
+
+    #[test]
+    fn deadline_sheds_when_predicted_wait_exceeds_slo() {
+        let p = AdmissionPolicy::Deadline { slo_ms: 5.0 };
+        // 1ms/event: 4 queued + this one = 5ms predicted, exactly at SLO
+        assert_eq!(p.decide(4, 1e-3), Admit::Enqueue);
+        assert_eq!(p.decide(5, 1e-3), Admit::Shed);
+        // unmeasured shard: admit and learn
+        assert_eq!(p.decide(100, 0.0), Admit::Enqueue);
+    }
+
+    #[test]
+    fn parse_round_trips_display() {
+        for p in [AdmissionPolicy::TailDrop, AdmissionPolicy::Deadline { slo_ms: 2.5 }] {
+            assert_eq!(AdmissionPolicy::parse(&p.to_string()).unwrap(), p);
+        }
+        assert_eq!(
+            AdmissionPolicy::parse("deadline:10").unwrap(),
+            AdmissionPolicy::Deadline { slo_ms: 10.0 }
+        );
+        assert!(AdmissionPolicy::parse("deadline:-1").is_err());
+        assert!(AdmissionPolicy::parse("deadline:abc").is_err());
+        assert!(AdmissionPolicy::parse("random-early").is_err());
+    }
+}

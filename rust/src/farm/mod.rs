@@ -1,0 +1,888 @@
+//! Sharded multi-fabric serving farm with SLO-based admission control.
+//!
+//! An HL-LHC trigger deployment is not one Alveo card: it is a farm of M
+//! fabrics fed at sustained megahertz rates, where p999 latency and drop
+//! accounting matter more than single-event speed. This module layers that
+//! deployment story over [`Pipeline`](crate::pipeline::Pipeline)'s
+//! source→build→batch→infer chain:
+//!
+//! ```text
+//! EventSource -> admission control -> routed dispatch
+//!             -> shard 0: [bounded queue -> worker lane -> backend 0]
+//!             -> shard 1: [bounded queue -> worker lane -> backend 1]
+//!             -> ...                                        (M shards)
+//!             -> per-shard + global FarmReport
+//! ```
+//!
+//! Each **shard** owns one [`InferenceBackend`] — fabric, CPU, or a mix —
+//! behind its own bounded queue and worker lane (the *same* lane code a
+//! standalone `Pipeline` runs, so a shard's per-event physics is
+//! bit-identical to a single-pipeline serve of the same events; pinned by
+//! `tests/farm.rs`).
+//!
+//! **Routing** ([`RoutingPolicy`]) picks the shard for each admitted event:
+//! `rr` cycles load-blind, `jsq` joins the shortest in-shard backlog
+//! (queued + batching + in flight), `ewma` minimises predicted wait
+//! `(backlog + 1) × EWMA service time` so slow shards in a mixed farm get
+//! proportionally fewer events.
+//!
+//! **Admission** ([`AdmissionPolicy`]) decides at enqueue time, *before*
+//! the event occupies buffer space — but only when the farm is `paced`
+//! (real-time arrivals). An unpaced farm has no deadline to protect and
+//! applies blocking backpressure instead, so admission is inert there.
+//! `tail-drop` admits everything and loses events only to the shard queue
+//! filling (a tail-queue **reject**); `deadline:<ms>` **sheds** arrivals
+//! whose predicted completion already misses the SLO, keeping queues short
+//! enough that admitted events still meet theirs.
+//!
+//! [`FarmReport`] accounting (every pulled event lands in exactly one
+//! bucket, checked by [`FarmReport::accounting_ok`]):
+//!
+//! - `offered` — events pulled from the source;
+//! - `rejected` — tail-queue rejects (chosen shard's bounded queue full);
+//! - `shed` — admission-policy drops at the door;
+//! - `admitted = offered − rejected − shed` — events enqueued on a shard;
+//! - `events` — served (one [`EventRecord`] each); `failed` — lost to
+//!   inference faults; `admitted = events + failed`.
+//!
+//! Per shard, [`ShardReport`] carries served/failed counts, the batch
+//! histogram, the queue-depth high-water mark, latency percentiles
+//! (p50/p99/p999 of admission→inference-complete wall time), and the raw
+//! records ([`ShardReport::latency_histogram`] bins them).
+//!
+//! [`PacedBackend`] wraps any backend with a modelled per-event device
+//! service time (sleeping out the remainder after real inference), making
+//! shard capacity explicit and machine-independent — that is what the soak
+//! bench (`benches/farm_soak.rs`) sweeps to find each configuration's max
+//! sustainable arrival rate per SLO. With zero service time it is fully
+//! transparent (same name, same device latencies, same outputs).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub mod admission;
+pub mod routing;
+
+pub use admission::AdmissionPolicy;
+pub use routing::RoutingPolicy;
+
+use admission::Admit;
+use routing::Router;
+
+use crate::dataflow::BuildSite;
+use crate::fixedpoint::Arith;
+use crate::graph::{padding::DEFAULT_BUCKETS, Bucket, PaddedGraph};
+use crate::model::ModelOutput;
+use crate::pipeline::lane::{worker_loop, LaneCtx, LaneEvent, LaneStats};
+use crate::pipeline::{EventRecord, EventSource};
+use crate::trigger::backend::InferenceBackend;
+use crate::trigger::rate::RateController;
+use crate::util::stats;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed configuration errors from [`FarmBuilder::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum FarmError {
+    NoShards,
+    MissingSource,
+    NoBuckets,
+    BadDelta(f32),
+    BadBatch(usize),
+    BadQueueCapacity(usize),
+    BadAcceptFraction(f64),
+    /// A `deadline` admission policy with a non-positive or non-finite SLO.
+    BadSlo(f64),
+    /// A shard backend rejected farm-level configuration (e.g. a fabric
+    /// shard whose GC unit refused the ΔR radius).
+    ShardConfig { shard: usize, why: String },
+}
+
+impl fmt::Display for FarmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FarmError::NoShards => write!(f, "farm needs at least one shard backend"),
+            FarmError::MissingSource => write!(f, "farm needs an event source"),
+            FarmError::NoBuckets => write!(f, "need at least one padding size bucket"),
+            FarmError::BadDelta(d) => {
+                write!(f, "graph radius delta must be positive and finite, got {d}")
+            }
+            FarmError::BadBatch(n) => write!(f, "max batch must be >= 1, got {n}"),
+            FarmError::BadQueueCapacity(n) => {
+                write!(f, "shard queue capacity must be >= 1, got {n}")
+            }
+            FarmError::BadAcceptFraction(x) => {
+                write!(f, "accept fraction must be in (0, 1], got {x}")
+            }
+            FarmError::BadSlo(ms) => {
+                write!(f, "deadline SLO must be positive and finite, got {ms}ms")
+            }
+            FarmError::ShardConfig { shard, why } => {
+                write!(f, "shard {shard} rejected farm configuration: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FarmError {}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Builder for [`Farm`]. Add one backend per shard, a source, and policies.
+pub struct FarmBuilder<B: InferenceBackend> {
+    shards: Vec<B>,
+    source: Option<Box<dyn EventSource>>,
+    routing: RoutingPolicy,
+    admission: AdmissionPolicy,
+    delta: f32,
+    buckets: Vec<Bucket>,
+    max_batch: usize,
+    batch_timeout: Duration,
+    shard_queue_capacity: usize,
+    accept_fraction: f64,
+    met_threshold: f64,
+    paced: bool,
+}
+
+impl<B: InferenceBackend + 'static> FarmBuilder<B> {
+    pub fn new() -> Self {
+        FarmBuilder {
+            shards: Vec::new(),
+            source: None,
+            routing: RoutingPolicy::JoinShortestQueue,
+            admission: AdmissionPolicy::TailDrop,
+            delta: 0.8,
+            buckets: DEFAULT_BUCKETS.to_vec(),
+            max_batch: 1,
+            batch_timeout: Duration::from_micros(100),
+            shard_queue_capacity: 256,
+            // paper defaults: 750 kHz accepts out of 40 MHz collisions
+            accept_fraction: 750e3 / 40e6,
+            met_threshold: 40.0,
+            paced: false,
+        }
+    }
+
+    /// Add one shard (an owned backend behind its own queue and lane).
+    pub fn shard(mut self, backend: B) -> Self {
+        self.shards.push(backend);
+        self
+    }
+
+    /// Add several shards at once.
+    pub fn shards(mut self, backends: impl IntoIterator<Item = B>) -> Self {
+        self.shards.extend(backends);
+        self
+    }
+
+    /// The event stream driving the farm.
+    pub fn source<S: EventSource + 'static>(mut self, source: S) -> Self {
+        self.source = Some(Box::new(source));
+        self
+    }
+
+    /// Dispatcher routing policy (default: join-shortest-queue).
+    pub fn routing(mut self, policy: RoutingPolicy) -> Self {
+        self.routing = policy;
+        self
+    }
+
+    /// Admission policy (default: tail-drop). Only active with
+    /// [`paced`](Self::paced); an unpaced farm applies backpressure.
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self
+    }
+
+    /// Dynamic graph construction radius (paper Eq. 1), shared by every
+    /// shard. Fabric-building shards are re-synced to it at `build()`.
+    pub fn graph(mut self, delta: f32) -> Self {
+        self.delta = delta;
+        self
+    }
+
+    /// Artifact padding size buckets.
+    pub fn buckets(mut self, buckets: impl Into<Vec<Bucket>>) -> Self {
+        self.buckets = buckets.into();
+        self
+    }
+
+    /// Per-shard dynamic batching (same semantics as the pipeline's).
+    pub fn batching(mut self, max_batch: usize, timeout: Duration) -> Self {
+        self.max_batch = max_batch;
+        self.batch_timeout = timeout;
+        self
+    }
+
+    /// Bounded queue depth *per shard* (events). The tail-queue reject
+    /// boundary in paced mode; the backpressure boundary otherwise.
+    pub fn shard_queue_capacity(mut self, n: usize) -> Self {
+        self.shard_queue_capacity = n;
+        self
+    }
+
+    /// Target accept fraction for the farm-wide adaptive rate controller.
+    pub fn accept_fraction(mut self, frac: f64) -> Self {
+        self.accept_fraction = frac;
+        self
+    }
+
+    /// Initial MET threshold (GeV) for accept decisions.
+    pub fn met_threshold(mut self, gev: f64) -> Self {
+        self.met_threshold = gev;
+        self
+    }
+
+    /// Honour source arrival times in wall-clock and activate admission
+    /// control. Off by default (as-fast-as-possible with backpressure).
+    pub fn paced(mut self, paced: bool) -> Self {
+        self.paced = paced;
+        self
+    }
+
+    /// Validate and assemble. Returns a typed [`FarmError`] on bad
+    /// configuration — never panics.
+    pub fn build(mut self) -> Result<Farm<B>, FarmError> {
+        if self.shards.is_empty() {
+            return Err(FarmError::NoShards);
+        }
+        let source = self.source.take().ok_or(FarmError::MissingSource)?;
+        if self.buckets.is_empty() {
+            return Err(FarmError::NoBuckets);
+        }
+        if !(self.delta > 0.0 && self.delta.is_finite()) {
+            return Err(FarmError::BadDelta(self.delta));
+        }
+        if self.max_batch == 0 {
+            return Err(FarmError::BadBatch(0));
+        }
+        if self.shard_queue_capacity == 0 {
+            return Err(FarmError::BadQueueCapacity(0));
+        }
+        if !(self.accept_fraction > 0.0 && self.accept_fraction <= 1.0) {
+            return Err(FarmError::BadAcceptFraction(self.accept_fraction));
+        }
+        if let AdmissionPolicy::Deadline { slo_ms } = self.admission {
+            if !(slo_ms > 0.0 && slo_ms.is_finite()) {
+                return Err(FarmError::BadSlo(slo_ms));
+            }
+        }
+        // Keep fabric shards' GC radius honest: every fabric-building shard
+        // is re-synced to the farm's ΔR, mirroring the pipeline builder.
+        for (i, b) in self.shards.iter_mut().enumerate() {
+            if b.build_site() == BuildSite::Fabric {
+                b.set_build_site(BuildSite::Fabric, self.delta)
+                    .map_err(|e| FarmError::ShardConfig { shard: i, why: format!("{e:#}") })?;
+            }
+        }
+        Ok(Farm {
+            shards: self.shards,
+            source,
+            routing: self.routing,
+            admission: self.admission,
+            delta: self.delta,
+            buckets: self.buckets,
+            max_batch: self.max_batch,
+            batch_timeout: self.batch_timeout,
+            shard_queue_capacity: self.shard_queue_capacity,
+            accept_fraction: self.accept_fraction,
+            met_threshold: self.met_threshold,
+            paced: self.paced,
+        })
+    }
+}
+
+impl<B: InferenceBackend + 'static> Default for FarmBuilder<B> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Farm
+// ---------------------------------------------------------------------------
+
+/// A fully-configured serving farm. Build with [`Farm::builder`], then
+/// [`serve`](Farm::serve) to completion.
+pub struct Farm<B: InferenceBackend> {
+    shards: Vec<B>,
+    source: Box<dyn EventSource>,
+    routing: RoutingPolicy,
+    admission: AdmissionPolicy,
+    delta: f32,
+    buckets: Vec<Bucket>,
+    max_batch: usize,
+    batch_timeout: Duration,
+    shard_queue_capacity: usize,
+    accept_fraction: f64,
+    met_threshold: f64,
+    paced: bool,
+}
+
+impl<B: InferenceBackend + 'static> Farm<B> {
+    pub fn builder() -> FarmBuilder<B> {
+        FarmBuilder::new()
+    }
+
+    /// Run the farm to source exhaustion: spawns one lane thread per shard,
+    /// dispatches on the calling thread, and aggregates a [`FarmReport`].
+    pub fn serve(mut self) -> FarmReport {
+        let t0 = Instant::now();
+        let m = self.shards.len();
+        let source_name = self.source.name().to_string();
+        let rate = Arc::new(Mutex::new(RateController::new(
+            self.accept_fraction,
+            self.met_threshold,
+        )));
+        let (records_tx, records_rx) = mpsc::channel::<(usize, EventRecord)>();
+        let (stats_tx, stats_rx) = mpsc::channel::<(usize, LaneStats)>();
+
+        let mut names = Vec::with_capacity(m);
+        let mut lanes = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        let mut failed = Vec::with_capacity(m);
+        let mut depth = Vec::with_capacity(m);
+        let mut ewma = Vec::with_capacity(m);
+        for (i, backend) in self.shards.drain(..).enumerate() {
+            names.push(backend.name().to_string());
+            let backend = Arc::new(backend);
+            let shard_failed = Arc::new(AtomicU64::new(0));
+            let shard_depth = Arc::new(AtomicUsize::new(0));
+            let shard_ewma = Arc::new(AtomicU64::new(0f64.to_bits()));
+            failed.push(Arc::clone(&shard_failed));
+            depth.push(Arc::clone(&shard_depth));
+            ewma.push(Arc::clone(&shard_ewma));
+            let (lane_tx, lane_rx) = mpsc::sync_channel::<LaneEvent>(self.shard_queue_capacity);
+            lanes.push(lane_tx);
+            let ctx = LaneCtx {
+                lane_id: i,
+                backend,
+                buckets: self.buckets.clone(),
+                delta: self.delta,
+                max_batch: self.max_batch,
+                batch_timeout: self.batch_timeout,
+                rate: Arc::clone(&rate),
+                failed: shard_failed,
+                queue_depth: Some(shard_depth),
+                service_ewma_bits: Some(shard_ewma),
+                records_tx: records_tx.clone(),
+                stats_tx: stats_tx.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dgnnflow-shard-{i}"))
+                    .spawn(move || worker_loop(lane_rx, ctx))
+                    .expect("spawn farm shard lane"),
+            );
+        }
+        drop(records_tx);
+        drop(stats_tx);
+
+        // Dispatcher: admission + routing on the calling thread. Depth and
+        // EWMA gauges are read fresh per event; the depth is incremented
+        // *before* the send (undone on reject) so concurrent reads never
+        // under-count an in-flight enqueue, and decremented by the lane
+        // once inference completes — the gauge is the full in-shard
+        // backlog, not just the channel occupancy.
+        let mut router = Router::new(self.routing, m);
+        let start = Instant::now();
+        let mut offered = 0u64;
+        let mut rejected = 0u64;
+        let mut shed = 0u64;
+        let mut queue_hwm = vec![0usize; m];
+        while let Some(te) = self.source.next_event() {
+            offered += 1;
+            if self.paced {
+                let due = start + Duration::from_secs_f64(te.arrival_s.max(0.0));
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+            }
+            let depths: Vec<usize> = depth.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+            let ewmas: Vec<f64> =
+                ewma.iter().map(|e| f64::from_bits(e.load(Ordering::Relaxed))).collect();
+            let shard = router.choose(&depths, &ewmas);
+            if self.paced {
+                if self.admission.decide(depths[shard], ewmas[shard]) == Admit::Shed {
+                    shed += 1;
+                    continue;
+                }
+                let backlog = depth[shard].fetch_add(1, Ordering::Relaxed) + 1;
+                let le = LaneEvent { te, enqueued_at: Instant::now() };
+                match lanes[shard].try_send(le) {
+                    Ok(()) => queue_hwm[shard] = queue_hwm[shard].max(backlog),
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        // tail-queue reject: the bounded shard queue is full
+                        depth[shard].fetch_sub(1, Ordering::Relaxed);
+                        rejected += 1;
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        depth[shard].fetch_sub(1, Ordering::Relaxed);
+                        rejected += 1;
+                        break; // lane thread died
+                    }
+                }
+            } else {
+                let backlog = depth[shard].fetch_add(1, Ordering::Relaxed) + 1;
+                queue_hwm[shard] = queue_hwm[shard].max(backlog);
+                if lanes[shard].send(LaneEvent { te, enqueued_at: Instant::now() }).is_err() {
+                    rejected += 1;
+                    break; // lane thread died
+                }
+            }
+        }
+        // Disconnect the lanes: each worker drains its pending batches,
+        // reports stats, and exits.
+        drop(lanes);
+
+        let mut shard_records: Vec<Vec<EventRecord>> = vec![Vec::new(); m];
+        for (i, r) in records_rx {
+            shard_records[i].push(r);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut shard_hists: Vec<Vec<u64>> = vec![vec![0u64; self.max_batch]; m];
+        while let Ok((i, st)) = stats_rx.try_recv() {
+            for (j, c) in st.batch_hist.iter().enumerate() {
+                shard_hists[i][j] += c;
+            }
+        }
+
+        let admitted = offered - rejected - shed;
+        let ms = |r: &EventRecord| r.latency_s * 1e3;
+        let all_latency: Vec<f64> = shard_records.iter().flatten().map(ms).collect();
+        let events: usize = shard_records.iter().map(|v| v.len()).sum();
+        let failed_total: u64 = failed.iter().map(|f| f.load(Ordering::Relaxed)).sum();
+
+        let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { stats::percentile(xs, p) };
+        let shards = shard_records
+            .into_iter()
+            .enumerate()
+            .map(|(i, records)| {
+                let lat: Vec<f64> = records.iter().map(ms).collect();
+                let infer: Vec<f64> = records.iter().map(|r| r.infer_s * 1e3).collect();
+                let device: Vec<f64> =
+                    records.iter().filter_map(|r| r.device_s.map(|d| d * 1e3)).collect();
+                ShardReport {
+                    shard: i,
+                    backend: names[i].clone(),
+                    events: records.len(),
+                    failed: failed[i].load(Ordering::Relaxed),
+                    batches: shard_hists[i].iter().sum(),
+                    batch_hist: std::mem::take(&mut shard_hists[i]),
+                    queue_hwm: queue_hwm[i],
+                    latency_median_ms: pct(&lat, 50.0),
+                    latency_p99_ms: pct(&lat, 99.0),
+                    latency_p999_ms: pct(&lat, 99.9),
+                    infer_median_ms: pct(&infer, 50.0),
+                    device_median_ms: if device.is_empty() {
+                        None
+                    } else {
+                        Some(pct(&device, 50.0))
+                    },
+                    records,
+                }
+            })
+            .collect();
+
+        FarmReport {
+            shards,
+            routing: self.routing,
+            admission: self.admission,
+            source: source_name,
+            paced: self.paced,
+            wall_s,
+            offered,
+            admitted,
+            rejected,
+            shed,
+            events,
+            failed: failed_total,
+            throughput_hz: events as f64 / wall_s.max(1e-12),
+            latency_median_ms: pct(&all_latency, 50.0),
+            latency_p99_ms: pct(&all_latency, 99.0),
+            latency_p999_ms: pct(&all_latency, 99.9),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------------
+
+/// Per-shard slice of a farm run.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub backend: String,
+    /// Events this shard served (one record each).
+    pub events: usize,
+    /// Events this shard lost to inference failures.
+    pub failed: u64,
+    /// Batches this shard's lane flushed into its backend.
+    pub batches: u64,
+    /// `batch_hist[i]` = number of batches of size `i + 1`.
+    pub batch_hist: Vec<u64>,
+    /// High-water mark of the in-shard backlog (queued + batching +
+    /// inferring), observed at enqueue time.
+    pub queue_hwm: usize,
+    /// End-to-end latency (admission -> inference complete) percentiles.
+    pub latency_median_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_p999_ms: f64,
+    pub infer_median_ms: f64,
+    pub device_median_ms: Option<f64>,
+    pub records: Vec<EventRecord>,
+}
+
+impl ShardReport {
+    /// Bin this shard's end-to-end latencies into a fixed-width histogram
+    /// over `[lo_ms, hi_ms)` (out-of-range samples clamp to edge bins).
+    pub fn latency_histogram(&self, lo_ms: f64, hi_ms: f64, bins: usize) -> stats::Histogram {
+        let mut h = stats::Histogram::new(lo_ms, hi_ms, bins);
+        for r in &self.records {
+            h.push(r.latency_s * 1e3);
+        }
+        h
+    }
+
+    /// One-line per-shard rendering (used by `FarmReport::shard_lines`).
+    pub fn line(&self) -> String {
+        let dev = match self.device_median_ms {
+            Some(d) => format!(" device(p50={d:.3}ms)"),
+            None => String::new(),
+        };
+        format!(
+            "  shard[{}:{}] events={} failed={} batches={} queue_hwm={} \
+             latency(p50={:.3}ms p99={:.3}ms p999={:.3}ms) infer(p50={:.3}ms){}",
+            self.shard,
+            self.backend,
+            self.events,
+            self.failed,
+            self.batches,
+            self.queue_hwm,
+            self.latency_median_ms,
+            self.latency_p99_ms,
+            self.latency_p999_ms,
+            self.infer_median_ms,
+            dev,
+        )
+    }
+}
+
+/// Aggregated farm-run report. See the module docs for the accounting
+/// identities relating `offered`/`admitted`/`rejected`/`shed`/`events`/
+/// `failed`.
+#[derive(Clone, Debug)]
+pub struct FarmReport {
+    pub shards: Vec<ShardReport>,
+    pub routing: RoutingPolicy,
+    pub admission: AdmissionPolicy,
+    pub source: String,
+    pub paced: bool,
+    pub wall_s: f64,
+    /// Events pulled from the source.
+    pub offered: u64,
+    /// Events enqueued on a shard (`offered - rejected - shed`).
+    pub admitted: u64,
+    /// Tail-queue rejects: the routed shard's bounded queue was full.
+    pub rejected: u64,
+    /// Admission-policy drops at the door (deadline-aware shedding).
+    pub shed: u64,
+    /// Events served across all shards.
+    pub events: usize,
+    /// Events lost to inference failures across all shards.
+    pub failed: u64,
+    pub throughput_hz: f64,
+    /// Global end-to-end latency percentiles (all shards pooled).
+    pub latency_median_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_p999_ms: f64,
+}
+
+impl FarmReport {
+    /// Both accounting identities hold: every offered event landed in
+    /// exactly one of {rejected, shed, served, failed}.
+    pub fn accounting_ok(&self) -> bool {
+        self.offered == self.admitted + self.rejected + self.shed
+            && self.admitted == self.events as u64 + self.failed
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "[farm shards={} routing={} admission={} paced={}<-{}] events={} \
+             offered={} admitted={} rejected={} shed={} failed={} \
+             wall={:.2}s throughput={:.0}ev/s \
+             latency(p50={:.3}ms p99={:.3}ms p999={:.3}ms) accounting={}",
+            self.shards.len(),
+            self.routing,
+            self.admission,
+            self.paced,
+            self.source,
+            self.events,
+            self.offered,
+            self.admitted,
+            self.rejected,
+            self.shed,
+            self.failed,
+            self.wall_s,
+            self.throughput_hz,
+            self.latency_median_ms,
+            self.latency_p99_ms,
+            self.latency_p999_ms,
+            if self.accounting_ok() { "ok" } else { "BROKEN" },
+        )
+    }
+
+    /// Per-shard detail lines, one per shard.
+    pub fn shard_lines(&self) -> String {
+        self.shards.iter().map(|s| s.line()).collect::<Vec<_>>().join("\n")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PacedBackend
+// ---------------------------------------------------------------------------
+
+/// Wraps a backend with a modelled per-event device service time: after
+/// real inference completes, the remainder of `len × service` is slept
+/// out, so a batch occupies the shard for (at least) its modelled device
+/// time. Outputs are never altered — bit-identity with the inner backend
+/// holds by construction.
+///
+/// This makes shard capacity explicit (1/service events/sec) and
+/// machine-independent, which is what lets the soak bench measure routing
+/// and admission policies rather than the host CPU. With
+/// `service == 0` the wrapper is fully transparent: same name, inner
+/// device latencies, no added sleep.
+pub struct PacedBackend<B: InferenceBackend> {
+    inner: B,
+    service: Duration,
+    name: String,
+}
+
+impl<B: InferenceBackend> PacedBackend<B> {
+    pub fn new(inner: B, service: Duration) -> Self {
+        let name = if service.is_zero() {
+            inner.name().to_string()
+        } else {
+            format!("paced({}@{}us)", inner.name(), service.as_micros())
+        };
+        PacedBackend { inner, service, name }
+    }
+
+    /// Modelled per-event service time.
+    pub fn service(&self) -> Duration {
+        self.service
+    }
+}
+
+impl<B: InferenceBackend> InferenceBackend for PacedBackend<B> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn precision(&self) -> Arith {
+        self.inner.precision()
+    }
+
+    fn set_precision(&mut self, arith: Arith) -> anyhow::Result<()> {
+        self.inner.set_precision(arith)
+    }
+
+    fn build_site(&self) -> BuildSite {
+        self.inner.build_site()
+    }
+
+    fn set_build_site(&mut self, site: BuildSite, delta: f32) -> anyhow::Result<()> {
+        self.inner.set_build_site(site, delta)
+    }
+
+    fn build_delta(&self) -> Option<f32> {
+        self.inner.build_delta()
+    }
+
+    fn gc_mode(&self) -> Option<String> {
+        self.inner.gc_mode()
+    }
+
+    fn infer_batch(&self, graphs: &[PaddedGraph]) -> anyhow::Result<Vec<ModelOutput>> {
+        let t0 = Instant::now();
+        let out = self.inner.infer_batch(graphs)?;
+        if !self.service.is_zero() {
+            // the device is sequentially occupied: a batch takes len × service
+            let budget = self.service * graphs.len() as u32;
+            if let Some(rest) = budget.checked_sub(t0.elapsed()) {
+                std::thread::sleep(rest);
+            }
+        }
+        Ok(out)
+    }
+
+    fn device_batch_latency_s(&self, graphs: &[PaddedGraph]) -> Option<Vec<f64>> {
+        if self.service.is_zero() {
+            return self.inner.device_batch_latency_s(graphs);
+        }
+        let s = self.service.as_secs_f64();
+        Some((1..=graphs.len()).map(|i| i as f64 * s).collect())
+    }
+
+    fn infer_batch_timed(
+        &self,
+        graphs: &[PaddedGraph],
+    ) -> anyhow::Result<(Vec<ModelOutput>, Option<Vec<f64>>)> {
+        if self.service.is_zero() {
+            return self.inner.infer_batch_timed(graphs);
+        }
+        let out = self.infer_batch(graphs)?;
+        Ok((out, self.device_batch_latency_s(graphs)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{L1DeepMetV2, Weights};
+    use crate::physics::GeneratorConfig;
+    use crate::pipeline::SyntheticSource;
+    use crate::trigger::Backend;
+
+    fn cpu_backend(seed: u64) -> Backend {
+        let cfg = ModelConfig::default();
+        Backend::RustCpu(L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, seed)).unwrap())
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs_with_typed_errors() {
+        let err = Farm::<Backend>::builder()
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .build()
+            .unwrap_err();
+        assert_eq!(err, FarmError::NoShards);
+
+        let err = Farm::builder().shard(cpu_backend(1)).build().unwrap_err();
+        assert_eq!(err, FarmError::MissingSource);
+
+        let err = Farm::builder()
+            .shard(cpu_backend(1))
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .graph(-0.5)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, FarmError::BadDelta(-0.5));
+
+        let err = Farm::builder()
+            .shard(cpu_backend(1))
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .admission(AdmissionPolicy::Deadline { slo_ms: f64::NAN })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, FarmError::BadSlo(_)), "got {err:?}");
+
+        let err = Farm::builder()
+            .shard(cpu_backend(1))
+            .source(SyntheticSource::new(1, 1, GeneratorConfig::default()))
+            .shard_queue_capacity(0)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, FarmError::BadQueueCapacity(0));
+
+        // the error is a normal std error too
+        let e: Box<dyn std::error::Error> = Box::new(FarmError::NoShards);
+        assert!(e.to_string().contains("shard"));
+    }
+
+    #[test]
+    fn farm_serves_everything_unpaced_with_consistent_accounting() {
+        let n = 24;
+        let report = Farm::builder()
+            .shards((0..2).map(|_| cpu_backend(7)))
+            .source(SyntheticSource::new(n, 3, GeneratorConfig::default()))
+            .batching(2, Duration::from_millis(2))
+            .build()
+            .unwrap()
+            .serve();
+        assert_eq!(report.shards.len(), 2);
+        assert_eq!(report.events, n);
+        assert_eq!(report.offered, n as u64);
+        assert_eq!((report.rejected, report.shed, report.failed), (0, 0, 0));
+        assert!(report.accounting_ok(), "{}", report.summary());
+        assert!(report.summary().contains("accounting=ok"));
+        // every shard line renders, every event served exactly once
+        assert_eq!(report.shard_lines().lines().count(), 2);
+        let mut ids: Vec<u64> = report
+            .shards
+            .iter()
+            .flat_map(|s| s.records.iter().map(|r| r.event_id))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        // per-shard batch histograms account for every served event
+        for s in &report.shards {
+            let hist_events: u64 =
+                s.batch_hist.iter().enumerate().map(|(i, c)| (i as u64 + 1) * c).sum();
+            assert_eq!(hist_events, s.events as u64 + s.failed);
+        }
+    }
+
+    #[test]
+    fn paced_backend_zero_service_is_transparent() {
+        let inner = cpu_backend(9);
+        let inner_name = inner.name().to_string();
+        let wrapped = PacedBackend::new(cpu_backend(9), Duration::ZERO);
+        assert_eq!(wrapped.name(), inner_name);
+        let gs: Vec<PaddedGraph> = {
+            use crate::graph::{build_edges, pad_graph};
+            let mut gen = crate::physics::EventGenerator::with_seed(4);
+            (0..3)
+                .map(|_| {
+                    let ev = gen.generate();
+                    pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+                })
+                .collect()
+        };
+        let (a, da) = inner.infer_batch_timed(&gs).unwrap();
+        let (b, db) = wrapped.infer_batch_timed(&gs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.met_xy, y.met_xy);
+        }
+        assert_eq!(da, db, "zero-service wrapper must pass device latencies through");
+    }
+
+    #[test]
+    fn paced_backend_models_sequential_occupancy() {
+        let b = PacedBackend::new(cpu_backend(10), Duration::from_millis(2));
+        assert!(b.name().starts_with("paced("));
+        let gs: Vec<PaddedGraph> = {
+            use crate::graph::{build_edges, pad_graph};
+            let mut gen = crate::physics::EventGenerator::with_seed(5);
+            (0..3)
+                .map(|_| {
+                    let ev = gen.generate();
+                    pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+                })
+                .collect()
+        };
+        let t0 = Instant::now();
+        let (out, dev) = b.infer_batch_timed(&gs).unwrap();
+        let took = t0.elapsed();
+        assert_eq!(out.len(), 3);
+        assert!(took >= Duration::from_millis(6), "3 events x 2ms, took {took:?}");
+        // modelled completion times are the sequential-occupancy ramp
+        let dev = dev.unwrap();
+        assert_eq!(dev.len(), 3);
+        assert!((dev[0] - 2e-3).abs() < 1e-12);
+        assert!((dev[2] - 6e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Dispatcher routing policies: which shard gets the next admitted event.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// How the farm dispatcher picks a shard for each admitted event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through the shards in order, load-blind. The baseline: optimal
+    /// for identical shards under smooth arrivals, poor under bursts or
+    /// heterogeneous hardware.
+    RoundRobin,
+    /// Join-shortest-queue: send to the shard with the smallest in-shard
+    /// backlog (queued + batching + in flight). Ties rotate.
+    JoinShortestQueue,
+    /// Latency-aware: minimise the *predicted wait* `(backlog + 1) × EWMA
+    /// per-event service time`, so a slow shard (e.g. a CPU shard in a
+    /// mixed farm) gets proportionally fewer events than a fast fabric.
+    /// Shards with no measurement yet cost 0, so cold shards are probed
+    /// first.
+    LatencyEwma,
+}
+
+impl RoutingPolicy {
+    /// Every policy, in sweep order (benches iterate this).
+    pub const ALL: [RoutingPolicy; 3] =
+        [RoutingPolicy::RoundRobin, RoutingPolicy::JoinShortestQueue, RoutingPolicy::LatencyEwma];
+}
+
+impl fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::JoinShortestQueue => "jsq",
+            RoutingPolicy::LatencyEwma => "ewma",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl FromStr for RoutingPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutingPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Ok(RoutingPolicy::JoinShortestQueue),
+            "ewma" | "latency-ewma" => Ok(RoutingPolicy::LatencyEwma),
+            _ => Err(format!("unknown routing policy '{s}' (want rr | jsq | ewma)")),
+        }
+    }
+}
+
+/// The dispatcher-side chooser. Stateful only for rotation (`next`), so the
+/// same policy over the same observed loads is deterministic.
+pub(crate) struct Router {
+    policy: RoutingPolicy,
+    next: usize,
+    n: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy, n: usize) -> Self {
+        assert!(n > 0, "router needs at least one shard");
+        Router { policy, next: 0, n }
+    }
+
+    /// Pick a shard given each shard's current backlog and per-event
+    /// service-time EWMA (seconds; 0.0 = not measured yet).
+    pub fn choose(&mut self, depths: &[usize], ewma_service_s: &[f64]) -> usize {
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let pick = self.next % self.n;
+                self.next = (pick + 1) % self.n;
+                pick
+            }
+            RoutingPolicy::JoinShortestQueue => self.pick_min(|i| depths[i] as f64),
+            RoutingPolicy::LatencyEwma => {
+                self.pick_min(|i| (depths[i] as f64 + 1.0) * ewma_service_s[i])
+            }
+        }
+    }
+
+    /// Argmin over shards, scanning from `next` so exact ties rotate
+    /// instead of pinning shard 0.
+    fn pick_min<F: Fn(usize) -> f64>(&mut self, cost: F) -> usize {
+        let start = self.next % self.n;
+        let mut best = start;
+        let mut best_cost = cost(start);
+        for k in 1..self.n {
+            let i = (start + k) % self.n;
+            let c = cost(i);
+            if c < best_cost {
+                best = i;
+                best_cost = c;
+            }
+        }
+        self.next = (best + 1) % self.n;
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..7).map(|_| r.choose(&[9, 9, 9], &[0.0; 3])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn jsq_picks_smallest_backlog_and_rotates_ties() {
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue, 3);
+        assert_eq!(r.choose(&[5, 1, 3], &[0.0; 3]), 1);
+        assert_eq!(r.choose(&[0, 4, 0], &[0.0; 3]), 2, "tie scan starts after last pick");
+        // all-equal ties rotate across calls instead of pinning one shard
+        let picks: Vec<usize> = (0..3).map(|_| r.choose(&[2, 2, 2], &[0.0; 3])).collect();
+        assert_eq!(picks.iter().collect::<std::collections::HashSet<_>>().len(), 3);
+    }
+
+    #[test]
+    fn ewma_weighs_backlog_by_service_time() {
+        let mut r = Router::new(RoutingPolicy::LatencyEwma, 2);
+        // shard 0: empty but 10x slower; shard 1: 3 deep but fast
+        // predicted waits: 1 * 10ms = 10ms vs 4 * 1ms = 4ms
+        assert_eq!(r.choose(&[0, 3], &[10e-3, 1e-3]), 1);
+        // an unmeasured shard costs 0 and is probed first
+        assert_eq!(r.choose(&[0, 0], &[10e-3, 0.0]), 1);
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in RoutingPolicy::ALL {
+            assert_eq!(p.to_string().parse::<RoutingPolicy>().unwrap(), p);
+        }
+        assert_eq!("round-robin".parse::<RoutingPolicy>().unwrap(), RoutingPolicy::RoundRobin);
+        assert!("fifo".parse::<RoutingPolicy>().is_err());
+    }
+}

@@ -33,6 +33,14 @@
 //! Layer map (see DESIGN.md):
 //! - [`pipeline`] — the public serving API: `Pipeline` builder, event
 //!   sources, streaming `EventRecord` results, `ServeReport` aggregation.
+//! - [`farm`] — the deployment story above the pipeline: a sharded
+//!   multi-fabric serving farm (`Farm` = M shards, each an owned backend
+//!   behind a bounded queue and worker lane) with pluggable routing
+//!   ([`farm::RoutingPolicy`]: rr | jsq | ewma), SLO-based admission
+//!   control ([`farm::AdmissionPolicy`]: tail-drop | deadline:<ms>),
+//!   per-shard + global `FarmReport` accounting, and
+//!   [`farm::PacedBackend`] for machine-independent capacity modelling
+//!   (CLI `dgnnflow farm`, soak bench `benches/farm_soak.rs`).
 //! - [`dataflow`] — the paper's contribution: a cycle-approximate simulator
 //!   of the DGNNFlow fabric (Enhanced MP units, Node Embedding Broadcast,
 //!   double-buffered NE banks) plus resource and power models, and the
@@ -76,7 +84,8 @@
 //! `../rust/ci.sh` is the whole gate, run by GitHub Actions
 //! (`.github/workflows/ci.yml`) and locally: `--quick` for the smoke tier
 //! (fmt, clippy `-D warnings`, golden suite, GC schedule/co-sim pins, a
-//! fabric serve smoke), `--bench-check` for the bench-regression gate
+//! fabric serve smoke, a 2-shard farm smoke), `--bench-check` for the
+//! bench-regression gate
 //! (pinned-seed benches exact-compared against `baselines/*.json`; see
 //! `baselines/README.md` for the `DGNNFLOW_BENCH_REBASE=1` flow), and no
 //! argument for everything including a release build and the full test
@@ -86,6 +95,7 @@
 pub mod config;
 pub mod dataflow;
 pub mod devices;
+pub mod farm;
 pub mod fixedpoint;
 pub mod graph;
 pub mod model;

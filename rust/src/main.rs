@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   info        artifact + config inventory
 //!   serve       run the trigger pipeline over synthetic events
+//!   farm        run a sharded multi-backend serving farm
 //!   simulate    run one event through the simulated DGNNFlow fabric
 //!   resources   print the Table I resource estimate
 //!   power       print the Table II power estimate
@@ -13,6 +14,7 @@ use std::time::Duration;
 
 use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
 use dgnnflow::dataflow::{BuildSite, DataflowEngine, GcSchedule, PowerModel, ResourceModel};
+use dgnnflow::farm::{AdmissionPolicy, Farm, PacedBackend, RoutingPolicy};
 use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
@@ -35,6 +37,7 @@ fn main() {
     let result = match args.command.as_deref() {
         Some("info") => cmd_info(),
         Some("serve") => cmd_serve(&args),
+        Some("farm") => cmd_farm(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("resources") => cmd_resources(&args),
         Some("power") => cmd_power(&args),
@@ -62,6 +65,7 @@ fn print_help() {
          Commands:\n\
          \u{20}  info                     artifact + config inventory\n\
          \u{20}  serve [--backend B]      trigger pipeline over synthetic events\n\
+         \u{20}  farm [--shards M]        sharded serving farm with routed dispatch\n\
          \u{20}  simulate [--seed N]      one event through the simulated fabric\n\
          \u{20}  resources                Table I resource estimate\n\
          \u{20}  power                    Table II power estimate\n\
@@ -278,6 +282,99 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_farm(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            Help::new("farm", "run a sharded multi-backend serving farm")
+                .arg("--shards M", "number of shards (default 2)")
+                .arg("--events N", "number of events (default 200)")
+                .arg("--backend B", "per-shard backend: rust-cpu | fpga (default rust-cpu)")
+                .arg("--routing P", "rr | jsq | ewma (default jsq)")
+                .arg("--admission P", "tail-drop | deadline:<ms> (default tail-drop)")
+                .arg("--source S", "synthetic | burst (default synthetic)")
+                .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 2000)")
+                .arg("--burst-factor X", "burst source rate multiplier (default 8)")
+                .arg("--paced", "honour arrival times; activates admission control")
+                .arg("--service-us N", "modelled per-event device service time (default 0)")
+                .arg("--queue N", "bounded queue depth per shard (default 256)")
+                .arg("--batch N", "dynamic batcher max batch (default from config)")
+                .arg("--batch-timeout-us N", "batcher flush timeout (default from config)")
+                .arg("--delta X", "ΔR graph radius (paper Eq. 1; default from config)")
+                .arg("--seed N", "event stream seed (default 1)")
+                .arg("--pileup X", "mean pileup (default from config)")
+                .arg("--config FILE", "JSON config file")
+                .render()
+        );
+        return Ok(());
+    }
+    let cfg = load_config(args)?;
+    let tcfg: TriggerConfig = cfg.trigger.clone();
+    let shards = args.usize_or("shards", 2).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(shards > 0, "--shards must be >= 1, got {shards}");
+    let events = args.usize_or("events", 200).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let pileup = args.f64_or("pileup", tcfg.mean_pileup).map_err(anyhow::Error::msg)?;
+    let max_batch = args.usize_or("batch", tcfg.max_batch).map_err(anyhow::Error::msg)?;
+    let batch_timeout_us = args
+        .u64_or("batch-timeout-us", tcfg.batch_timeout_us)
+        .map_err(anyhow::Error::msg)?;
+    let delta = args.f64_or("delta", tcfg.delta_r).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        delta > 0.0 && delta.is_finite(),
+        "--delta must be positive and finite, got {delta}"
+    );
+    let queue = args.usize_or("queue", 256).map_err(anyhow::Error::msg)?;
+    let service_us = args.u64_or("service-us", 0).map_err(anyhow::Error::msg)?;
+    let routing: RoutingPolicy =
+        args.str_or("routing", "jsq").parse().map_err(anyhow::Error::msg)?;
+    let admission = AdmissionPolicy::parse(args.str_or("admission", "tail-drop"))
+        .map_err(anyhow::Error::msg)?;
+
+    let gen_cfg = GeneratorConfig { mean_pileup: pileup, ..Default::default() };
+    let rate_hz = args.f64_or("rate", 2000.0).map_err(anyhow::Error::msg)?;
+    let source: Box<dyn EventSource> = match args.str_or("source", "synthetic") {
+        "synthetic" => Box::new(SyntheticSource::new(events, seed, gen_cfg).with_rate(rate_hz)),
+        "burst" => Box::new(
+            BurstSource::new(events, seed, gen_cfg, rate_hz)
+                .with_burst_factor(args.f64_or("burst-factor", 8.0).map_err(anyhow::Error::msg)?),
+        ),
+        other => anyhow::bail!("unknown source '{other}' (synthetic | burst)"),
+    };
+
+    // Every shard owns its own backend instance (same weights, independent
+    // device). PacedBackend is transparent at --service-us 0.
+    let backend_kind = args.str_or("backend", "rust-cpu");
+    let service = Duration::from_micros(service_us);
+    let mut backends = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let b = match backend_kind {
+            "rust-cpu" => Backend::RustCpu(load_model()?),
+            "fpga" => Backend::Fpga(DataflowEngine::new(cfg.arch.clone(), load_model()?)?),
+            other => anyhow::bail!("unknown backend '{other}' (rust-cpu | fpga)"),
+        };
+        backends.push(PacedBackend::new(b, service));
+    }
+
+    let report = Farm::builder()
+        .shards(backends)
+        .source(source)
+        .routing(routing)
+        .admission(admission)
+        .graph(delta as f32)
+        .buckets(DEFAULT_BUCKETS.to_vec())
+        .batching(max_batch, Duration::from_micros(batch_timeout_us))
+        .shard_queue_capacity(queue)
+        .accept_fraction(tcfg.target_accept_hz / tcfg.input_rate_hz)
+        .met_threshold(tcfg.met_threshold)
+        .paced(args.flag("paced"))
+        .build()?
+        .serve();
+    println!("{}", report.summary());
+    println!("{}", report.shard_lines());
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
@@ -389,6 +486,7 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
     let pairs = [
         ("BENCH_parallelism.json", "baselines/BENCH_parallelism.json"),
         ("BENCH_graphbuild.json", "baselines/BENCH_graphbuild.json"),
+        ("BENCH_farm.json", "baselines/BENCH_farm.json"),
     ];
     let mut failures = 0usize;
     for (emitted, baseline) in pairs {

@@ -1,0 +1,257 @@
+//! The worker lane shared by [`Pipeline`](super::Pipeline) and
+//! [`Farm`](crate::farm::Farm): one bounded queue feeding one thread that
+//! builds graphs, batches them dynamically, and flushes whole batches into
+//! an [`InferenceBackend`].
+//!
+//! Extracting the lane from `Pipeline` is what lets a farm shard reuse the
+//! exact source→build→batch→infer chain: the lane never sees who feeds it
+//! (the pipeline's round-robin feeder or the farm's routed dispatcher), so
+//! a shard's per-event physics is bit-identical to a standalone pipeline
+//! serve of the same events.
+//!
+//! Lane-side accounting contracts:
+//!
+//! - every event received on the lane queue passes through [`run_batch`]
+//!   exactly once (flush, timeout-flush, and end-of-stream drain paths all
+//!   funnel there), so `records emitted + failed` equals events received;
+//! - `failed` counts only inference failures (backend errors and
+//!   wrong-arity output batches) — feeder overflow is counted by whoever
+//!   feeds the lane, keeping drop reasons distinguishable;
+//! - the optional `queue_depth` gauge is decremented *here*, after a batch
+//!   completes (or fails), so a dispatcher reading it sees the full
+//!   in-shard backlog: queued + batching + in flight on the device.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::source::TimedEvent;
+use super::EventRecord;
+use crate::graph::{pad_graph, Bucket, GraphBuilder, PaddedGraph};
+use crate::trigger::backend::InferenceBackend;
+use crate::trigger::batcher::{DynamicBatcher, Pending};
+use crate::trigger::rate::RateController;
+
+/// Smoothing factor for the per-lane service-time EWMA (per-event seconds).
+/// 0.25 reacts within ~4 batches while damping single-batch noise — fast
+/// enough for the farm's latency-aware router to track a slow shard.
+const SERVICE_EWMA_ALPHA: f64 = 0.25;
+
+/// One event as handed to a lane, stamped with its lane-enqueue time so the
+/// end-to-end latency (`EventRecord::latency_s`) starts at admission.
+pub(crate) struct LaneEvent {
+    pub te: TimedEvent,
+    pub enqueued_at: Instant,
+}
+
+/// What one batch flush carries per event before inference.
+struct Prepared {
+    event_id: u64,
+    arrival_s: f64,
+    n: usize,
+    e: usize,
+    build_s: f64,
+    truncated: bool,
+    enqueued_at: Instant,
+    padded: PaddedGraph,
+}
+
+/// Per-event metadata split off the padded graph at flush time.
+struct Meta {
+    event_id: u64,
+    arrival_s: f64,
+    n: usize,
+    e: usize,
+    build_s: f64,
+    truncated: bool,
+    queue_s: f64,
+    enqueued_at: Instant,
+}
+
+/// End-of-run stats a lane reports back (tagged with its lane id).
+pub(crate) struct LaneStats {
+    pub batch_hist: Vec<u64>,
+}
+
+/// Everything a lane thread needs. `lane_id` tags every record and stats
+/// message so a multi-shard collector can attribute them.
+pub(crate) struct LaneCtx<B: InferenceBackend> {
+    pub lane_id: usize,
+    pub backend: Arc<B>,
+    pub buckets: Vec<Bucket>,
+    pub delta: f32,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub rate: Arc<Mutex<RateController>>,
+    /// Inference failures (batch errors, wrong-arity outputs), in events.
+    pub failed: Arc<AtomicU64>,
+    /// Optional in-shard backlog gauge (queued + batching + inferring).
+    /// The *feeder* increments before enqueue; the lane decrements here
+    /// once a batch completes or fails.
+    pub queue_depth: Option<Arc<AtomicUsize>>,
+    /// Optional per-event service-time EWMA (seconds), stored as f64 bits.
+    /// Single writer (this lane); readers are the farm's router/admission.
+    pub service_ewma_bits: Option<Arc<AtomicU64>>,
+    pub records_tx: mpsc::Sender<(usize, EventRecord)>,
+    pub stats_tx: mpsc::Sender<(usize, LaneStats)>,
+}
+
+/// `n` events have left the in-shard backlog (served or failed).
+fn leave_backlog(depth: &Option<Arc<AtomicUsize>>, n: usize) {
+    if let Some(d) = depth {
+        d.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+pub(crate) fn worker_loop<B: InferenceBackend>(rx: mpsc::Receiver<LaneEvent>, ctx: LaneCtx<B>) {
+    let mut builder = GraphBuilder::new(ctx.delta);
+    let mut batcher: DynamicBatcher<Prepared> =
+        DynamicBatcher::new(ctx.max_batch, ctx.batch_timeout);
+    let mut hist = vec![0u64; ctx.max_batch];
+    loop {
+        // Sleep exactly until the flush deadline (or the next event) — the
+        // batcher's ready_at() keys off its oldest pending request.
+        let recv = match batcher.ready_at() {
+            None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+            Some(deadline) => {
+                let now = Instant::now();
+                if deadline <= now {
+                    Err(mpsc::RecvTimeoutError::Timeout)
+                } else {
+                    rx.recv_timeout(deadline - now)
+                }
+            }
+        };
+        match recv {
+            Ok(le) => {
+                let tb = Instant::now();
+                let graph = builder.build(&le.te.event);
+                let padded = pad_graph(&le.te.event, &graph, &ctx.buckets);
+                let build_s = tb.elapsed().as_secs_f64();
+                batcher.push(Prepared {
+                    event_id: le.te.event.id,
+                    arrival_s: le.te.arrival_s,
+                    n: padded.n,
+                    e: padded.e,
+                    build_s,
+                    truncated: padded.dropped_nodes > 0 || padded.dropped_edges > 0,
+                    enqueued_at: le.enqueued_at,
+                    padded,
+                });
+                let now = Instant::now();
+                if batcher.ready(now) {
+                    let batch = batcher.flush(now);
+                    run_batch(batch, &ctx, &mut hist);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let batch = batcher.flush(Instant::now());
+                run_batch(batch, &ctx, &mut hist);
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Source exhausted: drain what is still pending, in batch-sized chunks.
+    loop {
+        let batch = batcher.drain_chunk();
+        if batch.is_empty() {
+            break;
+        }
+        run_batch(batch, &ctx, &mut hist);
+    }
+    let _ = ctx.stats_tx.send((ctx.lane_id, LaneStats { batch_hist: hist }));
+}
+
+fn run_batch<B: InferenceBackend>(
+    batch: Vec<Pending<Prepared>>,
+    ctx: &LaneCtx<B>,
+    hist: &mut [u64],
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let len = batch.len();
+    hist[len - 1] += 1;
+    let flushed_at = Instant::now();
+    let mut metas: Vec<Meta> = Vec::with_capacity(len);
+    let mut graphs = Vec::with_capacity(len);
+    for p in batch {
+        let queue_s = flushed_at.duration_since(p.enqueued_at).as_secs_f64();
+        let Prepared { event_id, arrival_s, n, e, build_s, truncated, enqueued_at, padded } =
+            p.item;
+        graphs.push(padded);
+        metas.push(Meta { event_id, arrival_s, n, e, build_s, truncated, queue_s, enqueued_at });
+    }
+    let ti = Instant::now();
+    let (outputs, device) = match ctx.backend.infer_batch_timed(&graphs) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("inference failed for batch of {len}: {e:#}");
+            ctx.failed.fetch_add(len as u64, Ordering::Relaxed);
+            leave_backlog(&ctx.queue_depth, len);
+            return;
+        }
+    };
+    if outputs.len() != len {
+        eprintln!("backend returned {} outputs for batch of {len}; dropping batch", outputs.len());
+        ctx.failed.fetch_add(len as u64, Ordering::Relaxed);
+        leave_backlog(&ctx.queue_depth, len);
+        return;
+    }
+    // Defensive: a misbehaving backend's latency vector must not panic the
+    // worker — ignore it rather than index out of bounds.
+    let device = device.and_then(|d| {
+        if d.len() == len {
+            Some(d)
+        } else {
+            eprintln!("backend returned {} device latencies for batch of {len}; ignoring", d.len());
+            None
+        }
+    });
+    let done_at = Instant::now();
+    let infer_s = done_at.duration_since(ti).as_secs_f64() / len as f64;
+    if let Some(bits) = &ctx.service_ewma_bits {
+        let prev = f64::from_bits(bits.load(Ordering::Relaxed));
+        let next = if prev > 0.0 {
+            (1.0 - SERVICE_EWMA_ALPHA) * prev + SERVICE_EWMA_ALPHA * infer_s
+        } else {
+            infer_s
+        };
+        bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+    leave_backlog(&ctx.queue_depth, len);
+
+    // One rate-controller lock per batch, not per event.
+    let decisions: Vec<(f32, bool)> = {
+        let mut rc = ctx.rate.lock().unwrap();
+        outputs
+            .iter()
+            .map(|o| {
+                let met = o.met();
+                (met, rc.decide(met as f64))
+            })
+            .collect()
+    };
+
+    for (i, (met, accepted)) in decisions.into_iter().enumerate() {
+        let m = &metas[i];
+        let _ = ctx.records_tx.send((
+            ctx.lane_id,
+            EventRecord {
+                event_id: m.event_id,
+                n_nodes: m.n,
+                n_edges: m.e,
+                arrival_s: m.arrival_s,
+                build_s: m.build_s,
+                queue_s: m.queue_s,
+                infer_s,
+                device_s: device.as_ref().map(|d| d[i]),
+                batch_len: len,
+                truncated: m.truncated,
+                latency_s: done_at.duration_since(m.enqueued_at).as_secs_f64(),
+                met,
+                accepted,
+            },
+        ));
+    }
+}

@@ -45,6 +45,7 @@
 //! assert_eq!(report.events, 16);
 //! ```
 
+pub(crate) mod lane;
 pub mod source;
 
 pub use source::{BurstSource, EventSource, ReplaySource, SyntheticSource, TimedEvent};
@@ -58,11 +59,12 @@ use std::time::{Duration, Instant};
 pub use crate::dataflow::BuildSite;
 
 use crate::fixedpoint::{Arith, Format, FormatError};
-use crate::graph::{pad_graph, padding::DEFAULT_BUCKETS, Bucket, GraphBuilder, PaddedGraph};
+use crate::graph::{padding::DEFAULT_BUCKETS, Bucket};
 use crate::trigger::backend::InferenceBackend;
-use crate::trigger::batcher::{DynamicBatcher, Pending};
 use crate::trigger::rate::RateController;
 use crate::util::stats;
+
+use lane::{worker_loop, LaneCtx, LaneEvent, LaneStats};
 
 // ---------------------------------------------------------------------------
 // Records and reports
@@ -90,6 +92,10 @@ pub struct EventRecord {
     /// nodes or edges were dropped to fit the padding bucket (the event was
     /// still served, on the truncated graph)
     pub truncated: bool,
+    /// host wall-clock: lane enqueue -> inference complete. The end-to-end
+    /// serving latency an SLO is judged against (build + queue + infer; in
+    /// a farm it starts at admission, so dispatcher-side waiting counts).
+    pub latency_s: f64,
     pub met: f32,
     pub accepted: bool,
 }
@@ -123,13 +129,26 @@ pub struct ServeReport {
     pub queue_median_ms: f64,
     pub infer_median_ms: f64,
     pub infer_p99_ms: f64,
+    pub infer_p999_ms: f64,
     pub device_median_ms: Option<f64>,
     pub device_p99_ms: Option<f64>,
+    pub device_p999_ms: Option<f64>,
+    /// End-to-end latency (lane enqueue -> inference complete), p50 over
+    /// served events. The farm's SLO admission policy keys off this path.
+    pub latency_median_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_p999_ms: f64,
     pub accept_frac: f64,
-    /// Events that were never served: feeder overflow (paced mode) and
-    /// inference failures. `events + dropped` = events pulled from the
-    /// source (minus any still in flight when a stream is abandoned).
+    /// Events dropped before serving by the paced feeder because its
+    /// target lane's finite buffer was full (detector-buffer overflow).
+    /// Disjoint from `failed`: `events + dropped + failed` = events pulled
+    /// from the source (minus any still in flight when a stream is
+    /// abandoned).
     pub dropped: u64,
+    /// Events lost to inference failures (backend batch errors,
+    /// wrong-arity output batches). Kept separate from `dropped` so load
+    /// shedding is distinguishable from a faulting device.
+    pub failed: u64,
     /// Events served on a truncated graph (padding overflow). Disjoint from
     /// `dropped`: these ARE counted in `events`.
     pub truncated: u64,
@@ -186,8 +205,10 @@ impl ServeReport {
         format!(
             "[{}<-{} @{}] events={} wall={:.2}s throughput={:.0}ev/s \
              graph_build[{}](p50={:.3}ms p99={:.3}ms){} \
-             infer(median={:.3}ms p99={:.3}ms){} batch(mean={:.2} hist={}) accept={:.1}% \
-             dropped={} truncated={}",
+             infer(median={:.3}ms p99={:.3}ms p999={:.3}ms){} \
+             latency(p50={:.3}ms p99={:.3}ms p999={:.3}ms) \
+             batch(mean={:.2} hist={}) accept={:.1}% \
+             dropped={} failed={} truncated={}",
             self.backend,
             self.source,
             self.precision,
@@ -200,11 +221,16 @@ impl ServeReport {
             gc,
             self.infer_median_ms,
             self.infer_p99_ms,
+            self.infer_p999_ms,
             dev,
+            self.latency_median_ms,
+            self.latency_p99_ms,
+            self.latency_p999_ms,
             self.mean_batch(),
             self.batch_hist_string(),
             100.0 * self.accept_frac,
             self.dropped,
+            self.failed,
             self.truncated,
         )
     }
@@ -549,33 +575,6 @@ pub struct Pipeline<B: InferenceBackend> {
     paced: bool,
 }
 
-/// What one batch flush carries per event before inference.
-struct Prepared {
-    event_id: u64,
-    arrival_s: f64,
-    n: usize,
-    e: usize,
-    build_s: f64,
-    truncated: bool,
-    padded: PaddedGraph,
-}
-
-struct WorkerStats {
-    batch_hist: Vec<u64>,
-}
-
-struct WorkerCtx<B: InferenceBackend> {
-    backend: Arc<B>,
-    buckets: Vec<Bucket>,
-    delta: f32,
-    max_batch: usize,
-    batch_timeout: Duration,
-    rate: Arc<Mutex<RateController>>,
-    dropped: Arc<AtomicU64>,
-    records_tx: mpsc::Sender<EventRecord>,
-    stats_tx: mpsc::Sender<WorkerStats>,
-}
-
 impl<B: InferenceBackend + 'static> Pipeline<B> {
     pub fn builder() -> PipelineBuilder<B> {
         PipelineBuilder::new()
@@ -592,12 +591,13 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
         let gc_mode = self.backend.gc_mode();
         let source_name = self.source.name().to_string();
         let dropped = Arc::new(AtomicU64::new(0));
+        let failed = Arc::new(AtomicU64::new(0));
         let rate = Arc::new(Mutex::new(RateController::new(
             self.accept_fraction,
             self.met_threshold,
         )));
-        let (records_tx, records_rx) = mpsc::channel::<EventRecord>();
-        let (stats_tx, stats_rx) = mpsc::channel::<WorkerStats>();
+        let (records_tx, records_rx) = mpsc::channel::<(usize, EventRecord)>();
+        let (stats_tx, stats_rx) = mpsc::channel::<(usize, LaneStats)>();
 
         // Per-worker bounded lanes: the feeder round-robins events across
         // them; total capacity approximates the configured detector buffer.
@@ -605,16 +605,19 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
         let mut lanes = Vec::with_capacity(self.workers);
         let mut handles = Vec::with_capacity(self.workers);
         for w in 0..self.workers {
-            let (lane_tx, lane_rx) = mpsc::sync_channel::<TimedEvent>(lane_cap);
+            let (lane_tx, lane_rx) = mpsc::sync_channel::<LaneEvent>(lane_cap);
             lanes.push(lane_tx);
-            let ctx = WorkerCtx {
+            let ctx = LaneCtx {
+                lane_id: w,
                 backend: Arc::clone(&self.backend),
                 buckets: self.buckets.clone(),
                 delta: self.delta,
                 max_batch: self.max_batch,
                 batch_timeout: self.batch_timeout,
                 rate: Arc::clone(&rate),
-                dropped: Arc::clone(&dropped),
+                failed: Arc::clone(&failed),
+                queue_depth: None,
+                service_ewma_bits: None,
                 records_tx: records_tx.clone(),
                 stats_tx: stats_tx.clone(),
             };
@@ -650,7 +653,8 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
                         if due > now {
                             std::thread::sleep(due - now);
                         }
-                        match lanes[lane].try_send(te) {
+                        let le = LaneEvent { te, enqueued_at: Instant::now() };
+                        match lanes[lane].try_send(le) {
                             Ok(()) => {}
                             Err(mpsc::TrySendError::Full(_)) => {
                                 // finite detector buffers: overflow drops
@@ -658,7 +662,10 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
                             }
                             Err(mpsc::TrySendError::Disconnected(_)) => break,
                         }
-                    } else if lanes[lane].send(te).is_err() {
+                    } else if lanes[lane]
+                        .send(LaneEvent { te, enqueued_at: Instant::now() })
+                        .is_err()
+                    {
                         break; // workers gone
                     }
                     lane = (lane + 1) % lanes.len();
@@ -673,6 +680,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
             handles,
             feeder: Some(feeder),
             dropped,
+            failed,
             stop,
             backend: backend_name,
             precision,
@@ -691,145 +699,6 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
 }
 
 // ---------------------------------------------------------------------------
-// Worker loop
-// ---------------------------------------------------------------------------
-
-fn worker_loop<B: InferenceBackend>(rx: mpsc::Receiver<TimedEvent>, ctx: WorkerCtx<B>) {
-    let mut builder = GraphBuilder::new(ctx.delta);
-    let mut batcher: DynamicBatcher<Prepared> =
-        DynamicBatcher::new(ctx.max_batch, ctx.batch_timeout);
-    let mut hist = vec![0u64; ctx.max_batch];
-    loop {
-        // Sleep exactly until the flush deadline (or the next event) — the
-        // batcher's ready_at() keys off its oldest pending request.
-        let recv = match batcher.ready_at() {
-            None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
-            Some(deadline) => {
-                let now = Instant::now();
-                if deadline <= now {
-                    Err(mpsc::RecvTimeoutError::Timeout)
-                } else {
-                    rx.recv_timeout(deadline - now)
-                }
-            }
-        };
-        match recv {
-            Ok(te) => {
-                let tb = Instant::now();
-                let graph = builder.build(&te.event);
-                let padded = pad_graph(&te.event, &graph, &ctx.buckets);
-                let build_s = tb.elapsed().as_secs_f64();
-                batcher.push(Prepared {
-                    event_id: te.event.id,
-                    arrival_s: te.arrival_s,
-                    n: padded.n,
-                    e: padded.e,
-                    build_s,
-                    truncated: padded.dropped_nodes > 0 || padded.dropped_edges > 0,
-                    padded,
-                });
-                let now = Instant::now();
-                if batcher.ready(now) {
-                    let batch = batcher.flush(now);
-                    run_batch(batch, &ctx, &mut hist);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                let batch = batcher.flush(Instant::now());
-                run_batch(batch, &ctx, &mut hist);
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    // Source exhausted: drain what is still pending, in batch-sized chunks.
-    loop {
-        let batch = batcher.drain_chunk();
-        if batch.is_empty() {
-            break;
-        }
-        run_batch(batch, &ctx, &mut hist);
-    }
-    let _ = ctx.stats_tx.send(WorkerStats { batch_hist: hist });
-}
-
-fn run_batch<B: InferenceBackend>(
-    batch: Vec<Pending<Prepared>>,
-    ctx: &WorkerCtx<B>,
-    hist: &mut [u64],
-) {
-    if batch.is_empty() {
-        return;
-    }
-    let len = batch.len();
-    hist[len - 1] += 1;
-    let flushed_at = Instant::now();
-    // (event_id, arrival_s, n, e, build_s, truncated, queue_s) per graph
-    let mut metas: Vec<(u64, f64, usize, usize, f64, bool, f64)> = Vec::with_capacity(len);
-    let mut graphs = Vec::with_capacity(len);
-    for p in batch {
-        let queue_s = flushed_at.duration_since(p.enqueued_at).as_secs_f64();
-        let Prepared { event_id, arrival_s, n, e, build_s, truncated, padded } = p.item;
-        graphs.push(padded);
-        metas.push((event_id, arrival_s, n, e, build_s, truncated, queue_s));
-    }
-    let ti = Instant::now();
-    let (outputs, device) = match ctx.backend.infer_batch_timed(&graphs) {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("inference failed for batch of {len}: {e:#}");
-            ctx.dropped.fetch_add(len as u64, Ordering::Relaxed);
-            return;
-        }
-    };
-    if outputs.len() != len {
-        eprintln!("backend returned {} outputs for batch of {len}; dropping batch", outputs.len());
-        ctx.dropped.fetch_add(len as u64, Ordering::Relaxed);
-        return;
-    }
-    // Defensive: a misbehaving backend's latency vector must not panic the
-    // worker — ignore it rather than index out of bounds.
-    let device = device.and_then(|d| {
-        if d.len() == len {
-            Some(d)
-        } else {
-            eprintln!("backend returned {} device latencies for batch of {len}; ignoring", d.len());
-            None
-        }
-    });
-    let infer_s = ti.elapsed().as_secs_f64() / len as f64;
-
-    // One rate-controller lock per batch, not per event.
-    let decisions: Vec<(f32, bool)> = {
-        let mut rc = ctx.rate.lock().unwrap();
-        outputs
-            .iter()
-            .map(|o| {
-                let met = o.met();
-                (met, rc.decide(met as f64))
-            })
-            .collect()
-    };
-
-    for (i, (met, accepted)) in decisions.into_iter().enumerate() {
-        let (event_id, arrival_s, n_nodes, n_edges, build_s, truncated, queue_s) = metas[i];
-        let _ = ctx.records_tx.send(EventRecord {
-            event_id,
-            n_nodes,
-            n_edges,
-            arrival_s,
-            build_s,
-            queue_s,
-            infer_s,
-            device_s: device.as_ref().map(|d| d[i]),
-            batch_len: len,
-            truncated,
-            met,
-            accepted,
-        });
-    }
-}
-
-// ---------------------------------------------------------------------------
 // Record stream
 // ---------------------------------------------------------------------------
 
@@ -839,11 +708,12 @@ fn run_batch<B: InferenceBackend>(
 /// consumed through the iterator; for the full report, call it without
 /// iterating first (or use [`Pipeline::serve`]).
 pub struct RecordStream {
-    records_rx: mpsc::Receiver<EventRecord>,
-    stats_rx: mpsc::Receiver<WorkerStats>,
+    records_rx: mpsc::Receiver<(usize, EventRecord)>,
+    stats_rx: mpsc::Receiver<(usize, LaneStats)>,
     handles: Vec<JoinHandle<()>>,
     feeder: Option<JoinHandle<()>>,
     dropped: Arc<AtomicU64>,
+    failed: Arc<AtomicU64>,
     /// Tells the feeder to stop pulling from the source (set on Drop so an
     /// abandoned stream over an unbounded source does not drain forever).
     stop: Arc<AtomicBool>,
@@ -860,14 +730,14 @@ impl Iterator for RecordStream {
     type Item = EventRecord;
 
     fn next(&mut self) -> Option<EventRecord> {
-        self.records_rx.recv().ok()
+        self.records_rx.recv().ok().map(|(_, r)| r)
     }
 }
 
 impl RecordStream {
     /// Drain the remaining stream, join all pipeline threads, and aggregate.
     pub fn report(mut self) -> ServeReport {
-        let records: Vec<EventRecord> = self.records_rx.iter().collect();
+        let records: Vec<EventRecord> = self.records_rx.iter().map(|(_, r)| r).collect();
         if let Some(f) = self.feeder.take() {
             let _ = f.join();
         }
@@ -877,7 +747,7 @@ impl RecordStream {
         let wall_s = self.t0.elapsed().as_secs_f64();
 
         let mut batch_hist = vec![0u64; self.max_batch];
-        while let Ok(ws) = self.stats_rx.try_recv() {
+        while let Ok((_, ws)) = self.stats_rx.try_recv() {
             for (i, c) in ws.batch_hist.iter().enumerate() {
                 batch_hist[i] += c;
             }
@@ -887,11 +757,13 @@ impl RecordStream {
         let build: Vec<f64> = records.iter().map(|r| r.build_s * 1e3).collect();
         let queue: Vec<f64> = records.iter().map(|r| r.queue_s * 1e3).collect();
         let infer: Vec<f64> = records.iter().map(|r| r.infer_s * 1e3).collect();
+        let latency: Vec<f64> = records.iter().map(|r| r.latency_s * 1e3).collect();
         let device: Vec<f64> =
             records.iter().filter_map(|r| r.device_s.map(|d| d * 1e3)).collect();
         let accepted = records.iter().filter(|r| r.accepted).count();
         let med = |xs: &[f64]| if xs.is_empty() { 0.0 } else { stats::median(xs) };
         let p99 = |xs: &[f64]| if xs.is_empty() { 0.0 } else { stats::percentile(xs, 99.0) };
+        let p999 = |xs: &[f64]| if xs.is_empty() { 0.0 } else { stats::p999(xs) };
         ServeReport {
             backend: self.backend.clone(),
             precision: self.precision.clone(),
@@ -906,10 +778,16 @@ impl RecordStream {
             queue_median_ms: med(&queue),
             infer_median_ms: med(&infer),
             infer_p99_ms: p99(&infer),
+            infer_p999_ms: p999(&infer),
             device_median_ms: if device.is_empty() { None } else { Some(med(&device)) },
             device_p99_ms: if device.is_empty() { None } else { Some(p99(&device)) },
+            device_p999_ms: if device.is_empty() { None } else { Some(p999(&device)) },
+            latency_median_ms: med(&latency),
+            latency_p99_ms: p99(&latency),
+            latency_p999_ms: p999(&latency),
             accept_frac: accepted as f64 / records.len().max(1) as f64,
             dropped: self.dropped.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             truncated: records.iter().filter(|r| r.truncated).count() as u64,
             batches,
             batch_hist,
@@ -938,6 +816,7 @@ impl Drop for RecordStream {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::graph::{pad_graph, GraphBuilder};
     use crate::model::{L1DeepMetV2, Weights};
     use crate::physics::GeneratorConfig;
     use crate::trigger::Backend;
@@ -1352,8 +1231,12 @@ mod tests {
             .unwrap()
             .serve();
         assert_eq!(report.events as u64 + report.dropped, 30);
+        assert_eq!(report.failed, 0, "no inference failures were injected");
         assert!(report.events > 0);
         // arrivals were carried through to the records
         assert!(report.records.iter().any(|r| r.arrival_s > 0.0));
+        // end-to-end latency is measured and ordered sanely
+        assert!(report.records.iter().all(|r| r.latency_s >= r.infer_s));
+        assert!(report.latency_p999_ms >= report.latency_median_ms);
     }
 }

@@ -102,6 +102,13 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// 99.9th percentile — the tail the farm's SLO admission control is judged
+/// against. Inherits `percentile`'s NaN tolerance (total_cmp sort: NaNs act
+/// as oversized samples and surface in the tail instead of panicking).
+pub fn p999(xs: &[f64]) -> f64 {
+    percentile(xs, 99.9)
+}
+
 /// Half the 16–84 inter-quantile width: a robust sigma used for MET
 /// resolution (insensitive to non-Gaussian tails, standard in HEP).
 pub fn quantile_resolution(residuals: &[f64]) -> f64 {
@@ -244,6 +251,12 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+        // p999 interpolates between the 99th and 100th order statistics:
+        // rank = 0.999 * 99 = 98.901 -> 99 + 0.901
+        assert!((p999(&xs) - 99.901).abs() < 1e-9);
+        assert!(p999(&xs) > percentile(&xs, 99.0));
+        assert!(p999(&[]).is_nan());
+        assert_eq!(p999(&[7.0]), 7.0);
         assert!(percentile(&[], 50.0).is_nan());
     }
 
@@ -259,6 +272,8 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert!(percentile(&xs, 100.0).is_nan());
+        // p999 lands in the NaN tail and surfaces it, never panics
+        assert!(p999(&xs).is_nan());
         assert!(median(&[f64::NAN, f64::NAN]).is_nan());
         // quantile_resolution: finite bulk with a NaN tail must not panic
         let mut residuals: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();

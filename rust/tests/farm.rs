@@ -1,0 +1,184 @@
+//! Farm integration tests: per-shard serving must be bit-identical to a
+//! standalone `Pipeline`, routing policies must steer load as documented,
+//! and the offered/admitted/rejected/shed/served/failed accounting must be
+//! exact under overload.
+
+use std::time::Duration;
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::farm::{AdmissionPolicy, Farm, PacedBackend, RoutingPolicy};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::GeneratorConfig;
+use dgnnflow::pipeline::{Pipeline, ReplaySource, SyntheticSource};
+use dgnnflow::trigger::Backend;
+
+fn model(seed: u64) -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, seed)).unwrap()
+}
+
+fn cpu(seed: u64) -> Backend {
+    Backend::RustCpu(model(seed))
+}
+
+/// `(event_id, met bits)` for every served record, sorted — the
+/// order-independent fingerprint of a serve's physics.
+fn fingerprints(records: impl Iterator<Item = (u64, f32)>) -> Vec<(u64, u32)> {
+    let mut v: Vec<(u64, u32)> = records.map(|(id, met)| (id, met.to_bits())).collect();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn farm_shard_serve_is_bit_identical_to_standalone_pipeline() {
+    // Same events, same weights: a 1-shard farm, a 4-shard farm, and a
+    // plain single-worker Pipeline must produce identical MET for every
+    // event — the shard lane *is* the pipeline lane.
+    let n = 24;
+    let events = |seed| ReplaySource::from_seed(seed, GeneratorConfig::default(), n);
+
+    let pipeline = Pipeline::builder()
+        .source(events(91))
+        .backend(cpu(44))
+        .batching(2, Duration::from_millis(2))
+        .workers(1)
+        .build()
+        .unwrap()
+        .serve();
+    let want = fingerprints(pipeline.records.iter().map(|r| (r.event_id, r.met)));
+    assert_eq!(want.len(), n);
+
+    for shards in [1usize, 4] {
+        let report = Farm::builder()
+            .shards((0..shards).map(|_| cpu(44)))
+            .source(events(91))
+            .routing(RoutingPolicy::RoundRobin)
+            .batching(2, Duration::from_millis(2))
+            .build()
+            .unwrap()
+            .serve();
+        assert_eq!(report.events, n, "{}", report.summary());
+        let got = fingerprints(
+            report.shards.iter().flat_map(|s| s.records.iter().map(|r| (r.event_id, r.met))),
+        );
+        assert_eq!(got, want, "{shards}-shard farm drifted from the standalone pipeline");
+    }
+}
+
+#[test]
+fn mixed_fabric_and_cpu_farm_bit_matches_cpu_only() {
+    // The FPGA backend is pinned bit-identical to the CPU reference, so a
+    // mixed farm must fingerprint-match a CPU-only farm on the same events.
+    use dgnnflow::config::ArchConfig;
+    use dgnnflow::dataflow::DataflowEngine;
+    let n = 16;
+    let events = |seed| ReplaySource::from_seed(seed, GeneratorConfig::default(), n);
+    let serve = |backends: Vec<Backend>| {
+        Farm::builder()
+            .shards(backends)
+            .source(events(92))
+            .batching(1, Duration::from_micros(100))
+            .build()
+            .unwrap()
+            .serve()
+    };
+    let cpu_only = serve(vec![cpu(45), cpu(45)]);
+    let fpga = Backend::Fpga(DataflowEngine::new(ArchConfig::default(), model(45)).unwrap());
+    let mixed = serve(vec![cpu(45), fpga]);
+    assert_eq!(mixed.events, n, "{}", mixed.summary());
+    let fp = |r: &dgnnflow::farm::FarmReport| {
+        fingerprints(r.shards.iter().flat_map(|s| s.records.iter().map(|x| (x.event_id, x.met))))
+    };
+    assert_eq!(fp(&mixed), fp(&cpu_only));
+    // the fabric shard really participated
+    assert!(mixed.shards.iter().any(|s| s.backend == "dgnnflow-sim" && s.events > 0));
+}
+
+#[test]
+fn paced_overload_rejects_at_the_tail_queue_with_exact_accounting() {
+    // 2 slow shards (5 ms/event = 200 ev/s each), tiny queues, arrivals at
+    // 4000 ev/s: the bounded queues must fill and reject, never lose an
+    // event untracked, and never mistake a reject for an inference failure.
+    let n = 60;
+    let report = Farm::builder()
+        .shards((0..2).map(|_| PacedBackend::new(cpu(46), Duration::from_millis(5))))
+        .source(SyntheticSource::new(n, 7, GeneratorConfig::default()).with_rate(4000.0))
+        .routing(RoutingPolicy::JoinShortestQueue)
+        .shard_queue_capacity(2)
+        .paced(true)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.offered, n as u64);
+    assert!(report.rejected > 0, "{}", report.summary());
+    assert_eq!(report.failed, 0, "{}", report.summary());
+    assert_eq!(report.shed, 0, "tail-drop never sheds at the door");
+    assert!(report.accounting_ok(), "{}", report.summary());
+    // the high-water mark saw the backlog the rejects bounced off
+    assert!(report.shards.iter().any(|s| s.queue_hwm >= 2));
+}
+
+#[test]
+fn deadline_admission_sheds_instead_of_queueing_doomed_events() {
+    // 1 slow shard (5 ms/event), SLO 8 ms, deep queue: once the EWMA has
+    // learned the service time, any backlog > 1 predicts an SLO miss, so
+    // overload must surface as shedding at the door, not tail rejects.
+    let n = 80;
+    let report = Farm::builder()
+        .shard(PacedBackend::new(cpu(47), Duration::from_millis(5)))
+        .source(SyntheticSource::new(n, 8, GeneratorConfig::default()).with_rate(2000.0))
+        .admission(AdmissionPolicy::Deadline { slo_ms: 8.0 })
+        .shard_queue_capacity(64)
+        .paced(true)
+        .build()
+        .unwrap()
+        .serve();
+    assert!(report.shed > 0, "{}", report.summary());
+    assert_eq!(report.rejected, 0, "the deep queue should never fill: {}", report.summary());
+    assert_eq!(report.failed, 0, "{}", report.summary());
+    assert!(report.accounting_ok(), "{}", report.summary());
+}
+
+#[test]
+fn load_aware_routing_biases_toward_the_fast_shard() {
+    // Heterogeneous farm: 1 ms/event vs 10 ms/event. Both jsq and ewma
+    // must send the fast shard more events once queues diverge.
+    for routing in [RoutingPolicy::JoinShortestQueue, RoutingPolicy::LatencyEwma] {
+        let report = Farm::builder()
+            .shard(PacedBackend::new(cpu(48), Duration::from_millis(1)))
+            .shard(PacedBackend::new(cpu(48), Duration::from_millis(10)))
+            .source(SyntheticSource::new(60, 9, GeneratorConfig::default()).with_rate(500.0))
+            .routing(routing)
+            .shard_queue_capacity(64)
+            .paced(true)
+            .build()
+            .unwrap()
+            .serve();
+        assert!(report.accounting_ok(), "{}", report.summary());
+        let fast = report.shards[0].events;
+        let slow = report.shards[1].events;
+        assert!(
+            fast > slow,
+            "{routing}: fast shard got {fast}, slow got {slow}: {}",
+            report.summary()
+        );
+    }
+}
+
+#[test]
+fn unpaced_farm_ignores_admission_and_serves_everything() {
+    // Without pacing there is no deadline to protect: admission is inert,
+    // backpressure admits every event eventually.
+    let n = 30;
+    let report = Farm::builder()
+        .shards((0..2).map(|_| cpu(49)))
+        .source(SyntheticSource::new(n, 10, GeneratorConfig::default()))
+        .admission(AdmissionPolicy::Deadline { slo_ms: 0.001 })
+        .shard_queue_capacity(1)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.events, n, "{}", report.summary());
+    assert_eq!((report.shed, report.rejected, report.failed), (0, 0, 0));
+    assert!(report.accounting_ok());
+}

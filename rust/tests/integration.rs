@@ -222,7 +222,7 @@ impl InferenceBackend for FlakyBackend {
 
 #[test]
 fn serve_loop_survives_backend_faults() {
-    // batch of 1 so each injected fault drops exactly one event and the
+    // batch of 1 so each injected fault fails exactly one event and the
     // bookkeeping below is exact
     let tcfg = TriggerConfig { workers: 2, max_batch: 1, ..Default::default() };
     let backend = FlakyBackend {
@@ -232,10 +232,12 @@ fn serve_loop_survives_backend_faults() {
     };
     let server = TriggerServer::new(tcfg, backend, DEFAULT_BUCKETS.to_vec()).unwrap();
     let report = server.serve_events(50, 13);
-    // ~1/5 of events dropped, the rest served; the loop never panics
-    assert!(report.dropped >= 5, "dropped={}", report.dropped);
+    // ~1/5 of events fail inference, the rest are served; the loop never
+    // panics, and the faults land in `failed` (not the overflow `dropped`)
+    assert!(report.failed >= 5, "failed={}", report.failed);
+    assert_eq!(report.dropped, 0, "dropped={}", report.dropped);
     assert!(report.events >= 35, "served={}", report.events);
-    assert_eq!(report.events + report.dropped as usize, 50);
+    assert_eq!(report.events + report.failed as usize, 50);
 }
 
 #[test]

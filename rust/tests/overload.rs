@@ -1,0 +1,120 @@
+//! Overload behaviour of the paced/burst event sources: when arrivals
+//! outrun service capacity the finite feeder buffer must drop with exact
+//! accounting, and those overflow drops must stay distinguishable from
+//! inference failures.
+
+use std::time::Duration;
+
+use dgnnflow::config::ModelConfig;
+use dgnnflow::farm::PacedBackend;
+use dgnnflow::graph::PaddedGraph;
+use dgnnflow::model::{L1DeepMetV2, ModelOutput, Weights};
+use dgnnflow::physics::GeneratorConfig;
+use dgnnflow::pipeline::{BurstSource, Pipeline, SyntheticSource};
+use dgnnflow::trigger::{Backend, InferenceBackend};
+
+fn model(seed: u64) -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, seed)).unwrap()
+}
+
+/// A slow backend: 5 ms per event = 200 events/s of service capacity.
+fn slow(seed: u64) -> PacedBackend<Backend> {
+    PacedBackend::new(Backend::RustCpu(model(seed)), Duration::from_millis(5))
+}
+
+#[test]
+fn paced_source_above_capacity_drops_with_exact_accounting() {
+    // 4000 ev/s offered into 200 ev/s of service with a 2-deep feeder
+    // queue: overflow drops are inevitable, inference failures are not.
+    let total = 50;
+    let report = Pipeline::builder()
+        .source(SyntheticSource::new(total, 11, GeneratorConfig::default()).with_rate(4000.0))
+        .backend(slow(61))
+        .workers(1)
+        .queue_capacity(2)
+        .paced(true)
+        .build()
+        .unwrap()
+        .serve();
+    assert!(report.dropped > 0, "{}", report.summary());
+    assert_eq!(report.failed, 0, "{}", report.summary());
+    assert_eq!(
+        report.events as u64 + report.dropped + report.failed,
+        total as u64,
+        "every pulled event must be served, dropped, or failed: {}",
+        report.summary()
+    );
+    // the summary surfaces both counters separately
+    let s = report.summary();
+    assert!(s.contains(&format!("dropped={}", report.dropped)), "{s}");
+    assert!(s.contains("failed=0"), "{s}");
+}
+
+/// Fails every other batch — used to overlap overflow drops with real
+/// inference faults in one run.
+struct EveryOtherBatchFails {
+    inner: L1DeepMetV2,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl InferenceBackend for EveryOtherBatchFails {
+    fn name(&self) -> &str {
+        "every-other-batch-fails"
+    }
+    fn infer_batch(&self, graphs: &[PaddedGraph]) -> anyhow::Result<Vec<ModelOutput>> {
+        let c = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if c % 2 == 1 {
+            anyhow::bail!("injected fault on batch {c}");
+        }
+        Ok(graphs.iter().map(|g| self.inner.forward(g)).collect())
+    }
+}
+
+#[test]
+fn overflow_drops_and_inference_failures_are_distinguishable() {
+    // A bursty paced source over a slow *and* flaky backend: both loss
+    // modes occur in the same run and land in separate counters that still
+    // sum exactly with the served count.
+    let total = 60;
+    let flaky = EveryOtherBatchFails {
+        inner: model(62),
+        calls: std::sync::atomic::AtomicU64::new(0),
+    };
+    let report = Pipeline::builder()
+        .source(
+            BurstSource::new(total, 12, GeneratorConfig::default(), 2000.0).with_burst_factor(8.0),
+        )
+        .backend(PacedBackend::new(flaky, Duration::from_millis(3)))
+        .workers(1)
+        .queue_capacity(2)
+        .paced(true)
+        .build()
+        .unwrap()
+        .serve();
+    assert!(report.dropped > 0, "feeder overflow must occur: {}", report.summary());
+    assert!(report.failed > 0, "injected faults must occur: {}", report.summary());
+    assert_eq!(
+        report.events as u64 + report.dropped + report.failed,
+        total as u64,
+        "{}",
+        report.summary()
+    );
+}
+
+#[test]
+fn unpaced_serving_never_drops_regardless_of_capacity() {
+    // Control: the same slow backend and tiny queue, but unpaced —
+    // blocking backpressure instead of real-time drops.
+    let total = 12;
+    let report = Pipeline::builder()
+        .source(SyntheticSource::new(total, 13, GeneratorConfig::default()).with_rate(4000.0))
+        .backend(slow(63))
+        .workers(1)
+        .queue_capacity(2)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.events, total, "{}", report.summary());
+    assert_eq!((report.dropped, report.failed), (0, 0));
+}

@@ -214,8 +214,10 @@ impl InferenceBackend for EveryOtherBatchFails {
 
 #[test]
 fn backend_errors_mid_batch_keep_event_accounting_exact() {
-    // PR 1's contract: `events + dropped` equals the number of events
-    // pulled from the source, even when whole batches fail inference.
+    // The accounting contract: `events + dropped + failed` equals the
+    // number of events pulled from the source, even when whole batches
+    // fail inference — and inference faults land in `failed`, never in
+    // `dropped` (which is reserved for feeder overflow).
     let total = 24u64;
     let report = Pipeline::builder()
         .source(SyntheticSource::new(total as usize, 17, GeneratorConfig::default()))
@@ -229,13 +231,15 @@ fn backend_errors_mid_batch_keep_event_accounting_exact() {
         .unwrap()
         .serve();
     assert_eq!(
-        report.events as u64 + report.dropped,
+        report.events as u64 + report.dropped + report.failed,
         total,
-        "served {} + dropped {} must equal {total}",
+        "served {} + dropped {} + failed {} must equal {total}",
         report.events,
-        report.dropped
+        report.dropped,
+        report.failed
     );
-    assert!(report.dropped > 0, "the injected faults must drop something");
+    assert!(report.failed > 0, "the injected faults must be counted as failures");
+    assert_eq!(report.dropped, 0, "inference faults are not overflow drops");
     assert!(report.events > 0, "the surviving batches must serve something");
     // failed batches still count as flushes in the histogram (they occupied
     // the batcher), so histogram events >= served events
