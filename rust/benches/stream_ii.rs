@@ -1,0 +1,154 @@
+//! Whole-fabric event-level pipelining bench: the initiation interval and
+//! the sustained event rate it buys, serialized vs II-pipelined, swept
+//! over pileup (and therefore padded-graph bucket size).
+//!
+//! For each pileup point this runs the same event stream through the
+//! simulated fabric twice — `event_pipelining` off (PR 5 serialized
+//! baseline: every event pays its full depth) and on (events enter at the
+//! stage-occupancy II) — and reports
+//!   - the per-event initiation interval (median over the stream),
+//!   - total stream cycles and the sustained events/sec at the fabric
+//!     clock,
+//!   - whether that sustained rate holds a set of reference arrival rates
+//!     (the L1T-shaped question: can the fabric keep up?).
+//!
+//! Emits `BENCH_stream.json` next to Cargo.toml. Cycle counts, the II, and
+//! the holds-arrival verdicts are deterministic and exact-compared by the
+//! bench-regression gate (`ci.sh --bench-check`); the derived events/sec
+//! floats are emitted for plotting but not gated.
+//!
+//!   cargo bench --bench stream_ii [-- --events-per-stream N]
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::{BuildSite, DataflowEngine};
+use dgnnflow::graph::{pad_graph, padding::DEFAULT_BUCKETS, GraphBuilder, PaddedGraph};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::runtime::ModelRuntime;
+use dgnnflow::util::bench::Table;
+use dgnnflow::util::cli::Args;
+use dgnnflow::util::json::{obj, Value};
+use dgnnflow::util::stats;
+
+const DELTA: f32 = 0.8;
+const SEED: u64 = 17;
+/// Reference arrival rates the sustained throughput is tested against
+/// (events/sec), with the JSON key each verdict lands under.
+const ARRIVALS: [(f64, &str); 3] =
+    [(100_000.0, "holds_100k"), (250_000.0, "holds_250k"), (500_000.0, "holds_500k")];
+
+fn load_cfg_weights() -> (ModelConfig, Weights) {
+    let dir = ModelRuntime::artifacts_dir();
+    if dir.join("meta.json").exists() {
+        if let Ok(cfg) = ModelConfig::from_meta(&dir.join("meta.json")) {
+            if let Ok(w) = Weights::load(&dir.join("weights.json"), &cfg) {
+                return (cfg, w);
+            }
+        }
+    }
+    let cfg = ModelConfig::default();
+    let w = Weights::random(&cfg, 707);
+    (cfg, w)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let per_stream = args.usize_or("events-per-stream", 16).unwrap_or(16);
+    println!("=== Event-level pipelining: II + sustained rate vs arrival rate ===\n");
+
+    let (cfg, weights) = load_cfg_weights();
+    let engine = |event_pipelining: bool| {
+        let arch = ArchConfig { event_pipelining, ..Default::default() };
+        let mut eng = DataflowEngine::new(
+            arch,
+            L1DeepMetV2::new(cfg.clone(), weights.clone()).unwrap(),
+        )
+        .unwrap();
+        eng.set_build_site(BuildSite::Fabric, DELTA).unwrap();
+        eng
+    };
+    let serial = engine(false);
+    let piped = engine(true);
+
+    let mut table = Table::new(&[
+        "pileup",
+        "bucket (med)",
+        "mode",
+        "II (med)",
+        "depth (med)",
+        "stream cycles",
+        "sustained (kev/s)",
+        "holds 250k?",
+    ]);
+    let mut points = Vec::new();
+    for pileup in [20.0f64, 70.0, 140.0] {
+        // One event mix per pileup point, shared by both modes: the
+        // comparison isolates the scheduler, never the physics.
+        let mut gen = EventGenerator::new(
+            SEED,
+            GeneratorConfig { mean_pileup: pileup, ..Default::default() },
+        );
+        let mut builder = GraphBuilder::new(DELTA);
+        let gs: Vec<PaddedGraph> = (0..per_stream)
+            .map(|_| {
+                let ev = gen.generate();
+                pad_graph(&ev, &builder.build(&ev), &DEFAULT_BUCKETS)
+            })
+            .collect();
+        let n_max_med =
+            stats::median(&gs.iter().map(|g| g.bucket.n_max as f64).collect::<Vec<_>>());
+        for (mode, eng) in [("serialized", &serial), ("pipelined", &piped)] {
+            let rs = eng.run_stream(&gs);
+            let ii_med =
+                stats::median(&rs.iter().map(|r| r.breakdown.ii_cycles as f64).collect::<Vec<_>>());
+            let depth_med = stats::median(
+                &rs.iter().map(|r| r.breakdown.total_cycles as f64).collect::<Vec<_>>(),
+            );
+            let total = DataflowEngine::stream_total_cycles(&rs);
+            let eps = eng.stream_sustained_hz(&rs);
+            table.row(&[
+                format!("{pileup:.0}"),
+                format!("{n_max_med:.0}"),
+                mode.to_string(),
+                format!("{ii_med:.0}"),
+                format!("{depth_med:.0}"),
+                total.to_string(),
+                format!("{:.1}", eps / 1e3),
+                if eps >= 250_000.0 { "yes".into() } else { "NO".into() },
+            ]);
+            let mut point = vec![
+                ("pileup", Value::Num(pileup)),
+                ("mode", Value::from(mode)),
+                ("events", Value::Num(rs.len() as f64)),
+                ("n_max_median", Value::Num(n_max_med)),
+                ("ii_cycles_median", Value::Num(ii_med)),
+                ("depth_cycles_median", Value::Num(depth_med)),
+                ("stream_total_cycles", Value::Num(total as f64)),
+                // derived rate: plotted, not gated (float-shaped)
+                ("sustained_eps", Value::Num(eps)),
+            ];
+            for (hz, key) in ARRIVALS {
+                point.push((key, Value::Bool(eps >= hz)));
+            }
+            points.push(obj(point));
+        }
+    }
+    table.print();
+    println!(
+        "\nII contract: pipelined streams drain in depth + (N-1)*II; the serialized \
+         baseline pays full depth per event."
+    );
+
+    let arch = ArchConfig::default();
+    let doc = obj(vec![
+        ("bench", Value::from("stream_ii")),
+        ("delta", Value::Num(DELTA as f64)),
+        ("seed", Value::Num(SEED as f64)),
+        ("events_per_stream", Value::Num(per_stream as f64)),
+        ("clock_mhz", Value::Num(arch.clock_hz / 1e6)),
+        ("points", Value::Arr(points)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_stream.json");
+    std::fs::write(&out, doc.to_json()).expect("write BENCH_stream.json");
+    println!("wrote {}", out.display());
+}

@@ -10,12 +10,15 @@
 #                          the pipelined-vs-serialized schedule property,
 #                          the co-sim-vs-PR 4-replay regression pins, a
 #                          `--build-site fabric` serve smoke whose report
-#                          line must show dropped=0 and an on-fabric build,
+#                          line must show dropped=0, an on-fabric build,
+#                          and a sustained device-throughput figure, an
+#                          `--event-pipelining` serve smoke whose report
+#                          must show the II-pipelined fabric marker,
 #                          and a 2-shard farm smoke whose report must show
 #                          zero failures and consistent admission accounting
 #   ./ci.sh --bench-check  bench-regression gate: run ablation_parallelism,
-#                          graphbuild_overlap, and farm_soak on their
-#                          pinned seeds and exact-compare the emitted
+#                          graphbuild_overlap, farm_soak, and stream_ii on
+#                          their pinned seeds and exact-compare the emitted
 #                          BENCH_*.json deterministic fields against
 #                          rust/baselines/
 #                          (a missing baseline is bootstrapped — commit it;
@@ -81,6 +84,23 @@ quick_tier() {
         echo "FAIL: serve smoke did not run the co-simulated GC feed" >&2
         exit 1
     fi
+    if ! grep -q 'sustained=' <<<"$smoke"; then
+        echo "FAIL: serve smoke did not report sustained device throughput" >&2
+        exit 1
+    fi
+
+    echo "==> serve smoke: --event-pipelining (report must show the II-pipelined fabric)"
+    piped="$(cargo run --locked -q -- serve --events 20 --backend fpga --build-site fabric \
+        --event-pipelining --workers 2 --pileup 30)"
+    echo "$piped"
+    if ! grep -q 'ii\[event-pipelined\]' <<<"$piped"; then
+        echo "FAIL: event-pipelining serve smoke did not report the II-pipelined fabric" >&2
+        exit 1
+    fi
+    if ! grep -Eq 'dropped=0( |$)' <<<"$piped"; then
+        echo "FAIL: event-pipelining serve smoke dropped events" >&2
+        exit 1
+    fi
 
     echo "==> farm smoke: 2 shards, paced, admission accounting must close"
     farm="$(cargo run --locked -q -- farm --shards 2 --events 40 --paced \
@@ -105,6 +125,7 @@ bench_tier() {
     cargo bench --locked --bench ablation_parallelism
     cargo bench --locked --bench graphbuild_overlap
     cargo bench --locked --bench farm_soak
+    cargo bench --locked --bench stream_ii
 
     echo "==> bench-check: exact cycle-count/edge-total compare vs rust/baselines"
     cargo run --locked -q -- bench-check

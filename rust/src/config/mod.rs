@@ -135,6 +135,17 @@ pub struct ArchConfig {
     /// as `GcStats::cross_event_overlap_cycles`). Costs a second bin-memory
     /// bank per lane. Off by default.
     pub gc_cross_event: bool,
+    /// Whole-fabric event-level pipelining: when true,
+    /// [`crate::dataflow::DataflowEngine::run_stream`] schedules event
+    /// *i+1* into the embed/GC/layer-0 stages as soon as event *i* vacates
+    /// them (the per-layer double-buffered NE banks decouple the stages),
+    /// so the steady-state cost per event is the initiation interval —
+    /// `max(stage occupancy)`, reported as `SimBreakdown::ii_cycles` —
+    /// instead of the full pipeline depth. Costs per-boundary NE bank
+    /// replicas and hand-off control (priced in
+    /// [`crate::dataflow::ResourceModel`]). Off by default so the PR 5
+    /// serialized-event timelines stay reproducible baselines.
+    pub event_pipelining: bool,
 }
 
 impl Default for ArchConfig {
@@ -157,6 +168,7 @@ impl Default for ArchConfig {
             gc_fifo_depth: 64,
             gc_skip_on_stall: false,
             gc_cross_event: false,
+            event_pipelining: false,
         }
     }
 }
@@ -198,6 +210,7 @@ impl ArchConfig {
             gc_fifo_depth: g_us("gc_fifo_depth", d.gc_fifo_depth)?,
             gc_skip_on_stall: g_b("gc_skip_on_stall", d.gc_skip_on_stall)?,
             gc_cross_event: g_b("gc_cross_event", d.gc_cross_event)?,
+            event_pipelining: g_b("event_pipelining", d.event_pipelining)?,
         };
         c.validate()?;
         Ok(c)
@@ -380,13 +393,16 @@ mod tests {
         // the co-sim controller flags default off (PR 4-exact schedule)
         assert!(!a.gc_skip_on_stall);
         assert!(!a.gc_cross_event);
+        // event-level pipelining defaults off (PR 5-exact stream timelines)
+        assert!(!a.event_pipelining);
     }
 
     #[test]
     fn arch_gc_fields_from_json_and_validation() {
         let v = json::parse(
             r#"{"p_gc": 8, "gc_bin_depth": 32, "gc_lane_ii": 2, "gc_fifo_depth": 16,
-                "gc_skip_on_stall": true, "gc_cross_event": true}"#,
+                "gc_skip_on_stall": true, "gc_cross_event": true,
+                "event_pipelining": true}"#,
         )
         .unwrap();
         let a = ArchConfig::from_json(&v).unwrap();
@@ -394,6 +410,7 @@ mod tests {
         assert_eq!(a.gc_fifo_depth, 16);
         assert!(a.gc_skip_on_stall);
         assert!(a.gc_cross_event);
+        assert!(a.event_pipelining);
         let mut bad = ArchConfig::default();
         bad.p_gc = 0;
         assert!(bad.validate().is_err());

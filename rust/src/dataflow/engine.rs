@@ -34,6 +34,39 @@
 //! — cycle counts, per-lane feed counters, outputs — pinned by a
 //! regression test.
 //!
+//! ## The event-level initiation-interval contract
+//!
+//! Each event's own timeline is a fixed schedule of *stage busy windows*
+//! ([`SimBreakdown::stages`]): the embed stage, the GC unit (fabric builds
+//! only, overlapped with embed/layer 0), each EdgeConv layer's MP+NT
+//! hardware, and the output head. With
+//! [`crate::config::ArchConfig::event_pipelining`] set,
+//! [`DataflowEngine::run_stream`] is a true initiation-interval model:
+//! event *i+1* enters the fabric as soon as every stage it needs has been
+//! vacated by event *i* — the per-layer double-buffered NE banks are the
+//! hardware that decouples the stages (FlowGNN-style), and the spare GC
+//! bin bank ([`crate::config::ArchConfig::gc_cross_event`]) additionally
+//! lets event *i+1*'s bin phase overlap event *i*'s compare drain. The
+//! contract, pinned by the II test suite:
+//!
+//! - **Outputs are untouched.** Every event is still simulated standalone
+//!   (functional + timed); pipelining only moves *start cycles*
+//!   ([`SimBreakdown::stream_start_cycle`]), so per-event outputs and
+//!   per-event breakdowns are bit-identical to independent
+//!   [`run`](DataflowEngine::run) calls.
+//! - **Steady state costs the II, not the depth.** For identical events
+//!   the inter-event start spacing equals
+//!   [`SimBreakdown::ii_cycles`]` = max(stage occupancy)`, so an N-event
+//!   stream drains in `depth + (N-1)·II` cycles
+//!   ([`DataflowEngine::stream_total_cycles`]); sustained throughput is
+//!   [`DataflowEngine::stream_sustained_hz`] — the events/sec number a
+//!   200 MHz fabric holds against the L1T arrival rate.
+//! - **Off means off.** With the flag clear (the default), `run_stream`
+//!   keeps the PR 5 serialized-event timeline exactly — including the
+//!   bin-only `gc_cross_event` overlap, which the general model subsumes
+//!   as its GC-stage special case — so every earlier schedule stays a
+//!   selectable, cycle-exact baseline.
+//!
 //! The engine is **functional and timed at once**: every simulated edge
 //! message is really computed (via the model weights) at the cycle it
 //! issues, and every node writeback really produces the next-layer
@@ -139,7 +172,7 @@ impl CycleParams {
 }
 
 /// One sampled point on a layer's occupancy timeline (trace mode).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TimelineSample {
     pub cycle: u64,
     /// MP units with an edge in the φ pipeline this cycle.
@@ -150,8 +183,10 @@ pub struct TimelineSample {
     pub inflight_msgs: u16,
 }
 
-/// Per-layer accounting.
-#[derive(Clone, Debug, Default)]
+/// Per-layer accounting. `PartialEq` exists for the event-pipelining
+/// equality pins (streamed vs independent runs): whole-struct comparison
+/// keeps every future field covered automatically.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerStats {
     pub cycles: u64,
     pub live_edges: u64,
@@ -209,8 +244,58 @@ impl LayerStats {
     }
 }
 
-/// Full-run breakdown.
-#[derive(Clone, Debug, Default)]
+/// A named piece of fabric hardware one event occupies for a window of its
+/// timeline — the granularity at which the event-pipelining scheduler hands
+/// stages from event *i* to event *i+1*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// The embedding stage's NT units.
+    Embed,
+    /// The GC unit: bin memory + compare lanes + lane edge FIFOs
+    /// ([`BuildSite::Fabric`] only; overlaps `Embed`/`Layer(0)` within one
+    /// event — the window records when the *hardware* frees, not a
+    /// serialized phase).
+    Gc,
+    /// EdgeConv layer *l*'s MP+NT hardware and its NE bank pair (the
+    /// closing bank swap included — the banks hand off at the window end).
+    Layer(usize),
+    /// The output head's NT units + MET accumulator.
+    Head,
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Stage::Embed => write!(f, "embed"),
+            Stage::Gc => write!(f, "gc"),
+            Stage::Layer(l) => write!(f, "layer{l}"),
+            Stage::Head => write!(f, "head"),
+        }
+    }
+}
+
+/// One stage's busy window on an event's *own* timeline (cycles relative
+/// to the event's start; `end` exclusive). Windows of different stages
+/// overlap freely (GC under embed/layer 0); the event-pipelining scheduler
+/// only requires that the *same* stage never serves two events at once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageWindow {
+    pub stage: Stage,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl StageWindow {
+    /// Cycles this stage is held by the event.
+    pub fn occupancy(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// Full-run breakdown. `PartialEq` exists for the event-pipelining
+/// equality pins (streamed vs independent runs): whole-struct comparison
+/// keeps every future field covered automatically.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimBreakdown {
     pub transfer_in_s: f64,
     pub embed_cycles: u64,
@@ -224,6 +309,24 @@ pub struct SimBreakdown {
     pub head_cycles: u64,
     pub swap_cycles: u64,
     pub total_cycles: u64,
+    /// Per-stage busy windows of this event's timeline (embed, GC for
+    /// fabric builds, each layer, head) — the schedule the event-pipelining
+    /// scheduler hands off stage by stage. Every window ends by
+    /// `total_cycles`.
+    pub stages: Vec<StageWindow>,
+    /// The event's initiation interval: the largest *effective* stage
+    /// occupancy — the steady-state cycles per event a stream of identical
+    /// events costs under [`crate::config::ArchConfig::event_pipelining`]
+    /// (with [`crate::config::ArchConfig::gc_cross_event`] the GC stage
+    /// counts `bin_cycles` less: the next event's bin phase runs in the
+    /// spare bank during this event's drain). Always computed; at least 1.
+    pub ii_cycles: u64,
+    /// The fabric cycle this event *started* at within its
+    /// [`run_stream`](DataflowEngine::run_stream) stream: 0 for standalone
+    /// runs and the stream's first event; the cumulative sum of earlier
+    /// `total_cycles` on the serialized path; the II-scheduled start offset
+    /// under event pipelining. The only per-event field pipelining moves.
+    pub stream_start_cycle: u64,
     pub transfer_out_s: f64,
 }
 
@@ -352,15 +455,30 @@ impl DataflowEngine {
         self.run_inner(g, 0)
     }
 
-    /// Run a back-to-back event stream through the fabric, carrying the
-    /// cross-event GC window between consecutive events when
-    /// [`crate::config::ArchConfig::gc_cross_event`] is set (co-simulated
-    /// pipelined fabric builds only): event *i+1*'s bin phase runs in the
-    /// spare bin-memory bank while event *i*'s compare lanes drain, so the
-    /// next event's GC schedule starts up to `bin_cycles` early — recorded
-    /// per event as [`GcStats::cross_event_overlap_cycles`], so per-event
-    /// stats stay separable. With the flag off (or for host builds) this
-    /// is exactly a sequence of independent [`run`]s.
+    /// Run a back-to-back event stream through the fabric.
+    ///
+    /// With [`crate::config::ArchConfig::event_pipelining`] set this is the
+    /// true initiation-interval model (module doc): every event is still
+    /// simulated standalone — outputs and per-event breakdowns bit-identical
+    /// to independent [`run`]s — and the scheduler then packs the events'
+    /// stage windows as tightly as the hardware allows, recording each
+    /// event's start as [`SimBreakdown::stream_start_cycle`]. Event *i+1*
+    /// starts at the earliest cycle at which no stage is still held by
+    /// event *i* when *i+1*'s window for it opens; with
+    /// [`crate::config::ArchConfig::gc_cross_event`] the GC constraint is
+    /// relaxed by *i+1*'s `bin_cycles` (its bin phase runs in the spare
+    /// bank during *i*'s drain). For identical events the start spacing is
+    /// exactly [`SimBreakdown::ii_cycles`].
+    ///
+    /// With the flag clear (default), events serialize exactly as in PR 5:
+    /// independent runs back to back, except that
+    /// [`crate::config::ArchConfig::gc_cross_event`] threads the bin-only
+    /// overlap window between consecutive events (co-simulated pipelined
+    /// fabric builds only): event *i+1*'s bin phase runs in the spare
+    /// bin-memory bank while event *i*'s compare lanes drain, so the next
+    /// event's GC schedule starts up to `bin_cycles` early — recorded per
+    /// event as [`GcStats::cross_event_overlap_cycles`], so per-event
+    /// stats stay separable.
     ///
     /// Host staging is double-buffered (the same assumption
     /// [`sustained_throughput_hz`] makes), so event *i+1*'s particles are
@@ -369,23 +487,92 @@ impl DataflowEngine {
     /// [`run`]: DataflowEngine::run
     /// [`sustained_throughput_hz`]: DataflowEngine::sustained_throughput_hz
     pub fn run_stream(&self, gs: &[PaddedGraph]) -> Vec<SimResult> {
+        if self.event_pipelining_active() {
+            // II model: standalone per-event sims (gc_window 0 — the GC
+            // overlap lives in the start offsets, not the event timelines),
+            // then the stage-window hand-off schedule.
+            let mut rs: Vec<SimResult> = gs.iter().map(|g| self.run_inner(g, 0)).collect();
+            for i in 1..rs.len() {
+                let (head, tail) = rs.split_at_mut(i);
+                let prev = &head[i - 1].breakdown;
+                let delta = self.min_start_offset(prev, &tail[0].breakdown);
+                tail[0].breakdown.stream_start_cycle = prev.stream_start_cycle + delta;
+            }
+            return rs;
+        }
         let mut window = 0u64;
+        let mut start = 0u64;
         gs.iter()
             .map(|g| {
-                let r = self.run_inner(g, window);
+                let mut r = self.run_inner(g, window);
+                r.breakdown.stream_start_cycle = start;
+                start += r.breakdown.total_cycles;
                 window = match (&r.breakdown.gc, self.cross_event_active()) {
                     (Some(gc), true) => {
                         // the bin engine frees after its span in this
                         // event's timeline; the rest of the event is the
                         // next event's binning window
-                        let bin_span = gc.bin_cycles - gc.cross_event_overlap_cycles;
-                        r.breakdown.total_cycles.saturating_sub(bin_span)
+                        r.breakdown.total_cycles.saturating_sub(gc.bin_span())
                     }
                     _ => 0,
                 };
                 r
             })
             .collect()
+    }
+
+    /// Is [`run_stream`](DataflowEngine::run_stream) the II scheduler?
+    /// (The flag alone decides: the stage-window model covers host and
+    /// fabric builds alike.)
+    pub fn event_pipelining_active(&self) -> bool {
+        self.arch.event_pipelining
+    }
+
+    /// The earliest start-cycle spacing between a scheduled event and the
+    /// next: for every stage, the next event's window for it (shifted by
+    /// the candidate offset) must not open before the previous event's
+    /// closes. Equivalently `max over stages of (prev.end - next.start)`,
+    /// with the GC constraint relaxed by the next event's `bin_cycles`
+    /// under [`crate::config::ArchConfig::gc_cross_event`] (spare bin
+    /// bank), clamped to >= 1 cycle (events are distinct arrivals).
+    fn min_start_offset(&self, prev: &SimBreakdown, next: &SimBreakdown) -> u64 {
+        let mut delta = 1u64;
+        for w in &prev.stages {
+            let Some(nw) = next.stages.iter().find(|x| x.stage == w.stage) else {
+                continue;
+            };
+            let mut next_start = nw.start;
+            if w.stage == Stage::Gc && self.arch.gc_cross_event {
+                // the next event's bin phase overlaps this event's drain
+                next_start += next.gc.as_ref().map(|g| g.bin_cycles).unwrap_or(0);
+            }
+            delta = delta.max(w.end.saturating_sub(next_start));
+        }
+        delta
+    }
+
+    /// Total fabric cycles to drain a stream scheduled by
+    /// [`run_stream`](DataflowEngine::run_stream): the last event's start
+    /// plus its full depth. Under event pipelining this is
+    /// `depth + sum of start spacings` — for identical events,
+    /// `depth + (N-1) * II`; on the serialized path it equals the sum of
+    /// per-event `total_cycles`.
+    pub fn stream_total_cycles(rs: &[SimResult]) -> u64 {
+        rs.last()
+            .map(|r| r.breakdown.stream_start_cycle + r.breakdown.total_cycles)
+            .unwrap_or(0)
+    }
+
+    /// Sustained event rate (events/s) of a scheduled stream:
+    /// `N / (stream_total_cycles * cycle_s)`. Approaches `1 / (II *
+    /// cycle_s)` as the stream grows under event pipelining — the number a
+    /// 200 MHz fabric holds against the L1T arrival rate.
+    pub fn stream_sustained_hz(&self, rs: &[SimResult]) -> f64 {
+        let total = Self::stream_total_cycles(rs);
+        if total == 0 {
+            return 0.0;
+        }
+        rs.len() as f64 / (total as f64 * self.arch.cycle_s())
     }
 
     /// Does this engine overlap event *i+1*'s GC binning with event *i*'s
@@ -509,6 +696,9 @@ impl DataflowEngine {
             + breakdown.layers.iter().map(|s| s.cycles).sum::<u64>()
             + breakdown.head_cycles
             + breakdown.swap_cycles;
+        // the cycle the GC hardware (bin memory, compare lanes, lane edge
+        // FIFOs) frees — the GC stage window end for the II model
+        let mut gc_stage_end = 0u64;
         if let Some(mut cosim) = gc_cosim {
             // Drain the trailing (negative or padding-dropped) compares,
             // assert the bit-identity contract, and let the measured lane
@@ -516,7 +706,9 @@ impl DataflowEngine {
             // path when the graph is too small to hide the GC.
             cosim.finish();
             breakdown.total_cycles = breakdown.total_cycles.max(cosim.finish_cycle());
-            breakdown.gc = Some(cosim.stats());
+            let gstats = cosim.stats();
+            gc_stage_end = cosim.finish_cycle().max(gstats.emit_end_cycle);
+            breakdown.gc = Some(gstats);
         } else if let Some(gcr) = gc {
             let mut gstats = gcr.stats.clone();
             // Fold the layer-0 feed's measured backpressure into the GC
@@ -551,14 +743,68 @@ impl DataflowEngine {
             // bounds the critical path. (gstats.total_cycles stays the
             // unconstrained discovery-schedule end, as documented.)
             breakdown.total_cycles = breakdown.total_cycles.max(gc_finish);
+            gc_stage_end = gc_finish.max(gstats.emit_end_cycle);
             breakdown.gc = Some(gstats);
         }
+
+        // --- stage busy windows + the initiation interval -----------------
+        // Embed, each layer (bank swap included: the NE bank pair hands off
+        // at the window end), and the head tile the formula/cycle-loop
+        // timeline back to back; the GC window (fabric only) overlaps them
+        // from cycle 0 until the hardware's measured finish. Every end is
+        // <= total_cycles, which keeps II <= depth — the never-slower
+        // property of the stream scheduler.
+        breakdown.stages.push(StageWindow {
+            stage: Stage::Embed,
+            start: 0,
+            end: breakdown.embed_cycles,
+        });
+        if breakdown.gc.is_some() {
+            breakdown.stages.push(StageWindow { stage: Stage::Gc, start: 0, end: gc_stage_end });
+        }
+        let mut cursor = breakdown.embed_cycles;
+        for (l, s) in breakdown.layers.iter().enumerate() {
+            breakdown.stages.push(StageWindow {
+                stage: Stage::Layer(l),
+                start: cursor,
+                end: cursor + s.cycles + 1,
+            });
+            cursor += s.cycles + 1;
+        }
+        breakdown.stages.push(StageWindow {
+            stage: Stage::Head,
+            start: cursor,
+            end: cursor + breakdown.head_cycles,
+        });
+        breakdown.ii_cycles = breakdown
+            .stages
+            .iter()
+            .map(|w| self.effective_occupancy(w, &breakdown))
+            .max()
+            .unwrap_or(1)
+            .max(1);
 
         let compute_s = breakdown.total_cycles as f64 * self.arch.cycle_s();
         let e2e_s = breakdown.transfer_in_s + compute_s + breakdown.transfer_out_s;
         let ne_memory_bytes = self.ne_memory_bytes(g.bucket.n_max, d);
 
         SimResult { output, breakdown, compute_s, e2e_s, ne_memory_bytes }
+    }
+
+    /// A stage window's occupancy as the II scheduler prices it: the raw
+    /// window, except that with
+    /// [`crate::config::ArchConfig::gc_cross_event`] the GC stage counts
+    /// `bin_cycles` less — the spare bin-memory bank lets the *next*
+    /// event's bin phase run while this event's compare lanes drain, so
+    /// only the post-bin tail of the GC window gates the hand-off.
+    fn effective_occupancy(&self, w: &StageWindow, b: &SimBreakdown) -> u64 {
+        let occ = w.occupancy();
+        if w.stage == Stage::Gc && self.arch.gc_cross_event {
+            let bin = b.gc.as_ref().map(|g| g.bin_cycles).unwrap_or(0);
+            occ.saturating_sub(bin)
+        } else {
+            occ
+        }
     }
 
     /// Sustained throughput (events/s) when events stream back-to-back:
@@ -1621,17 +1867,224 @@ mod tests {
 
     #[test]
     fn run_stream_equals_independent_runs_without_cross_event() {
-        let eng = fabric_engine_arch(ArchConfig::default());
-        let gs = [sample(1), sample(2), sample(3)];
-        let stream = eng.run_stream(&gs);
-        assert_eq!(stream.len(), 3);
-        for (r, g) in stream.iter().zip(&gs) {
-            let solo = eng.run(g);
-            assert_eq!(r.output.weights, solo.output.weights);
-            assert_eq!(r.breakdown.total_cycles, solo.breakdown.total_cycles);
-            let gc = r.breakdown.gc.as_ref().unwrap();
-            assert_eq!(gc.cross_event_overlap_cycles, 0);
+        // Property form of the PR 5 pin, now whole-struct: with event
+        // pipelining off and no cross-event GC, run_stream over any event
+        // mix on any fabric shape is exactly N independent runs — every
+        // SimBreakdown field (stages, ii_cycles, GcStats included) equal,
+        // with only stream_start_cycle recording the serialized schedule.
+        crate::util::prop::check(0xEE1, 6, |pg| {
+            let arch = ArchConfig {
+                p_edge: pg.usize_in(2, 8),
+                p_node: pg.usize_in(2, 4),
+                p_gc: pg.usize_in(2, 8),
+                gc_fifo_depth: *pg.pick(&[4usize, 64, 1 << 14]),
+                gc_skip_on_stall: pg.bool(),
+                ..Default::default()
+            };
+            let eng = fabric_engine_arch(arch);
+            let pileup = pg.f64_in(10.0, 120.0);
+            let gs: Vec<PaddedGraph> = (0..3)
+                .map(|_| {
+                    let mut gen = EventGenerator::new(
+                        pg.rng.next_u64(),
+                        crate::physics::GeneratorConfig {
+                            mean_pileup: pileup,
+                            ..Default::default()
+                        },
+                    );
+                    let ev = gen.generate();
+                    pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+                })
+                .collect();
+            let stream = eng.run_stream(&gs);
+            assert_eq!(stream.len(), gs.len());
+            let mut start = 0u64;
+            for (r, g) in stream.iter().zip(&gs) {
+                let solo = eng.run(g);
+                assert_eq!(r.output.weights, solo.output.weights);
+                assert_eq!(r.output.met_xy, solo.output.met_xy);
+                assert_eq!(r.breakdown.stream_start_cycle, start);
+                let mut b = r.breakdown.clone();
+                b.stream_start_cycle = 0;
+                assert_eq!(b, solo.breakdown, "whole-breakdown equality");
+                assert_eq!(r.breakdown.gc.as_ref().unwrap().cross_event_overlap_cycles, 0);
+                start += r.breakdown.total_cycles;
+            }
+            assert_eq!(
+                DataflowEngine::stream_total_cycles(&stream),
+                stream.iter().map(|r| r.breakdown.total_cycles).sum::<u64>(),
+                "the serialized stream drains in the sum of its events"
+            );
+        });
+    }
+
+    #[test]
+    fn stage_windows_tile_the_timeline_and_bound_ii() {
+        // The II model's structural contract: embed/layer/head windows
+        // tile the formula timeline back to back (bank swaps included),
+        // the GC window overlaps from cycle 0 (fabric builds only), every
+        // window ends inside the event, and the reported II is the widest
+        // window — which is what makes the stream scheduler never slower.
+        let fabric = fabric_engine_arch(ArchConfig::default());
+        let host = engine(BroadcastMode::Broadcast);
+        for (eng, has_gc) in [(&fabric, true), (&host, false)] {
+            let r = eng.run(&sample(5));
+            let b = &r.breakdown;
+            assert_eq!(b.stream_start_cycle, 0, "solo runs are unscheduled");
+            assert_eq!(b.stages.iter().any(|w| w.stage == Stage::Gc), has_gc);
+            assert_eq!(
+                b.stages[0],
+                StageWindow { stage: Stage::Embed, start: 0, end: b.embed_cycles }
+            );
+            let head = b.stages.iter().find(|w| w.stage == Stage::Head).unwrap();
+            assert_eq!(
+                head.end,
+                b.embed_cycles
+                    + b.layers.iter().map(|l| l.cycles).sum::<u64>()
+                    + b.swap_cycles
+                    + b.head_cycles,
+                "head closes the formula path"
+            );
+            for w in &b.stages {
+                assert!(w.end >= w.start, "{} window inverted", w.stage);
+                assert!(
+                    w.end <= b.total_cycles,
+                    "{} window must end inside the event: {} > {}",
+                    w.stage,
+                    w.end,
+                    b.total_cycles
+                );
+            }
+            assert!(b.ii_cycles >= 1 && b.ii_cycles <= b.total_cycles);
+            // without cross-event GC the II is literally the widest window
+            assert_eq!(
+                b.ii_cycles,
+                b.stages.iter().map(|w| w.occupancy()).max().unwrap()
+            );
         }
+    }
+
+    #[test]
+    fn event_pipelining_spacing_is_ii_and_stream_drains_in_depth_plus_n_minus_1_ii() {
+        // The tentpole's acceptance criterion: for a >= 8-event stream with
+        // event pipelining on, steady-state cost per event is exactly
+        // ii_cycles and the stream drains in depth + (N-1) * II — with and
+        // without the GC bin overlap folded in.
+        let mut ii_by_xevent = Vec::new();
+        for xevent in [false, true] {
+            let arch = ArchConfig {
+                event_pipelining: true,
+                gc_cross_event: xevent,
+                gc_fifo_depth: 1 << 14,
+                ..Default::default()
+            };
+            let eng = fabric_engine_arch(arch);
+            assert!(eng.event_pipelining_active());
+            let g = sample(12);
+            let solo = eng.run(&g);
+            let ii = solo.breakdown.ii_cycles;
+            assert!(ii >= 1);
+            assert!(
+                ii < solo.breakdown.total_cycles,
+                "a multi-stage fabric must overlap: II {ii} vs depth {}",
+                solo.breakdown.total_cycles
+            );
+            let n = 8usize;
+            let gs = vec![g.clone(); n];
+            let stream = eng.run_stream(&gs);
+            for r in &stream {
+                // the schedule moves start cycles, never outputs or the
+                // per-event timeline
+                assert_eq!(r.output.weights, solo.output.weights, "xevent={xevent}");
+                assert_eq!(r.output.met_xy, solo.output.met_xy, "xevent={xevent}");
+                let mut b = r.breakdown.clone();
+                b.stream_start_cycle = 0;
+                assert_eq!(b, solo.breakdown, "xevent={xevent}");
+            }
+            // steady state: identical events enter exactly II apart
+            for w in stream.windows(2) {
+                assert_eq!(
+                    w[1].breakdown.stream_start_cycle - w[0].breakdown.stream_start_cycle,
+                    ii,
+                    "xevent={xevent}"
+                );
+            }
+            assert_eq!(
+                DataflowEngine::stream_total_cycles(&stream),
+                solo.breakdown.total_cycles + (n as u64 - 1) * ii,
+                "xevent={xevent}"
+            );
+            // the sustained rate approaches the II rate from below
+            let hz = eng.stream_sustained_hz(&stream);
+            let ii_hz = 1.0 / (ii as f64 * eng.arch.cycle_s());
+            assert!(hz > 0.0 && hz < ii_hz + 1e-9, "xevent={xevent}: {hz} vs {ii_hz}");
+            ii_by_xevent.push(ii);
+        }
+        // hiding the bin phase in the spare bank can only relax the GC
+        // constraint on the initiation interval
+        assert!(ii_by_xevent[1] <= ii_by_xevent[0]);
+    }
+
+    #[test]
+    fn event_pipelining_never_slower_than_serialized_stream() {
+        // Satellite pin: a pipelined mixed-size stream drains in no more
+        // cycles than the same events run independently back to back.
+        let piped =
+            fabric_engine_arch(ArchConfig { event_pipelining: true, ..Default::default() });
+        let serial = fabric_engine_arch(ArchConfig::default());
+        let gs: Vec<PaddedGraph> = [1u64, 7, 12, 3, 5].iter().map(|&s| sample(s)).collect();
+        let ps = piped.run_stream(&gs);
+        let ss = serial.run_stream(&gs);
+        for w in ps.windows(2) {
+            assert!(
+                w[1].breakdown.stream_start_cycle > w[0].breakdown.stream_start_cycle,
+                "events are distinct arrivals"
+            );
+        }
+        for (p, s) in ps.iter().zip(&ss) {
+            assert_eq!(p.output.weights, s.output.weights);
+            assert_eq!(p.output.met_xy, s.output.met_xy);
+        }
+        let piped_total = DataflowEngine::stream_total_cycles(&ps);
+        let serial_total = DataflowEngine::stream_total_cycles(&ss);
+        assert!(
+            piped_total <= serial_total,
+            "pipelining must never cost cycles: {piped_total} !<= {serial_total}"
+        );
+        assert!(piped.stream_sustained_hz(&ps) >= serial.stream_sustained_hz(&ss));
+    }
+
+    #[test]
+    fn gc_cross_event_stream_reproduces_pr5_window_threading_exactly() {
+        // Regression pin for the PR 5 baseline: with event pipelining off,
+        // run_stream's cross-event path threads the bin window with the
+        // exact pre-II-model formula — whole-struct equal per event
+        // (GcStats included via SimBreakdown's derived equality), so any
+        // drift in the legacy schedule or in bin_span() lands here.
+        let arch = ArchConfig { gc_cross_event: true, ..Default::default() };
+        let eng = fabric_engine_arch(arch);
+        let gs = [sample(1), sample(7), sample(12)];
+        let stream = eng.run_stream(&gs);
+        let mut window = 0u64;
+        let mut start = 0u64;
+        for (r, g) in stream.iter().zip(&gs) {
+            let mut expect = eng.run_inner(g, window);
+            expect.breakdown.stream_start_cycle = start;
+            assert_eq!(r.breakdown, expect.breakdown);
+            assert_eq!(r.output.weights, expect.output.weights);
+            let gc = r.breakdown.gc.as_ref().unwrap();
+            // PR 5's drain window, spelled out pre-refactor: total minus
+            // the bin phase's span on this event's own timeline
+            window = r.breakdown.total_cycles
+                - (gc.bin_cycles - gc.cross_event_overlap_cycles);
+            assert_eq!(window, r.breakdown.total_cycles - gc.bin_span());
+            start += r.breakdown.total_cycles;
+        }
+        assert_eq!(
+            DataflowEngine::stream_total_cycles(&stream),
+            stream.iter().map(|r| r.breakdown.total_cycles).sum::<u64>(),
+            "the legacy cross-event stream still serializes event depths"
+        );
     }
 
     #[test]

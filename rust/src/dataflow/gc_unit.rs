@@ -253,6 +253,19 @@ pub struct GcStats {
     pub cross_event_overlap_cycles: u64,
 }
 
+impl GcStats {
+    /// The bin phase's span on *this event's own* timeline: `bin_cycles`
+    /// minus the head start that ran during the previous event's drain
+    /// ([`Self::cross_event_overlap_cycles`]). The spare bin-memory bank
+    /// frees at this cycle, opening the next event's binning window — the
+    /// quantity both cross-event models (the PR 5 bin-only overlap and the
+    /// whole-fabric event-pipelining scheduler, which subsumes it as its
+    /// GC-stage special case) are built on.
+    pub fn bin_span(&self) -> u64 {
+        self.bin_cycles - self.cross_event_overlap_cycles
+    }
+}
+
 /// Result of one GC pass: the per-edge discovery schedule plus stats.
 #[derive(Clone, Debug)]
 pub struct GcRun {

@@ -50,6 +50,11 @@ pub struct PowerModel {
     /// reads + the priority re-arbitration mux, toggling every issue
     /// slot; only drawn when `ArchConfig::gc_skip_on_stall` is set).
     pub w_per_gc_scoreboard_active: f64,
+    /// Dynamic power for the whole-event II pipelining control: the
+    /// per-boundary hand-off schedulers plus the extra ingress staging
+    /// bank's write traffic (only drawn when
+    /// `ArchConfig::event_pipelining` is set).
+    pub w_evpipe_ctrl: f64,
     /// Broadcast/adapter/FIFO fabric switching at full streaming rate.
     pub w_fabric_stream: f64,
     // GPU model (RTX A6000)
@@ -70,6 +75,7 @@ impl PowerModel {
             w_per_gc_lane_active: 0.07,
             w_per_gc_fifo_active: 0.02,
             w_per_gc_scoreboard_active: 0.015,
+            w_evpipe_ctrl: 0.06,
             w_fabric_stream: 0.40,
             gpu_idle_w: 22.0,
             gpu_dynamic_w: 19.0,
@@ -118,12 +124,20 @@ impl PowerModel {
         } else {
             0.0
         };
+        // the hand-off schedulers and the extra ingress bank toggle with
+        // the streaming fabric whenever event overlap is configured
+        let evpipe_w = if self.arch.event_pipelining {
+            self.w_evpipe_ctrl * stream_util.min(1.0)
+        } else {
+            0.0
+        };
         self.fpga_static_w
             + self.w_per_mp_active * self.arch.p_edge as f64 * mp_util.min(1.0)
             + self.w_per_nt_active * self.arch.p_node as f64 * nt_util.min(1.0)
             + self.w_per_gc_lane_active * self.arch.p_gc as f64 * gc_util.min(1.0)
             + self.w_per_gc_fifo_active * self.arch.p_gc as f64 * gc_fifo_util.min(1.0)
             + scoreboard_w
+            + evpipe_w
             + self.w_fabric_stream * stream_util.min(1.0)
     }
 
@@ -235,6 +249,16 @@ mod tests {
             .fpga_from_sim(&sim);
         assert!(skip > base, "scoreboard must draw power: {skip} !> {base}");
         assert!(skip - base < 0.1, "but only a sliver of a watt");
+    }
+
+    #[test]
+    fn event_pipelining_control_draws_power() {
+        let s = sim();
+        let base = PowerModel::new(ArchConfig::default()).fpga_from_sim(&s);
+        let piped = PowerModel::new(ArchConfig { event_pipelining: true, ..Default::default() })
+            .fpga_from_sim(&s);
+        assert!(piped > base, "hand-off control must draw power: {piped} !> {base}");
+        assert!(piped - base < 0.1, "but only a sliver of a watt");
     }
 
     #[test]

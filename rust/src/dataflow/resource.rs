@@ -99,6 +99,12 @@ const GC_SCOREBOARD_ENTRY_BYTES: u64 = 8;
 // memories (the second bank itself shows up as doubled bin BRAM).
 const LUT_GC_XEVENT_CTRL: u64 = 900;
 const REG_GC_XEVENT_CTRL: u64 = 800;
+// Whole-event II pipelining: one hand-off scheduler per stage boundary
+// (embed→layer 0, each layer→layer bank swap, last layer→head) that
+// launches the next event into a stage the cycle the current one vacates
+// it — occupancy-window tracking plus the bank-grant FSM.
+const LUT_EVPIPE_CTRL_PER_BOUNDARY: u64 = 1_100;
+const REG_EVPIPE_CTRL_PER_BOUNDARY: u64 = 950;
 /// Bin memory is sized for the default δ = 0.8 grid (7 x 7 η-φ cells) and
 /// replicated per lane for conflict-free neighbourhood reads; each entry
 /// holds (index, η, φ) = 12 bytes.
@@ -145,6 +151,12 @@ impl ResourceModel {
             lut += LUT_GC_XEVENT_CTRL;
             register += REG_GC_XEVENT_CTRL;
         }
+        if a.event_pipelining {
+            // embed→layer 0, the n_layers-1 bank swaps, last layer→head
+            let boundaries = (m.n_layers + 1) as u64;
+            lut += boundaries * LUT_EVPIPE_CTRL_PER_BOUNDARY;
+            register += boundaries * REG_EVPIPE_CTRL_PER_BOUNDARY;
+        }
 
         // --- BRAM: NE buffers, weight ROMs, FIFOs, CSR/edge store ----------------
         let ne_buffer = 2 * self.n_max * d * 4; // double buffer
@@ -160,6 +172,14 @@ impl ResourceModel {
         let capture_buffer = self.n_max * d * 4;
         // host<->fabric staging (features in, weights/MET out, ping-pong)
         let staging = 2 * (self.n_max * (6 + 2) * 4 + self.e_max * 2 * 4);
+        // whole-event pipelining holds the *next* event's raw features and
+        // CSR edge list on-chip while the current event computes: one extra
+        // ingress bank each
+        let evpipe_staging = if a.event_pipelining {
+            self.n_max * (6 + 2) * 4 + self.e_max * 2 * 4
+        } else {
+            0
+        };
         // GC unit: per-lane bin-memory replica (two ping-pong banks when
         // cross-event pipelining bins event i+1 during event i's drain),
         // the particle coordinate store (η, φ per node), one bounded
@@ -183,6 +203,7 @@ impl ResourceModel {
             + (a.p_node as u64) * bram_blocks(nt_rom)
             + bram_blocks(edge_store)
             + bram_blocks(staging)
+            + bram_blocks(evpipe_staging)
             + bram_blocks(fifo_bytes)
             // aggregation scratch per NT unit: agg row + degree counters
             + (a.p_node as u64) * bram_blocks(self.n_max / a.p_node.max(1) * d * 4 + self.n_max)
@@ -330,6 +351,22 @@ mod tests {
         assert!(xevent.bram > base.bram, "ping-pong bin banks cost BRAM");
         assert!(xevent.lut > base.lut, "bank-select control costs LUT");
         assert_eq!(xevent.dsp, base.dsp);
+    }
+
+    #[test]
+    fn event_pipelining_prices_handoff_control_and_ingress_banks() {
+        let base = default_model().estimate();
+        let piped = ResourceModel::new(
+            ArchConfig { event_pipelining: true, ..Default::default() },
+            ModelConfig::default(),
+            256,
+            12288,
+        )
+        .estimate();
+        assert!(piped.lut > base.lut, "per-boundary hand-off schedulers cost LUT");
+        assert!(piped.register > base.register);
+        assert!(piped.bram > base.bram, "extra ingress staging banks cost BRAM");
+        assert_eq!(piped.dsp, base.dsp, "event overlap is control + memory, not compute");
     }
 
     #[test]

@@ -130,6 +130,9 @@ fn apply_gc_overrides(args: &Args, arch: &mut ArchConfig) -> anyhow::Result<()> 
     if args.flag("gc-cross-event") {
         arch.gc_cross_event = true;
     }
+    if args.flag("event-pipelining") {
+        arch.event_pipelining = true;
+    }
     arch.validate()?;
     Ok(())
 }
@@ -207,6 +210,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .arg("--gc-schedule S", "GC phases: pipelined | serialized (default pipelined)")
                 .arg("--gc-skip-on-stall", "GC lanes yield gating waits to ready particles")
                 .arg("--gc-cross-event", "bin event i+1 while event i's GC lanes drain")
+                .arg("--event-pipelining", "overlap whole events at the fabric's II")
                 .arg("--paced", "honour source arrival times in wall-clock")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default 60)")
@@ -487,6 +491,7 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
         ("BENCH_parallelism.json", "baselines/BENCH_parallelism.json"),
         ("BENCH_graphbuild.json", "baselines/BENCH_graphbuild.json"),
         ("BENCH_farm.json", "baselines/BENCH_farm.json"),
+        ("BENCH_stream.json", "baselines/BENCH_stream.json"),
     ];
     let mut failures = 0usize;
     for (emitted, baseline) in pairs {

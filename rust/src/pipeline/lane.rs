@@ -68,9 +68,18 @@ struct Meta {
     enqueued_at: Instant,
 }
 
-/// End-of-run stats a lane reports back (tagged with its lane id).
+/// End-of-run stats a lane reports back (tagged with its lane id). Also
+/// the lane's running accumulator: [`run_batch`] folds each batch in.
 pub(crate) struct LaneStats {
     pub batch_hist: Vec<u64>,
+    /// Total modelled device occupancy (seconds): the sum over batches of
+    /// the batch's last device completion time. Under event pipelining a
+    /// batch's span is `depth + (k-1)*II`, so this measures the *sustained*
+    /// device timeline, not per-event latencies summed. 0.0 for backends
+    /// that model no device.
+    pub device_busy_s: f64,
+    /// Events inside the batches counted in `device_busy_s`.
+    pub device_events: u64,
 }
 
 /// Everything a lane thread needs. `lane_id` tags every record and stats
@@ -107,7 +116,11 @@ pub(crate) fn worker_loop<B: InferenceBackend>(rx: mpsc::Receiver<LaneEvent>, ct
     let mut builder = GraphBuilder::new(ctx.delta);
     let mut batcher: DynamicBatcher<Prepared> =
         DynamicBatcher::new(ctx.max_batch, ctx.batch_timeout);
-    let mut hist = vec![0u64; ctx.max_batch];
+    let mut stats = LaneStats {
+        batch_hist: vec![0u64; ctx.max_batch],
+        device_busy_s: 0.0,
+        device_events: 0,
+    };
     loop {
         // Sleep exactly until the flush deadline (or the next event) — the
         // batcher's ready_at() keys off its oldest pending request.
@@ -141,12 +154,12 @@ pub(crate) fn worker_loop<B: InferenceBackend>(rx: mpsc::Receiver<LaneEvent>, ct
                 let now = Instant::now();
                 if batcher.ready(now) {
                     let batch = batcher.flush(now);
-                    run_batch(batch, &ctx, &mut hist);
+                    run_batch(batch, &ctx, &mut stats);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 let batch = batcher.flush(Instant::now());
-                run_batch(batch, &ctx, &mut hist);
+                run_batch(batch, &ctx, &mut stats);
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
@@ -157,21 +170,21 @@ pub(crate) fn worker_loop<B: InferenceBackend>(rx: mpsc::Receiver<LaneEvent>, ct
         if batch.is_empty() {
             break;
         }
-        run_batch(batch, &ctx, &mut hist);
+        run_batch(batch, &ctx, &mut stats);
     }
-    let _ = ctx.stats_tx.send((ctx.lane_id, LaneStats { batch_hist: hist }));
+    let _ = ctx.stats_tx.send((ctx.lane_id, stats));
 }
 
 fn run_batch<B: InferenceBackend>(
     batch: Vec<Pending<Prepared>>,
     ctx: &LaneCtx<B>,
-    hist: &mut [u64],
+    stats: &mut LaneStats,
 ) {
     if batch.is_empty() {
         return;
     }
     let len = batch.len();
-    hist[len - 1] += 1;
+    stats.batch_hist[len - 1] += 1;
     let flushed_at = Instant::now();
     let mut metas: Vec<Meta> = Vec::with_capacity(len);
     let mut graphs = Vec::with_capacity(len);
@@ -208,6 +221,14 @@ fn run_batch<B: InferenceBackend>(
             None
         }
     });
+    if let Some(d) = &device {
+        if let Some(&last) = d.last() {
+            // the batch occupied the modelled device until its last
+            // completion — the sustained-rate denominator
+            stats.device_busy_s += last;
+            stats.device_events += len as u64;
+        }
+    }
     let done_at = Instant::now();
     let infer_s = done_at.duration_since(ti).as_secs_f64() / len as f64;
     if let Some(bits) = &ctx.service_ewma_bits {

@@ -117,6 +117,11 @@ pub struct ServeReport {
     /// overlap only materialises across batched events, and what actually
     /// overlapped is measured per event by the engine's GC stats.
     pub gc_mode: Option<String>,
+    /// Whether the backend packs consecutive batched events at the
+    /// initiation interval (the simulated fabric's
+    /// `ArchConfig::event_pipelining`). Configuration, like `gc_mode`;
+    /// the measured effect is `device_sustained_eps`.
+    pub event_pipelining: bool,
     pub source: String,
     pub events: usize,
     pub wall_s: f64,
@@ -133,6 +138,17 @@ pub struct ServeReport {
     pub device_median_ms: Option<f64>,
     pub device_p99_ms: Option<f64>,
     pub device_p999_ms: Option<f64>,
+    /// Total modelled device occupancy (seconds): each batch's last device
+    /// completion time, summed over batches and lanes. 0.0 when the
+    /// backend models no device.
+    pub device_busy_s: f64,
+    /// Sustained device event rate, `events / device_busy_s` — what the
+    /// modelled fabric holds at 200 MHz once batches stream back-to-back,
+    /// the number to compare against the event arrival rate. Under event
+    /// pipelining batch members are II-spaced, so this approaches
+    /// `1 / (II * cycle_s)` as batches fill; without it, `1 / e2e`. None
+    /// when the backend models no device.
+    pub device_sustained_eps: Option<f64>,
     /// End-to-end latency (lane enqueue -> inference complete), p50 over
     /// served events. The farm's SLO admission policy keys off this path.
     pub latency_median_ms: f64,
@@ -195,12 +211,24 @@ impl ServeReport {
 
     pub fn summary(&self) -> String {
         let dev = match (self.device_median_ms, self.device_p99_ms) {
-            (Some(m), Some(p)) => format!(" device(median={m:.3}ms p99={p:.3}ms)"),
+            (Some(m), Some(p)) => {
+                let sus = match self.device_sustained_eps {
+                    Some(s) => format!(" sustained={s:.0}ev/s"),
+                    None => String::new(),
+                };
+                format!(" device(median={m:.3}ms p99={p:.3}ms{sus})")
+            }
             _ => String::new(),
         };
-        let gc = match &self.gc_mode {
-            Some(mode) => format!(" gc[{mode}]"),
-            None => String::new(),
+        let gc = {
+            let mut s = match &self.gc_mode {
+                Some(mode) => format!(" gc[{mode}]"),
+                None => String::new(),
+            };
+            if self.event_pipelining {
+                s.push_str(" ii[event-pipelined]");
+            }
+            s
         };
         format!(
             "[{}<-{} @{}] events={} wall={:.2}s throughput={:.0}ev/s \
@@ -233,6 +261,110 @@ impl ServeReport {
             self.failed,
             self.truncated,
         )
+    }
+
+    /// Serialize the report's aggregates to a JSON document. Per-event
+    /// `records` are deliberately *not* serialized (they can be arbitrarily
+    /// large and stream separately); everything else round-trips exactly
+    /// through [`from_json`](Self::from_json).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        let optf = |x: Option<f64>| x.map(Value::Num).unwrap_or(Value::Null);
+        obj(vec![
+            ("backend", self.backend.as_str().into()),
+            ("precision", self.precision.as_str().into()),
+            ("build_site", self.build_site.as_str().into()),
+            (
+                "gc_mode",
+                match &self.gc_mode {
+                    Some(m) => m.as_str().into(),
+                    None => Value::Null,
+                },
+            ),
+            ("event_pipelining", self.event_pipelining.into()),
+            ("source", self.source.as_str().into()),
+            ("events", self.events.into()),
+            ("wall_s", self.wall_s.into()),
+            ("throughput_hz", self.throughput_hz.into()),
+            ("build_median_ms", self.build_median_ms.into()),
+            ("build_p99_ms", self.build_p99_ms.into()),
+            ("queue_median_ms", self.queue_median_ms.into()),
+            ("infer_median_ms", self.infer_median_ms.into()),
+            ("infer_p99_ms", self.infer_p99_ms.into()),
+            ("infer_p999_ms", self.infer_p999_ms.into()),
+            ("device_median_ms", optf(self.device_median_ms)),
+            ("device_p99_ms", optf(self.device_p99_ms)),
+            ("device_p999_ms", optf(self.device_p999_ms)),
+            ("device_busy_s", self.device_busy_s.into()),
+            ("device_sustained_eps", optf(self.device_sustained_eps)),
+            ("latency_median_ms", self.latency_median_ms.into()),
+            ("latency_p99_ms", self.latency_p99_ms.into()),
+            ("latency_p999_ms", self.latency_p999_ms.into()),
+            ("accept_frac", self.accept_frac.into()),
+            ("dropped", (self.dropped as f64).into()),
+            ("failed", (self.failed as f64).into()),
+            ("truncated", (self.truncated as f64).into()),
+            ("batches", (self.batches as f64).into()),
+            (
+                "batch_hist",
+                Value::Arr(self.batch_hist.iter().map(|&c| Value::Num(c as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild a report from [`to_json`](Self::to_json) output. `records`
+    /// comes back empty — it is not serialized.
+    pub fn from_json(v: &crate::util::json::Value) -> anyhow::Result<ServeReport> {
+        use crate::util::json::Value;
+        let s = |k: &str| -> anyhow::Result<String> { Ok(v.get(k)?.as_str()?.to_string()) };
+        let f = |k: &str| -> anyhow::Result<f64> { Ok(v.get(k)?.as_f64()?) };
+        let u = |k: &str| -> anyhow::Result<u64> { Ok(v.get(k)?.as_i64()? as u64) };
+        let optf = |k: &str| -> anyhow::Result<Option<f64>> {
+            Ok(match v.get(k)? {
+                Value::Null => None,
+                x => Some(x.as_f64()?),
+            })
+        };
+        Ok(ServeReport {
+            backend: s("backend")?,
+            precision: s("precision")?,
+            build_site: s("build_site")?,
+            gc_mode: match v.get("gc_mode")? {
+                Value::Null => None,
+                x => Some(x.as_str()?.to_string()),
+            },
+            event_pipelining: v.get("event_pipelining")?.as_bool()?,
+            source: s("source")?,
+            events: v.get("events")?.as_usize()?,
+            wall_s: f("wall_s")?,
+            throughput_hz: f("throughput_hz")?,
+            build_median_ms: f("build_median_ms")?,
+            build_p99_ms: f("build_p99_ms")?,
+            queue_median_ms: f("queue_median_ms")?,
+            infer_median_ms: f("infer_median_ms")?,
+            infer_p99_ms: f("infer_p99_ms")?,
+            infer_p999_ms: f("infer_p999_ms")?,
+            device_median_ms: optf("device_median_ms")?,
+            device_p99_ms: optf("device_p99_ms")?,
+            device_p999_ms: optf("device_p999_ms")?,
+            device_busy_s: f("device_busy_s")?,
+            device_sustained_eps: optf("device_sustained_eps")?,
+            latency_median_ms: f("latency_median_ms")?,
+            latency_p99_ms: f("latency_p99_ms")?,
+            latency_p999_ms: f("latency_p999_ms")?,
+            accept_frac: f("accept_frac")?,
+            dropped: u("dropped")?,
+            failed: u("failed")?,
+            truncated: u("truncated")?,
+            batches: u("batches")?,
+            batch_hist: v
+                .get("batch_hist")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_i64().map(|i| i as u64))
+                .collect::<Result<Vec<_>, _>>()?,
+            records: Vec::new(),
+        })
     }
 }
 
@@ -589,6 +721,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
         let precision = self.backend.precision().to_string();
         let build_site = self.backend.build_site().to_string();
         let gc_mode = self.backend.gc_mode();
+        let event_pipelining = self.backend.event_pipelining();
         let source_name = self.source.name().to_string();
         let dropped = Arc::new(AtomicU64::new(0));
         let failed = Arc::new(AtomicU64::new(0));
@@ -686,6 +819,7 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
             precision,
             build_site,
             gc_mode,
+            event_pipelining,
             source: source_name,
             max_batch: self.max_batch,
             t0,
@@ -721,6 +855,7 @@ pub struct RecordStream {
     precision: String,
     build_site: String,
     gc_mode: Option<String>,
+    event_pipelining: bool,
     source: String,
     max_batch: usize,
     t0: Instant,
@@ -747,10 +882,14 @@ impl RecordStream {
         let wall_s = self.t0.elapsed().as_secs_f64();
 
         let mut batch_hist = vec![0u64; self.max_batch];
+        let mut device_busy_s = 0.0f64;
+        let mut device_events = 0u64;
         while let Ok((_, ws)) = self.stats_rx.try_recv() {
             for (i, c) in ws.batch_hist.iter().enumerate() {
                 batch_hist[i] += c;
             }
+            device_busy_s += ws.device_busy_s;
+            device_events += ws.device_events;
         }
         let batches: u64 = batch_hist.iter().sum();
 
@@ -769,6 +908,7 @@ impl RecordStream {
             precision: self.precision.clone(),
             build_site: self.build_site.clone(),
             gc_mode: self.gc_mode.clone(),
+            event_pipelining: self.event_pipelining,
             source: self.source.clone(),
             events: records.len(),
             wall_s,
@@ -782,6 +922,12 @@ impl RecordStream {
             device_median_ms: if device.is_empty() { None } else { Some(med(&device)) },
             device_p99_ms: if device.is_empty() { None } else { Some(p99(&device)) },
             device_p999_ms: if device.is_empty() { None } else { Some(p999(&device)) },
+            device_busy_s,
+            device_sustained_eps: if device_busy_s > 0.0 {
+                Some(device_events as f64 / device_busy_s)
+            } else {
+                None
+            },
             latency_median_ms: med(&latency),
             latency_p99_ms: p99(&latency),
             latency_p999_ms: p999(&latency),
@@ -1027,6 +1173,86 @@ mod tests {
         // and the modelled device is faster with the overlapped GC
         let dev = |r: &ServeReport| r.device_median_ms.expect("fpga models a device");
         assert!(dev(&fabric) < dev(&host), "{} !< {}", dev(&fabric), dev(&host));
+    }
+
+    #[test]
+    fn event_pipelined_serve_reports_ii_and_sustained_rate() {
+        use crate::config::ArchConfig;
+        use crate::dataflow::DataflowEngine;
+        let cfg = ModelConfig::default();
+        let serve = |event_pipelining: bool| {
+            let engine = DataflowEngine::new(
+                ArchConfig { event_pipelining, ..Default::default() },
+                L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 72)).unwrap(),
+            )
+            .unwrap();
+            Pipeline::builder()
+                .source(SyntheticSource::new(12, 4, GeneratorConfig::default()))
+                .backend(Backend::Fpga(engine))
+                .build_site(BuildSite::Fabric)
+                .batching(4, Duration::from_millis(5))
+                .workers(2)
+                .build()
+                .unwrap()
+                .serve()
+        };
+        let piped = serve(true);
+        assert!(piped.event_pipelining, "the report carries the backend's configuration");
+        assert!(piped.summary().contains("ii[event-pipelined]"));
+        // the measured effect: device occupancy accumulates per batch and
+        // yields a sustained rate alongside the latency percentiles
+        assert!(piped.device_busy_s > 0.0);
+        let eps = piped.device_sustained_eps.expect("fpga models a device");
+        assert!(eps > 0.0);
+        assert!(piped.summary().contains("sustained="));
+        let plain = serve(false);
+        assert!(!plain.event_pipelining);
+        assert!(!plain.summary().contains("ii[event-pipelined]"));
+        assert!(plain.device_sustained_eps.is_some(), "sustained rate is not gated on the II");
+        // a backend with no modelled device reports neither field
+        let cpu = Pipeline::builder()
+            .source(SyntheticSource::new(6, 4, GeneratorConfig::default()))
+            .backend(cpu_backend(73))
+            .workers(1)
+            .build()
+            .unwrap()
+            .serve();
+        assert!(!cpu.event_pipelining);
+        assert_eq!(cpu.device_busy_s, 0.0);
+        assert_eq!(cpu.device_sustained_eps, None);
+        assert!(!cpu.summary().contains("sustained="));
+    }
+
+    #[test]
+    fn serve_report_json_round_trips_exactly() {
+        use crate::config::ArchConfig;
+        use crate::dataflow::DataflowEngine;
+        let cfg = ModelConfig::default();
+        let engine = DataflowEngine::new(
+            ArchConfig { event_pipelining: true, ..Default::default() },
+            L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 74)).unwrap(),
+        )
+        .unwrap();
+        let report = Pipeline::builder()
+            .source(SyntheticSource::new(10, 4, GeneratorConfig::default()))
+            .backend(Backend::Fpga(engine))
+            .build_site(BuildSite::Fabric)
+            .workers(2)
+            .build()
+            .unwrap()
+            .serve();
+        let text = report.to_json().to_json();
+        let back = ServeReport::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        // every serialized aggregate survives the trip bit-exactly (shortest
+        // f64 repr), including the new II/throughput fields and Options
+        assert_eq!(back.to_json().to_json(), text);
+        assert_eq!(back.events, report.events);
+        assert_eq!(back.event_pipelining, report.event_pipelining);
+        assert_eq!(back.gc_mode, report.gc_mode);
+        assert_eq!(back.device_busy_s, report.device_busy_s);
+        assert_eq!(back.device_sustained_eps, report.device_sustained_eps);
+        assert_eq!(back.batch_hist, report.batch_hist);
+        assert!(back.records.is_empty(), "per-event records are not serialized");
     }
 
     #[test]

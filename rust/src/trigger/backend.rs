@@ -77,6 +77,17 @@ pub trait InferenceBackend: Send + Sync {
         None
     }
 
+    /// Does this backend overlap consecutive events *inside* a batch —
+    /// the simulated fabric's whole-fabric event pipelining
+    /// ([`crate::config::ArchConfig::event_pipelining`]), where batch
+    /// member *i+1* enters the fabric at the initiation interval rather
+    /// than after member *i* fully drains? Like `gc_mode` this reports
+    /// configuration; serving reports surface it as the
+    /// `ii[event-pipelined]` segment.
+    fn event_pipelining(&self) -> bool {
+        false
+    }
+
     /// Run inference for a whole batch, preserving order. Implementations
     /// must return exactly one output per input graph, and each output must
     /// bit-equal what a singleton call on that graph would produce (the
@@ -132,20 +143,40 @@ pub enum Backend {
 
 impl Backend {
     /// Fused functional + timing pass over the simulated fabric. Batches
-    /// stream back-to-back through [`DataflowEngine::run_stream`], so with
-    /// `ArchConfig::gc_cross_event` set the fabric bins graph *i+1* while
-    /// graph *i*'s GC compare lanes drain (a no-op otherwise).
+    /// stream through [`DataflowEngine::run_stream`]: serialized
+    /// back-to-back by default (with `ArchConfig::gc_cross_event` binning
+    /// graph *i+1* while graph *i*'s GC compare lanes drain), or packed at
+    /// the initiation interval when `ArchConfig::event_pipelining` is set —
+    /// graph *i*'s completion is then its scheduled fabric finish
+    /// (`stream_start_cycle + total_cycles`) plus its output transfer,
+    /// behind the first graph's input transfer (later inputs are staged
+    /// during earlier compute, the double-buffered-host assumption
+    /// `run_stream` documents). A batch of one equals the solo `e2e_s` on
+    /// both paths.
     fn fpga_batch(
         engine: &DataflowEngine,
         graphs: &[PaddedGraph],
     ) -> (Vec<ModelOutput>, Vec<f64>) {
         let mut outputs = Vec::with_capacity(graphs.len());
         let mut done_at = Vec::with_capacity(graphs.len());
-        let mut occupied_s = 0.0;
-        for r in engine.run_stream(graphs) {
-            occupied_s += r.e2e_s;
-            outputs.push(r.output);
-            done_at.push(occupied_s);
+        let rs = engine.run_stream(graphs);
+        if engine.event_pipelining_active() {
+            let t_in0 = rs.first().map(|r| r.breakdown.transfer_in_s).unwrap_or(0.0);
+            let cycle_s = engine.arch.cycle_s();
+            for r in rs {
+                let fabric_done = (r.breakdown.stream_start_cycle
+                    + r.breakdown.total_cycles) as f64
+                    * cycle_s;
+                outputs.push(r.output);
+                done_at.push(t_in0 + fabric_done + r.breakdown.transfer_out_s);
+            }
+        } else {
+            let mut occupied_s = 0.0;
+            for r in rs {
+                occupied_s += r.e2e_s;
+                outputs.push(r.output);
+                done_at.push(occupied_s);
+            }
         }
         (outputs, done_at)
     }
@@ -215,6 +246,13 @@ impl InferenceBackend for Backend {
         match self {
             Backend::Fpga(engine) => engine.gc_mode(),
             _ => None,
+        }
+    }
+
+    fn event_pipelining(&self) -> bool {
+        match self {
+            Backend::Fpga(engine) => engine.event_pipelining_active(),
+            _ => false,
         }
     }
 
@@ -398,6 +436,55 @@ mod tests {
             L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 61)).unwrap(),
         );
         assert_eq!(cpu.gc_mode(), None);
+    }
+
+    #[test]
+    fn fpga_batch_event_pipelining_spaces_completions_by_ii() {
+        // With whole-fabric event pipelining on, a batch of identical
+        // graphs completes at II-spaced intervals: the first member still
+        // pays the full e2e depth, every later member exactly ii_cycles.
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 62);
+        let arch = ArchConfig { event_pipelining: true, ..Default::default() };
+        let mut engine = DataflowEngine::new(
+            arch.clone(),
+            L1DeepMetV2::new(cfg.clone(), w.clone()).unwrap(),
+        )
+        .unwrap();
+        engine.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+        let g = graph_with_seed(62);
+        let solo = engine.run(&g);
+        let ii_s = solo.breakdown.ii_cycles as f64 * arch.cycle_s();
+        assert!(ii_s > 0.0);
+        let fpga = Backend::Fpga(engine);
+        assert!(fpga.event_pipelining());
+        let batch = fpga
+            .device_batch_latency_s(&[g.clone(), g.clone(), g.clone()])
+            .unwrap();
+        // a batch head pays the same depth as a solo run
+        assert!((batch[0] - solo.e2e_s).abs() < 1e-12, "{} vs {}", batch[0], solo.e2e_s);
+        for pair in batch.windows(2) {
+            let spacing = pair[1] - pair[0];
+            assert!(
+                (spacing - ii_s).abs() < 1e-12,
+                "steady-state spacing {spacing} != II {ii_s}"
+            );
+            // strictly faster than full-depth serialization
+            assert!(spacing < solo.e2e_s);
+        }
+        // the timed fused pass agrees and outputs stay bit-identical to
+        // unpipelined inference
+        let (outs, lats) = fpga.infer_batch_timed(&[g.clone(), g.clone(), g.clone()]).unwrap();
+        assert_eq!(lats.unwrap(), batch);
+        for o in &outs {
+            assert_eq!(o.weights, solo.output.weights);
+            assert_eq!(o.met_xy, solo.output.met_xy);
+        }
+        // non-fabric backends never report event pipelining
+        let cpu = Backend::RustCpu(
+            L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, 63)).unwrap(),
+        );
+        assert!(!cpu.event_pipelining());
     }
 
     #[test]

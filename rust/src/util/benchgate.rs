@@ -63,6 +63,24 @@ fn keyset(bench: &str) -> Option<KeySet> {
             point_id: &["shards", "routing", "admission"],
             point_cmp: &["offered", "served", "failed", "rejected", "shed"],
         }),
+        // Event-level pipelining: the II, per-event depth, stream cycle
+        // totals, and the holds-arrival verdicts are all pure cycle
+        // arithmetic and gate exactly; the derived sustained_eps float is
+        // emitted for plotting and deliberately not pinned.
+        "stream_ii" => Some(KeySet {
+            doc: &["delta", "seed", "events_per_stream", "clock_mhz"],
+            point_id: &["pileup", "mode"],
+            point_cmp: &[
+                "events",
+                "n_max_median",
+                "ii_cycles_median",
+                "depth_cycles_median",
+                "stream_total_cycles",
+                "holds_100k",
+                "holds_250k",
+                "holds_500k",
+            ],
+        }),
         _ => None,
     }
 }
@@ -265,6 +283,44 @@ mod tests {
             }}"#
         ))
         .unwrap()
+    }
+
+    fn stream_doc(ii: f64, total: u64, eps: f64) -> Value {
+        json::parse(&format!(
+            r#"{{
+                "bench": "stream_ii",
+                "delta": 0.8,
+                "seed": 17,
+                "events_per_stream": 16,
+                "clock_mhz": 200,
+                "points": [
+                    {{"pileup": 70, "mode": "pipelined", "events": 16,
+                      "n_max_median": 128, "ii_cycles_median": {ii},
+                      "depth_cycles_median": 4100,
+                      "stream_total_cycles": {total},
+                      "sustained_eps": {eps},
+                      "holds_100k": true, "holds_250k": true,
+                      "holds_500k": false}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn stream_ii_cycle_drift_fails_but_derived_rate_is_ignored() {
+        let a = stream_doc(1400.0, 25100, 142857.1);
+        // the plotted events/sec float is not pinned...
+        let b = stream_doc(1400.0, 25100, 142000.0);
+        assert!(compare_docs(&a, &b).unwrap().is_empty());
+        // ...but a single-cycle II or stream-total drift fails
+        let b = stream_doc(1401.0, 25100, 142857.1);
+        let diffs = compare_docs(&a, &b).unwrap();
+        assert_eq!(diffs.len(), 1, "{diffs:?}");
+        assert!(diffs[0].contains("ii_cycles_median"), "{}", diffs[0]);
+        let b = stream_doc(1400.0, 25101, 142857.1);
+        let diffs = compare_docs(&a, &b).unwrap();
+        assert!(diffs[0].contains("stream_total_cycles"), "{diffs:?}");
     }
 
     #[test]
