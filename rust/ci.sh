@@ -14,8 +14,13 @@
 #                          and a sustained device-throughput figure, an
 #                          `--event-pipelining` serve smoke whose report
 #                          must show the II-pipelined fabric marker,
-#                          and a 2-shard farm smoke whose report must show
-#                          zero failures and consistent admission accounting
+#                          a 2-shard farm smoke whose report must show
+#                          zero failures and consistent admission accounting,
+#                          a `simulate --trace` smoke whose emitted
+#                          Chrome-trace JSON must validate and be
+#                          byte-deterministic across two runs, and a
+#                          `farm --metrics-out` smoke whose Prometheus
+#                          counters must reconcile with the farm report
 #   ./ci.sh --bench-check  bench-regression gate: run ablation_parallelism,
 #                          graphbuild_overlap, farm_soak, and stream_ii on
 #                          their pinned seeds and exact-compare the emitted
@@ -116,6 +121,36 @@ quick_tier() {
     fi
     if ! grep -q 'accounting=ok' <<<"$farm"; then
         echo "FAIL: farm smoke admission accounting does not close" >&2
+        exit 1
+    fi
+
+    echo "==> trace smoke: simulate --trace emits valid, byte-deterministic Chrome-trace JSON"
+    tracedir="$(mktemp -d)"
+    trap 'rm -rf "$tracedir"' RETURN
+    trace1="$(cargo run --locked -q -- simulate --events 3 --build-site fabric \
+        --trace "$tracedir/a.json")"
+    echo "$trace1"
+    if ! grep -q 'trace\[ok\]' <<<"$trace1"; then
+        echo "FAIL: simulate --trace did not validate its emitted trace" >&2
+        exit 1
+    fi
+    cargo run --locked -q -- simulate --events 3 --build-site fabric \
+        --trace "$tracedir/b.json" >/dev/null
+    if ! cmp -s "$tracedir/a.json" "$tracedir/b.json"; then
+        echo "FAIL: two identical simulate --trace runs emitted different bytes" >&2
+        exit 1
+    fi
+
+    echo "==> metrics smoke: farm --metrics-out reconciles with the farm report"
+    metrics="$(cargo run --locked -q -- farm --shards 2 --events 40 --pileup 10 \
+        --metrics-out "$tracedir/farm.prom")"
+    echo "$metrics"
+    if ! grep -q 'metrics\[ok\]' <<<"$metrics"; then
+        echo "FAIL: farm --metrics-out counters did not reconcile with the report" >&2
+        exit 1
+    fi
+    if ! grep -q '^farm_served_total' "$tracedir/farm.prom"; then
+        echo "FAIL: metrics file is missing the farm_served_total series" >&2
         exit 1
     fi
 }

@@ -95,7 +95,7 @@ use super::broadcast::{BroadcastAction, BroadcastUnit};
 use super::buffers::DoubleBuffer;
 use super::fifo::Fifo;
 use super::gc_unit::{
-    BuildSite, GcCosim, GcLanePolicy, GcRun, GcSchedule, GcStats, GcUnit,
+    BuildSite, GcCosim, GcCosimTrace, GcLanePolicy, GcRun, GcSchedule, GcStats, GcUnit,
 };
 use super::mp_unit::{MpEvent, MpUnit};
 use super::nt_unit::NtUnit;
@@ -377,6 +377,13 @@ pub struct DataflowEngine {
     /// LayerStats::timeline (costs a few % of simulator speed; off in
     /// benches, on in the dataflow_trace example).
     pub trace_sample_every: Option<u64>,
+    /// Serve-path cycle-domain trace sink
+    /// ([`crate::obs::trace::TraceSink`]): when set (via
+    /// [`set_trace_sink`](DataflowEngine::set_trace_sink)), the batch-first
+    /// backend path captures every served event's breakdown + GC lane
+    /// spans into it. None (default) costs nothing — the engine never
+    /// looks at it outside the backend's batch entry point.
+    trace_sink: Option<crate::obs::trace::TraceSink>,
     /// safety valve for the cycle loop
     max_cycles_per_layer: u64,
 }
@@ -403,8 +410,21 @@ impl DataflowEngine {
             gc_schedule: GcSchedule::default(),
             gc_feed: GcFeedModel::default(),
             trace_sample_every: None,
+            trace_sink: None,
             max_cycles_per_layer: 500_000_000,
         })
+    }
+
+    /// Install (or clear) the serve-path trace sink. The sink is shared —
+    /// clone the [`crate::obs::trace::TraceSink`] handle before installing
+    /// so the collector end can drain it after serving.
+    pub fn set_trace_sink(&mut self, sink: Option<crate::obs::trace::TraceSink>) {
+        self.trace_sink = sink;
+    }
+
+    /// The installed serve-path trace sink, if any.
+    pub fn trace_sink(&self) -> Option<&crate::obs::trace::TraceSink> {
+        self.trace_sink.as_ref()
     }
 
     /// The datapath arithmetic the simulated fabric runs (inherited from
@@ -455,6 +475,17 @@ impl DataflowEngine {
         self.run_inner(g, 0)
     }
 
+    /// [`run`](DataflowEngine::run) with the cycle-domain recorder on:
+    /// additionally returns the co-simulated GC lanes' compare/stall spans
+    /// (None for host builds and the replayed/serialized GC baselines,
+    /// which have no stepped lanes). Recording observes the identical
+    /// simulation — the returned [`SimResult`] is bit-identical to
+    /// [`run`](DataflowEngine::run)'s, pinned whole-struct by the obs test
+    /// suite.
+    pub fn run_traced(&self, g: &PaddedGraph) -> (SimResult, Option<GcCosimTrace>) {
+        self.run_event(g, 0, true)
+    }
+
     /// Run a back-to-back event stream through the fabric.
     ///
     /// With [`crate::config::ArchConfig::event_pipelining`] set this is the
@@ -487,16 +518,34 @@ impl DataflowEngine {
     /// [`run`]: DataflowEngine::run
     /// [`sustained_throughput_hz`]: DataflowEngine::sustained_throughput_hz
     pub fn run_stream(&self, gs: &[PaddedGraph]) -> Vec<SimResult> {
+        self.run_stream_impl(gs, false).into_iter().map(|(r, _)| r).collect()
+    }
+
+    /// [`run_stream`](DataflowEngine::run_stream) with the cycle-domain
+    /// recorder on: each event additionally carries its GC lanes'
+    /// compare/stall spans (see [`run_traced`](DataflowEngine::run_traced)).
+    /// Scheduling is identical — the `SimResult`s match a plain
+    /// `run_stream` bit for bit.
+    pub fn run_stream_traced(&self, gs: &[PaddedGraph]) -> Vec<(SimResult, Option<GcCosimTrace>)> {
+        self.run_stream_impl(gs, true)
+    }
+
+    fn run_stream_impl(
+        &self,
+        gs: &[PaddedGraph],
+        trace: bool,
+    ) -> Vec<(SimResult, Option<GcCosimTrace>)> {
         if self.event_pipelining_active() {
             // II model: standalone per-event sims (gc_window 0 — the GC
             // overlap lives in the start offsets, not the event timelines),
             // then the stage-window hand-off schedule.
-            let mut rs: Vec<SimResult> = gs.iter().map(|g| self.run_inner(g, 0)).collect();
+            let mut rs: Vec<(SimResult, Option<GcCosimTrace>)> =
+                gs.iter().map(|g| self.run_event(g, 0, trace)).collect();
             for i in 1..rs.len() {
                 let (head, tail) = rs.split_at_mut(i);
-                let prev = &head[i - 1].breakdown;
-                let delta = self.min_start_offset(prev, &tail[0].breakdown);
-                tail[0].breakdown.stream_start_cycle = prev.stream_start_cycle + delta;
+                let prev = &head[i - 1].0.breakdown;
+                let delta = self.min_start_offset(prev, &tail[0].0.breakdown);
+                tail[0].0.breakdown.stream_start_cycle = prev.stream_start_cycle + delta;
             }
             return rs;
         }
@@ -504,7 +553,7 @@ impl DataflowEngine {
         let mut start = 0u64;
         gs.iter()
             .map(|g| {
-                let mut r = self.run_inner(g, window);
+                let (mut r, t) = self.run_event(g, window, trace);
                 r.breakdown.stream_start_cycle = start;
                 start += r.breakdown.total_cycles;
                 window = match (&r.breakdown.gc, self.cross_event_active()) {
@@ -516,7 +565,7 @@ impl DataflowEngine {
                     }
                     _ => 0,
                 };
-                r
+                (r, t)
             })
             .collect()
     }
@@ -612,10 +661,22 @@ impl DataflowEngine {
         })
     }
 
+    fn run_inner(&self, g: &PaddedGraph, gc_window: u64) -> SimResult {
+        self.run_event(g, gc_window, false).0
+    }
+
     /// One event through the fabric. `gc_window` is the cross-event bin
     /// window inherited from the previous event's drain (0 for standalone
     /// runs; threaded by [`run_stream`](DataflowEngine::run_stream)).
-    fn run_inner(&self, g: &PaddedGraph, gc_window: u64) -> SimResult {
+    /// `trace` turns on the GC co-sim's cycle-domain recorder — a pure
+    /// observation of the stepped lanes (the simulation itself is
+    /// byte-for-byte the same either way).
+    fn run_event(
+        &self,
+        g: &PaddedGraph,
+        gc_window: u64,
+        trace: bool,
+    ) -> (SimResult, Option<GcCosimTrace>) {
         let cfg = &self.model.cfg;
         let d = cfg.node_dim;
         let n_live = g.n;
@@ -654,14 +715,18 @@ impl DataflowEngine {
                     } else {
                         GcLanePolicy::InOrder
                     };
-                    gc_cosim = Some(GcCosim::new(
+                    let mut cosim = GcCosim::new(
                         &unit,
                         g,
                         policy,
                         self.arch.gc_fifo_depth.max(1),
                         self.arch.p_edge,
                         gc_window,
-                    ));
+                    );
+                    if trace {
+                        cosim.enable_trace();
+                    }
+                    gc_cosim = Some(cosim);
                 }
             }
         }
@@ -699,12 +764,14 @@ impl DataflowEngine {
         // the cycle the GC hardware (bin memory, compare lanes, lane edge
         // FIFOs) frees — the GC stage window end for the II model
         let mut gc_stage_end = 0u64;
+        let mut gc_trace: Option<GcCosimTrace> = None;
         if let Some(mut cosim) = gc_cosim {
             // Drain the trailing (negative or padding-dropped) compares,
             // assert the bit-identity contract, and let the measured lane
             // finishes — causal backpressure included — bound the critical
             // path when the graph is too small to hide the GC.
             cosim.finish();
+            gc_trace = cosim.take_trace();
             breakdown.total_cycles = breakdown.total_cycles.max(cosim.finish_cycle());
             let gstats = cosim.stats();
             gc_stage_end = cosim.finish_cycle().max(gstats.emit_end_cycle);
@@ -788,7 +855,7 @@ impl DataflowEngine {
         let e2e_s = breakdown.transfer_in_s + compute_s + breakdown.transfer_out_s;
         let ne_memory_bytes = self.ne_memory_bytes(g.bucket.n_max, d);
 
-        SimResult { output, breakdown, compute_s, e2e_s, ne_memory_bytes }
+        (SimResult { output, breakdown, compute_s, e2e_s, ne_memory_bytes }, gc_trace)
     }
 
     /// A stage window's occupancy as the II scheduler prices it: the raw

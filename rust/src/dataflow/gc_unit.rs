@@ -178,6 +178,55 @@ pub enum LaneEvent {
     Done,
 }
 
+/// Kind of one run-length-encoded lane activity span in a
+/// [`GcCosimTrace`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GcLaneSpanKind {
+    /// Cycles the lane's ΔR² datapath completed compares (edge-emitting or
+    /// negative alike).
+    Compare,
+    /// Cycles the lane sat frozen on its full edge FIFO (causal
+    /// backpressure from the layer-0 feed).
+    Stall,
+}
+
+/// One lane activity span, in fabric cycles on the event's own timeline
+/// (`end` exclusive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GcLaneSpan {
+    pub kind: GcLaneSpanKind,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Cycle-domain activity record of one co-simulated GC pass: per compare
+/// lane, the run-length-encoded compare/stall spans observed while the
+/// engine's cycle loop stepped the lane. Collected only when
+/// [`GcCosim::enable_trace`] was called — recording is a pure observation
+/// of each [`GcCosim::advance_to`] step's [`LaneEvent`], so enabling it
+/// cannot change any simulated quantity. Trailing compares drained by
+/// [`GcCosim::finish`] happen outside the stepped cycle loop and are
+/// deliberately not recorded (their timing is already summarised by
+/// [`GcStats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GcCosimTrace {
+    /// `lanes[j]` = lane *j*'s spans, in ascending cycle order.
+    pub lanes: Vec<Vec<GcLaneSpan>>,
+}
+
+impl GcCosimTrace {
+    /// Extend lane `j`'s last span through cycle `t` (the step that just
+    /// completed covers `[t-1, t)`), or open a new span when the kind
+    /// changes or a gap intervenes.
+    fn push(&mut self, j: usize, kind: GcLaneSpanKind, t: u64) {
+        let spans = &mut self.lanes[j];
+        match spans.last_mut() {
+            Some(s) if s.kind == kind && s.end == t - 1 => s.end = t,
+            _ => spans.push(GcLaneSpan { kind, start: t - 1, end: t }),
+        }
+    }
+}
+
 /// Typed error for an invalid GC ΔR radius (non-positive or non-finite) —
 /// the `Format::try_new` precedent: construction reports instead of
 /// asserting, and the pipeline surfaces it through a typed
@@ -999,6 +1048,8 @@ pub struct GcCosim {
     /// bit-identity bookkeeping (asserted in [`finish`](GcCosim::finish))
     expected_edges: usize,
     expect_no_extra: bool,
+    /// cycle-domain activity recording (None = off, the default)
+    trace: Option<GcCosimTrace>,
 }
 
 impl GcCosim {
@@ -1081,7 +1132,25 @@ impl GcCosim {
             port_used: vec![false; p_edge.max(1)],
             expected_edges: g.e,
             expect_no_extra: g.dropped_nodes == 0 && g.dropped_edges == 0,
+            trace: None,
         }
+    }
+
+    /// Start recording per-lane compare/stall spans. Recording observes
+    /// each stepped cycle's [`LaneEvent`] — the exact same `step` calls run
+    /// either way, so the co-simulation's cycle counts, edge set, and stats
+    /// are bit-identical with the recorder on or off (pinned by the engine
+    /// equality tests).
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(GcCosimTrace { lanes: vec![Vec::new(); self.lanes.len()] });
+    }
+
+    /// Take the recorded trace (None when [`enable_trace`] was never
+    /// called).
+    ///
+    /// [`enable_trace`]: GcCosim::enable_trace
+    pub fn take_trace(&mut self) -> Option<GcCosimTrace> {
+        self.trace.take()
     }
 
     /// Advance the bin engine and every compare lane through fabric cycle
@@ -1092,8 +1161,15 @@ impl GcCosim {
             self.clock += 1;
             let t = self.clock;
             self.bin.step(t);
-            for lane in &mut self.lanes {
-                lane.step(t, &self.data);
+            for (j, lane) in self.lanes.iter_mut().enumerate() {
+                let ev = lane.step(t, &self.data);
+                if let Some(trace) = &mut self.trace {
+                    match ev {
+                        LaneEvent::Compared { .. } => trace.push(j, GcLaneSpanKind::Compare, t),
+                        LaneEvent::Stalled => trace.push(j, GcLaneSpanKind::Stall, t),
+                        LaneEvent::Idle | LaneEvent::Done => {}
+                    }
+                }
             }
         }
     }

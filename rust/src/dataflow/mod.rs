@@ -32,15 +32,18 @@ pub mod power;
 pub mod resource;
 pub mod tokens;
 
-pub use engine::{BroadcastMode, CycleParams, DataflowEngine, GcFeedModel, SimResult};
+pub use engine::{
+    BroadcastMode, CycleParams, DataflowEngine, GcFeedModel, SimBreakdown, SimResult, Stage,
+    StageWindow,
+};
 pub use flowgnn::FlowGnnBaseline;
 // GcCompareLane/LaneEvent stay behind the gc_unit:: path: the lane step
 // interface is driven by the engine's cycle loop (its event context is
 // crate-internal), so the crate root re-exports only the API external
 // code can actually drive.
 pub use gc_unit::{
-    BuildSite, GcBinEngine, GcCosim, GcDeltaError, GcLanePolicy, GcRun, GcSchedule, GcStats,
-    GcUnit,
+    BuildSite, GcBinEngine, GcCosim, GcCosimTrace, GcDeltaError, GcLanePolicy, GcLaneSpan,
+    GcLaneSpanKind, GcRun, GcSchedule, GcStats, GcUnit,
 };
 pub use power::PowerModel;
 pub use resource::ResourceModel;

@@ -48,20 +48,29 @@ impl AdmissionPolicy {
 
     /// Judge one arrival against the chosen shard's current state.
     pub(crate) fn decide(&self, backlog: usize, ewma_service_s: f64) -> Admit {
+        match self.deadline_margin_ms(backlog, ewma_service_s) {
+            Some(margin_ms) if margin_ms < 0.0 => Admit::Shed,
+            _ => Admit::Enqueue,
+        }
+    }
+
+    /// Deadline slack for one arrival: `slo_ms − predicted completion`,
+    /// where predicted completion is `(backlog + 1) × EWMA service time`.
+    /// Negative ⇒ the event is predicted to miss its SLO (and `decide`
+    /// sheds it). None when the policy has no deadline (`TailDrop`) or the
+    /// shard is unmeasured (`ewma_service_s <= 0`) — shedding on zero
+    /// information would starve a cold farm forever, so those arrivals are
+    /// admitted without a margin. The farm's metrics histogram
+    /// (`farm_admission_deadline_margin_ms`) observes exactly this value.
+    pub fn deadline_margin_ms(&self, backlog: usize, ewma_service_s: f64) -> Option<f64> {
         match *self {
-            AdmissionPolicy::TailDrop => Admit::Enqueue,
+            AdmissionPolicy::TailDrop => None,
             AdmissionPolicy::Deadline { slo_ms } => {
-                // No measurement yet: admit and learn (shedding on zero
-                // information would starve a cold farm forever).
                 if ewma_service_s <= 0.0 {
-                    return Admit::Enqueue;
+                    return None;
                 }
                 let predicted_ms = (backlog as f64 + 1.0) * ewma_service_s * 1e3;
-                if predicted_ms > slo_ms {
-                    Admit::Shed
-                } else {
-                    Admit::Enqueue
-                }
+                Some(slo_ms - predicted_ms)
             }
         }
     }
@@ -95,6 +104,27 @@ mod tests {
         assert_eq!(p.decide(5, 1e-3), Admit::Shed);
         // unmeasured shard: admit and learn
         assert_eq!(p.decide(100, 0.0), Admit::Enqueue);
+    }
+
+    #[test]
+    fn deadline_margin_backs_the_decision() {
+        let p = AdmissionPolicy::Deadline { slo_ms: 5.0 };
+        // 4 queued + this one at 1ms/event: 5ms predicted, 0ms slack
+        assert_eq!(p.deadline_margin_ms(4, 1e-3), Some(0.0));
+        assert_eq!(p.deadline_margin_ms(5, 1e-3), Some(-1.0));
+        assert_eq!(p.deadline_margin_ms(0, 1e-3), Some(4.0));
+        // no deadline / unmeasured shard: no margin to report
+        assert_eq!(AdmissionPolicy::TailDrop.deadline_margin_ms(3, 1e-3), None);
+        assert_eq!(p.deadline_margin_ms(100, 0.0), None);
+        // decide() is exactly "margin < 0 sheds"
+        for backlog in 0..10 {
+            let want = if p.deadline_margin_ms(backlog, 1e-3).unwrap() < 0.0 {
+                Admit::Shed
+            } else {
+                Admit::Enqueue
+            };
+            assert_eq!(p.decide(backlog, 1e-3), want, "backlog={backlog}");
+        }
     }
 
     #[test]

@@ -75,7 +75,8 @@ use crate::dataflow::BuildSite;
 use crate::fixedpoint::Arith;
 use crate::graph::{padding::DEFAULT_BUCKETS, Bucket, PaddedGraph};
 use crate::model::ModelOutput;
-use crate::pipeline::lane::{worker_loop, LaneCtx, LaneEvent, LaneStats};
+use crate::obs::metrics::{Counter, Histogram, Registry};
+use crate::pipeline::lane::{worker_loop, LaneCtx, LaneEvent, LaneObs, LaneStats};
 use crate::pipeline::{EventRecord, EventSource};
 use crate::trigger::backend::InferenceBackend;
 use crate::trigger::rate::RateController;
@@ -148,6 +149,7 @@ pub struct FarmBuilder<B: InferenceBackend> {
     accept_fraction: f64,
     met_threshold: f64,
     paced: bool,
+    metrics: Option<Arc<Registry>>,
 }
 
 impl<B: InferenceBackend + 'static> FarmBuilder<B> {
@@ -166,6 +168,7 @@ impl<B: InferenceBackend + 'static> FarmBuilder<B> {
             accept_fraction: 750e3 / 40e6,
             met_threshold: 40.0,
             paced: false,
+            metrics: None,
         }
     }
 
@@ -246,6 +249,18 @@ impl<B: InferenceBackend + 'static> FarmBuilder<B> {
         self
     }
 
+    /// Register farm serving metrics ([`crate::obs::metrics`]) in
+    /// `registry`: per-shard offered/admitted/rejected/shed/served/failed
+    /// counters (labelled `shard="<i>"`), routing decisions per policy,
+    /// queue-depth high-water gauges, the admission-deadline margin
+    /// histogram, and the per-shard lane stage timers. The counters
+    /// reconcile exactly with [`FarmReport`]'s accounting — see
+    /// `tests/obs.rs`. The default — no call — wires nothing.
+    pub fn metrics(mut self, registry: Arc<Registry>) -> Self {
+        self.metrics = Some(registry);
+        self
+    }
+
     /// Validate and assemble. Returns a typed [`FarmError`] on bad
     /// configuration — never panics.
     pub fn build(mut self) -> Result<Farm<B>, FarmError> {
@@ -294,6 +309,7 @@ impl<B: InferenceBackend + 'static> FarmBuilder<B> {
             accept_fraction: self.accept_fraction,
             met_threshold: self.met_threshold,
             paced: self.paced,
+            metrics: self.metrics,
         })
     }
 }
@@ -323,6 +339,73 @@ pub struct Farm<B: InferenceBackend> {
     accept_fraction: f64,
     met_threshold: f64,
     paced: bool,
+    metrics: Option<Arc<Registry>>,
+}
+
+/// Dispatcher-side metric handles, pre-registered before the dispatch loop
+/// so the per-event path only touches atomics. Indexed by shard.
+struct DispatchObs {
+    offered: Vec<Arc<Counter>>,
+    admitted: Vec<Arc<Counter>>,
+    rejected: Vec<Arc<Counter>>,
+    shed: Vec<Arc<Counter>>,
+    routing_decisions: Arc<Counter>,
+    queue_hwm: Vec<Arc<crate::obs::metrics::Gauge>>,
+    deadline_margin_ms: Arc<Histogram>,
+}
+
+impl DispatchObs {
+    fn new(reg: &Registry, m: usize, routing: RoutingPolicy) -> DispatchObs {
+        let per_shard = |name: &str, help: &str| -> Vec<Arc<Counter>> {
+            (0..m)
+                .map(|i| {
+                    let id = i.to_string();
+                    reg.counter(name, help, &[("shard", id.as_str())])
+                })
+                .collect()
+        };
+        DispatchObs {
+            offered: per_shard(
+                "farm_offered_total",
+                "Events pulled from the source and routed to this shard.",
+            ),
+            admitted: per_shard(
+                "farm_admitted_total",
+                "Events enqueued on this shard's bounded queue.",
+            ),
+            rejected: per_shard(
+                "farm_rejected_total",
+                "Tail-queue rejects: this shard's bounded queue was full.",
+            ),
+            shed: per_shard(
+                "farm_shed_total",
+                "Admission-policy drops at the door, after routing to this shard.",
+            ),
+            routing_decisions: reg.counter(
+                "farm_routing_decisions_total",
+                "Routing decisions taken, labelled by the active policy.",
+                &[("policy", routing.as_label())],
+            ),
+            queue_hwm: (0..m)
+                .map(|i| {
+                    let id = i.to_string();
+                    reg.gauge(
+                        "farm_queue_depth_high_water",
+                        "High-water mark of the in-shard backlog (events), \
+                         observed at enqueue time.",
+                        &[("shard", id.as_str())],
+                    )
+                })
+                .collect(),
+            deadline_margin_ms: reg.histogram(
+                "farm_admission_deadline_margin_ms",
+                "Deadline slack per routed arrival (SLO minus predicted \
+                 completion, ms); negative observations were shed.",
+                &[],
+                &stats::Buckets::new(&[-100.0, -10.0, -1.0, 0.0, 1.0, 10.0, 100.0, 1000.0]),
+            ),
+        }
+    }
 }
 
 impl<B: InferenceBackend + 'static> Farm<B> {
@@ -371,6 +454,7 @@ impl<B: InferenceBackend + 'static> Farm<B> {
                 failed: shard_failed,
                 queue_depth: Some(shard_depth),
                 service_ewma_bits: Some(shard_ewma),
+                obs: self.metrics.as_ref().map(|reg| LaneObs::new(reg, "farm", "shard", i)),
                 records_tx: records_tx.clone(),
                 stats_tx: stats_tx.clone(),
             };
@@ -391,6 +475,7 @@ impl<B: InferenceBackend + 'static> Farm<B> {
         // once inference completes — the gauge is the full in-shard
         // backlog, not just the channel occupancy.
         let mut router = Router::new(self.routing, m);
+        let obs = self.metrics.as_ref().map(|reg| DispatchObs::new(reg, m, self.routing));
         let start = Instant::now();
         let mut offered = 0u64;
         let mut rejected = 0u64;
@@ -409,32 +494,64 @@ impl<B: InferenceBackend + 'static> Farm<B> {
             let ewmas: Vec<f64> =
                 ewma.iter().map(|e| f64::from_bits(e.load(Ordering::Relaxed))).collect();
             let shard = router.choose(&depths, &ewmas);
+            if let Some(o) = &obs {
+                o.routing_decisions.inc();
+                o.offered[shard].inc();
+                if let Some(margin) = self.admission.deadline_margin_ms(depths[shard], ewmas[shard])
+                {
+                    o.deadline_margin_ms.observe(margin);
+                }
+            }
             if self.paced {
                 if self.admission.decide(depths[shard], ewmas[shard]) == Admit::Shed {
                     shed += 1;
+                    if let Some(o) = &obs {
+                        o.shed[shard].inc();
+                    }
                     continue;
                 }
                 let backlog = depth[shard].fetch_add(1, Ordering::Relaxed) + 1;
                 let le = LaneEvent { te, enqueued_at: Instant::now() };
                 match lanes[shard].try_send(le) {
-                    Ok(()) => queue_hwm[shard] = queue_hwm[shard].max(backlog),
+                    Ok(()) => {
+                        queue_hwm[shard] = queue_hwm[shard].max(backlog);
+                        if let Some(o) = &obs {
+                            o.admitted[shard].inc();
+                            o.queue_hwm[shard].fetch_max(backlog as u64);
+                        }
+                    }
                     Err(mpsc::TrySendError::Full(_)) => {
                         // tail-queue reject: the bounded shard queue is full
                         depth[shard].fetch_sub(1, Ordering::Relaxed);
                         rejected += 1;
+                        if let Some(o) = &obs {
+                            o.rejected[shard].inc();
+                        }
                     }
                     Err(mpsc::TrySendError::Disconnected(_)) => {
                         depth[shard].fetch_sub(1, Ordering::Relaxed);
                         rejected += 1;
+                        if let Some(o) = &obs {
+                            o.rejected[shard].inc();
+                        }
                         break; // lane thread died
                     }
                 }
             } else {
                 let backlog = depth[shard].fetch_add(1, Ordering::Relaxed) + 1;
                 queue_hwm[shard] = queue_hwm[shard].max(backlog);
+                if let Some(o) = &obs {
+                    o.queue_hwm[shard].fetch_max(backlog as u64);
+                }
                 if lanes[shard].send(LaneEvent { te, enqueued_at: Instant::now() }).is_err() {
                     rejected += 1;
+                    if let Some(o) = &obs {
+                        o.rejected[shard].inc();
+                    }
                     break; // lane thread died
+                }
+                if let Some(o) = &obs {
+                    o.admitted[shard].inc();
                 }
             }
         }
@@ -459,19 +576,22 @@ impl<B: InferenceBackend + 'static> Farm<B> {
 
         let admitted = offered - rejected - shed;
         let ms = |r: &EventRecord| r.latency_s * 1e3;
-        let all_latency: Vec<f64> = shard_records.iter().flatten().map(ms).collect();
+        let all_latency =
+            stats::Quantiles::new(&shard_records.iter().flatten().map(ms).collect::<Vec<_>>());
         let events: usize = shard_records.iter().map(|v| v.len()).sum();
         let failed_total: u64 = failed.iter().map(|f| f.load(Ordering::Relaxed)).sum();
 
-        let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { stats::percentile(xs, p) };
         let shards = shard_records
             .into_iter()
             .enumerate()
             .map(|(i, records)| {
-                let lat: Vec<f64> = records.iter().map(ms).collect();
-                let infer: Vec<f64> = records.iter().map(|r| r.infer_s * 1e3).collect();
-                let device: Vec<f64> =
-                    records.iter().filter_map(|r| r.device_s.map(|d| d * 1e3)).collect();
+                let lat = stats::Quantiles::new(&records.iter().map(ms).collect::<Vec<_>>());
+                let infer = stats::Quantiles::new(
+                    &records.iter().map(|r| r.infer_s * 1e3).collect::<Vec<_>>(),
+                );
+                let device = stats::Quantiles::new(
+                    &records.iter().filter_map(|r| r.device_s.map(|d| d * 1e3)).collect::<Vec<_>>(),
+                );
                 ShardReport {
                     shard: i,
                     backend: names[i].clone(),
@@ -480,14 +600,14 @@ impl<B: InferenceBackend + 'static> Farm<B> {
                     batches: shard_hists[i].iter().sum(),
                     batch_hist: std::mem::take(&mut shard_hists[i]),
                     queue_hwm: queue_hwm[i],
-                    latency_median_ms: pct(&lat, 50.0),
-                    latency_p99_ms: pct(&lat, 99.0),
-                    latency_p999_ms: pct(&lat, 99.9),
-                    infer_median_ms: pct(&infer, 50.0),
+                    latency_median_ms: lat.median_or(0.0),
+                    latency_p99_ms: lat.p99_or(0.0),
+                    latency_p999_ms: lat.p999_or(0.0),
+                    infer_median_ms: infer.median_or(0.0),
                     device_median_ms: if device.is_empty() {
                         None
                     } else {
-                        Some(pct(&device, 50.0))
+                        Some(device.percentile(50.0))
                     },
                     records,
                 }
@@ -508,9 +628,9 @@ impl<B: InferenceBackend + 'static> Farm<B> {
             events,
             failed: failed_total,
             throughput_hz: events as f64 / wall_s.max(1e-12),
-            latency_median_ms: pct(&all_latency, 50.0),
-            latency_p99_ms: pct(&all_latency, 99.0),
-            latency_p999_ms: pct(&all_latency, 99.9),
+            latency_median_ms: all_latency.median_or(0.0),
+            latency_p99_ms: all_latency.p99_or(0.0),
+            latency_p999_ms: all_latency.p999_or(0.0),
         }
     }
 }

@@ -25,16 +25,22 @@ impl RoutingPolicy {
     /// Every policy, in sweep order (benches iterate this).
     pub const ALL: [RoutingPolicy; 3] =
         [RoutingPolicy::RoundRobin, RoutingPolicy::JoinShortestQueue, RoutingPolicy::LatencyEwma];
+
+    /// Canonical short name ("rr" | "jsq" | "ewma") — the `Display` form
+    /// and the `policy` label value on `farm_routing_decisions_total`.
+    /// `&'static` so the metrics hot path allocates nothing.
+    pub fn as_label(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::JoinShortestQueue => "jsq",
+            RoutingPolicy::LatencyEwma => "ewma",
+        }
+    }
 }
 
 impl fmt::Display for RoutingPolicy {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
-            RoutingPolicy::RoundRobin => "rr",
-            RoutingPolicy::JoinShortestQueue => "jsq",
-            RoutingPolicy::LatencyEwma => "ewma",
-        };
-        write!(f, "{s}")
+        write!(f, "{}", self.as_label())
     }
 }
 

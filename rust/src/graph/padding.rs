@@ -38,6 +38,10 @@ pub fn pick_bucket(buckets: &[Bucket], n: usize, e: usize) -> Option<Bucket> {
 /// A padded, artifact-ready graph.
 #[derive(Clone, Debug)]
 pub struct PaddedGraph {
+    /// The source [`Event::id`] — carried through padding so serve-path
+    /// observability (the cycle-domain trace sink) can key per-event
+    /// records canonically, independent of worker scheduling.
+    pub event_id: u64,
     pub bucket: Bucket,
     /// real (unpadded) counts
     pub n: usize,
@@ -128,6 +132,7 @@ pub fn pad_graph(event: &Event, graph: &EventGraph, buckets: &[Bucket]) -> Padde
     edge_mask[..e].iter_mut().for_each(|x| *x = 1.0);
 
     PaddedGraph {
+        event_id: event.id,
         bucket,
         n,
         e,

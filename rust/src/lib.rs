@@ -75,6 +75,15 @@
 //!   saturation + round-to-nearest, threaded through the model, the timed
 //!   engine, and the backends (`Pipeline::builder().precision(..)`), with
 //!   the engine guaranteed bit-identical to the reference in every mode.
+//! - [`obs`] — observability across both worlds: a cycle-domain
+//!   [`obs::trace::TraceRecorder`] exporting the engine's stage windows,
+//!   GC lane activity, bank swaps, and event-pipelining hand-offs as
+//!   byte-deterministic Chrome-trace/Perfetto JSON (`dgnnflow simulate
+//!   --trace out.json`), and a Prometheus-style [`obs::metrics::Registry`]
+//!   (atomic counters / gauges / fixed-bucket histograms, no wall clock in
+//!   values) threaded through the pipeline and farm (`dgnnflow farm
+//!   --metrics-out metrics.prom`), reconciling exactly with
+//!   [`farm::FarmReport`] accounting.
 //! - [`util`], [`config`] — from-scratch substrates (JSON, CLI, RNG, stats,
 //!   bench/property harnesses, the bench-regression gate
 //!   [`util::benchgate`]) and typed configuration.
@@ -84,7 +93,10 @@
 //! `../rust/ci.sh` is the whole gate, run by GitHub Actions
 //! (`.github/workflows/ci.yml`) and locally: `--quick` for the smoke tier
 //! (fmt, clippy `-D warnings`, golden suite, GC schedule/co-sim pins, a
-//! fabric serve smoke, a 2-shard farm smoke), `--bench-check` for the
+//! fabric serve smoke, a 2-shard farm smoke, a `simulate --trace` smoke
+//! checking the emitted Chrome-trace JSON validates and is
+//! byte-deterministic, and a `farm --metrics-out` smoke checking the
+//! Prometheus counters reconcile with the report), `--bench-check` for the
 //! bench-regression gate
 //! (pinned-seed benches exact-compared against `baselines/*.json`; see
 //! `baselines/README.md` for the `DGNNFLOW_BENCH_REBASE=1` flow), and no
@@ -99,6 +111,7 @@ pub mod farm;
 pub mod fixedpoint;
 pub mod graph;
 pub mod model;
+pub mod obs;
 pub mod physics;
 pub mod pipeline;
 pub mod runtime;

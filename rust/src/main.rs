@@ -10,6 +10,7 @@
 //!
 //! `dgnnflow <cmd> --help` lists per-command options.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use dgnnflow::config::{ArchConfig, Config, ModelConfig, TriggerConfig};
@@ -18,6 +19,8 @@ use dgnnflow::farm::{AdmissionPolicy, Farm, PacedBackend, RoutingPolicy};
 use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
 use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::obs::metrics::Registry;
+use dgnnflow::obs::trace::{validate_chrome_trace, TraceRecorder};
 use dgnnflow::physics::{EventGenerator, GeneratorConfig};
 use dgnnflow::pipeline::{BurstSource, EventSource, Pipeline, SyntheticSource};
 use dgnnflow::runtime::{ModelRuntime, PjrtService};
@@ -66,7 +69,7 @@ fn print_help() {
          \u{20}  info                     artifact + config inventory\n\
          \u{20}  serve [--backend B]      trigger pipeline over synthetic events\n\
          \u{20}  farm [--shards M]        sharded serving farm with routed dispatch\n\
-         \u{20}  simulate [--seed N]      one event through the simulated fabric\n\
+         \u{20}  simulate [--trace F]     event stream through the simulated fabric\n\
          \u{20}  resources                Table I resource estimate\n\
          \u{20}  power                    Table II power estimate\n\
          \u{20}  bench-check              diff emitted BENCH_*.json against baselines/\n\n\
@@ -305,6 +308,7 @@ fn cmd_farm(args: &Args) -> anyhow::Result<()> {
                 .arg("--batch N", "dynamic batcher max batch (default from config)")
                 .arg("--batch-timeout-us N", "batcher flush timeout (default from config)")
                 .arg("--delta X", "ΔR graph radius (paper Eq. 1; default from config)")
+                .arg("--metrics-out FILE", "write Prometheus text-format serving metrics")
                 .arg("--seed N", "event stream seed (default 1)")
                 .arg("--pileup X", "mean pileup (default from config)")
                 .arg("--config FILE", "JSON config file")
@@ -360,7 +364,9 @@ fn cmd_farm(args: &Args) -> anyhow::Result<()> {
         backends.push(PacedBackend::new(b, service));
     }
 
-    let report = Farm::builder()
+    let metrics_out = args.opt_str("metrics-out").map(std::path::PathBuf::from);
+    let registry = metrics_out.as_ref().map(|_| Arc::new(Registry::new()));
+    let mut farm = Farm::builder()
         .shards(backends)
         .source(source)
         .routing(routing)
@@ -371,15 +377,67 @@ fn cmd_farm(args: &Args) -> anyhow::Result<()> {
         .shard_queue_capacity(queue)
         .accept_fraction(tcfg.target_accept_hz / tcfg.input_rate_hz)
         .met_threshold(tcfg.met_threshold)
-        .paced(args.flag("paced"))
-        .build()?
-        .serve();
+        .paced(args.flag("paced"));
+    if let Some(reg) = &registry {
+        farm = farm.metrics(reg.clone());
+    }
+    let report = farm.build()?.serve();
     println!("{}", report.summary());
     println!("{}", report.shard_lines());
+    if let (Some(path), Some(reg)) = (&metrics_out, &registry) {
+        let snap = reg.snapshot();
+        // The exported counters must reconcile exactly with the report's
+        // accounting before anything is written — a file that disagrees
+        // with the summary line is worse than no file.
+        anyhow::ensure!(
+            report.accounting_ok(),
+            "farm accounting identity violated: {}",
+            report.summary()
+        );
+        let pairs = [
+            ("farm_offered_total", report.offered),
+            ("farm_admitted_total", report.admitted),
+            ("farm_rejected_total", report.rejected),
+            ("farm_shed_total", report.shed),
+            ("farm_served_total", report.events as u64),
+            ("farm_failed_total", report.failed),
+        ];
+        for (name, want) in pairs {
+            let got = snap.counter_total(name);
+            anyhow::ensure!(
+                got == want,
+                "metrics drift: {name} sums to {got} but the farm report says {want}"
+            );
+        }
+        std::fs::write(path, snap.render_prometheus())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("metrics[ok]: counters reconcile with the farm report -> {}", path.display());
+    }
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            Help::new("simulate", "run an event stream through the simulated fabric")
+                .arg("--events N", "stream length in events (default 1)")
+                .arg("--trace FILE", "write a cycle-domain Chrome-trace/Perfetto JSON timeline")
+                .arg("--seed N", "event generator seed (default 1)")
+                .arg("--delta X", "ΔR graph radius (paper Eq. 1; default from config)")
+                .arg("--precision P", "datapath arithmetic: f32 | fixed | W,I (default f32)")
+                .arg("--build-site S", "graph construction: host | fabric (default host)")
+                .arg("--p-gc N", "GC compare lanes (fabric build; default from config)")
+                .arg("--gc-fifo-depth N", "per-lane GC edge FIFO depth (default from config)")
+                .arg("--gc-schedule S", "GC phases: pipelined | serialized (default pipelined)")
+                .arg("--gc-skip-on-stall", "GC lanes yield gating waits to ready particles")
+                .arg("--gc-cross-event", "bin event i+1 while event i's GC lanes drain")
+                .arg("--event-pipelining", "overlap whole events at the fabric's II")
+                .arg("--config FILE", "JSON config file")
+                .render()
+        );
+        return Ok(());
+    }
     let cfg = load_config(args)?;
     let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
     let delta = args.f64_or("delta", cfg.trigger.delta_r).map_err(anyhow::Error::msg)?;
@@ -401,11 +459,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         parse_build_site(args.str_or("build-site", "host"))?,
         delta as f32,
     )?;
+    let events = args.usize_or("events", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(events >= 1, "--events must be >= 1, got {events}");
+    let trace_path = args.opt_str("trace").map(std::path::PathBuf::from);
     let mut gen = EventGenerator::with_seed(seed);
-    let ev = gen.generate();
-    let graph = build_edges(&ev, delta as f32);
-    let padded = pad_graph(&ev, &graph, &DEFAULT_BUCKETS);
-    let r = engine.run(&padded);
+    let evs: Vec<_> = (0..events).map(|_| gen.generate()).collect();
+    let graphs: Vec<_> = evs
+        .iter()
+        .map(|ev| pad_graph(ev, &build_edges(ev, delta as f32), &DEFAULT_BUCKETS))
+        .collect();
+    let ev = &evs[0];
+    let padded = &graphs[0];
+    let r = engine.run(padded);
     println!(
         "event {}: {} particles, {} edges (bucket {}x{}), datapath {}, graph build: {}",
         ev.id,
@@ -460,6 +525,40 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         r.breakdown.transfer_in_s * 1e6,
         r.breakdown.transfer_out_s * 1e6
     );
+    // The stream run (and the trace) re-simulate event 0 so the per-event
+    // detail block above stays byte-identical to the single-event command.
+    if events > 1 || trace_path.is_some() {
+        let rs = engine.run_stream_traced(&graphs);
+        if events > 1 {
+            let end_cycle = rs
+                .iter()
+                .map(|(r, _)| r.breakdown.stream_start_cycle + r.breakdown.total_cycles)
+                .max()
+                .unwrap_or(0);
+            let ii = rs.last().map(|(r, _)| r.breakdown.ii_cycles).unwrap_or(0);
+            println!("stream: {events} events in {end_cycle} cycles (II {ii} cycles/event)");
+        }
+        if let Some(path) = &trace_path {
+            let mut rec = TraceRecorder::new();
+            for (i, (r, gc)) in rs.iter().enumerate() {
+                rec.record_event(i, &r.breakdown, gc.as_ref());
+            }
+            let doc = rec.render();
+            let summary = validate_chrome_trace(&doc)
+                .map_err(|e| anyhow::anyhow!("emitted trace failed validation: {e}"))?;
+            std::fs::write(path, &doc)
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+            println!(
+                "trace[ok]: {} spans, {} instants, {} metadata records, end cycle {} -> {} \
+                 (open at https://ui.perfetto.dev)",
+                summary.spans,
+                summary.instants,
+                summary.metadata,
+                summary.end_cycle,
+                path.display()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -500,16 +599,16 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
             benchgate::GateOutcome::Pass => println!("bench-check: {emitted} matches {baseline}"),
             benchgate::GateOutcome::Bootstrapped if in_ci && !allow_bootstrap => {
                 eprintln!(
-                    "bench-check: {baseline} was MISSING in CI — the gate pinned nothing. \
-                     Run ./rust/ci.sh --bench-check locally and commit rust/baselines/ \
-                     (this run's bootstrap is uploaded as the bench-baselines artifact), \
-                     or set DGNNFLOW_BENCH_BOOTSTRAP=1 to accept this bootstrap."
+                    "bench-check: {baseline} was MISSING in CI — the gate pinned nothing \
+                     (set DGNNFLOW_BENCH_BOOTSTRAP=1 to accept this run's bootstrap)\n{}",
+                    benchgate::bootstrap_help()
                 );
                 failures += 1;
             }
             benchgate::GateOutcome::Bootstrapped => println!(
                 "bench-check: bootstrapped {baseline} from {emitted} — review and commit it \
-                 so CI pins these cycle counts"
+                 so CI pins these cycle counts\n{}",
+                benchgate::bootstrap_help()
             ),
             benchgate::GateOutcome::Rebased => {
                 println!("bench-check: re-baselined {baseline} (DGNNFLOW_BENCH_REBASE=1)")

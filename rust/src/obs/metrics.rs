@@ -1,0 +1,465 @@
+//! Prometheus-style metrics: atomic counters, gauges, and fixed-bucket
+//! histograms behind a name+label registry, with deterministic text
+//! exposition.
+//!
+//! Design rules:
+//!
+//! - **No wall clock in values.** Instruments only hold quantities the
+//!   caller observed (counts, depths, seconds it measured itself), so a
+//!   snapshot is deterministic wherever the underlying quantities are —
+//!   the farm's offered/admitted/rejected/shed/served/failed counters
+//!   reconcile bit-exactly with [`crate::farm::FarmReport`].
+//! - **Lock-free hot path.** Handles are `Arc`s over atomics; the registry
+//!   mutex is touched only at get-or-create and snapshot time.
+//! - **Deterministic exposition.** [`MetricsSnapshot::render_prometheus`]
+//!   sorts metric names and label sets (BTreeMap order), so two snapshots
+//!   of equal values render byte-identically.
+//!
+//! Histogram bucket layouts come from [`stats::Buckets`] — the same
+//! NaN-safe fixed-bound type the rest of `util::stats` shares — with
+//! cumulative `le` rendering and an implicit `+Inf` bucket.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats;
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins (or high-water via [`Gauge::fetch_max`]) gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `n` if larger — the high-water-mark idiom.
+    pub fn fetch_max(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket cumulative histogram (Prometheus semantics): per-bucket
+/// counts over [`stats::Buckets`] bounds plus an implicit `+Inf` bucket,
+/// a running sum, and a sample count. NaN observations land in `+Inf` and
+/// are excluded from the sum (which must stay renderable).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: stats::Buckets,
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(buckets: stats::Buckets) -> Self {
+        let n = buckets.len() + 1; // + the implicit +Inf bucket
+        Histogram {
+            buckets,
+            counts: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.buckets.index_of(v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() {
+            // CAS loop: f64 addition over the stored bit pattern
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + v).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Non-cumulative per-bucket counts (last entry = +Inf bucket).
+    fn bin_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// One series key: metric name + sorted label pairs.
+type SeriesKey = (String, Vec<(String, String)>);
+
+fn series_key(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+    let mut ls: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    ls.sort();
+    (name.to_string(), ls)
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    help: BTreeMap<String, (&'static str, String)>, // name -> (type, help)
+    counters: BTreeMap<SeriesKey, Arc<Counter>>,
+    gauges: BTreeMap<SeriesKey, Arc<Gauge>>,
+    histograms: BTreeMap<SeriesKey, Arc<Histogram>>,
+}
+
+impl RegistryInner {
+    fn register(&mut self, name: &str, kind: &'static str, help: &str) {
+        match self.help.get(name) {
+            Some((k, _)) => assert_eq!(
+                *k, kind,
+                "metric '{name}' registered as both {k} and {kind}"
+            ),
+            None => {
+                self.help.insert(name.to_string(), (kind, help.to_string()));
+            }
+        }
+    }
+}
+
+/// Name+label registry of metric instruments. Get-or-create semantics:
+/// asking for the same (name, labels) series returns the same handle, so
+/// independent components share counters safely.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.register(name, "counter", help);
+        inner.counters.entry(series_key(name, labels)).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.register(name, "gauge", help);
+        inner.gauges.entry(series_key(name, labels)).or_default().clone()
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        buckets: &stats::Buckets,
+    ) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.register(name, "histogram", help);
+        inner
+            .histograms
+            .entry(series_key(name, labels))
+            .or_insert_with(|| Arc::new(Histogram::new(buckets.clone())))
+            .clone()
+    }
+
+    /// Materialise every series' current value (a consistent-enough point
+    /// read; individual atomics are read relaxed).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            help: inner.help.clone(),
+            counters: inner.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: inner.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        HistogramSnapshot {
+                            bounds: h.buckets.bounds().to_vec(),
+                            counts: h.bin_counts(),
+                            sum: h.sum(),
+                            count: h.count(),
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time values of one histogram series.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    /// Non-cumulative; `counts.len() == bounds.len() + 1` (+Inf last).
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+/// Point-in-time values of every registered series.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    help: BTreeMap<String, (&'static str, String)>,
+    counters: BTreeMap<SeriesKey, u64>,
+    gauges: BTreeMap<SeriesKey, u64>,
+    histograms: BTreeMap<SeriesKey, HistogramSnapshot>,
+}
+
+fn render_labels(out: &mut String, labels: &[(String, String)], extra: Option<(&str, &str)>) {
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!("{k}=\"{v}\""));
+    }
+    if let Some((k, v)) = extra {
+        if !first {
+            out.push(',');
+        }
+        out.push_str(&format!("{k}=\"{v}\""));
+    }
+    out.push('}');
+}
+
+/// `le` bound / sum formatting: integral values print without a trailing
+/// `.0` (matching `util::json`'s number convention), everything else via
+/// Rust's shortest-roundtrip f64 Display — both deterministic.
+fn render_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+impl MetricsSnapshot {
+    /// Counter value for one exact series, if present (tests and the CLI
+    /// reconciliation path use this; labels in any order).
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        self.counters.get(&series_key(name, labels)).copied()
+    }
+
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        self.gauges.get(&series_key(name, labels)).copied()
+    }
+
+    pub fn histogram_snapshot(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<&HistogramSnapshot> {
+        self.histograms.get(&series_key(name, labels))
+    }
+
+    /// Sum a counter over every label combination it was registered with
+    /// (e.g. `farm_served_total` across shards).
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.counters.iter().filter(|((n, _), _)| n == name).map(|(_, v)| v).sum()
+    }
+
+    /// Prometheus text exposition format 0.0.4. Metric names sort
+    /// lexicographically; within a name, series sort by label set — so
+    /// equal values always render byte-identically.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, (kind, help)) in &self.help {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+            match *kind {
+                "counter" => {
+                    for ((n, labels), v) in &self.counters {
+                        if n != name {
+                            continue;
+                        }
+                        out.push_str(name);
+                        render_labels(&mut out, labels, None);
+                        out.push_str(&format!(" {v}\n"));
+                    }
+                }
+                "gauge" => {
+                    for ((n, labels), v) in &self.gauges {
+                        if n != name {
+                            continue;
+                        }
+                        out.push_str(name);
+                        render_labels(&mut out, labels, None);
+                        out.push_str(&format!(" {v}\n"));
+                    }
+                }
+                "histogram" => {
+                    for ((n, labels), h) in &self.histograms {
+                        if n != name {
+                            continue;
+                        }
+                        let mut cum = 0u64;
+                        for (i, bound) in h.bounds.iter().enumerate() {
+                            cum += h.counts[i];
+                            out.push_str(&format!("{name}_bucket"));
+                            render_labels(&mut out, labels, Some(("le", &render_num(*bound))));
+                            out.push_str(&format!(" {cum}\n"));
+                        }
+                        cum += h.counts[h.bounds.len()];
+                        out.push_str(&format!("{name}_bucket"));
+                        render_labels(&mut out, labels, Some(("le", "+Inf")));
+                        out.push_str(&format!(" {cum}\n"));
+                        out.push_str(&format!("{name}_sum"));
+                        render_labels(&mut out, labels, None);
+                        out.push_str(&format!(" {}\n", render_num(h.sum)));
+                        out.push_str(&format!("{name}_count"));
+                        render_labels(&mut out, labels, None);
+                        out.push_str(&format!(" {}\n", h.count));
+                    }
+                }
+                _ => unreachable!("registry only creates the three kinds"),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_share_series_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("served_total", "events served", &[("shard", "0")]);
+        let b = reg.counter("served_total", "events served", &[("shard", "0")]);
+        let other = reg.counter("served_total", "events served", &[("shard", "1")]);
+        a.inc();
+        b.add(2);
+        other.inc();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter_value("served_total", &[("shard", "0")]), Some(3));
+        assert_eq!(snap.counter_value("served_total", &[("shard", "1")]), Some(1));
+        assert_eq!(snap.counter_total("served_total"), 4);
+
+        let g = reg.gauge("depth_hwm", "high water", &[]);
+        g.fetch_max(5);
+        g.fetch_max(3); // lower: no-op
+        assert_eq!(reg.snapshot().gauge_value("depth_hwm", &[]), Some(5));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let reg = Registry::new();
+        let h = reg.histogram("latency_ms", "e2e latency", &[], &stats::Buckets::new(&[1.0, 10.0]));
+        h.observe(0.5);
+        h.observe(1.0); // le is inclusive
+        h.observe(5.0);
+        h.observe(100.0); // +Inf
+        h.observe(f64::NAN); // +Inf, excluded from sum
+        let snap = reg.snapshot();
+        let hs = snap.histogram_snapshot("latency_ms", &[]).unwrap();
+        assert_eq!(hs.counts, vec![2, 1, 2]);
+        assert_eq!(hs.count, 5);
+        assert!((hs.sum - 106.5).abs() < 1e-12);
+        let text = snap.render_prometheus();
+        assert!(text.contains("latency_ms_bucket{le=\"1\"} 2"), "{text}");
+        assert!(text.contains("latency_ms_bucket{le=\"10\"} 3"), "{text}");
+        assert!(text.contains("latency_ms_bucket{le=\"+Inf\"} 5"), "{text}");
+        assert!(text.contains("latency_ms_sum 106.5"), "{text}");
+        assert!(text.contains("latency_ms_count 5"), "{text}");
+    }
+
+    #[test]
+    fn exposition_is_deterministic_and_sorted() {
+        let build = || {
+            let reg = Registry::new();
+            // registered in scrambled order: output must still sort
+            reg.counter("z_total", "z", &[("shard", "1")]).add(7);
+            reg.counter("a_total", "a", &[]).inc();
+            reg.counter("z_total", "z", &[("shard", "0")]).add(3);
+            reg.gauge("m_depth", "m", &[("shard", "0")]).set(2);
+            reg.snapshot().render_prometheus()
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a, b);
+        let a_pos = a.find("# HELP a_total").unwrap();
+        let m_pos = a.find("# HELP m_depth").unwrap();
+        let z_pos = a.find("# HELP z_total").unwrap();
+        assert!(a_pos < m_pos && m_pos < z_pos);
+        let s0 = a.find("z_total{shard=\"0\"} 3").unwrap();
+        let s1 = a.find("z_total{shard=\"1\"} 7").unwrap();
+        assert!(s0 < s1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as both")]
+    fn kind_conflicts_are_rejected() {
+        let reg = Registry::new();
+        reg.counter("x", "as counter", &[]);
+        reg.gauge("x", "as gauge", &[]);
+    }
+
+    #[test]
+    fn concurrent_increments_are_lossless() {
+        let reg = Arc::new(Registry::new());
+        let c = reg.counter("hits_total", "hits", &[]);
+        let h = reg.histogram("v", "v", &[], &stats::Buckets::new(&[0.5]));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                        h.observe(1.0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+        assert_eq!(h.count(), 4000);
+        assert!((h.sum() - 4000.0).abs() < 1e-9, "CAS sum lost updates: {}", h.sum());
+    }
+}

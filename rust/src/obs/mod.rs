@@ -1,0 +1,28 @@
+//! Observability: cycle-domain tracing and serving metrics.
+//!
+//! Two instruments, one design rule — *observation never perturbs the
+//! system*:
+//!
+//! - [`trace`]: a cycle-domain [`trace::TraceRecorder`] that turns the
+//!   engine's stage busy windows ([`crate::dataflow::SimBreakdown::stages`]),
+//!   per-lane GC compare/stall activity
+//!   ([`crate::dataflow::gc_unit::GcCosimTrace`]), bank swaps, and
+//!   event-pipelining hand-offs into Chrome-trace-event / Perfetto JSON.
+//!   Timestamps are *simulated fabric cycles* (1 trace unit = 1 cycle),
+//!   never wall clock, so a fixed seed + config renders a byte-identical
+//!   trace on any machine — and enabling the recorder leaves every
+//!   simulation output bit-identical (pinned whole-struct against a
+//!   no-recorder run).
+//! - [`metrics`]: a Prometheus-style [`metrics::Registry`] of atomic
+//!   counters, gauges, and fixed-bucket histograms, threaded through the
+//!   serving pipeline ([`crate::pipeline`]) and the farm
+//!   ([`crate::farm`]). Counter identities reconcile exactly with
+//!   [`crate::farm::FarmReport::accounting_ok`]; snapshots render as text
+//!   exposition via [`metrics::MetricsSnapshot::render_prometheus`].
+//!
+//! Entry points: `dgnnflow simulate --trace out.json` (timeline export,
+//! open in <https://ui.perfetto.dev>) and `dgnnflow farm --metrics-out
+//! metrics.prom` (exposition dump).
+
+pub mod metrics;
+pub mod trace;

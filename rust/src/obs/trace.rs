@@ -1,0 +1,400 @@
+//! Cycle-domain trace export: Chrome-trace-event / Perfetto JSON built
+//! from the engine's stage busy windows and the co-simulated GC lanes'
+//! activity spans.
+//!
+//! **The clock is simulated fabric cycles**: 1 trace timestamp unit = 1
+//! cycle (`ts`/`dur` carry [`SimBreakdown`] cycle counts directly, offset
+//! by each event's [`SimBreakdown::stream_start_cycle`]). No wall clock
+//! enters the document, and [`crate::util::json::Value`] objects render
+//! with sorted keys — so a fixed seed + config produces a byte-identical
+//! trace on every machine and every run, which the obs test suite pins.
+//!
+//! Track layout (one Perfetto "process" per recorder, pid 0 = "fabric"):
+//!
+//! | tid          | track                                            |
+//! |--------------|--------------------------------------------------|
+//! | 0            | per-event lifetime spans + hand-off instants     |
+//! | 1            | embed stage                                      |
+//! | 2            | GC unit (stage window + bin phase)               |
+//! | 3+l          | EdgeConv layer *l* (bank-swap instant at end)    |
+//! | 3+L          | output head (L = layer count)                    |
+//! | 100+j        | GC compare lane *j* (compare / fifo-stall spans) |
+//!
+//! Open the file at <https://ui.perfetto.dev> (or `chrome://tracing`): an
+//! II-packed stream renders as a staircase of overlapping event spans,
+//! with each stage's hand-off to the next event visible as back-to-back
+//! windows on the same track.
+
+use std::collections::BTreeMap;
+
+use crate::dataflow::engine::{SimBreakdown, Stage};
+use crate::dataflow::gc_unit::{GcCosimTrace, GcLaneSpanKind};
+use crate::util::json::{obj, Value};
+
+/// GC compare-lane tracks start here (lanes are few; engine tracks are
+/// fewer — the gap keeps the two groups visually separate in Perfetto).
+const LANE_TID_BASE: u64 = 100;
+
+/// Builds one Chrome-trace JSON document from per-event simulation
+/// records. Feed events in stream order via
+/// [`record_event`](TraceRecorder::record_event); event order and
+/// per-event field order fully determine the output bytes.
+#[derive(Default)]
+pub struct TraceRecorder {
+    events: Vec<Value>,
+    /// tid -> track name (rendered as `ph:"M"` thread_name metadata)
+    tracks: BTreeMap<u64, String>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        TraceRecorder::default()
+    }
+
+    fn track(&mut self, tid: u64, name: &str) -> u64 {
+        self.tracks.entry(tid).or_insert_with(|| name.to_string());
+        tid
+    }
+
+    fn span(&mut self, tid: u64, name: &str, cat: &str, ts: u64, dur: u64, args: Value) {
+        self.events.push(obj(vec![
+            ("ph", Value::from("X")),
+            ("pid", Value::from(0usize)),
+            ("tid", Value::from(tid as usize)),
+            ("ts", Value::from(ts as usize)),
+            ("dur", Value::from(dur as usize)),
+            ("name", Value::from(name)),
+            ("cat", Value::from(cat)),
+            ("args", args),
+        ]));
+    }
+
+    fn instant(&mut self, tid: u64, name: &str, cat: &str, ts: u64) {
+        self.events.push(obj(vec![
+            ("ph", Value::from("i")),
+            ("pid", Value::from(0usize)),
+            ("tid", Value::from(tid as usize)),
+            ("ts", Value::from(ts as usize)),
+            ("s", Value::from("t")),
+            ("name", Value::from(name)),
+            ("cat", Value::from(cat)),
+        ]));
+    }
+
+    fn stage_tid(stage: Stage) -> u64 {
+        match stage {
+            Stage::Embed => 1,
+            Stage::Gc => 2,
+            Stage::Layer(l) => 3 + l as u64,
+            // placed after the layer tracks by record_event (which knows
+            // the layer count); this constant is never used directly
+            Stage::Head => u64::MAX,
+        }
+    }
+
+    /// Record one simulated event: its lifetime span, every
+    /// [`SimBreakdown::stages`] busy window, per-layer bank-swap instants,
+    /// the GC bin phase, and (when the co-sim recorder ran) per-lane
+    /// compare/stall spans. All timestamps are offset by the event's
+    /// [`SimBreakdown::stream_start_cycle`], so an II-packed stream lays
+    /// out exactly as the scheduler packed it.
+    pub fn record_event(&mut self, index: usize, b: &SimBreakdown, gc: Option<&GcCosimTrace>) {
+        let base = b.stream_start_cycle;
+        let ev = format!("event {index}");
+        self.track(0, "events");
+        if index > 0 {
+            // the event-pipelining (or serialized back-to-back) hand-off:
+            // the cycle this event entered the fabric
+            self.instant(0, &format!("handoff {ev}"), "stream", base);
+        }
+        self.span(
+            0,
+            &ev,
+            "event",
+            base,
+            b.total_cycles,
+            obj(vec![
+                ("ii_cycles", Value::from(b.ii_cycles as usize)),
+                ("total_cycles", Value::from(b.total_cycles as usize)),
+                ("stream_start_cycle", Value::from(b.stream_start_cycle as usize)),
+            ]),
+        );
+        let head_tid = 3 + b.layers.len() as u64;
+        for w in &b.stages {
+            let tid = match w.stage {
+                Stage::Head => self.track(head_tid, "head"),
+                s => self.track(Self::stage_tid(s), &s.to_string()),
+            };
+            self.span(
+                tid,
+                &format!("{} {ev}", w.stage),
+                "stage",
+                base + w.start,
+                w.occupancy(),
+                obj(vec![("occupancy_cycles", Value::from(w.occupancy() as usize))]),
+            );
+            if let Stage::Layer(_) = w.stage {
+                // the NE bank pair hands off at the window's closing cycle
+                self.instant(tid, &format!("bank swap {ev}"), "stage", base + w.end - 1);
+            }
+        }
+        if let Some(gstats) = &b.gc {
+            let tid = self.track(2, "gc");
+            self.span(
+                tid,
+                &format!("bin {ev}"),
+                "gc",
+                base,
+                gstats.bin_span(),
+                obj(vec![
+                    ("bin_cycles", Value::from(gstats.bin_cycles as usize)),
+                    (
+                        "cross_event_overlap_cycles",
+                        Value::from(gstats.cross_event_overlap_cycles as usize),
+                    ),
+                ]),
+            );
+        }
+        if let Some(gc) = gc {
+            for (j, spans) in gc.lanes.iter().enumerate() {
+                let tid = self.track(LANE_TID_BASE + j as u64, &format!("gc lane {j}"));
+                for s in spans {
+                    let (name, cat) = match s.kind {
+                        GcLaneSpanKind::Compare => ("compare", "gc-lane"),
+                        GcLaneSpanKind::Stall => ("fifo-stall", "gc-lane"),
+                    };
+                    self.span(tid, name, cat, base + s.start, s.end - s.start, obj(vec![]));
+                }
+            }
+        }
+    }
+
+    /// Render the full Chrome-trace JSON document. Metadata (process /
+    /// thread names) leads, then the recorded events in construction
+    /// order; object keys render sorted — the two together make the bytes
+    /// a pure function of the recorded events.
+    pub fn render(&self) -> String {
+        let mut all: Vec<Value> = Vec::with_capacity(self.events.len() + self.tracks.len() + 1);
+        all.push(obj(vec![
+            ("ph", Value::from("M")),
+            ("pid", Value::from(0usize)),
+            ("name", Value::from("process_name")),
+            ("args", obj(vec![("name", Value::from("fabric"))])),
+        ]));
+        for (tid, name) in &self.tracks {
+            all.push(obj(vec![
+                ("ph", Value::from("M")),
+                ("pid", Value::from(0usize)),
+                ("tid", Value::from(*tid as usize)),
+                ("name", Value::from("thread_name")),
+                ("args", obj(vec![("name", Value::from(name.as_str()))])),
+            ]));
+        }
+        all.extend(self.events.iter().cloned());
+        obj(vec![
+            ("displayTimeUnit", Value::from("ns")),
+            (
+                "otherData",
+                obj(vec![
+                    ("clock", Value::from("fabric-cycles")),
+                    ("unit", Value::from("1 ts = 1 cycle @ fabric clock")),
+                ]),
+            ),
+            ("traceEvents", Value::Arr(all)),
+        ])
+        .to_json()
+    }
+}
+
+/// Well-formedness summary of a parsed trace (see
+/// [`validate_chrome_trace`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub spans: usize,
+    pub instants: usize,
+    pub metadata: usize,
+    /// Largest `ts + dur` over all events — the timeline's end cycle.
+    pub end_cycle: u64,
+}
+
+/// Parse and structurally validate a Chrome-trace JSON document: a
+/// `traceEvents` array whose entries carry a known `ph`, integral
+/// non-negative `ts` (+ `dur` for spans), and a `name`. Returns the
+/// summary the CLI prints (`trace[ok]: ...`) and CI greps; errors name
+/// the offending event.
+pub fn validate_chrome_trace(doc: &str) -> Result<TraceSummary, String> {
+    let v = crate::util::json::parse(doc).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = v
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .map_err(|e| format!("traceEvents: {e}"))?;
+    let mut s = TraceSummary { spans: 0, instants: 0, metadata: 0, end_cycle: 0 };
+    let u64_field = |ev: &Value, i: usize, key: &str| -> Result<u64, String> {
+        let x = ev
+            .get(key)
+            .and_then(|x| x.as_f64())
+            .map_err(|e| format!("traceEvents[{i}].{key}: {e}"))?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(format!("traceEvents[{i}].{key} = {x} is not a whole cycle count"));
+        }
+        Ok(x as u64)
+    };
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str().map(str::to_string))
+            .map_err(|e| format!("traceEvents[{i}].ph: {e}"))?;
+        ev.get("name").map_err(|e| format!("traceEvents[{i}].name: {e}"))?;
+        match ph.as_str() {
+            "M" => s.metadata += 1,
+            "X" => {
+                let ts = u64_field(ev, i, "ts")?;
+                let dur = u64_field(ev, i, "dur")?;
+                s.spans += 1;
+                s.end_cycle = s.end_cycle.max(ts + dur);
+            }
+            "i" => {
+                let ts = u64_field(ev, i, "ts")?;
+                s.instants += 1;
+                s.end_cycle = s.end_cycle.max(ts);
+            }
+            other => return Err(format!("traceEvents[{i}]: unknown phase '{other}'")),
+        }
+    }
+    if s.spans == 0 {
+        return Err("trace contains no spans".to_string());
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Serve-path trace sink
+// ---------------------------------------------------------------------------
+
+/// One event's simulation record captured on the serve path (pipeline or
+/// farm): enough to rebuild its cycle-domain timeline off-thread.
+///
+/// `stream_start_cycle` is **zeroed at capture**: the serve path batches
+/// events by arrival, so the engine's batch-scoped stream offsets depend
+/// on worker count and batch boundaries — per-event timelines (which are
+/// standalone and deterministic) are what the sink records, keyed by
+/// `event_id` so the collector can order them canonically.
+#[derive(Clone, Debug)]
+pub struct TracedEvent {
+    pub event_id: u64,
+    pub breakdown: SimBreakdown,
+    pub gc: Option<GcCosimTrace>,
+}
+
+/// Shared collector the fabric backend pushes [`TracedEvent`]s into when
+/// tracing is enabled on the serve path (see
+/// [`crate::trigger::backend::InferenceBackend::set_trace_sink`]). Clone
+/// it before handing it to the backend; drain with [`drain_sorted`].
+pub type TraceSink = std::sync::Arc<std::sync::Mutex<Vec<TracedEvent>>>;
+
+pub fn new_trace_sink() -> TraceSink {
+    std::sync::Arc::new(std::sync::Mutex::new(Vec::new()))
+}
+
+/// Take every captured event, ordered by `event_id` — the canonical order
+/// that makes a multi-worker serve render the same trace bytes as a
+/// single-worker one (worker scheduling only permutes capture order, never
+/// the per-event records).
+pub fn drain_sorted(sink: &TraceSink) -> Vec<TracedEvent> {
+    let mut evs = std::mem::take(&mut *sink.lock().unwrap());
+    evs.sort_by_key(|e| e.event_id);
+    evs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::engine::StageWindow;
+    use crate::dataflow::gc_unit::GcLaneSpan;
+
+    fn breakdown() -> SimBreakdown {
+        SimBreakdown {
+            embed_cycles: 10,
+            head_cycles: 5,
+            swap_cycles: 1,
+            total_cycles: 36,
+            stages: vec![
+                StageWindow { stage: Stage::Embed, start: 0, end: 10 },
+                StageWindow { stage: Stage::Layer(0), start: 10, end: 31 },
+                StageWindow { stage: Stage::Head, start: 31, end: 36 },
+            ],
+            ii_cycles: 21,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn recorder_covers_every_stage_window_and_is_deterministic() {
+        let render = || {
+            let mut rec = TraceRecorder::new();
+            let mut b = breakdown();
+            rec.record_event(0, &b, None);
+            b.stream_start_cycle = 21;
+            rec.record_event(1, &b, None);
+            rec.render()
+        };
+        let doc = render();
+        assert_eq!(doc, render(), "two identical recordings must render identical bytes");
+        let summary = validate_chrome_trace(&doc).unwrap();
+        // 2 events x (1 lifetime + 3 stage windows)
+        assert_eq!(summary.spans, 8);
+        // 1 bank swap per event + 1 hand-off for event 1
+        assert_eq!(summary.instants, 3);
+        assert_eq!(summary.end_cycle, 21 + 36);
+        assert!(doc.contains("\"traceEvents\""));
+        assert!(doc.contains("handoff event 1"));
+        assert!(doc.contains("bank swap event 0"));
+    }
+
+    #[test]
+    fn gc_lane_spans_render_on_lane_tracks() {
+        let mut rec = TraceRecorder::new();
+        let trace = GcCosimTrace {
+            lanes: vec![
+                vec![
+                    GcLaneSpan { kind: GcLaneSpanKind::Compare, start: 2, end: 6 },
+                    GcLaneSpan { kind: GcLaneSpanKind::Stall, start: 6, end: 8 },
+                ],
+                vec![],
+            ],
+        };
+        rec.record_event(0, &breakdown(), Some(&trace));
+        let doc = rec.render();
+        let summary = validate_chrome_trace(&doc).unwrap();
+        assert_eq!(summary.spans, 4 + 2, "stage spans + 2 lane spans");
+        assert!(doc.contains("\"fifo-stall\""), "{doc}");
+        assert!(doc.contains("gc lane 0"));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        let no_spans = r#"{"traceEvents": [{"ph": "M", "name": "process_name", "pid": 0}]}"#;
+        assert!(validate_chrome_trace(no_spans).unwrap_err().contains("no spans"));
+        let frac = r#"{"traceEvents": [{"ph": "X", "name": "s", "ts": 1.5, "dur": 2}]}"#;
+        assert!(validate_chrome_trace(frac).unwrap_err().contains("whole cycle"));
+        let bad_ph = r#"{"traceEvents": [{"ph": "Q", "name": "s", "ts": 1}]}"#;
+        assert!(validate_chrome_trace(bad_ph).unwrap_err().contains("unknown phase"));
+    }
+
+    #[test]
+    fn drain_sorted_orders_by_event_id() {
+        let sink = new_trace_sink();
+        for id in [3u64, 1, 2] {
+            sink.lock().unwrap().push(TracedEvent {
+                event_id: id,
+                breakdown: breakdown(),
+                gc: None,
+            });
+        }
+        let ids: Vec<u64> = drain_sorted(&sink).iter().map(|e| e.event_id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert!(sink.lock().unwrap().is_empty());
+    }
+}

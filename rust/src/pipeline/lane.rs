@@ -28,9 +28,11 @@ use std::time::{Duration, Instant};
 use super::source::TimedEvent;
 use super::EventRecord;
 use crate::graph::{pad_graph, Bucket, GraphBuilder, PaddedGraph};
+use crate::obs::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::trigger::backend::InferenceBackend;
 use crate::trigger::batcher::{DynamicBatcher, Pending};
 use crate::trigger::rate::RateController;
+use crate::util::stats::Buckets;
 
 /// Smoothing factor for the per-lane service-time EWMA (per-event seconds).
 /// 0.25 reacts within ~4 batches while damping single-batch noise — fast
@@ -82,6 +84,85 @@ pub(crate) struct LaneStats {
     pub device_events: u64,
 }
 
+/// Per-lane metric instruments ([`crate::obs::metrics`]), one set per
+/// worker/shard. All handles are pre-registered at lane construction so
+/// the hot path only touches atomics — the registry mutex is never taken
+/// inside [`run_batch`]. Stage timers are wall-clock *observations* the
+/// lane already measures for its [`EventRecord`]s; the instruments add no
+/// new clock reads.
+pub(crate) struct LaneObs {
+    /// Host graph build + pad seconds, one observation per event.
+    pub build_s: Arc<Histogram>,
+    /// Dynamic-batcher wait seconds, one observation per event.
+    pub queue_s: Arc<Histogram>,
+    /// Backend batch call seconds amortised per event, one per event.
+    pub infer_s: Arc<Histogram>,
+    /// Flushed batch sizes, one observation per batch.
+    pub batch_size: Arc<Histogram>,
+    /// Events that produced a record (served).
+    pub served: Arc<Counter>,
+    /// Events lost to inference failures (mirrors `LaneCtx::failed`).
+    pub failed: Arc<Counter>,
+    /// High-water mark of the in-lane backlog (queued + batching +
+    /// inferring), raised via `fetch_max` as each batch flushes.
+    pub queue_depth_hwm: Arc<Gauge>,
+}
+
+impl LaneObs {
+    /// Register this lane's series under `<prefix>_*` with one
+    /// `<label>="<id>"` label pair (`worker` for pipelines, `shard` for
+    /// farm shards — same instruments, different topology word).
+    pub fn new(reg: &Registry, prefix: &str, label: &str, id: usize) -> LaneObs {
+        let id = id.to_string();
+        let labels: [(&str, &str); 1] = [(label, id.as_str())];
+        // 1 µs .. ~0.5 s in doubling steps: spans sub-ms graph builds
+        // through multi-batch device occupancy at serve time.
+        let time_buckets = Buckets::exponential(1e-6, 2.0, 20);
+        let batch_buckets = Buckets::new(&[1.0, 2.0, 4.0, 8.0, 16.0, 32.0]);
+        LaneObs {
+            build_s: reg.histogram(
+                &format!("{prefix}_build_seconds"),
+                "Host graph build + pad wall-clock per event (seconds).",
+                &labels,
+                &time_buckets,
+            ),
+            queue_s: reg.histogram(
+                &format!("{prefix}_queue_seconds"),
+                "Dynamic-batcher wait per event (seconds).",
+                &labels,
+                &time_buckets,
+            ),
+            infer_s: reg.histogram(
+                &format!("{prefix}_infer_seconds"),
+                "Backend batch call per event, amortised (seconds).",
+                &labels,
+                &time_buckets,
+            ),
+            batch_size: reg.histogram(
+                &format!("{prefix}_batch_size"),
+                "Flushed dynamic-batch sizes (events per batch).",
+                &labels,
+                &batch_buckets,
+            ),
+            served: reg.counter(
+                &format!("{prefix}_served_total"),
+                "Events served (one record emitted).",
+                &labels,
+            ),
+            failed: reg.counter(
+                &format!("{prefix}_failed_total"),
+                "Events lost to inference failures.",
+                &labels,
+            ),
+            queue_depth_hwm: reg.gauge(
+                &format!("{prefix}_queue_depth_high_water"),
+                "High-water mark of the in-lane backlog (events).",
+                &labels,
+            ),
+        }
+    }
+}
+
 /// Everything a lane thread needs. `lane_id` tags every record and stats
 /// message so a multi-shard collector can attribute them.
 pub(crate) struct LaneCtx<B: InferenceBackend> {
@@ -101,6 +182,9 @@ pub(crate) struct LaneCtx<B: InferenceBackend> {
     /// Optional per-event service-time EWMA (seconds), stored as f64 bits.
     /// Single writer (this lane); readers are the farm's router/admission.
     pub service_ewma_bits: Option<Arc<AtomicU64>>,
+    /// Optional metric instruments; None (the default) skips every
+    /// observation, so an unmetered lane's hot path is unchanged.
+    pub obs: Option<LaneObs>,
     pub records_tx: mpsc::Sender<(usize, EventRecord)>,
     pub stats_tx: mpsc::Sender<(usize, LaneStats)>,
 }
@@ -141,6 +225,9 @@ pub(crate) fn worker_loop<B: InferenceBackend>(rx: mpsc::Receiver<LaneEvent>, ct
                 let graph = builder.build(&le.te.event);
                 let padded = pad_graph(&le.te.event, &graph, &ctx.buckets);
                 let build_s = tb.elapsed().as_secs_f64();
+                if let Some(obs) = &ctx.obs {
+                    obs.build_s.observe(build_s);
+                }
                 batcher.push(Prepared {
                     event_id: le.te.event.id,
                     arrival_s: le.te.arrival_s,
@@ -185,11 +272,22 @@ fn run_batch<B: InferenceBackend>(
     }
     let len = batch.len();
     stats.batch_hist[len - 1] += 1;
+    if let Some(obs) = &ctx.obs {
+        obs.batch_size.observe(len as f64);
+        if let Some(d) = &ctx.queue_depth {
+            // backlog still includes this batch: the pre-decrement depth
+            // is the lane's true high-water candidate
+            obs.queue_depth_hwm.fetch_max(d.load(Ordering::Relaxed) as u64);
+        }
+    }
     let flushed_at = Instant::now();
     let mut metas: Vec<Meta> = Vec::with_capacity(len);
     let mut graphs = Vec::with_capacity(len);
     for p in batch {
         let queue_s = flushed_at.duration_since(p.enqueued_at).as_secs_f64();
+        if let Some(obs) = &ctx.obs {
+            obs.queue_s.observe(queue_s);
+        }
         let Prepared { event_id, arrival_s, n, e, build_s, truncated, enqueued_at, padded } =
             p.item;
         graphs.push(padded);
@@ -201,6 +299,9 @@ fn run_batch<B: InferenceBackend>(
         Err(e) => {
             eprintln!("inference failed for batch of {len}: {e:#}");
             ctx.failed.fetch_add(len as u64, Ordering::Relaxed);
+            if let Some(obs) = &ctx.obs {
+                obs.failed.add(len as u64);
+            }
             leave_backlog(&ctx.queue_depth, len);
             return;
         }
@@ -208,6 +309,9 @@ fn run_batch<B: InferenceBackend>(
     if outputs.len() != len {
         eprintln!("backend returned {} outputs for batch of {len}; dropping batch", outputs.len());
         ctx.failed.fetch_add(len as u64, Ordering::Relaxed);
+        if let Some(obs) = &ctx.obs {
+            obs.failed.add(len as u64);
+        }
         leave_backlog(&ctx.queue_depth, len);
         return;
     }
@@ -231,6 +335,14 @@ fn run_batch<B: InferenceBackend>(
     }
     let done_at = Instant::now();
     let infer_s = done_at.duration_since(ti).as_secs_f64() / len as f64;
+    if let Some(obs) = &ctx.obs {
+        // one observation per event (the amortised share), so the
+        // histogram's _count reconciles with the served counter
+        for _ in 0..len {
+            obs.infer_s.observe(infer_s);
+        }
+        obs.served.add(len as u64);
+    }
     if let Some(bits) = &ctx.service_ewma_bits {
         let prev = f64::from_bits(bits.load(Ordering::Relaxed));
         let next = if prev > 0.0 {

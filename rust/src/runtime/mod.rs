@@ -152,6 +152,7 @@ pub fn load_test_vectors(artifacts_dir: &Path) -> Result<Vec<TestVector>> {
         let n_max = tv.get("n_max")?.as_usize()?;
         let e_max = tv.get("e_max")?.as_usize()?;
         let graph = PaddedGraph {
+            event_id: 0, // test vectors carry no source event
             bucket: Bucket { n_max, e_max },
             n: tv.get("n")?.as_usize()?,
             e: tv.get("e")?.as_usize()?,

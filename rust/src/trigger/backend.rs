@@ -11,6 +11,7 @@ use crate::dataflow::{BuildSite, DataflowEngine};
 use crate::fixedpoint::Arith;
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, ModelOutput};
+use crate::obs::trace::{TraceSink, TracedEvent};
 use crate::runtime::PjrtService;
 
 /// Anything that can turn padded event graphs into model outputs.
@@ -125,6 +126,14 @@ pub trait InferenceBackend: Send + Sync {
     ) -> anyhow::Result<(Vec<ModelOutput>, Option<Vec<f64>>)> {
         Ok((self.infer_batch(graphs)?, self.device_batch_latency_s(graphs)))
     }
+
+    /// Install a cycle-domain trace sink ([`crate::obs::trace`]). Backends
+    /// that model a device in simulated cycles push one
+    /// [`TracedEvent`] per inferred graph into the sink, keyed by
+    /// [`PaddedGraph::event_id`] so records can be reassembled in event
+    /// order regardless of worker scheduling. Native backends have no
+    /// cycle domain; the default ignores the sink.
+    fn set_trace_sink(&mut self, _sink: TraceSink) {}
 }
 
 /// Concrete backend choices (enum avoids trait objects in hot loops).
@@ -159,11 +168,29 @@ impl Backend {
     ) -> (Vec<ModelOutput>, Vec<f64>) {
         let mut outputs = Vec::with_capacity(graphs.len());
         let mut done_at = Vec::with_capacity(graphs.len());
-        let rs = engine.run_stream(graphs);
+        // With a trace sink installed, run the traced variant (identical
+        // scheduling; GC lanes additionally record per-cycle spans) and
+        // capture one TracedEvent per graph. `stream_start_cycle` is
+        // zeroed at capture: it encodes batch packing, which depends on
+        // how the batcher grouped events and would otherwise make traces
+        // differ across worker counts for the same event stream.
+        let rs = if let Some(sink) = engine.trace_sink() {
+            let rs = engine.run_stream_traced(graphs);
+            let mut captured = sink.lock().expect("trace sink poisoned");
+            for (g, (r, gc)) in graphs.iter().zip(&rs) {
+                let mut breakdown = r.breakdown.clone();
+                breakdown.stream_start_cycle = 0;
+                captured.push(TracedEvent { event_id: g.event_id, breakdown, gc: gc.clone() });
+            }
+            drop(captured);
+            rs
+        } else {
+            engine.run_stream(graphs).into_iter().map(|r| (r, None)).collect()
+        };
         if engine.event_pipelining_active() {
-            let t_in0 = rs.first().map(|r| r.breakdown.transfer_in_s).unwrap_or(0.0);
+            let t_in0 = rs.first().map(|(r, _)| r.breakdown.transfer_in_s).unwrap_or(0.0);
             let cycle_s = engine.arch.cycle_s();
-            for r in rs {
+            for (r, _) in rs {
                 let fabric_done = (r.breakdown.stream_start_cycle
                     + r.breakdown.total_cycles) as f64
                     * cycle_s;
@@ -172,7 +199,7 @@ impl Backend {
             }
         } else {
             let mut occupied_s = 0.0;
-            for r in rs {
+            for (r, _) in rs {
                 occupied_s += r.e2e_s;
                 outputs.push(r.output);
                 done_at.push(occupied_s);
@@ -284,6 +311,12 @@ impl InferenceBackend for Backend {
                 Ok((outputs, Some(done_at)))
             }
             _ => Ok((self.infer_batch(graphs)?, None)),
+        }
+    }
+
+    fn set_trace_sink(&mut self, sink: TraceSink) {
+        if let Backend::Fpga(engine) = self {
+            engine.set_trace_sink(Some(sink));
         }
     }
 }

@@ -180,6 +180,26 @@ fn validate_whitelist(emitted: &Value) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Operator guidance printed whenever a baseline is missing: the exact
+/// bootstrap flow, so a fresh checkout (or a CI runner that just failed
+/// the missing-baseline check) never has to reverse-engineer it from the
+/// gate's source. Kept in one place so the CLI's local and CI messages
+/// can't drift apart.
+pub fn bootstrap_help() -> String {
+    [
+        "bootstrap flow (details in rust/baselines/README.md):",
+        "  1. run the benches locally (./rust/ci.sh --bench-check runs them and this gate);",
+        "     a missing baseline is bootstrapped from the emitted BENCH_*.json,",
+        "  2. review the bootstrapped rust/baselines/*.json and commit them so CI pins",
+        "     every simulated cycle count,",
+        "  3. in CI the bootstrapped files are uploaded as the `bench-baselines` artifact —",
+        "     download and commit that instead of re-running the benches if you trust the run,",
+        "  4. after a reviewed timing change, re-baseline with DGNNFLOW_BENCH_REBASE=1",
+        "     and commit the updated baselines.",
+    ]
+    .join("\n")
+}
+
 /// Outcome of one emitted-vs-baseline gate run.
 #[derive(Debug, PartialEq)]
 pub enum GateOutcome {
@@ -448,6 +468,14 @@ mod tests {
         assert!(err.to_string().contains("gc_cycles"), "{err}");
         assert!(!baseline.exists(), "must not bootstrap a degraded baseline");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bootstrap_help_names_the_artifact_the_rebase_knob_and_the_readme() {
+        let help = bootstrap_help();
+        for needle in ["bench-baselines", "DGNNFLOW_BENCH_REBASE=1", "rust/baselines/README.md"] {
+            assert!(help.contains(needle), "bootstrap help must mention '{needle}':\n{help}");
+        }
     }
 
     #[test]

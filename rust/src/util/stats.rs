@@ -109,6 +109,119 @@ pub fn p999(xs: &[f64]) -> f64 {
     percentile(xs, 99.9)
 }
 
+/// Sort-once percentile extractor: the single NaN-safe implementation
+/// behind every p50/p99/p999 report line (`ServeReport`, `ShardReport`,
+/// `FarmReport`) and the `obs::metrics` snapshots.
+///
+/// Semantics are bit-identical to calling the free `percentile` function
+/// per query (same `f64::total_cmp` sort, same linear interpolation, NaNs
+/// ordered after +inf), but the sample vector is sorted exactly once, and
+/// the empty-set convention is explicit: `percentile` returns NaN like the
+/// free function, `percentile_or` substitutes a caller-chosen default (the
+/// report paths use 0.0).
+#[derive(Clone, Debug)]
+pub struct Quantiles {
+    sorted: Vec<f64>,
+}
+
+impl Quantiles {
+    pub fn new(xs: &[f64]) -> Self {
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        Quantiles { sorted: v }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Percentile (p in [0, 100]); NaN on an empty sample set, matching the
+    /// free `percentile` function bit for bit.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_sorted(&self.sorted, p)
+    }
+
+    /// Percentile with an explicit empty-set default — the idiom every
+    /// report struct used as an ad-hoc closure (`if xs.is_empty() { 0.0 }`).
+    pub fn percentile_or(&self, p: f64, default: f64) -> f64 {
+        if self.sorted.is_empty() {
+            default
+        } else {
+            percentile_sorted(&self.sorted, p)
+        }
+    }
+
+    pub fn median_or(&self, default: f64) -> f64 {
+        self.percentile_or(50.0, default)
+    }
+
+    pub fn p99_or(&self, default: f64) -> f64 {
+        self.percentile_or(99.0, default)
+    }
+
+    pub fn p999_or(&self, default: f64) -> f64 {
+        self.percentile_or(99.9, default)
+    }
+}
+
+/// Ascending, finite upper-bucket bounds for a cumulative (Prometheus-style)
+/// histogram; every value additionally lands in the implicit `+Inf` bucket.
+/// Shared between `obs::metrics::Histogram` and anything else that needs a
+/// fixed-bucket layout — distinct from `stats::Histogram`, whose equal-width
+/// clamping bins are pinned by the bench gate and must not change.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Buckets {
+    bounds: Vec<f64>,
+}
+
+impl Buckets {
+    /// `bounds` must be strictly ascending and finite (panics otherwise —
+    /// bucket layouts are compile-time decisions, not data).
+    pub fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "need at least one bucket bound");
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "bucket bounds must be strictly ascending");
+        }
+        assert!(bounds.iter().all(|b| b.is_finite()), "bucket bounds must be finite");
+        Buckets { bounds: bounds.to_vec() }
+    }
+
+    /// Exponential layout: `start, start*factor, ...` (`count` bounds).
+    pub fn exponential(start: f64, factor: f64, count: usize) -> Self {
+        assert!(start > 0.0 && factor > 1.0 && count > 0);
+        let mut bounds = Vec::with_capacity(count);
+        let mut b = start;
+        for _ in 0..count {
+            bounds.push(b);
+            b *= factor;
+        }
+        Buckets::new(&bounds)
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Number of finite buckets (the +Inf bucket is implicit and extra).
+    pub fn len(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction requires at least one bound
+    }
+
+    /// Index of the first bucket with `v <= bound`; values above every
+    /// bound — and NaN — land in the implicit +Inf bucket at index `len()`.
+    pub fn index_of(&self, v: f64) -> usize {
+        self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len())
+    }
+}
+
 /// Half the 16–84 inter-quantile width: a robust sigma used for MET
 /// resolution (insensitive to non-Gaussian tails, standard in HEP).
 pub fn quantile_resolution(residuals: &[f64]) -> f64 {
@@ -281,6 +394,56 @@ mod tests {
         let r = quantile_resolution(&residuals);
         assert!(r.is_finite() && r > 0.0, "r={r}");
         assert!(quantile_resolution(&[f64::NAN, f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn quantiles_bit_identical_to_free_functions() {
+        // The sort-once extractor must reproduce the free functions (and
+        // the ad-hoc report closures it replaced) bit for bit, including
+        // on NaN-bearing inputs and the empty-set default.
+        let cases: Vec<Vec<f64>> = vec![
+            (1..=100).map(|i| i as f64).collect(),
+            vec![7.0],
+            vec![1.0, f64::NAN, 3.0],
+            vec![f64::NAN, f64::NAN],
+            (0..1000).map(|i| ((i * 2654435761u64 as usize) % 997) as f64 * 0.1).collect(),
+            vec![],
+        ];
+        for xs in &cases {
+            let q = Quantiles::new(xs);
+            for p in [0.0, 15.865, 50.0, 84.135, 99.0, 99.9, 100.0] {
+                let free = percentile(xs, p);
+                let got = q.percentile(p);
+                assert!(free.to_bits() == got.to_bits(), "p{p} of {xs:?}: {got} != {free}");
+            }
+            // the report-closure idiom: 0.0 on empty, else the percentile
+            let old_med = if xs.is_empty() { 0.0 } else { median(xs) };
+            let old_p99 = if xs.is_empty() { 0.0 } else { percentile(xs, 99.0) };
+            let old_p999 = if xs.is_empty() { 0.0 } else { p999(xs) };
+            assert_eq!(q.median_or(0.0).to_bits(), old_med.to_bits());
+            assert_eq!(q.p99_or(0.0).to_bits(), old_p99.to_bits());
+            assert_eq!(q.p999_or(0.0).to_bits(), old_p999.to_bits());
+        }
+    }
+
+    #[test]
+    fn buckets_index_and_layout() {
+        let b = Buckets::new(&[1.0, 2.0, 5.0]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.index_of(0.5), 0);
+        assert_eq!(b.index_of(1.0), 0, "le bound is inclusive");
+        assert_eq!(b.index_of(1.5), 1);
+        assert_eq!(b.index_of(5.0), 2);
+        assert_eq!(b.index_of(5.1), 3, "overflow -> implicit +Inf bucket");
+        assert_eq!(b.index_of(f64::NAN), 3, "NaN -> implicit +Inf bucket");
+        let e = Buckets::exponential(1.0, 10.0, 4);
+        assert_eq!(e.bounds(), &[1.0, 10.0, 100.0, 1000.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn buckets_reject_unordered_bounds() {
+        Buckets::new(&[2.0, 1.0]);
     }
 
     #[test]

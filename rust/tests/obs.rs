@@ -1,0 +1,232 @@
+//! Observability integration tests: cycle-domain trace export must be
+//! byte-deterministic (across runs and across worker counts), tracing must
+//! never perturb the simulation (whole-struct `SimBreakdown` pins), and
+//! the Prometheus-style serving metrics must reconcile exactly with the
+//! pipeline/farm reports they instrument.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dgnnflow::config::{ArchConfig, ModelConfig};
+use dgnnflow::dataflow::{BuildSite, DataflowEngine};
+use dgnnflow::farm::{Farm, RoutingPolicy};
+use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS, PaddedGraph};
+use dgnnflow::model::{L1DeepMetV2, Weights};
+use dgnnflow::obs::metrics::Registry;
+use dgnnflow::obs::trace::{drain_sorted, new_trace_sink, validate_chrome_trace, TraceRecorder};
+use dgnnflow::physics::{EventGenerator, GeneratorConfig};
+use dgnnflow::pipeline::{Pipeline, ReplaySource};
+use dgnnflow::trigger::{Backend, InferenceBackend};
+
+fn model(seed: u64) -> L1DeepMetV2 {
+    let cfg = ModelConfig::default();
+    L1DeepMetV2::new(cfg.clone(), Weights::random(&cfg, seed)).unwrap()
+}
+
+fn graphs(seed: u64, n: usize) -> Vec<PaddedGraph> {
+    let mut gen = EventGenerator::with_seed(seed);
+    (0..n)
+        .map(|_| {
+            let ev = gen.generate();
+            pad_graph(&ev, &build_edges(&ev, 0.8), &DEFAULT_BUCKETS)
+        })
+        .collect()
+}
+
+fn fabric_engine(seed: u64) -> DataflowEngine {
+    let mut engine = DataflowEngine::new(ArchConfig::default(), model(seed)).unwrap();
+    engine.set_build_site(BuildSite::Fabric, 0.8).unwrap();
+    engine
+}
+
+#[test]
+fn stream_trace_is_byte_deterministic_and_covers_every_stage_window() {
+    let gs = graphs(71, 3);
+    let render = || {
+        let engine = fabric_engine(19);
+        let rs = engine.run_stream_traced(&gs);
+        let mut rec = TraceRecorder::new();
+        for (i, (r, gc)) in rs.iter().enumerate() {
+            rec.record_event(i, &r.breakdown, gc.as_ref());
+        }
+        (rs, rec.render())
+    };
+    let (rs, doc) = render();
+    let (_, doc2) = render();
+    assert_eq!(doc, doc2, "same seed + config must render byte-identical traces");
+
+    let summary = validate_chrome_trace(&doc).unwrap();
+    // exact span census: per event one lifetime span, one span per stage
+    // busy window, one GC bin-phase span, and every co-simulated lane span
+    let expected: usize = rs
+        .iter()
+        .map(|(r, gc)| {
+            1 + r.breakdown.stages.len()
+                + r.breakdown.gc.iter().count()
+                + gc.iter().flat_map(|t| t.lanes.iter()).map(Vec::len).sum::<usize>()
+        })
+        .sum();
+    assert_eq!(summary.spans, expected, "every stage window must appear in the trace");
+    let end = rs
+        .iter()
+        .map(|(r, _)| r.breakdown.stream_start_cycle + r.breakdown.total_cycles)
+        .max()
+        .unwrap();
+    assert_eq!(summary.end_cycle, end);
+    // the fabric build site must surface its GC unit and compare lanes
+    for needle in ["\"embed", "\"layer0", "\"head", "\"gc\"", "gc lane 0", "bank swap event 0"] {
+        assert!(doc.contains(needle), "trace missing {needle}");
+    }
+}
+
+#[test]
+fn tracing_leaves_the_simulation_bit_identical() {
+    let gs = graphs(72, 2);
+    let engine = fabric_engine(20);
+    for g in &gs {
+        let plain = engine.run(g);
+        let (traced, gc) = engine.run_traced(g);
+        // whole-struct pin: any future breakdown field is covered too
+        assert_eq!(plain.breakdown, traced.breakdown);
+        assert_eq!(plain.output.met_xy, traced.output.met_xy);
+        assert_eq!(plain.output.weights, traced.output.weights);
+        assert_eq!(plain.compute_s.to_bits(), traced.compute_s.to_bits());
+        assert_eq!(plain.e2e_s.to_bits(), traced.e2e_s.to_bits());
+        assert!(gc.is_some(), "fabric build must co-simulate lane traces");
+    }
+    let stream_plain = engine.run_stream(&gs);
+    let stream_traced = engine.run_stream_traced(&gs);
+    for (p, (t, _)) in stream_plain.iter().zip(&stream_traced) {
+        assert_eq!(p.breakdown, t.breakdown, "recorder on/off must not move a cycle");
+    }
+}
+
+/// One serve through the trigger pipeline with a trace sink installed;
+/// returns the rendered trace bytes and the physics fingerprints.
+fn traced_serve(workers: usize, with_sink: bool) -> (String, Vec<(u64, u32)>) {
+    let n = 12;
+    let sink = new_trace_sink();
+    let mut backend = Backend::Fpga(DataflowEngine::new(ArchConfig::default(), model(33)).unwrap());
+    if with_sink {
+        backend.set_trace_sink(sink.clone());
+    }
+    let report = Pipeline::builder()
+        .source(ReplaySource::from_seed(55, GeneratorConfig::default(), n))
+        .backend(backend)
+        .batching(3, Duration::from_millis(2))
+        .workers(workers)
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.records.len(), n);
+    let mut fps: Vec<(u64, u32)> =
+        report.records.iter().map(|r| (r.event_id, r.met.to_bits())).collect();
+    fps.sort_unstable();
+    let evs = drain_sorted(&sink);
+    if with_sink {
+        assert_eq!(evs.len(), n, "the sink must capture every inferred event");
+    } else {
+        assert!(evs.is_empty(), "no sink installed: nothing may be captured");
+    }
+    let mut rec = TraceRecorder::new();
+    for (i, e) in evs.iter().enumerate() {
+        assert_eq!(e.breakdown.stream_start_cycle, 0, "serve-path captures are re-based");
+        rec.record_event(i, &e.breakdown, e.gc.as_ref());
+    }
+    (rec.render(), fps)
+}
+
+#[test]
+fn serve_trace_is_worker_count_invariant_and_sink_does_not_change_physics() {
+    let (doc1, fps1) = traced_serve(1, true);
+    let (doc4, fps4) = traced_serve(4, true);
+    assert_eq!(fps1, fps4);
+    assert_eq!(
+        doc1, doc4,
+        "worker scheduling permutes capture order only — the rendered trace must not move"
+    );
+    validate_chrome_trace(&doc1).unwrap();
+    let (_, fps_off) = traced_serve(1, false);
+    assert_eq!(fps1, fps_off, "installing a sink must not change any served MET");
+}
+
+#[test]
+fn farm_metrics_reconcile_exactly_with_the_report() {
+    let n = 20;
+    let reg = Arc::new(Registry::new());
+    let report = Farm::builder()
+        .shards((0..2).map(|_| Backend::RustCpu(model(44))))
+        .source(ReplaySource::from_seed(91, GeneratorConfig::default(), n))
+        .routing(RoutingPolicy::JoinShortestQueue)
+        .batching(2, Duration::from_millis(2))
+        .metrics(reg.clone())
+        .build()
+        .unwrap()
+        .serve();
+    assert!(report.accounting_ok(), "{}", report.summary());
+    let snap = reg.snapshot();
+    for (name, want) in [
+        ("farm_offered_total", report.offered),
+        ("farm_admitted_total", report.admitted),
+        ("farm_rejected_total", report.rejected),
+        ("farm_shed_total", report.shed),
+        ("farm_served_total", report.events as u64),
+        ("farm_failed_total", report.failed),
+    ] {
+        assert_eq!(snap.counter_total(name), want, "{name} must reconcile with the report");
+    }
+    // per-shard counters match the per-shard report lines
+    for (i, s) in report.shards.iter().enumerate() {
+        let id = i.to_string();
+        let labels = [("shard", id.as_str())];
+        assert_eq!(snap.counter_value("farm_served_total", &labels), Some(s.events as u64));
+        assert_eq!(snap.counter_value("farm_failed_total", &labels), Some(s.failed));
+    }
+    // every offered event passed through the router under the one policy
+    assert_eq!(
+        snap.counter_value("farm_routing_decisions_total", &[("policy", "jsq")]),
+        Some(report.offered)
+    );
+    let text = snap.render_prometheus();
+    for needle in [
+        "# TYPE farm_offered_total counter",
+        "# TYPE farm_admission_deadline_margin_ms histogram",
+        "farm_served_total{shard=\"0\"}",
+        "farm_served_total{shard=\"1\"}",
+    ] {
+        assert!(text.contains(needle), "exposition missing {needle}:\n{text}");
+    }
+}
+
+#[test]
+fn pipeline_metrics_count_served_events_and_batches() {
+    let n = 10;
+    let workers = 2;
+    let reg = Arc::new(Registry::new());
+    let report = Pipeline::builder()
+        .source(ReplaySource::from_seed(92, GeneratorConfig::default(), n))
+        .backend(Backend::RustCpu(model(45)))
+        .batching(2, Duration::from_millis(2))
+        .workers(workers)
+        .metrics(reg.clone())
+        .build()
+        .unwrap()
+        .serve();
+    assert_eq!(report.records.len(), n);
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter_total("pipeline_served_total"), n as u64);
+    assert_eq!(snap.counter_total("pipeline_failed_total"), 0);
+    let sum_hist = |name: &str| -> u64 {
+        (0..workers)
+            .map(|w| {
+                let id = w.to_string();
+                snap.histogram_snapshot(name, &[("worker", id.as_str())])
+                    .map(|h| h.count)
+                    .unwrap_or(0)
+            })
+            .sum()
+    };
+    assert_eq!(sum_hist("pipeline_infer_seconds"), n as u64);
+    assert_eq!(sum_hist("pipeline_queue_seconds"), n as u64);
+    assert_eq!(sum_hist("pipeline_batch_size"), report.batches);
+}
