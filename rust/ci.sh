@@ -3,8 +3,11 @@
 #
 #   ./ci.sh                full gate: the quick tier, the bench-regression
 #                          gate, a release build, and the full test suite
-#   ./ci.sh --quick        smoke tier: cargo fmt --check and clippy
-#                          (warnings are errors) so lint drift fails fast,
+#   ./ci.sh --quick        smoke tier: `dgnnflow lint` (the in-tree
+#                          determinism/panic-freedom static-analysis pass)
+#                          ahead of everything else, then cargo fmt --check
+#                          and clippy (warnings are errors) so lint drift
+#                          fails fast,
 #                          bench compilation, the golden-vector conformance
 #                          suite, the GC-vs-host edge-set equality tests,
 #                          the pipelined-vs-serialized schedule property,
@@ -50,6 +53,10 @@ case "${1:-}" in
 esac
 
 quick_tier() {
+    echo "==> dgnnflow lint (in-tree static analysis: wall-clock, unordered-iter,"
+    echo "    panic-free-library, float-total-order, lossy-cast)"
+    cargo run --locked -q -- lint
+
     echo "==> cargo fmt --check"
     cargo fmt --check
 

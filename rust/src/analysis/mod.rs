@@ -1,0 +1,475 @@
+//! Static analysis: the `dgnnflow lint` determinism & panic-freedom pass.
+//!
+//! The repo re-derives in software the invariants the DGNNFlow fabric
+//! gets for free in hardware: cycle-domain results are bit-exact and
+//! wall-clock-free, rendered output never depends on hash-iteration
+//! order, and library code fails through typed errors instead of
+//! aborting a trigger-path worker. Runtime tests only catch a violation
+//! if they happen to exercise the offending path; this pass catches it
+//! at the line that introduces it, in every PR, before any test runs.
+//!
+//! Five rules, each scoped by the [`POLICY`] table below:
+//!
+//! | rule id              | contract                                              |
+//! |----------------------|-------------------------------------------------------|
+//! | `wall-clock`         | no `Instant`/`SystemTime` in cycle-domain modules     |
+//! | `unordered-iter`     | no `HashMap`/`HashSet` where output is rendered       |
+//! | `panic-free-library` | no `unwrap`/`expect`/`panic!`/non-test `assert!`      |
+//! | `float-total-order`  | float ordering via `total_cmp`, never `partial_cmp`   |
+//! | `lossy-cast`         | narrowing `as` casts go through `fixedpoint::cast`    |
+//!
+//! A violation is suppressed — and counted, so the audit stays visible —
+//! only by an annotation that carries its own justification, trailing the
+//! line or in the comment block directly above it:
+//!
+//! ```text
+//! // lint: allow(wall-clock) — bench harness: the sample IS a wall-clock time
+//! ```
+//!
+//! A bare `lint: allow(rule)` without the `— <why>` text does not
+//! suppress anything; the diagnostic stands and says so.
+//!
+//! In the spirit of rust-lang's `tidy`, this is a hand-rolled scanner
+//! (no vendored parser): [`scanner`] strips comments and literal
+//! contents and tracks `#[cfg(test)]` / `mod tests` regions; [`rules`]
+//! runs token-level checks on what remains. Entry points: `dgnnflow
+//! lint` (CI runs it in `ci.sh --quick`, ahead of clippy) and
+//! [`run`] / [`lint_source`] for tests.
+
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// Machine-readable rule identifiers (stable: they appear in diagnostics,
+/// suppressions, and CI logs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleId {
+    WallClock,
+    UnorderedIter,
+    PanicFreeLibrary,
+    FloatTotalOrder,
+    LossyCast,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 5] = [
+        RuleId::WallClock,
+        RuleId::UnorderedIter,
+        RuleId::PanicFreeLibrary,
+        RuleId::FloatTotalOrder,
+        RuleId::LossyCast,
+    ];
+
+    /// The id as written in diagnostics and `lint: allow(...)` directives.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::WallClock => "wall-clock",
+            RuleId::UnorderedIter => "unordered-iter",
+            RuleId::PanicFreeLibrary => "panic-free-library",
+            RuleId::FloatTotalOrder => "float-total-order",
+            RuleId::LossyCast => "lossy-cast",
+        }
+    }
+
+    /// One-line contract, shown by `dgnnflow lint --rules`.
+    pub fn contract(self) -> &'static str {
+        match self {
+            RuleId::WallClock => {
+                "cycle-domain modules must not read the host clock: traces and \
+                 metric values are pinned byte-identical across machines"
+            }
+            RuleId::UnorderedIter => {
+                "modules that render serialized output must not iterate \
+                 hash-ordered containers: rendered bytes must be deterministic"
+            }
+            RuleId::PanicFreeLibrary => {
+                "library code fails through typed errors (FormatError / \
+                 GcDeltaError precedent): a trigger-path worker must never abort"
+            }
+            RuleId::FloatTotalOrder => {
+                "float ordering uses total_cmp: the PR 4 NaN-percentile-panic \
+                 class, made unrepresentable"
+            }
+            RuleId::LossyCast => {
+                "datapath narrowing goes through fixedpoint::cast so every \
+                 width change is a checked, auditable site"
+            }
+        }
+    }
+}
+
+/// A per-module exemption in the policy table, with its reason.
+pub struct Exemption {
+    pub rule: RuleId,
+    /// Path prefix relative to the crate root, `/`-separated.
+    pub prefix: &'static str,
+    pub why: &'static str,
+}
+
+/// Where each rule looks (path prefixes relative to the crate root).
+fn rule_scope(rule: RuleId) -> &'static [&'static str] {
+    match rule {
+        RuleId::WallClock => &["src/"],
+        RuleId::UnorderedIter => &[
+            "src/analysis/",
+            "src/dataflow/",
+            "src/fixedpoint/",
+            "src/graph/",
+            "src/model/",
+            "src/obs/",
+            "src/util/bench.rs",
+            "src/util/benchgate.rs",
+            "src/util/json.rs",
+            "src/util/stats.rs",
+            "benches/",
+        ],
+        RuleId::PanicFreeLibrary => &["src/"],
+        RuleId::FloatTotalOrder => &["src/", "benches/"],
+        RuleId::LossyCast => &["src/dataflow/", "src/fixedpoint/", "src/graph/", "src/model/"],
+    }
+}
+
+/// The per-module policy table: every blanket exemption, with its reason.
+/// Keep this narrow — single legitimate sites inside covered modules get a
+/// justified `lint: allow(...)` at the site instead of a row here.
+pub const POLICY: &[Exemption] = &[
+    Exemption {
+        rule: RuleId::WallClock,
+        prefix: "src/pipeline/",
+        why: "the pipeline measures real serving latency — wall clock is the \
+              measurand there, never a simulation result",
+    },
+    Exemption {
+        rule: RuleId::WallClock,
+        prefix: "src/trigger/",
+        why: "batcher flush deadlines and the rate controller are wall-clock \
+              serving contracts",
+    },
+    Exemption {
+        rule: RuleId::WallClock,
+        prefix: "src/farm/",
+        why: "dispatcher SLO admission runs on real arrival and deadline clocks",
+    },
+    Exemption {
+        rule: RuleId::PanicFreeLibrary,
+        prefix: "src/main.rs",
+        why: "binary entrypoint — exiting the process on bad arguments is the \
+              CLI contract, not a library abort",
+    },
+    Exemption {
+        rule: RuleId::LossyCast,
+        prefix: "src/fixedpoint/cast.rs",
+        why: "the checked-cast helpers themselves perform the final bounded `as`",
+    },
+];
+
+/// True if `rule` covers `rel_path` (in scope and not policy-exempt).
+pub fn applies(rule: RuleId, rel_path: &str) -> bool {
+    if !rule_scope(rule).iter().any(|p| rel_path.starts_with(p)) {
+        return false;
+    }
+    !POLICY.iter().any(|e| e.rule == rule && rel_path.starts_with(e.prefix))
+}
+
+/// One diagnostic: `file:line: rule: message`.
+#[derive(Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: RuleId,
+    pub message: String,
+}
+
+/// Result of a whole-tree lint pass.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    /// Violations silenced by a *justified* `lint: allow(...)`.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Diagnostics (one per line) followed by the one-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}:{}: {}: {}\n", d.file, d.line, d.rule.as_str(), d.message));
+        }
+        out.push_str(&self.summary());
+        out.push('\n');
+        out
+    }
+
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            format!(
+                "lint[ok] files={} rules={} suppressed={}",
+                self.files_scanned,
+                RuleId::ALL.len(),
+                self.suppressed
+            )
+        } else {
+            format!(
+                "lint: {} violation(s) in {} file(s) scanned ({} justified suppression(s))",
+                self.diagnostics.len(),
+                self.files_scanned,
+                self.suppressed
+            )
+        }
+    }
+}
+
+/// How a flagged line relates to any `lint: allow(...)` directive.
+enum AllowState {
+    None,
+    Justified,
+    Unjustified,
+}
+
+fn allow_state(scanned: &scanner::ScannedFile, idx: usize, rule: RuleId) -> AllowState {
+    // Trailing directive on the flagged line itself.
+    if let Some(state) = directive_for(&scanned.lines[idx].comment, rule) {
+        return state;
+    }
+    // Directive in the comment block directly above (no code between it
+    // and the flagged line — a wrapped justification stays one block).
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let prev = &scanned.lines[i];
+        if !prev.code.trim().is_empty() {
+            break;
+        }
+        if let Some(state) = directive_for(&prev.comment, rule) {
+            return state;
+        }
+    }
+    AllowState::None
+}
+
+fn directive_for(comment: &str, rule: RuleId) -> Option<AllowState> {
+    let d = scanner::parse_allow(comment)?;
+    if d.rule != rule.as_str() {
+        return None;
+    }
+    if d.justification.is_empty() {
+        Some(AllowState::Unjustified)
+    } else {
+        Some(AllowState::Justified)
+    }
+}
+
+/// Lint one file's source as if it lived at `rel_path` (crate-relative,
+/// `/`-separated). Public so the fixture tests can pin each rule against
+/// a virtual path inside its scope.
+pub fn lint_source(rel_path: &str, source: &str) -> (Vec<Diagnostic>, usize) {
+    let scanned = scanner::scan(source);
+    let mut diags = Vec::new();
+    let mut suppressed = 0usize;
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for rule in RuleId::ALL {
+            if !applies(rule, rel_path) {
+                continue;
+            }
+            if let Some(msg) = rules::check(rule, &line.code) {
+                match allow_state(&scanned, idx, rule) {
+                    AllowState::Justified => suppressed += 1,
+                    AllowState::Unjustified => diags.push(Diagnostic {
+                        file: rel_path.to_string(),
+                        line: idx + 1,
+                        rule,
+                        message: format!(
+                            "{msg} [suppression present but missing its justification — \
+                             write `// lint: allow({}) — <why>`]",
+                            rule.as_str()
+                        ),
+                    }),
+                    AllowState::None => diags.push(Diagnostic {
+                        file: rel_path.to_string(),
+                        line: idx + 1,
+                        rule,
+                        message: msg.to_string(),
+                    }),
+                }
+            }
+        }
+    }
+    (diags, suppressed)
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("lint: cannot read directory {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("lint: bad entry in {}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Crate-relative, `/`-separated display path.
+fn relative_slash(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Walk `root/src` and `root/benches`, lint every `.rs` file, and return
+/// the aggregated report (diagnostics in path order, lines ascending).
+pub fn run(root: &Path) -> anyhow::Result<LintReport> {
+    let src = root.join("src");
+    anyhow::ensure!(
+        src.join("lib.rs").is_file(),
+        "lint: {} does not look like the crate root (no src/lib.rs) — \
+         run from rust/ or pass --root",
+        root.display()
+    );
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files)?;
+    let benches = root.join("benches");
+    if benches.is_dir() {
+        collect_rs(&benches, &mut files)?;
+    }
+    files.sort();
+    let mut report = LintReport::default();
+    for path in &files {
+        let rel = relative_slash(root, path);
+        let source = std::fs::read_to_string(path)
+            .with_context(|| format!("lint: cannot read {}", path.display()))?;
+        let (mut diags, suppressed) = lint_source(&rel, &source);
+        report.diagnostics.append(&mut diags);
+        report.suppressed += suppressed;
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+/// Render the rule table and the policy exemptions (for `lint --rules`).
+pub fn render_rules() -> String {
+    let mut out = String::from("rules:\n");
+    for rule in RuleId::ALL {
+        out.push_str(&format!("  {:<20} {}\n", rule.as_str(), rule.contract()));
+    }
+    out.push_str("\nper-module policy exemptions:\n");
+    for e in POLICY {
+        out.push_str(&format!("  {:<20} {:<24} {}\n", e.rule.as_str(), e.prefix, e.why));
+    }
+    out.push_str(
+        "\nsuppression syntax (trailing the line or directly above it):\n  \
+         // lint: allow(<rule>) — <justification>\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_and_policy_resolution() {
+        assert!(applies(RuleId::WallClock, "src/dataflow/engine.rs"));
+        assert!(applies(RuleId::WallClock, "src/util/bench.rs"));
+        assert!(!applies(RuleId::WallClock, "src/pipeline/lane.rs"), "policy-exempt");
+        assert!(!applies(RuleId::WallClock, "benches/farm_soak.rs"), "out of scope");
+        assert!(applies(RuleId::PanicFreeLibrary, "src/obs/trace.rs"));
+        assert!(!applies(RuleId::PanicFreeLibrary, "src/main.rs"), "binary exempt");
+        assert!(applies(RuleId::UnorderedIter, "src/dataflow/gc_unit.rs"));
+        assert!(!applies(RuleId::UnorderedIter, "src/farm/routing.rs"), "not a render module");
+        assert!(applies(RuleId::LossyCast, "src/model/tensor.rs"));
+        assert!(!applies(RuleId::LossyCast, "src/fixedpoint/cast.rs"), "helper home exempt");
+    }
+
+    #[test]
+    fn violation_reported_with_rule_id_and_line() {
+        let src = "use std::time::Instant;\nfn f() -> u32 {\n    1\n}\n";
+        let (diags, suppressed) = lint_source("src/dataflow/fixture.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RuleId::WallClock);
+        assert_eq!(diags[0].line, 1);
+        assert_eq!(suppressed, 0);
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_counts() {
+        let src = "use std::time::Instant; // lint: allow(wall-clock) — timing harness input\n";
+        let (diags, suppressed) = lint_source("src/dataflow/fixture.rs", src);
+        assert!(diags.is_empty());
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn allow_on_the_line_above_suppresses() {
+        let src = "// lint: allow(wall-clock) — timing harness input\nuse std::time::Instant;\n";
+        let (diags, suppressed) = lint_source("src/dataflow/fixture.rs", src);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn allow_in_the_comment_block_above_suppresses() {
+        let src = "// lint: allow(wall-clock) — the justification wraps onto\n\
+                   // a second comment line without breaking the block\nuse std::time::Instant;\n";
+        let (diags, suppressed) = lint_source("src/dataflow/fixture.rs", src);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn allow_does_not_reach_past_intervening_code() {
+        let src = "// lint: allow(wall-clock) — belongs to the next line only\nfn f() {}\n\
+                   use std::time::Instant;\n";
+        let (diags, _) = lint_source("src/dataflow/fixture.rs", src);
+        assert_eq!(diags.len(), 1, "directive must not leak past code");
+    }
+
+    #[test]
+    fn unjustified_allow_does_not_suppress() {
+        let src = "use std::time::Instant; // lint: allow(wall-clock)\n";
+        let (diags, _) = lint_source("src/dataflow/fixture.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("missing its justification"));
+    }
+
+    #[test]
+    fn allow_for_a_different_rule_does_not_suppress() {
+        let src = "use std::time::Instant; // lint: allow(lossy-cast) — wrong rule entirely\n";
+        let (diags, _) = lint_source("src/dataflow/fixture.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RuleId::WallClock);
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                   let x: Option<u32> = None;\n        x.unwrap();\n    }\n}\n";
+        let (diags, _) = lint_source("src/obs/fixture.rs", src);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn render_lists_every_rule_and_exemption() {
+        let table = render_rules();
+        for rule in RuleId::ALL {
+            assert!(table.contains(rule.as_str()));
+        }
+        for e in POLICY {
+            assert!(table.contains(e.prefix));
+        }
+    }
+}

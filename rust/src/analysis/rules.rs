@@ -1,0 +1,222 @@
+//! The five lint rules: token-level checks over scanned code text.
+//!
+//! Each check runs on one line of *code text* (comments and literal
+//! contents already blanked by [`super::scanner`]) and returns the
+//! diagnostic message if the line violates the rule. Scoping (which
+//! modules a rule covers) lives in [`super::POLICY`]; test regions are
+//! skipped by the driver before these are called.
+
+use super::RuleId;
+
+/// True if `code[p]` starts `tok` as a whole token (identifier-boundary
+/// checked on both sides).
+fn token_at(code: &str, p: usize, tok: &str) -> bool {
+    if !code[p..].starts_with(tok) {
+        return false;
+    }
+    let before_ok = code[..p]
+        .chars()
+        .next_back()
+        .map(|c| !(c.is_alphanumeric() || c == '_'))
+        .unwrap_or(true);
+    let after_ok = code[p + tok.len()..]
+        .chars()
+        .next()
+        .map(|c| !(c.is_alphanumeric() || c == '_'))
+        .unwrap_or(true);
+    before_ok && after_ok
+}
+
+/// True if `tok` occurs anywhere in `code` as a whole token.
+fn has_token(code: &str, tok: &str) -> bool {
+    let mut start = 0;
+    while let Some(off) = code[start..].find(tok) {
+        let p = start + off;
+        if token_at(code, p, tok) {
+            return true;
+        }
+        start = p + tok.len();
+    }
+    false
+}
+
+/// The integer types a narrowing `as` cast may target (checked by the
+/// lossy-cast rule; `usize`/`u64`/`i64`/`f64` are widening on this
+/// codebase's value ranges and stay unflagged).
+const NARROW_TARGETS: [&str; 6] = ["u8", "i8", "u16", "i16", "u32", "i32"];
+
+/// True if the line contains `as <narrow-int>` as whole tokens.
+fn has_narrowing_as(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(off) = code[start..].find("as") {
+        let p = start + off;
+        start = p + 2;
+        if !token_at(code, p, "as") {
+            continue;
+        }
+        let rest = code[p + 2..].trim_start();
+        if NARROW_TARGETS.iter().any(|t| {
+            rest.starts_with(t)
+                && rest[t.len()..]
+                    .chars()
+                    .next()
+                    .map(|c| !(c.is_alphanumeric() || c == '_'))
+                    .unwrap_or(true)
+        }) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Panicking constructs forbidden in library code. `debug_assert!` family
+/// is fine (compiled out of release servers); `.unwrap_or*` adapters do
+/// not match the exact `.unwrap()` pattern.
+fn has_panicking_construct(code: &str) -> bool {
+    if code.contains(".unwrap()") || code.contains(".expect(") {
+        return true;
+    }
+    for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        if has_token(code, mac) {
+            return true;
+        }
+    }
+    // assert!/assert_eq!/assert_ne! — but not the debug_ variants, which
+    // token_at's identifier-boundary check excludes (the `_` joins them).
+    for mac in ["assert!", "assert_eq!", "assert_ne!"] {
+        if has_token(code, mac) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Run `rule` against one line of code text. Returns the message on a hit.
+pub fn check(rule: RuleId, code: &str) -> Option<&'static str> {
+    match rule {
+        RuleId::WallClock => {
+            if has_token(code, "Instant") || has_token(code, "SystemTime") {
+                Some(
+                    "wall-clock time source in a cycle-domain module — results must be \
+                     functions of the event stream, never the host clock",
+                )
+            } else {
+                None
+            }
+        }
+        RuleId::UnorderedIter => {
+            if has_token(code, "HashMap") || has_token(code, "HashSet") {
+                Some(
+                    "hash-ordered container in a deterministic/rendering module — use \
+                     BTreeMap/BTreeSet or sort before emitting",
+                )
+            } else {
+                None
+            }
+        }
+        RuleId::PanicFreeLibrary => {
+            if has_panicking_construct(code) {
+                Some(
+                    "panicking construct in library code — return a typed error, demote to \
+                     debug_assert!, or move under #[cfg(test)]",
+                )
+            } else {
+                None
+            }
+        }
+        RuleId::FloatTotalOrder => {
+            if has_token(code, "partial_cmp") {
+                Some(
+                    "float ordering via partial_cmp — use f32/f64::total_cmp so a NaN \
+                     cannot panic or reorder the output",
+                )
+            } else if code.contains(".fold(")
+                && ["f32::min", "f32::max", "f64::min", "f64::max"]
+                    .iter()
+                    .any(|t| code.contains(t))
+            {
+                Some(
+                    "float min/max fold — IEEE min/max silently drops NaN; fold with \
+                     total_cmp (e.g. min_by(f64::total_cmp)) instead",
+                )
+            } else {
+                None
+            }
+        }
+        RuleId::LossyCast => {
+            if has_narrowing_as(code) {
+                Some(
+                    "narrowing `as` cast in the datapath — go through the checked \
+                     fixedpoint::cast helpers (idx8/idx16/idx32/...) instead",
+                )
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hit(rule: RuleId, code: &str) -> bool {
+        check(rule, code).is_some()
+    }
+
+    #[test]
+    fn wall_clock_hits_instant_and_systemtime() {
+        assert!(hit(RuleId::WallClock, "let t0 = Instant::now();"));
+        assert!(hit(RuleId::WallClock, "use std::time::SystemTime;"));
+        assert!(!hit(RuleId::WallClock, "let d = Duration::from_micros(5);"));
+        // Identifier boundary: no hit inside a longer name.
+        assert!(!hit(RuleId::WallClock, "let my_instant_count = 3;"));
+    }
+
+    #[test]
+    fn unordered_iter_hits_hash_containers_only() {
+        assert!(hit(RuleId::UnorderedIter, "use std::collections::HashMap;"));
+        assert!(hit(RuleId::UnorderedIter, "let s: HashSet<u32> = HashSet::new();"));
+        assert!(!hit(RuleId::UnorderedIter, "let m: BTreeMap<u32, u32> = x;"));
+    }
+
+    #[test]
+    fn panic_free_hits_the_panicking_family() {
+        assert!(hit(RuleId::PanicFreeLibrary, "x.unwrap();"));
+        assert!(hit(RuleId::PanicFreeLibrary, "x.expect(\"msg\");"));
+        assert!(hit(RuleId::PanicFreeLibrary, "panic!(\"boom\");"));
+        assert!(hit(RuleId::PanicFreeLibrary, "unreachable!()"));
+        assert!(hit(RuleId::PanicFreeLibrary, "assert!(ok);"));
+        assert!(hit(RuleId::PanicFreeLibrary, "assert_eq!(a, b);"));
+    }
+
+    #[test]
+    fn panic_free_spares_the_safe_variants() {
+        assert!(!hit(RuleId::PanicFreeLibrary, "x.unwrap_or(0);"));
+        assert!(!hit(RuleId::PanicFreeLibrary, "x.unwrap_or_else(|e| e.into_inner());"));
+        assert!(!hit(RuleId::PanicFreeLibrary, "x.unwrap_or_default();"));
+        assert!(!hit(RuleId::PanicFreeLibrary, "debug_assert!(i < n);"));
+        assert!(!hit(RuleId::PanicFreeLibrary, "debug_assert_eq!(a, b);"));
+        assert!(!hit(RuleId::PanicFreeLibrary, "r.expect_err(\"must fail\");"));
+    }
+
+    #[test]
+    fn float_total_order_hits_partial_cmp_and_folds() {
+        assert!(hit(RuleId::FloatTotalOrder, "v.sort_by(|a, b| a.partial_cmp(b).unwrap());"));
+        assert!(hit(RuleId::FloatTotalOrder, "xs.fold(f64::INFINITY, f64::min)"));
+        assert!(!hit(RuleId::FloatTotalOrder, "v.sort_by(f64::total_cmp);"));
+        assert!(!hit(RuleId::FloatTotalOrder, "let m = a.min(b);"));
+    }
+
+    #[test]
+    fn lossy_cast_hits_narrowing_targets_only() {
+        assert!(hit(RuleId::LossyCast, "let x = n as u32;"));
+        assert!(hit(RuleId::LossyCast, "let x = n as i16;"));
+        assert!(hit(RuleId::LossyCast, "let x = n as u8;"));
+        assert!(!hit(RuleId::LossyCast, "let x = n as usize;"));
+        assert!(!hit(RuleId::LossyCast, "let x = n as u64;"));
+        assert!(!hit(RuleId::LossyCast, "let x = n as f64;"));
+        // `as` must be a whole token: a type named `Alias` is not a cast.
+        assert!(!hit(RuleId::LossyCast, "type Alias = Vec<u32>;"));
+    }
+}

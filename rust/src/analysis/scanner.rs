@@ -1,0 +1,406 @@
+//! Lexical source scanner for the lint pass.
+//!
+//! One pass over the raw source produces, per line, the *code text* (with
+//! comment bodies and string/char-literal contents blanked to spaces, so
+//! token searches cannot match inside them) and the *comment text* (where
+//! `// lint: allow(...)` directives live). A second pass walks the brace
+//! structure of the code text to mark `#[cfg(test)]` / `#[test]` /
+//! `mod tests` regions, which every rule skips.
+//!
+//! This is deliberately a scanner, not a parser — the same trade
+//! rust-lang's `tidy` makes: it understands exactly enough Rust lexical
+//! structure (nested block comments, raw strings, char literals vs
+//! lifetimes) to make line-level token checks sound, and nothing more.
+
+/// One scanned source line.
+#[derive(Debug)]
+pub struct ScannedLine {
+    /// Source text with comments and string/char contents blanked.
+    pub code: String,
+    /// Concatenated comment text on this line (directives live here).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` / `#[test]` / `mod tests` region.
+    pub in_test: bool,
+}
+
+/// A whole scanned file (lines are 0-indexed here, 1-indexed in diagnostics).
+#[derive(Debug)]
+pub struct ScannedFile {
+    pub lines: Vec<ScannedLine>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nested depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Number of `#`s in the delimiter.
+    RawStr(usize),
+    CharLit,
+}
+
+/// True if `c` can be part of an identifier.
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan raw source into per-line code/comment text plus test-region marks.
+pub fn scan(source: &str) -> ScannedFile {
+    let cs: Vec<char> = source.chars().collect();
+    let mut lines: Vec<ScannedLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(ScannedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = cs.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&cs, i) {
+                    // r"..." / r#"..."# / br"..." / b"..." openers.
+                    if let Some((skip, hashes, is_raw)) = raw_str_hashes(&cs, i) {
+                        code.push('"');
+                        i += skip;
+                        mode = if is_raw { Mode::RawStr(hashes) } else { Mode::Str };
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: '\x' escapes and 'x' (a
+                    // single char then a closing quote) are literals;
+                    // anything else ('a in generics) is a lifetime.
+                    let is_char = match next {
+                        Some('\\') => true,
+                        Some(_) => cs.get(i + 2).copied() == Some('\''),
+                        None => false,
+                    };
+                    if is_char {
+                        code.push('\'');
+                        mode = Mode::CharLit;
+                    } else {
+                        code.push('\'');
+                    }
+                    i += 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = cs.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth <= 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    if cs.get(i + 1).copied() == Some('\n') {
+                        // String continuation: keep the newline so line
+                        // accounting stays exact.
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&cs, i, hashes) {
+                    code.push('"');
+                    i += 1 + hashes;
+                    mode = Mode::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    code.push(' ');
+                    if cs.get(i + 1).is_some() {
+                        code.push(' ');
+                    }
+                    i += 2;
+                } else if c == '\'' {
+                    code.push('\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(ScannedLine { code, comment, in_test: false });
+    }
+    let mut file = ScannedFile { lines };
+    mark_test_regions(&mut file);
+    file
+}
+
+/// True if the char before `i` continues an identifier (so `cs[i]` cannot
+/// start a raw-string prefix like `r"` — it is the tail of a name).
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && is_ident(cs[i - 1])
+}
+
+/// If `cs[i..]` opens a string with a `b`/`r`/`br` prefix, return
+/// (chars to skip past the opening quote, hash count, is_raw).
+fn raw_str_hashes(cs: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    let mut j = i;
+    let mut raw = false;
+    if cs.get(j).copied() == Some('b') {
+        j += 1;
+    }
+    if cs.get(j).copied() == Some('r') {
+        raw = true;
+        j += 1;
+    }
+    if j == i {
+        return None; // neither prefix present
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while cs.get(j + hashes).copied() == Some('#') {
+            hashes += 1;
+        }
+        j += hashes;
+    }
+    if cs.get(j).copied() == Some('"') {
+        Some((j + 1 - i, hashes, raw))
+    } else {
+        None
+    }
+}
+
+/// True if the `"` at `i` is followed by `hashes` `#`s (raw-string close).
+fn closes_raw(cs: &[char], i: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| cs.get(i + 1 + k).copied() == Some('#'))
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` / `mod tests` items.
+///
+/// Heuristic in the tidy tradition: a test attribute (or a `mod tests`
+/// header) arms a pending flag; the next `{` opens a region carrying it,
+/// closed by the matching `}`. Nested braces inherit the enclosing flag.
+fn mark_test_regions(file: &mut ScannedFile) {
+    let mut stack: Vec<bool> = Vec::new();
+    let mut pending = false;
+    for line in &mut file.lines {
+        let mut in_test = stack.last().copied().unwrap_or(false);
+        let code = line.code.clone();
+        if code.contains("#[cfg(test)]")
+            || code.contains("#[cfg(all(test")
+            || code.contains("#[cfg(any(test")
+            || code.contains("#[test]")
+            || has_mod_tests(&code)
+        {
+            pending = true;
+            in_test = true;
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    let t = stack.last().copied().unwrap_or(false) || pending;
+                    pending = false;
+                    if t {
+                        in_test = true;
+                    }
+                    stack.push(t);
+                }
+                '}' => {
+                    stack.pop();
+                }
+                _ => {}
+            }
+        }
+        line.in_test = in_test;
+    }
+}
+
+/// `mod tests` as whole tokens (not e.g. `mod tests_support_xyz`).
+fn has_mod_tests(code: &str) -> bool {
+    match code.find("mod tests") {
+        None => false,
+        Some(p) => {
+            let tail = &code[p + "mod tests".len()..];
+            let before_ok = code[..p].chars().next_back().map(|c| !is_ident(c)).unwrap_or(true);
+            let after_ok = tail.chars().next().map(|c| !is_ident(c)).unwrap_or(true);
+            before_ok && after_ok
+        }
+    }
+}
+
+/// A parsed `lint: allow(<rule>) — <why>` directive from comment text.
+#[derive(Debug, PartialEq)]
+pub struct AllowDirective {
+    pub rule: String,
+    /// Justification text after the rule (separator stripped). Empty means
+    /// the directive is present but unjustified — it does NOT suppress.
+    pub justification: String,
+}
+
+/// Parse an allow directive out of one line's comment text, if any.
+pub fn parse_allow(comment: &str) -> Option<AllowDirective> {
+    let at = comment.find("lint:")?;
+    let rest = comment[at + "lint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let tail = rest[close + 1..].trim_start();
+    // Accept `— why`, `-- why`, `- why`, or `: why` as the separator.
+    let justification = tail.trim_start_matches(['—', '–', '-', ':']).trim().to_string();
+    Some(AllowDirective { rule, justification })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_lines(src: &str) -> Vec<String> {
+        scan(src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let ls = code_lines("let x = 1; // Instant::now()\n/* HashMap */ let y = 2;\n");
+        assert!(!ls[0].contains("Instant"));
+        assert!(ls[0].contains("let x = 1;"));
+        assert!(!ls[1].contains("HashMap"));
+        assert!(ls[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let ls = code_lines("/* a /* b */ still comment */ let z = 3;\n");
+        assert!(ls[0].contains("let z = 3;"));
+        assert!(!ls[0].contains("still"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_quotes_remain() {
+        let ls = code_lines("let s = \"Instant::now() // not a comment\"; let t = 1;\n");
+        assert!(!ls[0].contains("Instant"));
+        assert!(ls[0].contains("let t = 1;"));
+        assert_eq!(ls[0].matches('"').count(), 2);
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let ls = code_lines("let s = \"a\\\"b HashMap\"; let u = 4;\n");
+        assert!(!ls[0].contains("HashMap"));
+        assert!(ls[0].contains("let u = 4;"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let ls = code_lines("let s = r#\"panic!(\"x\")\"#; let v = 5;\n");
+        assert!(!ls[0].contains("panic"));
+        assert!(ls[0].contains("let v = 5;"));
+    }
+
+    #[test]
+    fn char_literal_brace_does_not_break_depth() {
+        let src = "#[cfg(test)]\nmod tests {\n    let c = '{';\n    x.unwrap();\n}\n\
+                   fn after() { y.unwrap(); }\n";
+        let f = scan(src);
+        assert!(f.lines[3].in_test, "inside mod tests");
+        assert!(!f.lines[5].in_test, "after the region");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let ls = code_lines("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(ls[0].contains("fn f<'a>(x: &'a str)"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked_across_nesting() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn helper() { inner(); }\n}\n\
+                   fn lib2() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test, "attribute line");
+        assert!(f.lines[3].in_test, "nested fn");
+        assert!(!f.lines[5].in_test, "after close");
+    }
+
+    #[test]
+    fn test_attribute_marks_single_fn() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\nfn lib() {}\n";
+        let f = scan(src);
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn comment_text_is_captured_for_directives() {
+        let f = scan("let x = 1; // lint: allow(wall-clock) — bench harness\n");
+        let d = parse_allow(&f.lines[0].comment).expect("directive parses");
+        assert_eq!(d.rule, "wall-clock");
+        assert_eq!(d.justification, "bench harness");
+    }
+
+    #[test]
+    fn allow_without_justification_is_flagged_empty() {
+        let d = parse_allow(" lint: allow(lossy-cast)").expect("parses");
+        assert_eq!(d.rule, "lossy-cast");
+        assert!(d.justification.is_empty());
+        let d2 = parse_allow(" lint: allow(lossy-cast) — ").expect("parses");
+        assert!(d2.justification.is_empty());
+    }
+
+    #[test]
+    fn mod_tests_token_boundary() {
+        assert!(has_mod_tests("mod tests {"));
+        assert!(has_mod_tests("pub mod tests;"));
+        assert!(!has_mod_tests("mod tests_support {"));
+    }
+}

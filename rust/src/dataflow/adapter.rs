@@ -43,7 +43,9 @@ impl Adapter {
                 any_blocked = true; // head-of-line blocked this cycle
                 continue;
             }
-            let token = mp_units[k].out.pop().expect("peeked");
+            let Some(token) = mp_units[k].out.pop() else {
+                continue; // unreachable: peek returned Some above
+            };
             let ok = nt_units[port].in_fifo.push(token);
             debug_assert!(ok, "checked for space above");
             self.port_used[port] = true;

@@ -6,6 +6,8 @@
 //! otherwise the broadcaster stalls (single-source backpressure, the cost
 //! the design pays for needing just one NE copy).
 
+use crate::fixedpoint::cast;
+
 /// Broadcast source state machine.
 #[derive(Clone, Debug)]
 pub struct BroadcastUnit {
@@ -26,9 +28,9 @@ pub enum BroadcastAction {
 
 impl BroadcastUnit {
     pub fn new(n_nodes: usize, beat: u32) -> Self {
-        assert!(beat >= 1);
+        debug_assert!(beat >= 1);
         BroadcastUnit {
-            n_nodes: n_nodes as u32,
+            n_nodes: cast::idx32(n_nodes),
             next: 0,
             beat,
             counter: 0, // first beat is immediately ready

@@ -86,7 +86,7 @@
 //! MET accumulator in the head).
 
 use crate::config::ArchConfig;
-use crate::fixedpoint::Arith;
+use crate::fixedpoint::{cast, Arith};
 use crate::graph::PaddedGraph;
 use crate::model::{L1DeepMetV2, Mat, ModelOutput};
 
@@ -157,7 +157,7 @@ pub struct CycleParams {
 impl CycleParams {
     pub fn derive(arch: &ArchConfig, cfg: &crate::config::ModelConfig) -> CycleParams {
         let d = cfg.node_dim;
-        let ceil = |a: usize, b: usize| a.div_ceil(b) as u32;
+        let ceil = |a: usize, b: usize| cast::idx32(a.div_ceil(b));
         let mac_edge = 2 * d * cfg.hid_edge + cfg.hid_edge * d;
         let mac_embed = cfg.in_dim() * cfg.hid_emb + cfg.hid_emb * d;
         let mac_head = d * cfg.hid_out + cfg.hid_out;
@@ -698,6 +698,9 @@ impl DataflowEngine {
         let mut gc_cosim: Option<GcCosim> = None;
         if self.build_site == BuildSite::Fabric {
             let unit = GcUnit::from_arch(&self.arch, self.gc_delta)
+                // lint: allow(panic-free-library) — delta is validated by
+                // set_build_site; failing here is a construction-order bug
+                // in the engine itself, not bad runtime input.
                 .expect("gc delta validated by set_build_site");
             match (self.gc_schedule, self.gc_feed) {
                 // PR 3 baseline: barrier schedule, single merged feed.
@@ -953,9 +956,9 @@ impl DataflowEngine {
             }
             let (s, t) = (g.src[k] as usize, g.dst[k] as usize);
             debug_assert!(s < n_live && t < n_live);
-            mps[s % p_edge].assign_edge(k as u32, t as u32);
+            mps[s % p_edge].assign_edge(cast::idx32(k), cast::idx32(t));
             deg[t] += 1;
-            in_edges[t].push(k as u32);
+            in_edges[t].push(cast::idx32(k));
             live_edges += 1;
         }
 
@@ -969,7 +972,7 @@ impl DataflowEngine {
         // zero-degree nodes are immediately ready (residual+BN only)
         for i in 0..n_live {
             if deg[i] == 0 {
-                nts[i % p_node].mark_ready(i as u32);
+                nts[i % p_node].mark_ready(cast::idx32(i));
             }
         }
 
@@ -988,7 +991,7 @@ impl DataflowEngine {
             std::collections::VecDeque::new();
         if self.mode == BroadcastMode::MulticastBus && !gc_fed {
             // per-unit need sets, in node order
-            for v in 0..n_live as u32 {
+            for v in 0..cast::idx32(n_live) {
                 for (k, mp) in mps.iter().enumerate() {
                     if mp_needs(mp, v) {
                         bus_queue.push_back((k, v));
@@ -1036,7 +1039,7 @@ impl DataflowEngine {
                         gcr.ready_cycle[k] != u64::MAX,
                         "undiscovered live edge {k}"
                     );
-                    feed.push((gcr.ready_cycle[k], k as u32));
+                    feed.push((gcr.ready_cycle[k], cast::idx32(k)));
                 }
                 feed.sort_unstable();
             }
@@ -1074,15 +1077,18 @@ impl DataflowEngine {
                 if cycles % k == 0 {
                     timeline.push(TimelineSample {
                         cycle: cycles,
-                        mp_active: mps
-                            .iter()
-                            .filter(|m| !m.done() && !m.all_emitted())
-                            .count() as u8,
-                        nt_active: nts.iter().filter(|n| !n.done()).count() as u8,
-                        inflight_msgs: mps.iter().map(|m| m.out.len()).sum::<usize>() as u16,
+                        mp_active: cast::idx8(
+                            mps.iter().filter(|m| !m.done() && !m.all_emitted()).count(),
+                        ),
+                        nt_active: cast::idx8(nts.iter().filter(|n| !n.done()).count()),
+                        inflight_msgs: cast::idx16(
+                            mps.iter().map(|m| m.out.len()).sum::<usize>(),
+                        ),
                     });
                 }
             }
+            // lint: allow(panic-free-library) — deadlock watchdog: a stuck
+            // fabric must abort loudly in release too, not spin forever.
             assert!(
                 cycles < self.max_cycles_per_layer,
                 "layer {l} deadlocked after {cycles} cycles"
@@ -1338,7 +1344,7 @@ impl GcFeed {
             let src = g.src[k] as usize;
             lanes[src % p_gc]
                 .feed
-                .push((gcr.ready_cycle[k], k as u32, (src % p_edge) as u32));
+                .push((gcr.ready_cycle[k], cast::idx32(k), cast::idx32(src % p_edge)));
         }
         for lane in &mut lanes {
             lane.feed.sort_unstable();

@@ -20,7 +20,7 @@ pub struct Fifo<T> {
 
 impl<T> Fifo<T> {
     pub fn new(depth: usize) -> Self {
-        assert!(depth >= 1);
+        debug_assert!(depth >= 1);
         Fifo {
             depth,
             q: VecDeque::with_capacity(depth),

@@ -84,9 +84,12 @@
 //! [`gc_cross_event`]: crate::config::ArchConfig::gc_cross_event
 //! [`run_stream`]: super::engine::DataflowEngine::run_stream
 
+// lint: allow(unordered-iter) — host-edge-id lookup map; keyed gets only,
+// never iterated, so hash order cannot leak into any result.
 use std::collections::HashMap;
 
 use crate::config::ArchConfig;
+use crate::fixedpoint::cast;
 use crate::graph::{GraphBuilder, PaddedGraph};
 use crate::physics::event::delta_r2;
 
@@ -436,7 +439,7 @@ impl GcUnit {
                     stats.pairs_compared += 1;
                     // the real Eq. 1 compare — functional and timed at once
                     if delta_r2(eu, pu, eta(v), phi(v)) < d2 {
-                        match host_id.get(&(u as u32, v as u32)) {
+                        match host_id.get(&(cast::idx32(u), cast::idx32(v))) {
                             Some(&k) => {
                                 debug_assert_eq!(
                                     ready[k as usize],
@@ -497,12 +500,17 @@ impl GcUnit {
         stats.compare_cycles = stats.total_cycles - compare_start;
 
         // --- the bit-identity contract -------------------------------------
+        // lint: allow(panic-free-library) — bit-identity contract with the
+        // host build; a silently diverging edge set would invalidate every
+        // downstream number, so abort loudly in release too.
         assert_eq!(
             stats.edges_emitted as usize, g.e,
             "GC unit discovered {} of {} host edges (delta mismatch?)",
             stats.edges_emitted, g.e
         );
         if g.dropped_nodes == 0 && g.dropped_edges == 0 {
+            // lint: allow(panic-free-library) — bit-identity contract,
+            // extra-edge direction: abort loudly in release too.
             assert_eq!(
                 stats.edges_dropped, 0,
                 "GC unit found {} edges the host build did not",
@@ -529,6 +537,8 @@ impl GcUnit {
         let mut t: u64 = 0;
         while !cosim.lanes_done() {
             t += 1;
+            // lint: allow(panic-free-library) — runaway watchdog: a stuck
+            // co-sim must abort loudly in release too, not spin forever.
             assert!(t < 500_000_000, "free-drain GC co-sim ran away");
             cosim.advance_to(t);
             // free-draining consumer: empty every lane FIFO each cycle, so
@@ -555,11 +565,15 @@ fn live_coords(g: &PaddedGraph) -> Vec<(f32, f32)> {
 
 /// Host edge ids for the live prefix: the canonical indices the engine's
 /// functional payload uses.
+// lint: allow(unordered-iter) — lookup-only map: the GC lanes probe it by
+// (src, dst) key; nothing ever iterates it, so hash order is inert.
 fn host_edge_ids(g: &PaddedGraph) -> HashMap<(u32, u32), u32> {
+    // lint: allow(unordered-iter) — same lookup-only map as above.
     let mut host_id: HashMap<(u32, u32), u32> = HashMap::with_capacity(g.e);
     for k in 0..g.e {
         debug_assert_eq!(g.edge_mask[k], 1.0, "live edges form a prefix");
-        host_id.insert((g.src[k] as u32, g.dst[k] as u32), k as u32);
+        let (s, d) = (g.src[k] as usize, g.dst[k] as usize);
+        host_id.insert((cast::idx32(s), cast::idx32(d)), cast::idx32(k));
     }
     host_id
 }
@@ -588,7 +602,7 @@ fn bin_phase(grid: &GraphBuilder, coords: &[(f32, f32)], bin_depth: usize) -> Bi
             cycle += 1; // spill into the overflow buffer
             overflows += 1;
         }
-        cells[c].push(i as u32);
+        cells[c].push(cast::idx32(i));
         bin_done[c] = cycle;
     }
     BinPhase { cells, bin_done, cycles: cycle, overflows }
@@ -602,6 +616,7 @@ fn bin_phase(grid: &GraphBuilder, coords: &[(f32, f32)], bin_depth: usize) -> Bi
 /// Read-only per-event context shared by the compare lanes.
 struct GcEventData {
     coords: Vec<(f32, f32)>,
+    // lint: allow(unordered-iter) — lookup-only host-edge-id map.
     host_id: HashMap<(u32, u32), u32>,
     d2: f32,
     /// compare initiation interval (cycles per candidate pair)
@@ -749,7 +764,7 @@ impl GcCompareLane {
         match ev.host_id.get(&(u, v)) {
             Some(&k) => {
                 self.emitted += 1;
-                let em = (k, (u as usize % ev.p_edge) as u32);
+                let em = (k, cast::idx32(u as usize % ev.p_edge));
                 if self.fifo.push(em) {
                     self.last_push = t;
                 } else {
@@ -1094,7 +1109,7 @@ impl GcCosim {
             lane.remaining += cands.len();
             lane.pos_by_part.push(0);
             lane.parts.push(OwnedParticle {
-                u: u as u32,
+                u: cast::idx32(u),
                 ready: ready.saturating_sub(head_start),
                 cands,
             });
@@ -1204,12 +1219,16 @@ impl GcCosim {
         }
         let emitted: u64 = self.lanes.iter().map(|l| l.emitted).sum();
         let dropped: u64 = self.lanes.iter().map(|l| l.dropped).sum();
+        // lint: allow(panic-free-library) — bit-identity contract with the
+        // host build (see run_scheduled): abort loudly in release too.
         assert_eq!(
             emitted as usize, self.expected_edges,
             "GC co-sim discovered {} of {} host edges (delta mismatch?)",
             emitted, self.expected_edges
         );
         if self.expect_no_extra {
+            // lint: allow(panic-free-library) — bit-identity contract,
+            // extra-edge direction: abort loudly in release too.
             assert_eq!(
                 dropped, 0,
                 "GC co-sim found {dropped} edges the host build did not"

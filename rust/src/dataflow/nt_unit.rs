@@ -75,9 +75,11 @@ impl NtUnit {
         if self.wb_busy > 0 {
             self.wb_busy -= 1;
             if self.wb_busy == 0 {
-                let node = self.wb_current.take().expect("wb_current set while busy");
-                self.nodes_written += 1;
-                written = Some(node);
+                // wb_current is always set while wb_busy counts down.
+                if let Some(node) = self.wb_current.take() {
+                    self.nodes_written += 1;
+                    written = Some(node);
+                }
             }
         }
         if self.wb_busy == 0 && self.wb_current.is_none() {

@@ -33,7 +33,7 @@ impl FpgaDevice {
                 ((2 * g.e + g.n) as f64, r.e2e_s)
             })
             .collect();
-        calib.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        calib.sort_by(|a, b| a.0.total_cmp(&b.0));
         FpgaDevice { engine, calib }
     }
 
@@ -51,7 +51,7 @@ impl FpgaDevice {
                 if work <= self.calib[0].0 {
                     return self.calib[0].1;
                 }
-                if work >= self.calib.last().unwrap().0 {
+                if work >= self.calib[self.calib.len() - 1].0 {
                     // extrapolate from the last segment
                     let (x0, y0) = self.calib[self.calib.len() - 2];
                     let (x1, y1) = self.calib[self.calib.len() - 1];

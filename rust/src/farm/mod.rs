@@ -462,6 +462,9 @@ impl<B: InferenceBackend + 'static> Farm<B> {
                 std::thread::Builder::new()
                     .name(format!("dgnnflow-shard-{i}"))
                     .spawn(move || worker_loop(lane_rx, ctx))
+                    // lint: allow(panic-free-library) — thread spawn fails
+                    // only on OS resource exhaustion; there is no useful
+                    // recovery while the farm is still being constructed.
                     .expect("spawn farm shard lane"),
             );
         }

@@ -1,0 +1,117 @@
+//! Checked narrowing casts for the datapath.
+//!
+//! The `lossy-cast` lint rule bans bare narrowing `as` casts in the
+//! datapath modules (`dataflow`, `model`, `graph`, `fixedpoint`): a
+//! silent wrap on an edge id or a lane count corrupts a simulation
+//! result without failing anything. Every narrowing goes through these
+//! helpers instead, so each width change is one auditable site:
+//!
+//! - the `idx*` family narrows container indices that are bounded by
+//!   construction (`PaddedGraph` buckets cap nodes/edges far below
+//!   `u32::MAX`; lane counts come from `ArchConfig`). They check the
+//!   bound with `debug_assert!` — tests and debug builds abort loudly on
+//!   a violated precondition, release servers stay panic-free — and
+//!   saturate rather than wrap if the impossible happens in release.
+//! - [`try_idx32`] / [`try_idx_i32`] return a typed [`CastError`] for
+//!   values that cross an API boundary and are *not* bounded by
+//!   construction.
+//!
+//! This module is the one policy-table exemption of the `lossy-cast`
+//! rule: the final bounded `as` lives here.
+
+use std::fmt;
+
+/// A narrowing that would have lost value bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CastError {
+    pub value: u64,
+    pub target_bits: u32,
+}
+
+impl fmt::Display for CastError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "value {} does not fit in {} bits", self.value, self.target_bits)
+    }
+}
+
+impl std::error::Error for CastError {}
+
+/// Narrow a bounded index to u32 (graph node/edge ids).
+#[inline]
+pub fn idx32(i: usize) -> u32 {
+    debug_assert!(u32::try_from(i).is_ok(), "index {i} exceeds u32 — bucket bound violated");
+    u32::try_from(i).unwrap_or(u32::MAX)
+}
+
+/// Narrow a bounded count to u16 (in-flight message counts, FIFO depths).
+#[inline]
+pub fn idx16(i: usize) -> u16 {
+    debug_assert!(u16::try_from(i).is_ok(), "count {i} exceeds u16 — config bound violated");
+    u16::try_from(i).unwrap_or(u16::MAX)
+}
+
+/// Narrow a bounded count to u8 (lane/unit counts from `ArchConfig`).
+#[inline]
+pub fn idx8(i: usize) -> u8 {
+    debug_assert!(u8::try_from(i).is_ok(), "count {i} exceeds u8 — config bound violated");
+    u8::try_from(i).unwrap_or(u8::MAX)
+}
+
+/// Narrow a bounded index to i32 (sentinel-using index arrays that keep
+/// -1 for "none", e.g. cell heads in the binned graph builders).
+#[inline]
+pub fn idx_i32(i: usize) -> i32 {
+    debug_assert!(i32::try_from(i).is_ok(), "index {i} exceeds i32 — bucket bound violated");
+    i32::try_from(i).unwrap_or(i32::MAX)
+}
+
+/// Reinterpret a small bit-width (<= [`super::MAX_WIDTH`]) as i32 for
+/// exponent arithmetic (`2^(i-1)` style range computations).
+#[inline]
+pub fn bits_i32(w: u32) -> i32 {
+    debug_assert!(i32::try_from(w).is_ok(), "bit width {w} exceeds i32");
+    i32::try_from(w).unwrap_or(i32::MAX)
+}
+
+/// Fallible u32 narrowing for values that are not bounded by construction.
+#[inline]
+pub fn try_idx32(i: usize) -> Result<u32, CastError> {
+    u32::try_from(i).map_err(|_| CastError { value: i as u64, target_bits: 32 })
+}
+
+/// Fallible i32 narrowing for values that are not bounded by construction.
+#[inline]
+pub fn try_idx_i32(i: usize) -> Result<i32, CastError> {
+    i32::try_from(i).map_err(|_| CastError { value: i as u64, target_bits: 31 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_range_values_round_trip() {
+        assert_eq!(idx32(0), 0);
+        assert_eq!(idx32(12288), 12288);
+        assert_eq!(idx16(65535), 65535);
+        assert_eq!(idx8(255), 255);
+        assert_eq!(idx_i32(2_147_483_647), i32::MAX);
+        assert_eq!(bits_i32(52), 52);
+    }
+
+    #[test]
+    fn fallible_variants_return_typed_errors() {
+        assert_eq!(try_idx32(7).unwrap(), 7);
+        let err = try_idx32(usize::MAX).unwrap_err();
+        assert_eq!(err.target_bits, 32);
+        assert!(err.to_string().contains("does not fit"));
+        assert!(try_idx_i32(usize::MAX).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds u8")]
+    #[cfg(debug_assertions)]
+    fn debug_builds_abort_on_violated_bounds() {
+        let _ = idx8(256);
+    }
+}

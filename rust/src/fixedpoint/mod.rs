@@ -22,6 +22,8 @@
 //! the same `Arith` — the timing model can never drift from the math, in
 //! either precision.
 
+pub mod cast;
+
 use std::fmt;
 
 use crate::config::ModelConfig;
@@ -64,6 +66,8 @@ impl Format {
     /// (W, I); use [`Format::try_new`] for untrusted input (CLI flags,
     /// config files) — the pipeline builder surfaces the typed error.
     pub const fn new(w: u32, i: u32) -> Format {
+        // lint: allow(panic-free-library) — const constructor: a bad statically-known
+        // format fails at compile time; Format::try_new covers runtime input.
         assert!(w >= 2 && w <= MAX_WIDTH && i >= 1 && i <= w);
         Format { w, i }
     }
@@ -95,13 +99,13 @@ impl Format {
 
     /// Quantisation step.
     pub fn lsb(&self) -> f64 {
-        (2.0f64).powi(-(self.frac_bits() as i32))
+        (2.0f64).powi(-cast::bits_i32(self.frac_bits()))
     }
 
     /// Representable range [min, max].
     pub fn range(&self) -> (f64, f64) {
-        let max = (2.0f64).powi(self.i as i32 - 1) - self.lsb();
-        let min = -(2.0f64).powi(self.i as i32 - 1);
+        let max = (2.0f64).powi(cast::bits_i32(self.i) - 1) - self.lsb();
+        let min = -(2.0f64).powi(cast::bits_i32(self.i) - 1);
         (min, max)
     }
 

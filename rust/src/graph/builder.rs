@@ -2,6 +2,7 @@
 //! builder. Both produce identical edge sets (asserted by tests); the grid
 //! builder is the hot path used by the trigger coordinator (§Perf L3).
 
+use crate::fixedpoint::cast;
 use crate::physics::event::{delta_r2, wrap_phi, Event, ETA_MAX};
 
 use super::EventGraph;
@@ -20,8 +21,8 @@ pub fn build_edges_brute(event: &Event, delta: f32) -> EventGraph {
             }
             let pv = &event.particles[v];
             if delta_r2(pu.eta, pu.phi, pv.eta, pv.phi) < d2 {
-                src.push(u as u32);
-                dst.push(v as u32);
+                src.push(cast::idx32(u));
+                dst.push(cast::idx32(v));
             }
         }
     }
@@ -42,7 +43,7 @@ pub struct GraphBuilder {
 
 impl GraphBuilder {
     pub fn new(delta: f32) -> Self {
-        assert!(delta > 0.0);
+        debug_assert!(delta > 0.0);
         // Cell size >= delta so neighbours within delta are inside the 3x3
         // neighbourhood. phi covers 2π cyclically; eta covers ±ETA_MAX.
         let n_eta = ((2.0 * ETA_MAX / delta).floor() as usize).max(1);
@@ -141,7 +142,7 @@ impl GraphBuilder {
         for (i, p) in event.particles.iter().enumerate() {
             let c = self.cell_of(p.eta, p.phi);
             self.cell_next[i] = self.cell_heads[c];
-            self.cell_heads[c] = i as i32;
+            self.cell_heads[c] = cast::idx_i32(i);
         }
 
         // Average degree with default delta is ~8-12; reserve accordingly.
@@ -158,8 +159,8 @@ impl GraphBuilder {
                     if vi != u {
                         let pv = &event.particles[vi];
                         if delta_r2(pu.eta, pu.phi, pv.eta, pv.phi) < d2 {
-                            src.push(u as u32);
-                            dst.push(vi as u32);
+                            src.push(cast::idx32(u));
+                            dst.push(cast::idx32(vi));
                         }
                     }
                     v = self.cell_next[vi];

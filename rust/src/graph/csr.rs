@@ -1,6 +1,8 @@
 //! Compressed Sparse Row adjacency (FlowGNN stores graphs in CSR; the
 //! dataflow simulator shards edges across MP units from this form).
 
+use crate::fixedpoint::cast;
+
 use super::EventGraph;
 
 /// CSR over *outgoing* edges: for node u, edges are
@@ -32,7 +34,7 @@ impl Csr {
         for (i, (&s, &d)) in g.src.iter().zip(&g.dst).enumerate() {
             let slot = fill[s as usize] as usize;
             dst[slot] = d;
-            edge_id[slot] = i as u32;
+            edge_id[slot] = cast::idx32(i);
             fill[s as usize] += 1;
         }
         Csr { n_nodes: n, row_ptr, dst, edge_id }
@@ -66,7 +68,7 @@ impl Csr {
     pub fn shard_nodes(&self, p: usize) -> Vec<Vec<u32>> {
         let mut shards = vec![Vec::new(); p];
         for u in 0..self.n_nodes {
-            shards[u % p].push(u as u32);
+            shards[u % p].push(cast::idx32(u));
         }
         shards
     }
@@ -78,7 +80,7 @@ impl Csr {
         while u < self.n_nodes {
             let lo = self.row_ptr[u] as usize;
             let hi = self.row_ptr[u + 1] as usize;
-            out.extend((lo..hi).map(|x| x as u32));
+            out.extend((lo..hi).map(cast::idx32));
             u += p;
         }
         out

@@ -49,10 +49,11 @@ impl EventGraph {
     /// Structural sanity: endpoints in range, no self loops, symmetric
     /// (every (u,v) has a matching (v,u)).
     pub fn validate(&self) -> anyhow::Result<()> {
-        use std::collections::HashSet;
-        let n = self.n_nodes as u32;
+        // BTreeSet keeps the first-reported violation deterministic.
+        use std::collections::BTreeSet;
+        let n = crate::fixedpoint::cast::idx32(self.n_nodes);
         anyhow::ensure!(self.src.len() == self.dst.len(), "src/dst length mismatch");
-        let mut set = HashSet::with_capacity(self.src.len());
+        let mut set = BTreeSet::new();
         for (&s, &d) in self.src.iter().zip(&self.dst) {
             anyhow::ensure!(s < n && d < n, "edge endpoint out of range");
             anyhow::ensure!(s != d, "self loop {s}");

@@ -6,6 +6,7 @@
 //! padding. Overflow policy: drop lowest-pT particles / excess edges
 //! (rare at the configured pileup; counted so callers can monitor).
 
+use crate::fixedpoint::cast;
 use crate::physics::event::Event;
 
 use super::EventGraph;
@@ -61,7 +62,7 @@ pub struct PaddedGraph {
 
 /// Pad an event+graph into a bucket chosen from `buckets`.
 pub fn pad_graph(event: &Event, graph: &EventGraph, buckets: &[Bucket]) -> PaddedGraph {
-    assert_eq!(event.n_particles(), graph.n_nodes);
+    debug_assert_eq!(event.n_particles(), graph.n_nodes);
     let n0 = graph.n_nodes;
     let e0 = graph.n_edges();
 
@@ -69,18 +70,16 @@ pub fn pad_graph(event: &Event, graph: &EventGraph, buckets: &[Bucket]) -> Padde
         *buckets
             .iter()
             .max_by_key(|b| (b.n_max, b.e_max))
+            // lint: allow(panic-free-library) — an empty bucket table is a
+            // startup configuration bug; every caller derives buckets from
+            // config defaults before the first event arrives.
             .expect("no buckets configured")
     });
 
     // --- node selection (drop lowest pT if over) ---------------------------
     let (keep, dropped_nodes): (Vec<usize>, usize) = if n0 > bucket.n_max {
         let mut idx: Vec<usize> = (0..n0).collect();
-        idx.sort_by(|&a, &b| {
-            event.particles[b]
-                .pt
-                .partial_cmp(&event.particles[a].pt)
-                .unwrap()
-        });
+        idx.sort_by(|&a, &b| event.particles[b].pt.total_cmp(&event.particles[a].pt));
         let mut kept: Vec<usize> = idx[..bucket.n_max].to_vec();
         kept.sort_unstable();
         (kept, n0 - bucket.n_max)
@@ -109,8 +108,8 @@ pub fn pad_graph(event: &Event, graph: &EventGraph, buckets: &[Bucket]) -> Padde
             dropped_edges += 1;
             continue;
         }
-        src_kept.push(rs as i32);
-        dst_kept.push(rd as i32);
+        src_kept.push(cast::idx_i32(rs));
+        dst_kept.push(cast::idx_i32(rd));
     }
     let e = src_kept.len();
 

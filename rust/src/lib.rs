@@ -87,12 +87,41 @@
 //! - [`util`], [`config`] — from-scratch substrates (JSON, CLI, RNG, stats,
 //!   bench/property harnesses, the bench-regression gate
 //!   [`util::benchgate`]) and typed configuration.
+//! - [`analysis`] — the determinism & panic-freedom static-analysis pass
+//!   (`dgnnflow lint`), a rust-tidy-style scanner enforcing the crate's
+//!   standing invariants at the source line rather than at runtime.
+//!
+//! ## Determinism invariants
+//!
+//! Everything the DGNNFlow hardware gets for free, this reproduction
+//! re-derives in software and *enforces statically* (`dgnnflow lint`,
+//! run by `ci.sh --quick` ahead of clippy):
+//!
+//! - **Cycle-domain results are wall-clock-free.** Anything under
+//!   [`dataflow`], [`obs`], [`fixedpoint`], [`model`], or [`graph`] is a
+//!   pure function of the event stream and the config — `Instant`/
+//!   `SystemTime` are banned there (`wall-clock`), so traces and metric
+//!   values stay byte-identical across machines and worker counts. The
+//!   serving layers ([`pipeline`], [`trigger`], [`farm`]) measure real
+//!   latency and are exempt by the policy table in [`analysis::POLICY`].
+//! - **Rendered output never depends on hash-iteration order**
+//!   (`unordered-iter`): modules that serialize — traces, metrics, JSON,
+//!   bench tables — use `BTreeMap` or sort before emitting.
+//! - **Library code does not panic** (`panic-free-library`): trigger-path
+//!   workers fail through typed errors ([`fixedpoint::FormatError`],
+//!   [`model::ModelError`], ...) — `unwrap`/`expect`/non-test `assert!`
+//!   are banned outside `#[cfg(test)]`; `debug_assert!` is fine.
+//! - **Float ordering is total** (`float-total-order`): `total_cmp`, not
+//!   `partial_cmp` — a NaN cannot panic a percentile or reorder output.
+//! - **Datapath narrowing is audited** (`lossy-cast`): narrowing `as`
+//!   casts go through the checked [`fixedpoint::cast`] helpers.
 //!
 //! ## CI
 //!
 //! `../rust/ci.sh` is the whole gate, run by GitHub Actions
 //! (`.github/workflows/ci.yml`) and locally: `--quick` for the smoke tier
-//! (fmt, clippy `-D warnings`, golden suite, GC schedule/co-sim pins, a
+//! (`dgnnflow lint` ahead of everything else, fmt, clippy `-D warnings`,
+//! golden suite, GC schedule/co-sim pins, a
 //! fabric serve smoke, a 2-shard farm smoke, a `simulate --trace` smoke
 //! checking the emitted Chrome-trace JSON validates and is
 //! byte-deterministic, and a `farm --metrics-out` smoke checking the
@@ -104,6 +133,7 @@
 //! suite. All cargo invocations are `--locked` and offline (the single
 //! dependency is vendored).
 
+pub mod analysis;
 pub mod config;
 pub mod dataflow;
 pub mod devices;

@@ -45,6 +45,7 @@ fn main() {
         Some("resources") => cmd_resources(&args),
         Some("power") => cmd_power(&args),
         Some("bench-check") => cmd_bench_check(&args),
+        Some("lint") => cmd_lint(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -72,7 +73,8 @@ fn print_help() {
          \u{20}  simulate [--trace F]     event stream through the simulated fabric\n\
          \u{20}  resources                Table I resource estimate\n\
          \u{20}  power                    Table II power estimate\n\
-         \u{20}  bench-check              diff emitted BENCH_*.json against baselines/\n\n\
+         \u{20}  bench-check              diff emitted BENCH_*.json against baselines/\n\
+         \u{20}  lint [--rules]           determinism & panic-freedom static analysis\n\n\
          Run `cargo run --release -- serve --events 1000 --backend pjrt`."
     );
 }
@@ -626,6 +628,50 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
         failures == 0,
         "bench-check failed for {failures} bench file(s); if the timing change is intended \
          and reviewed, re-baseline with DGNNFLOW_BENCH_REBASE=1 and commit baselines/"
+    );
+    Ok(())
+}
+
+/// `lint`: the in-tree determinism & panic-freedom static-analysis pass
+/// (`src/analysis/`). Walks `src/` and `benches/`, reports
+/// `file:line: rule: message` diagnostics, and exits nonzero on any
+/// unsuppressed violation — CI runs it in `ci.sh --quick` ahead of clippy.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            Help::new("lint", "determinism & panic-freedom static analysis over src/ + benches/")
+                .arg("--root D", "crate root holding src/ and benches/ (default .)")
+                .arg("--rules", "print the rule table and per-module policy, then exit")
+                .render()
+        );
+        return Ok(());
+    }
+    if args.flag("rules") {
+        print!("{}", dgnnflow::analysis::render_rules());
+        return Ok(());
+    }
+    let root = std::path::PathBuf::from(args.str_or("root", "."));
+    let report = dgnnflow::analysis::run(&root)?;
+    print!("{}", report.render());
+    // Standing chore surfaced where every contributor looks: the bench
+    // gate pins nothing until rust/baselines/*.json are committed.
+    let baselines = root.join("baselines");
+    let have_baseline = std::fs::read_dir(&baselines)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .any(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
+        })
+        .unwrap_or(false);
+    if !have_baseline {
+        println!("note: rust/baselines/*.json still missing — the bench gate pins nothing.");
+        println!("{}", benchgate::bootstrap_help());
+    }
+    anyhow::ensure!(
+        report.is_clean(),
+        "{} unsuppressed lint violation(s) — fix each site, demote to debug_assert!, \
+         or annotate `// lint: allow(<rule>) — <why>` (run `dgnnflow lint --rules`)",
+        report.diagnostics.len()
     );
     Ok(())
 }

@@ -16,12 +16,41 @@
 //! timed dataflow engine invokes, in the exact same f32 operation order, so
 //! the simulator's output is bit-identical to this model in every `Arith`.
 
+use std::fmt;
+
 use crate::config::ModelConfig;
 use crate::fixedpoint::Arith;
 use crate::graph::PaddedGraph;
 
 use super::tensor::Mat;
 use super::weights::Weights;
+
+/// Typed model-output validation error. The library reports a bad output
+/// instead of panicking (see `dgnnflow lint`'s panic-free-library rule);
+/// [`L1DeepMetV2::finish`] still debug-asserts the invariant in dev builds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ModelError {
+    /// A per-particle weight left the sigmoid range [0, 1] or went
+    /// non-finite (NaN/inf escaping the datapath).
+    BadWeight { index: usize, value: f32 },
+    /// A MET component went non-finite (accumulator overflow upstream).
+    BadMet { component: usize, value: f32 },
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ModelError::BadWeight { index, value } => {
+                write!(f, "weight[{index}] = {value} outside [0, 1] or non-finite")
+            }
+            ModelError::BadMet { component, value } => {
+                write!(f, "met_xy[{component}] = {value} non-finite")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
 
 /// Inference output.
 #[derive(Clone, Debug)]
@@ -34,6 +63,23 @@ pub struct ModelOutput {
 impl ModelOutput {
     pub fn met(&self) -> f32 {
         (self.met_xy[0] * self.met_xy[0] + self.met_xy[1] * self.met_xy[1]).sqrt()
+    }
+
+    /// Check the output invariants the head guarantees by construction:
+    /// every weight is a finite sigmoid output in [0, 1] and both MET
+    /// components are finite. Returns the first violated invariant.
+    pub fn validate(&self) -> Result<(), ModelError> {
+        for (index, &value) in self.weights.iter().enumerate() {
+            if !value.is_finite() || !(0.0..=1.0).contains(&value) {
+                return Err(ModelError::BadWeight { index, value });
+            }
+        }
+        for (component, &value) in self.met_xy.iter().enumerate() {
+            if !value.is_finite() {
+                return Err(ModelError::BadMet { component, value });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -240,7 +286,8 @@ impl L1DeepMetV2 {
             let next = self.edgeconv(l, &trace[l], g);
             trace.push(next);
         }
-        let out = self.finish(trace.last().expect("trace never empty"), g);
+        // trace holds at least the embed output pushed above
+        let out = self.finish(&trace[trace.len() - 1], g);
         (trace, out)
     }
 
@@ -259,7 +306,9 @@ impl L1DeepMetV2 {
         }
         met_xy[0] = acc.q(met_xy[0]);
         met_xy[1] = acc.q(met_xy[1]);
-        ModelOutput { weights, met_xy }
+        let out = ModelOutput { weights, met_xy };
+        debug_assert!(out.validate().is_ok(), "model output invariant: {:?}", out.validate());
+        out
     }
 
     /// FLOP count of one forward pass (MAC-based; for perf reporting).

@@ -5,6 +5,6 @@ pub mod l1deepmetv2;
 pub mod tensor;
 pub mod weights;
 
-pub use l1deepmetv2::{L1DeepMetV2, ModelOutput};
+pub use l1deepmetv2::{L1DeepMetV2, ModelError, ModelOutput};
 pub use tensor::Mat;
 pub use weights::{EdgeConvWeights, Weights};

@@ -20,7 +20,7 @@ impl Mat {
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
-        assert_eq!(data.len(), rows * cols, "shape {rows}x{cols} vs len {}", data.len());
+        debug_assert_eq!(data.len(), rows * cols, "shape {rows}x{cols} vs len {}", data.len());
         Mat { rows, cols, data }
     }
 
@@ -46,7 +46,11 @@ impl Mat {
 
     /// C = self @ rhs  (ikj loop: streams rhs rows, good cache behaviour).
     pub fn matmul(&self, rhs: &Mat) -> Mat {
-        assert_eq!(self.cols, rhs.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, rhs.rows, rhs.cols);
+        debug_assert_eq!(
+            self.cols, rhs.rows,
+            "matmul {}x{} @ {}x{}",
+            self.rows, self.cols, rhs.rows, rhs.cols
+        );
         let mut out = Mat::zeros(self.rows, rhs.cols);
         self.matmul_into(rhs, &mut out);
         out
@@ -55,9 +59,9 @@ impl Mat {
     /// Matmul into a pre-allocated output (hot-path variant; avoids
     /// per-call allocation in the serve loop).
     pub fn matmul_into(&self, rhs: &Mat, out: &mut Mat) {
-        assert_eq!(self.cols, rhs.rows);
-        assert_eq!(out.rows, self.rows);
-        assert_eq!(out.cols, rhs.cols);
+        debug_assert_eq!(self.cols, rhs.rows);
+        debug_assert_eq!(out.rows, self.rows);
+        debug_assert_eq!(out.cols, rhs.cols);
         out.data.fill(0.0);
         let n = rhs.cols;
         for i in 0..self.rows {
@@ -77,7 +81,7 @@ impl Mat {
 
     /// Add a row-vector bias in place.
     pub fn add_bias(&mut self, bias: &[f32]) {
-        assert_eq!(bias.len(), self.cols);
+        debug_assert_eq!(bias.len(), self.cols);
         for r in 0..self.rows {
             let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
             for (x, b) in row.iter_mut().zip(bias) {
@@ -104,8 +108,8 @@ impl Mat {
 
     /// Folded batch-norm: x = x * scale + shift (per column), in place.
     pub fn bn_fold(&mut self, scale: &[f32], shift: &[f32]) {
-        assert_eq!(scale.len(), self.cols);
-        assert_eq!(shift.len(), self.cols);
+        debug_assert_eq!(scale.len(), self.cols);
+        debug_assert_eq!(shift.len(), self.cols);
         for r in 0..self.rows {
             let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
             for c in 0..self.cols {
@@ -116,7 +120,7 @@ impl Mat {
 
     /// Zero out rows where mask == 0 (mask length == rows).
     pub fn mask_rows(&mut self, mask: &[f32]) {
-        assert_eq!(mask.len(), self.rows);
+        debug_assert_eq!(mask.len(), self.rows);
         for (r, &m) in mask.iter().enumerate() {
             if m == 0.0 {
                 self.row_mut(r).fill(0.0);
@@ -126,8 +130,8 @@ impl Mat {
 
     /// Elementwise addition in place.
     pub fn add_assign(&mut self, other: &Mat) {
-        assert_eq!(self.rows, other.rows);
-        assert_eq!(self.cols, other.cols);
+        debug_assert_eq!(self.rows, other.rows);
+        debug_assert_eq!(self.cols, other.cols);
         for (a, b) in self.data.iter_mut().zip(&other.data) {
             *a += b;
         }
@@ -142,13 +146,14 @@ impl Mat {
 
     /// Max |a - b| over all elements.
     pub fn max_abs_diff(&self, other: &Mat) -> f32 {
-        assert_eq!(self.rows, other.rows);
-        assert_eq!(self.cols, other.cols);
+        debug_assert_eq!(self.rows, other.rows);
+        debug_assert_eq!(self.cols, other.cols);
         self.data
             .iter()
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max)
+            .max_by(f32::total_cmp)
+            .unwrap_or(0.0)
     }
 }
 

@@ -301,7 +301,7 @@ pub fn new_trace_sink() -> TraceSink {
 /// single-worker one (worker scheduling only permutes capture order, never
 /// the per-event records).
 pub fn drain_sorted(sink: &TraceSink) -> Vec<TracedEvent> {
-    let mut evs = std::mem::take(&mut *sink.lock().unwrap());
+    let mut evs = std::mem::take(&mut *sink.lock().unwrap_or_else(|e| e.into_inner()));
     evs.sort_by_key(|e| e.event_id);
     evs
 }

@@ -11,7 +11,7 @@ pub fn met_mag(met_xy: [f32; 2]) -> f32 {
 
 /// Weighted-sum MET from per-particle weights.
 pub fn weighted_met_xy(ev: &Event, weights: &[f32]) -> [f32; 2] {
-    assert_eq!(weights.len(), ev.n_particles());
+    debug_assert_eq!(weights.len(), ev.n_particles());
     let mut met = [0.0f32; 2];
     for (p, &w) in ev.particles.iter().zip(weights) {
         met[0] += w * p.px;

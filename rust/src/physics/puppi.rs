@@ -83,7 +83,7 @@ pub fn puppi_weights(ev: &Event, cfg: &PuppiConfig) -> Vec<f32> {
         .filter(|a| a.is_finite())
         .collect();
     let (median, rms) = if pu_alphas.len() >= 4 {
-        pu_alphas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        pu_alphas.sort_by(|a, b| a.total_cmp(b));
         let med = pu_alphas[pu_alphas.len() / 2];
         let var: f32 = pu_alphas.iter().map(|a| (a - med) * (a - med)).sum::<f32>()
             / pu_alphas.len() as f32;

@@ -356,7 +356,7 @@ fn run_batch<B: InferenceBackend>(
 
     // One rate-controller lock per batch, not per event.
     let decisions: Vec<(f32, bool)> = {
-        let mut rc = ctx.rate.lock().unwrap();
+        let mut rc = ctx.rate.lock().unwrap_or_else(|e| e.into_inner());
         outputs
             .iter()
             .map(|o| {

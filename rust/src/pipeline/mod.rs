@@ -775,6 +775,9 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
                 std::thread::Builder::new()
                     .name(format!("dgnnflow-pipe-{w}"))
                     .spawn(move || worker_loop(lane_rx, ctx))
+                    // lint: allow(panic-free-library) — thread spawn fails
+                    // only on OS resource exhaustion; no useful recovery
+                    // while the pipeline is still being constructed.
                     .expect("spawn pipeline worker"),
             );
         }
@@ -822,6 +825,8 @@ impl<B: InferenceBackend + 'static> Pipeline<B> {
                 }
                 // dropping `lanes` disconnects the workers, ending the run
             })
+            // lint: allow(panic-free-library) — thread spawn fails only on
+            // OS resource exhaustion; no useful recovery at construction.
             .expect("spawn pipeline feeder");
 
         RecordStream {

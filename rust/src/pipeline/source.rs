@@ -165,7 +165,7 @@ pub struct BurstSource {
 
 impl BurstSource {
     pub fn new(n_events: usize, seed: u64, cfg: GeneratorConfig, base_rate_hz: f64) -> Self {
-        assert!(base_rate_hz > 0.0, "burst source needs a positive base rate");
+        debug_assert!(base_rate_hz > 0.0, "burst source needs a positive base rate");
         BurstSource {
             gen: EventGenerator::new(seed, cfg),
             // independent stream for arrival times so traffic shape does not
@@ -182,14 +182,14 @@ impl BurstSource {
 
     /// Rate multiplier during bursts (default 8×).
     pub fn with_burst_factor(mut self, factor: f64) -> Self {
-        assert!(factor >= 1.0);
+        debug_assert!(factor >= 1.0);
         self.burst_factor = factor;
         self
     }
 
     /// Mean run length, in events, of each quiet/burst period (default 64).
     pub fn with_mean_period(mut self, events: f64) -> Self {
-        assert!(events >= 1.0);
+        debug_assert!(events >= 1.0);
         self.p_toggle = 1.0 / events;
         self
     }

@@ -82,7 +82,7 @@ impl PjrtService {
     pub fn infer(&self, g: &PaddedGraph) -> Result<ModelOutput> {
         let (resp_tx, resp_rx) = mpsc::channel();
         {
-            let tx = self.tx.lock().unwrap();
+            let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
             tx.send(Request::Infer(g.clone(), resp_tx))
                 .map_err(|_| anyhow::anyhow!("device thread gone"))?;
         }
@@ -100,7 +100,7 @@ impl PjrtService {
         }
         let (resp_tx, resp_rx) = mpsc::channel();
         {
-            let tx = self.tx.lock().unwrap();
+            let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
             tx.send(Request::InferBatch(graphs.to_vec(), resp_tx))
                 .map_err(|_| anyhow::anyhow!("device thread gone"))?;
         }

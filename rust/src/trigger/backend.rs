@@ -99,7 +99,7 @@ pub trait InferenceBackend: Send + Sync {
     fn infer(&self, g: &PaddedGraph) -> anyhow::Result<ModelOutput> {
         let mut out = self.infer_batch(std::slice::from_ref(g))?;
         anyhow::ensure!(out.len() == 1, "backend returned {} outputs for 1 graph", out.len());
-        Ok(out.pop().expect("len checked above"))
+        out.pop().ok_or_else(|| anyhow::anyhow!("backend returned no output"))
     }
 
     /// Simulated device completion times (seconds, relative to batch start)
@@ -176,7 +176,7 @@ impl Backend {
         // differ across worker counts for the same event stream.
         let rs = if let Some(sink) = engine.trace_sink() {
             let rs = engine.run_stream_traced(graphs);
-            let mut captured = sink.lock().expect("trace sink poisoned");
+            let mut captured = sink.lock().unwrap_or_else(|e| e.into_inner());
             for (g, (r, gc)) in graphs.iter().zip(&rs) {
                 let mut breakdown = r.breakdown.clone();
                 breakdown.stream_start_cycle = 0;

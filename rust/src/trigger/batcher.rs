@@ -27,7 +27,7 @@ pub struct DynamicBatcher<T> {
 
 impl<T> DynamicBatcher<T> {
     pub fn new(max_batch: usize, timeout: Duration) -> Self {
-        assert!(max_batch >= 1);
+        debug_assert!(max_batch >= 1);
         DynamicBatcher { max_batch, timeout, queue: Vec::new() }
     }
 

@@ -24,7 +24,7 @@ pub struct RateController {
 
 impl RateController {
     pub fn new(target_frac: f64, initial_threshold: f64) -> Self {
-        assert!((0.0..=1.0).contains(&target_frac));
+        debug_assert!((0.0..=1.0).contains(&target_frac));
         RateController {
             target_frac,
             threshold: initial_threshold,

@@ -55,6 +55,10 @@ impl<B: InferenceBackend + 'static> TriggerServer<B> {
             .accept_fraction(self.cfg.target_accept_hz / self.cfg.input_rate_hz)
             .met_threshold(self.cfg.met_threshold)
             .build()
+            // lint: allow(panic-free-library) — serve() is only reachable
+            // through a validated TriggerConfig, whose invariants are
+            // exactly what build() checks; failure here is a config-schema
+            // bug, not runtime input.
             .expect("a validated TriggerConfig always builds a valid pipeline")
             .serve()
     }

@@ -60,7 +60,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -125,7 +125,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -186,7 +186,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -210,7 +210,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -221,7 +221,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let key = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             map.insert(key, val);
             self.ws();

@@ -16,7 +16,7 @@ pub struct Gen {
 
 impl Gen {
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
-        assert!(hi >= lo);
+        debug_assert!(hi >= lo);
         lo + self.rng.index(hi - lo + 1)
     }
 
@@ -64,6 +64,9 @@ pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut body: F) {
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
+            // lint: allow(panic-free-library) — property-test harness:
+            // re-raises a failed case with its replay seed; only ever
+            // executes under #[test].
             panic!(
                 "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
             );

@@ -76,7 +76,7 @@ impl Rng {
     /// Uniform integer in [0, n). Unbiased via rejection (Lemire-ish).
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
-        assert!(n > 0, "Rng::below(0)");
+        debug_assert!(n > 0, "Rng::below(0)");
         // 128-bit multiply trick
         let mut x = self.next_u64();
         let mut m = (x as u128).wrapping_mul(n as u128);

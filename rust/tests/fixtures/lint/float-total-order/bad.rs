@@ -1,0 +1,6 @@
+//! Bad: partial_cmp is not a total order — a NaN in the slice makes the
+//! sort result (or a panic) depend on the input permutation.
+
+pub fn sort(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}

@@ -1,0 +1,6 @@
+//! Good: total_cmp is a total order over every f32 bit pattern, NaN
+//! included, so the sort is deterministic for any input.
+
+pub fn sort(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

@@ -1,0 +1,6 @@
+//! Bad: a bare narrowing `as` silently truncates once an index outgrows
+//! the target width.
+
+pub fn pack(idx: usize) -> u32 {
+    idx as u32
+}

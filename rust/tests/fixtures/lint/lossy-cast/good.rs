@@ -1,0 +1,8 @@
+//! Good: datapath narrowing goes through the checked fixedpoint helpers,
+//! which debug-assert the range and saturate in release.
+
+use crate::fixedpoint::cast;
+
+pub fn pack(idx: usize) -> u32 {
+    cast::idx32(idx)
+}

@@ -1,0 +1,6 @@
+//! Bad: a library path that aborts on bad input instead of returning a
+//! typed error the caller can route.
+
+pub fn head(xs: &[f32]) -> f32 {
+    *xs.first().unwrap()
+}

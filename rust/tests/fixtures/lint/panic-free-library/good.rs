@@ -1,0 +1,6 @@
+//! Good: absence is part of the signature; the caller decides what an
+//! empty slice means.
+
+pub fn head(xs: &[f32]) -> Option<f32> {
+    xs.first().copied()
+}

@@ -1,0 +1,12 @@
+//! Bad: renders by iterating a hash-ordered map, so the emitted bytes
+//! depend on the process's hash seed.
+
+use std::collections::HashMap;
+
+pub fn render(m: &HashMap<String, u64>) -> String {
+    let mut out = String::new();
+    for (k, v) in m {
+        out.push_str(&format!("{k} {v}\n"));
+    }
+    out
+}

@@ -1,0 +1,12 @@
+//! Good: a BTreeMap iterates in key order, so two equal maps always render
+//! byte-identically.
+
+use std::collections::BTreeMap;
+
+pub fn render(m: &BTreeMap<String, u64>) -> String {
+    let mut out = String::new();
+    for (k, v) in m {
+        out.push_str(&format!("{k} {v}\n"));
+    }
+    out
+}

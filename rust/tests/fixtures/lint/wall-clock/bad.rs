@@ -1,0 +1,6 @@
+//! Bad: samples the host clock inside a cycle-domain module. Traces built
+//! from this value differ between machines and runs.
+
+pub fn stamp_now() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,6 @@
+//! Good: cycle-domain time is a u64 counter advanced by the engine, so the
+//! same event stream always produces the same timeline.
+
+pub fn advance(cycle: u64) -> u64 {
+    cycle + 1
+}

@@ -1,0 +1,154 @@
+//! Fixture corpus and self-check for the in-tree static-analysis pass
+//! (`dgnnflow lint`).
+//!
+//! Three layers:
+//!   1. per-rule good/bad fixture pairs under `tests/fixtures/lint/` —
+//!      every bad fixture must fail with *exactly* its own rule id, and
+//!      every good fixture must pass clean;
+//!   2. suppression semantics — a justified `lint: allow(...)` silences a
+//!      site, a bare one does not;
+//!   3. the committed tree itself must lint clean (the pass is a CI gate,
+//!      so this test is the local mirror of that gate).
+
+use dgnnflow::analysis::{self, RuleId};
+
+/// Lint `source` as if it lived at `rel_path`; return the diagnostics.
+fn diags(rel_path: &str, source: &str) -> Vec<analysis::Diagnostic> {
+    analysis::lint_source(rel_path, source).0
+}
+
+/// Every fixture rides a virtual path inside its rule's scope.
+fn fixture_path(rule: RuleId) -> &'static str {
+    match rule {
+        RuleId::WallClock => "src/dataflow/fixture.rs",
+        RuleId::UnorderedIter => "src/obs/fixture.rs",
+        RuleId::PanicFreeLibrary => "src/model/fixture.rs",
+        RuleId::FloatTotalOrder => "src/physics/fixture.rs",
+        RuleId::LossyCast => "src/graph/fixture.rs",
+    }
+}
+
+fn fixture_pair(rule: RuleId) -> (&'static str, &'static str) {
+    match rule {
+        RuleId::WallClock => (
+            include_str!("fixtures/lint/wall-clock/good.rs"),
+            include_str!("fixtures/lint/wall-clock/bad.rs"),
+        ),
+        RuleId::UnorderedIter => (
+            include_str!("fixtures/lint/unordered-iter/good.rs"),
+            include_str!("fixtures/lint/unordered-iter/bad.rs"),
+        ),
+        RuleId::PanicFreeLibrary => (
+            include_str!("fixtures/lint/panic-free-library/good.rs"),
+            include_str!("fixtures/lint/panic-free-library/bad.rs"),
+        ),
+        RuleId::FloatTotalOrder => (
+            include_str!("fixtures/lint/float-total-order/good.rs"),
+            include_str!("fixtures/lint/float-total-order/bad.rs"),
+        ),
+        RuleId::LossyCast => (
+            include_str!("fixtures/lint/lossy-cast/good.rs"),
+            include_str!("fixtures/lint/lossy-cast/bad.rs"),
+        ),
+    }
+}
+
+#[test]
+fn every_bad_fixture_fails_with_exactly_its_rule() {
+    for rule in RuleId::ALL {
+        let (_, bad) = fixture_pair(rule);
+        let ds = diags(fixture_path(rule), bad);
+        assert!(!ds.is_empty(), "{}: bad fixture produced no diagnostics", rule.as_str());
+        for d in &ds {
+            assert_eq!(
+                d.rule,
+                rule,
+                "{}: bad fixture tripped a different rule ({}) at line {}: {}",
+                rule.as_str(),
+                d.rule.as_str(),
+                d.line,
+                d.message
+            );
+        }
+    }
+}
+
+#[test]
+fn every_good_fixture_passes_clean() {
+    for rule in RuleId::ALL {
+        let (good, _) = fixture_pair(rule);
+        let (ds, suppressed) = analysis::lint_source(fixture_path(rule), good);
+        assert!(
+            ds.is_empty(),
+            "{}: good fixture flagged: {}:{}: {}",
+            rule.as_str(),
+            ds[0].file,
+            ds[0].line,
+            ds[0].message
+        );
+        assert_eq!(suppressed, 0, "{}: good fixture needed no allows", rule.as_str());
+    }
+}
+
+#[test]
+fn justified_allow_suppresses() {
+    let src = "pub fn f(xs: &[f32]) -> f32 {\n\
+               \x20   // lint: allow(panic-free-library) — fixture: callers pre-check non-empty\n\
+               \x20   *xs.first().unwrap()\n\
+               }\n";
+    let (ds, suppressed) = analysis::lint_source("src/model/fixture.rs", src);
+    assert!(ds.is_empty(), "justified allow must suppress: {}", ds[0].message);
+    assert_eq!(suppressed, 1, "the suppression is counted in the report");
+}
+
+#[test]
+fn bare_allow_without_justification_does_not_suppress() {
+    let src = "pub fn f(xs: &[f32]) -> f32 {\n\
+               \x20   // lint: allow(panic-free-library)\n\
+               \x20   *xs.first().unwrap()\n\
+               }\n";
+    let (ds, suppressed) = analysis::lint_source("src/model/fixture.rs", src);
+    assert_eq!(ds.len(), 1, "a bare allow must not silence the diagnostic");
+    assert_eq!(ds[0].rule, RuleId::PanicFreeLibrary);
+    assert!(
+        ds[0].message.contains("justification"),
+        "the diagnostic should point at the missing justification: {}",
+        ds[0].message
+    );
+    assert_eq!(suppressed, 0);
+}
+
+#[test]
+fn allow_for_a_different_rule_does_not_suppress() {
+    let src = "pub fn f(xs: &[f32]) -> f32 {\n\
+               \x20   // lint: allow(wall-clock) — wrong rule on purpose\n\
+               \x20   *xs.first().unwrap()\n\
+               }\n";
+    let (ds, _) = analysis::lint_source("src/model/fixture.rs", src);
+    assert_eq!(ds.len(), 1);
+    assert_eq!(ds[0].rule, RuleId::PanicFreeLibrary);
+}
+
+#[test]
+fn policy_exemptions_hold() {
+    // The same wall-clock bad fixture is legal in the pipeline (serving
+    // latency is the measurand there — see analysis::POLICY).
+    let (_, bad) = fixture_pair(RuleId::WallClock);
+    assert!(diags("src/pipeline/fixture.rs", bad).is_empty());
+    // ... and test regions are always exempt.
+    let in_test = format!("#[cfg(test)]\nmod tests {{\n{}\n}}\n", bad);
+    assert!(diags(fixture_path(RuleId::WallClock), &in_test).is_empty());
+}
+
+#[test]
+fn committed_tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::run(root).expect("lint pass runs");
+    assert!(
+        report.is_clean(),
+        "the committed tree must lint clean:\n{}",
+        report.render()
+    );
+    assert!(report.files_scanned > 50, "walked the whole crate");
+    assert!(report.suppressed > 0, "the justified allows are counted");
+}
