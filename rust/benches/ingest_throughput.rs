@@ -1,0 +1,201 @@
+//! Ingestion throughput bench: lazy `.evtape` scanning vs eager JSON
+//! parsing, one emitted document (`BENCH_ingest.json`).
+//!
+//! A pinned-seed synthetic stream is recorded once into an in-memory
+//! tape, then decoded repeatedly three ways:
+//!
+//! - **eager** — `util::json::parse` each frame into a full `Value` tree
+//!   (BTreeMap objects, `Vec` arrays, every number converted) and pull
+//!   pt/eta/phi back out of it: the baseline any naive reader pays.
+//! - **lazy** — `ingest::LazyFrame::scan` records field *offsets* over
+//!   the raw bytes and `hot()` converts only the three floats per
+//!   particle a trigger front-end actually reads.
+//! - **materialise** — the full replay path (`Tape::event`): lazy scan +
+//!   complete `TimedEvent` reconstruction, what `TapeSource` pays per
+//!   pull.
+//!
+//! Gated invariants (exact-compared by `dgnnflow bench-check`): the
+//! frame count, the XOR of every replayed event id against the
+//! originating stream's ids (must be 0), and bit-agreement of the
+//! decoded values with the reference events. Throughput numbers
+//! (events/sec, bytes/event, the lazy-vs-eager speedup) are
+//! host-dependent and not pinned — but the bench *asserts* the lazy
+//! scanner beats the eager parser by >= 5x, the headline the ingest
+//! subsystem exists to deliver.
+//!
+//!   cargo bench --bench ingest_throughput [-- --events N --seed N --reps R]
+
+use std::time::Instant;
+
+use dgnnflow::ingest::{self, bit_identical, Tape};
+use dgnnflow::physics::GeneratorConfig;
+use dgnnflow::pipeline::{EventSource, SyntheticSource, TimedEvent};
+use dgnnflow::util::bench::Table;
+use dgnnflow::util::cli::Args;
+use dgnnflow::util::json::{self, obj, Value};
+
+const RATE_HZ: f64 = 1000.0;
+
+/// One decode pass over the whole tape: returns (ids_xor, values_ok).
+type Pass<'a> = dyn Fn(&Tape, &[TimedEvent]) -> (u64, bool) + 'a;
+
+/// Eager baseline: full JSON tree per frame, then field extraction.
+fn eager_pass(tape: &Tape, reference: &[TimedEvent]) -> (u64, bool) {
+    let mut xor = 0u64;
+    let mut ok = true;
+    for (i, want) in reference.iter().enumerate() {
+        let bytes = tape.frame_bytes(i).expect("frame bytes");
+        let s = std::str::from_utf8(bytes).expect("frame utf8");
+        let v = json::parse(s).expect("frame json");
+        let id = v.get("id").and_then(|x| x.as_f64()).expect("id") as u64;
+        xor ^= id ^ want.event.id;
+        let parts = v.get("p").and_then(|x| x.as_arr()).expect("p");
+        ok &= parts.len() == want.event.particles.len();
+        for (p, wp) in parts.iter().zip(&want.event.particles) {
+            let a = p.as_arr().expect("particle");
+            let (pt, eta, phi) = (
+                a[0].as_f64().expect("pt") as f32,
+                a[1].as_f64().expect("eta") as f32,
+                a[2].as_f64().expect("phi") as f32,
+            );
+            ok &= pt.to_bits() == wp.pt.to_bits()
+                && eta.to_bits() == wp.eta.to_bits()
+                && phi.to_bits() == wp.phi.to_bits();
+        }
+    }
+    (xor, ok)
+}
+
+/// Lazy scanner: offsets only, convert just the hot pt/eta/phi triples.
+fn lazy_pass(tape: &Tape, reference: &[TimedEvent]) -> (u64, bool) {
+    let mut xor = 0u64;
+    let mut ok = true;
+    for (i, want) in reference.iter().enumerate() {
+        let frame = tape.scan(i).expect("scan");
+        xor ^= frame.id() ^ want.event.id;
+        let hot = frame.hot().expect("hot fields");
+        ok &= hot.len() == want.event.particles.len();
+        for ([pt, eta, phi], wp) in hot.iter().zip(&want.event.particles) {
+            ok &= pt.to_bits() == wp.pt.to_bits()
+                && eta.to_bits() == wp.eta.to_bits()
+                && phi.to_bits() == wp.phi.to_bits();
+        }
+    }
+    (xor, ok)
+}
+
+/// Full replay path: lazy scan + complete TimedEvent reconstruction.
+fn materialise_pass(tape: &Tape, reference: &[TimedEvent]) -> (u64, bool) {
+    let mut xor = 0u64;
+    let mut ok = true;
+    for (i, want) in reference.iter().enumerate() {
+        let te = tape.event(i).expect("materialise");
+        xor ^= te.event.id ^ want.event.id;
+        ok &= bit_identical(&te, want);
+    }
+    (xor, ok)
+}
+
+/// Best-of-`reps` wall time for one full-tape pass (the invariants are
+/// computed once outside the timed loop — every pass decodes the same
+/// fields either way, so timing the checks would only add noise).
+fn time_pass(tape: &Tape, reference: &[TimedEvent], reps: usize, pass: &Pass) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (xor, _) = pass(tape, reference);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(xor, 0, "decode drifted inside the timing loop");
+        best = best.min(dt);
+    }
+    best
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let seed = args.u64_or("seed", 21).unwrap_or(21);
+    let events = args.usize_or("events", 256).unwrap_or(256);
+    let pileup = args.f64_or("pileup", 60.0).unwrap_or(60.0);
+    let reps = args.usize_or("reps", 20).unwrap_or(20);
+    println!("=== Ingest throughput: lazy .evtape scan vs eager JSON parse ===\n");
+
+    let gen_cfg = GeneratorConfig { mean_pileup: pileup, ..Default::default() };
+    let mut src = SyntheticSource::new(events, seed, gen_cfg.clone()).with_rate(RATE_HZ);
+    let tape = Tape::from_bytes(
+        ingest::record(&mut src, seed, RATE_HZ, gen_cfg.clone()).expect("record"),
+    )
+    .expect("open recorded tape");
+
+    // the originating stream, regenerated: the decode oracle
+    let mut reference = Vec::with_capacity(events);
+    let mut regen = SyntheticSource::new(events, seed, gen_cfg).with_rate(RATE_HZ);
+    while let Some(te) = regen.next_event() {
+        reference.push(te);
+    }
+    assert_eq!(tape.len(), reference.len(), "tape dropped events");
+    let n_particles: usize = reference.iter().map(|te| te.event.particles.len()).sum();
+    let bytes_per_event = tape.total_bytes() as f64 / tape.len().max(1) as f64;
+    println!(
+        "tape: {} events, {} particles, {} bytes ({bytes_per_event:.1} bytes/event)\n",
+        tape.len(),
+        n_particles,
+        tape.total_bytes()
+    );
+
+    let codecs: [(&str, &Pass); 3] =
+        [("eager", &eager_pass), ("lazy", &lazy_pass), ("materialise", &materialise_pass)];
+
+    let mut table = Table::new(&["codec", "events/s", "Mparticles/s", "vs eager"]);
+    let mut points = Vec::new();
+    let mut eager_eps = 0.0f64;
+    let mut lazy_speedup = 0.0f64;
+    for (name, pass) in codecs {
+        // invariants once, untimed
+        let (xor, values_ok) = pass(&tape, &reference);
+        let secs = time_pass(&tape, &reference, reps, pass);
+        let eps = tape.len() as f64 / secs;
+        if name == "eager" {
+            eager_eps = eps;
+        }
+        let speedup = if eager_eps > 0.0 { eps / eager_eps } else { 1.0 };
+        if name == "lazy" {
+            lazy_speedup = speedup;
+        }
+        table.row(&[
+            name.to_string(),
+            format!("{eps:.0}"),
+            format!("{:.2}", n_particles as f64 / secs / 1e6),
+            format!("{speedup:.1}x"),
+        ]);
+        points.push(obj(vec![
+            ("codec", Value::Str(name.to_string())),
+            ("frames", Value::Num(tape.len() as f64)),
+            ("ids_xor", Value::Num(xor as f64)),
+            ("matches_reference", Value::Bool(values_ok)),
+            ("events_per_sec", Value::Num(eps)),
+            ("bytes_per_event", Value::Num(bytes_per_event)),
+            ("speedup_vs_eager", Value::Num(speedup)),
+        ]));
+    }
+    table.print();
+
+    println!("\nlazy scan is {lazy_speedup:.1}x the eager parser (floor: 5x)");
+    assert!(
+        lazy_speedup >= 5.0,
+        "lazy scanner regressed to {lazy_speedup:.1}x eager (< 5x floor) — \
+         something is converting fields the hot path never asked for"
+    );
+
+    let doc = obj(vec![
+        ("bench", Value::from("ingest_throughput")),
+        ("seed", Value::Num(seed as f64)),
+        ("events", Value::Num(events as f64)),
+        ("pileup", Value::Num(pileup)),
+        ("reps", Value::Num(reps as f64)),
+        ("lazy_speedup_vs_eager", Value::Num(lazy_speedup)),
+        ("points", Value::Arr(points)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_ingest.json");
+    std::fs::write(&out, doc.to_json()).expect("write BENCH_ingest.json");
+    println!("wrote {}", out.display());
+}

@@ -3,35 +3,50 @@
 #
 #   ./ci.sh                full gate: the quick tier, the bench-regression
 #                          gate, a release build, and the full test suite
-#   ./ci.sh --quick        smoke tier: `dgnnflow lint` (the in-tree
-#                          determinism/panic-freedom static-analysis pass)
-#                          ahead of everything else, then cargo fmt --check
-#                          and clippy (warnings are errors) so lint drift
-#                          fails fast,
-#                          bench compilation, the golden-vector conformance
-#                          suite, the GC-vs-host edge-set equality tests,
-#                          the pipelined-vs-serialized schedule property,
-#                          the co-sim-vs-PR 4-replay regression pins, a
-#                          `--build-site fabric` serve smoke whose report
-#                          line must show dropped=0, an on-fabric build,
-#                          and a sustained device-throughput figure, an
-#                          `--event-pipelining` serve smoke whose report
-#                          must show the II-pipelined fabric marker,
-#                          a 2-shard farm smoke whose report must show
-#                          zero failures and consistent admission accounting,
-#                          a `simulate --trace` smoke whose emitted
-#                          Chrome-trace JSON must validate and be
-#                          byte-deterministic across two runs, and a
-#                          `farm --metrics-out` smoke whose Prometheus
-#                          counters must reconcile with the farm report
+#   ./ci.sh --quick        smoke tier = the three named groups below
+#   ./ci.sh --quick-static   static group: `dgnnflow lint` (the in-tree
+#                            determinism/panic-freedom static-analysis pass)
+#                            ahead of everything else, then cargo fmt
+#                            --check, clippy (warnings are errors), and
+#                            bench compilation
+#   ./ci.sh --quick-unit     unit group: the golden-vector conformance
+#                            suite, the GC-vs-host edge-set equality tests,
+#                            the pipelined-vs-serialized schedule property,
+#                            and the co-sim-vs-PR 4-replay regression pins
+#   ./ci.sh --quick-smokes   smoke group: a `--build-site fabric` serve
+#                            smoke (dropped=0, on-fabric build, sustained
+#                            device throughput), an `--event-pipelining`
+#                            serve smoke (II-pipelined fabric marker), a
+#                            2-shard farm smoke (zero failures, admission
+#                            accounting closes), a record→replay smoke
+#                            (`dgnnflow record` must verify bit-identical
+#                            replay, two recordings must be byte-identical,
+#                            and `serve --source tape` must serve the tape
+#                            with dropped=0), a `simulate --trace` smoke
+#                            (emitted Chrome-trace JSON validates and is
+#                            byte-deterministic), and a `farm
+#                            --metrics-out` smoke (Prometheus counters
+#                            reconcile with the farm report). Artifacts
+#                            land in $SMOKE_DIR (default target/ci-smoke)
+#                            so CI can upload them on failure.
 #   ./ci.sh --bench-check  bench-regression gate: run ablation_parallelism,
-#                          graphbuild_overlap, farm_soak, and stream_ii on
-#                          their pinned seeds and exact-compare the emitted
-#                          BENCH_*.json deterministic fields against
-#                          rust/baselines/
+#                          graphbuild_overlap, farm_soak, stream_ii, and
+#                          ingest_throughput on their pinned seeds and
+#                          exact-compare the emitted BENCH_*.json
+#                          deterministic fields against rust/baselines/
 #                          (a missing baseline is bootstrapped — commit it;
 #                          DGNNFLOW_BENCH_REBASE=1 re-baselines after a
-#                          reviewed timing change)
+#                          reviewed timing change). When $CI is set the
+#                          gate must report mode=enforcing — a runner
+#                          that silently degraded to bootstrap mode is a
+#                          failure here, not a green build.
+#   ./ci.sh --fuzz         ingestion adversarial tier: randomised
+#                          truncations, byte flips, frame-length lies, and
+#                          index corruption over valid tapes must all fail
+#                          with typed IngestErrors — never a panic, never a
+#                          silently wrong event. Case budget scales with
+#                          DGNNFLOW_FUZZ_CASES (default 512; the scheduled
+#                          CI job runs a larger budget).
 #
 # Every cargo invocation is --locked against the committed Cargo.lock, and
 # builds are offline-friendly: the only dependency is vendored in
@@ -41,49 +56,104 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Smoke artifacts (trace JSON, metrics.prom, the recorded .evtape, step
+# logs) persist here instead of a mktemp dir so a failing CI run can
+# upload them for the post-mortem.
+SMOKE_DIR="${SMOKE_DIR:-target/ci-smoke}"
+
 tier="full"
 case "${1:-}" in
     "") tier="full" ;;
     --quick) tier="quick" ;;
+    --quick-static) tier="quick-static" ;;
+    --quick-unit) tier="quick-unit" ;;
+    --quick-smokes) tier="quick-smokes" ;;
     --bench-check) tier="bench" ;;
+    --fuzz) tier="fuzz" ;;
     *)
-        echo "usage: ci.sh [--quick|--bench-check]" >&2
+        echo "usage: ci.sh [--quick|--quick-static|--quick-unit|--quick-smokes|--bench-check|--fuzz]" >&2
         exit 2
         ;;
 esac
 
-quick_tier() {
-    echo "==> dgnnflow lint (in-tree static analysis: wall-clock, unordered-iter,"
-    echo "    panic-free-library, float-total-order, lossy-cast)"
+# group TITLE CMD...: one named CI step — folded in the GitHub Actions
+# log, timed everywhere, so a slow step is visible per-name rather than
+# as one opaque quick-tier wall time.
+group() {
+    local title="$1"
+    shift
+    if [ -n "${GITHUB_ACTIONS:-}" ]; then
+        echo "::group::${title}"
+    else
+        echo "==> ${title}"
+    fi
+    local t0=$SECONDS
+    "$@"
+    echo "    (${title}: $((SECONDS - t0))s)"
+    if [ -n "${GITHUB_ACTIONS:-}" ]; then
+        echo "::endgroup::"
+    fi
+}
+
+# --- static group -----------------------------------------------------------
+
+step_lint() {
     cargo run --locked -q -- lint
+}
 
-    echo "==> cargo fmt --check"
+step_fmt() {
     cargo fmt --check
+}
 
-    echo "==> cargo clippy (all targets, warnings are errors)"
+step_clippy() {
     cargo clippy --locked --all-targets -- -D warnings
+}
 
-    echo "==> cargo bench --no-run (benches must compile, incl. graphbuild_overlap + parallelism/policy sweep)"
+step_bench_compile() {
     cargo bench --locked --no-run
+}
 
-    echo "==> cargo test --test golden (golden-vector conformance suite)"
+quick_static() {
+    group "dgnnflow lint (wall-clock, unordered-iter, panic-free-library, float-total-order, lossy-cast)" step_lint
+    group "cargo fmt --check" step_fmt
+    group "cargo clippy (all targets, warnings are errors)" step_clippy
+    group "cargo bench --no-run (benches must compile)" step_bench_compile
+}
+
+# --- unit group -------------------------------------------------------------
+
+step_golden() {
     cargo test --locked -q --test golden
+}
 
-    echo "==> GC-vs-host edge-set equality (smoke tier)"
+step_gc_equality() {
     cargo test --locked -q --lib gc_edge_set
     cargo test --locked -q --test properties prop_fabric_gc_edge_set_equals_host
+}
 
-    echo "==> pipelined GC schedule never slower than the PR 3 barrier (smoke tier)"
+step_gc_schedule() {
     cargo test --locked -q --test properties prop_gc_pipelined_discovery_never_slower_than_serialized
     cargo test --locked -q --lib gc_pipelined_engine_never_slower_than_serialized
+}
 
-    echo "==> co-simulated GC reproduces the PR 4 replay exactly (smoke tier)"
+step_gc_cosim() {
     cargo test --locked -q --test properties prop_gc_cosim_inorder_replays_pr4_discovery_schedule
     cargo test --locked -q --lib gc_cosim_reproduces_pr4_replay_exactly
+}
 
-    echo "==> serve smoke: --build-site fabric (report must gate on serving health)"
-    smoke="$(cargo run --locked -q -- serve --events 20 --backend fpga --build-site fabric --workers 2 --pileup 30)"
-    echo "$smoke"
+quick_unit() {
+    group "golden-vector conformance suite" step_golden
+    group "GC-vs-host edge-set equality" step_gc_equality
+    group "pipelined GC schedule never slower than serialized" step_gc_schedule
+    group "co-simulated GC reproduces the PR 4 replay exactly" step_gc_cosim
+}
+
+# --- smoke group ------------------------------------------------------------
+
+step_serve_fabric() {
+    local smoke
+    smoke="$(cargo run --locked -q -- serve --events 20 --backend fpga --build-site fabric \
+        --workers 2 --pileup 30 | tee "$SMOKE_DIR/serve-fabric.log")"
     if ! grep -q 'graph_build\[fabric\]' <<<"$smoke"; then
         echo "FAIL: serve smoke did not build graphs on the fabric" >&2
         exit 1
@@ -100,11 +170,12 @@ quick_tier() {
         echo "FAIL: serve smoke did not report sustained device throughput" >&2
         exit 1
     fi
+}
 
-    echo "==> serve smoke: --event-pipelining (report must show the II-pipelined fabric)"
+step_serve_pipelined() {
+    local piped
     piped="$(cargo run --locked -q -- serve --events 20 --backend fpga --build-site fabric \
-        --event-pipelining --workers 2 --pileup 30)"
-    echo "$piped"
+        --event-pipelining --workers 2 --pileup 30 | tee "$SMOKE_DIR/serve-pipelined.log")"
     if ! grep -q 'ii\[event-pipelined\]' <<<"$piped"; then
         echo "FAIL: event-pipelining serve smoke did not report the II-pipelined fabric" >&2
         exit 1
@@ -113,11 +184,12 @@ quick_tier() {
         echo "FAIL: event-pipelining serve smoke dropped events" >&2
         exit 1
     fi
+}
 
-    echo "==> farm smoke: 2 shards, paced, admission accounting must close"
+step_farm_smoke() {
+    local farm
     farm="$(cargo run --locked -q -- farm --shards 2 --events 40 --paced \
-        --rate 2000 --service-us 500 --pileup 10)"
-    echo "$farm"
+        --rate 2000 --service-us 500 --pileup 10 | tee "$SMOKE_DIR/farm.log")"
     if ! grep -q 'shards=2' <<<"$farm"; then
         echo "FAIL: farm smoke did not run 2 shards" >&2
         exit 1
@@ -130,53 +202,158 @@ quick_tier() {
         echo "FAIL: farm smoke admission accounting does not close" >&2
         exit 1
     fi
+}
 
-    echo "==> trace smoke: simulate --trace emits valid, byte-deterministic Chrome-trace JSON"
-    tracedir="$(mktemp -d)"
-    trap 'rm -rf "$tracedir"' RETURN
+step_record_replay() {
+    local rec replay
+    rec="$(cargo run --locked -q -- record --out "$SMOKE_DIR/smoke.evtape" \
+        --events 24 --seed 5 --pileup 20 --rate 2000 | tee "$SMOKE_DIR/record.log")"
+    if ! grep -q 'record\[ok\]' <<<"$rec"; then
+        echo "FAIL: dgnnflow record did not complete" >&2
+        exit 1
+    fi
+    if ! grep -q 'bit-identical replay verified' <<<"$rec"; then
+        echo "FAIL: record smoke did not verify bit-identical replay" >&2
+        exit 1
+    fi
+    # the format is byte-deterministic: the same stream must record to
+    # the same bytes
+    cargo run --locked -q -- record --out "$SMOKE_DIR/smoke2.evtape" \
+        --events 24 --seed 5 --pileup 20 --rate 2000 >/dev/null
+    if ! cmp -s "$SMOKE_DIR/smoke.evtape" "$SMOKE_DIR/smoke2.evtape"; then
+        echo "FAIL: two identical record runs emitted different tape bytes" >&2
+        exit 1
+    fi
+    replay="$(cargo run --locked -q -- serve --backend rust-cpu --source tape \
+        --tape "$SMOKE_DIR/smoke.evtape" --workers 2 | tee "$SMOKE_DIR/replay.log")"
+    if ! grep -Eq 'events=24( |$)' <<<"$replay"; then
+        echo "FAIL: serve --source tape did not serve every recorded event" >&2
+        exit 1
+    fi
+    if ! grep -Eq 'dropped=0( |$)' <<<"$replay"; then
+        echo "FAIL: serve --source tape dropped events" >&2
+        exit 1
+    fi
+}
+
+step_trace_smoke() {
+    local trace1
     trace1="$(cargo run --locked -q -- simulate --events 3 --build-site fabric \
-        --trace "$tracedir/a.json")"
-    echo "$trace1"
+        --trace "$SMOKE_DIR/trace-a.json" | tee "$SMOKE_DIR/trace.log")"
     if ! grep -q 'trace\[ok\]' <<<"$trace1"; then
         echo "FAIL: simulate --trace did not validate its emitted trace" >&2
         exit 1
     fi
     cargo run --locked -q -- simulate --events 3 --build-site fabric \
-        --trace "$tracedir/b.json" >/dev/null
-    if ! cmp -s "$tracedir/a.json" "$tracedir/b.json"; then
+        --trace "$SMOKE_DIR/trace-b.json" >/dev/null
+    if ! cmp -s "$SMOKE_DIR/trace-a.json" "$SMOKE_DIR/trace-b.json"; then
         echo "FAIL: two identical simulate --trace runs emitted different bytes" >&2
         exit 1
     fi
+}
 
-    echo "==> metrics smoke: farm --metrics-out reconciles with the farm report"
+step_metrics_smoke() {
+    local metrics
     metrics="$(cargo run --locked -q -- farm --shards 2 --events 40 --pileup 10 \
-        --metrics-out "$tracedir/farm.prom")"
-    echo "$metrics"
+        --metrics-out "$SMOKE_DIR/metrics.prom" | tee "$SMOKE_DIR/metrics.log")"
     if ! grep -q 'metrics\[ok\]' <<<"$metrics"; then
         echo "FAIL: farm --metrics-out counters did not reconcile with the report" >&2
         exit 1
     fi
-    if ! grep -q '^farm_served_total' "$tracedir/farm.prom"; then
+    if ! grep -q '^farm_served_total' "$SMOKE_DIR/metrics.prom"; then
         echo "FAIL: metrics file is missing the farm_served_total series" >&2
         exit 1
     fi
 }
 
-bench_tier() {
-    echo "==> bench-regression gate: pinned-seed benches"
+quick_smokes() {
+    rm -rf "$SMOKE_DIR"
+    mkdir -p "$SMOKE_DIR"
+    group "serve smoke: --build-site fabric" step_serve_fabric
+    group "serve smoke: --event-pipelining" step_serve_pipelined
+    group "farm smoke: 2 shards, paced, accounting closes" step_farm_smoke
+    group "record→replay smoke: dgnnflow record + serve --source tape" step_record_replay
+    group "trace smoke: byte-deterministic Chrome-trace JSON" step_trace_smoke
+    group "metrics smoke: Prometheus counters reconcile" step_metrics_smoke
+}
+
+quick_tier() {
+    quick_static
+    quick_unit
+    quick_smokes
+}
+
+# --- fuzz tier --------------------------------------------------------------
+
+step_ingest_fuzz() {
+    DGNNFLOW_FUZZ_CASES="${DGNNFLOW_FUZZ_CASES:-512}" \
+        cargo test --locked -q --test ingest_fuzz
+}
+
+fuzz_tier() {
+    group "ingest fuzz: corruption must fail typed, never panic (cases=${DGNNFLOW_FUZZ_CASES:-512})" \
+        step_ingest_fuzz
+}
+
+# --- bench tier -------------------------------------------------------------
+
+step_bench_run() {
     cargo bench --locked --bench ablation_parallelism
     cargo bench --locked --bench graphbuild_overlap
     cargo bench --locked --bench farm_soak
     cargo bench --locked --bench stream_ii
+    cargo bench --locked --bench ingest_throughput
+}
 
-    echo "==> bench-check: exact cycle-count/edge-total compare vs rust/baselines"
-    cargo run --locked -q -- bench-check
+step_bench_gate() {
+    mkdir -p "$SMOKE_DIR"
+    cargo run --locked -q -- bench-check | tee "$SMOKE_DIR/bench-check.log"
+    # In CI the gate must have run enforcing (missing baseline = failure):
+    # if the binary resolved to bootstrap-on-missing mode the runner's env
+    # is lying to it, and every future drift would pass silently.
+    if [ -n "${CI:-}" ] && [ "${DGNNFLOW_BENCH_BOOTSTRAP:-}" != "1" ]; then
+        if ! grep -q 'mode=enforcing' "$SMOKE_DIR/bench-check.log"; then
+            echo "FAIL: \$CI is set but bench-check did not run in enforcing mode" >&2
+            exit 1
+        fi
+    fi
+}
+
+bench_tier() {
+    group "pinned-seed benches" step_bench_run
+    group "bench-check: exact compare vs rust/baselines" step_bench_gate
+}
+
+# --- dispatch ---------------------------------------------------------------
+
+step_release_build() {
+    cargo build --locked --release
+}
+
+step_full_tests() {
+    cargo test --locked -q
 }
 
 case "$tier" in
+    quick-static)
+        quick_static
+        echo "CI OK (quick static group)"
+        ;;
+    quick-unit)
+        quick_unit
+        echo "CI OK (quick unit group)"
+        ;;
+    quick-smokes)
+        quick_smokes
+        echo "CI OK (quick smoke group)"
+        ;;
     quick)
         quick_tier
         echo "CI OK (quick smoke tier)"
+        ;;
+    fuzz)
+        fuzz_tier
+        echo "CI OK (ingest fuzz tier)"
         ;;
     bench)
         bench_tier
@@ -185,11 +362,8 @@ case "$tier" in
     full)
         quick_tier
 
-        echo "==> cargo build --release"
-        cargo build --locked --release
-
-        echo "==> cargo test -q"
-        cargo test --locked -q
+        group "cargo build --release" step_release_build
+        group "cargo test -q" step_full_tests
 
         bench_tier
         echo "CI OK"

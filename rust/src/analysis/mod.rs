@@ -118,6 +118,7 @@ fn rule_scope(rule: RuleId) -> &'static [&'static str] {
             "src/dataflow/",
             "src/fixedpoint/",
             "src/graph/",
+            "src/ingest/",
             "src/model/",
             "src/obs/",
             "src/util/bench.rs",
@@ -128,7 +129,9 @@ fn rule_scope(rule: RuleId) -> &'static [&'static str] {
         ],
         RuleId::PanicFreeLibrary => &["src/"],
         RuleId::FloatTotalOrder => &["src/", "benches/"],
-        RuleId::LossyCast => &["src/dataflow/", "src/fixedpoint/", "src/graph/", "src/model/"],
+        RuleId::LossyCast => {
+            &["src/dataflow/", "src/fixedpoint/", "src/graph/", "src/ingest/", "src/model/"]
+        }
     }
 }
 
@@ -393,6 +396,13 @@ mod tests {
         assert!(!applies(RuleId::UnorderedIter, "src/farm/routing.rs"), "not a render module");
         assert!(applies(RuleId::LossyCast, "src/model/tensor.rs"));
         assert!(!applies(RuleId::LossyCast, "src/fixedpoint/cast.rs"), "helper home exempt");
+        // the ingest subsystem ships with zero blanket exemptions: bytes
+        // off disk go through checked narrowing, frames render sorted,
+        // and corrupt input fails typed — all four rules bind
+        assert!(applies(RuleId::LossyCast, "src/ingest/tape.rs"));
+        assert!(applies(RuleId::UnorderedIter, "src/ingest/frame.rs"));
+        assert!(applies(RuleId::PanicFreeLibrary, "src/ingest/source.rs"));
+        assert!(applies(RuleId::WallClock, "src/ingest/mod.rs"));
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! One `.evtape` frame: canonical JSON encoding and the lazy offset-tape
+//! scanner.
+//!
+//! A frame is the minified, sorted-key JSON object
+//! `{"id":N,"met":[x,y],"p":[[pt,eta,phi,dz,class,charge,tw],...],"t":T}`.
+//! [`encode_frame`] produces it (rejecting values the format cannot
+//! round-trip with [`IngestError::Unencodable`]); [`LazyFrame::scan`]
+//! walks the bytes once recording *where* each float token lives, so
+//! consumers convert only the fields they touch — no intermediate
+//! [`Value`](crate::util::json::Value) tree, no `String` keys, no
+//! allocation beyond the offset tape itself.
+
+use super::{IngestError, MAX_JSON_INT};
+use crate::physics::{Event, Particle, ParticleClass};
+use crate::pipeline::TimedEvent;
+use crate::util::json::{self, Value};
+
+/// Scan/decode failure within one frame. `offset` is the byte position
+/// inside the frame payload; the owning [`Tape`](super::Tape) wraps this
+/// into [`IngestError::BadFrame`] with the frame number attached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "frame scan error at offset {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+/// `ParticleClass` back to its wire index (the inverse of
+/// [`ParticleClass::from_index`], spelled as a match so the datapath stays
+/// free of narrowing casts).
+fn class_index(c: ParticleClass) -> usize {
+    use ParticleClass::*;
+    match c {
+        ChargedHadronPv => 0,
+        ChargedHadronPu => 1,
+        NeutralHadron => 2,
+        Photon => 3,
+        Electron => 4,
+        Muon => 5,
+        Tau => 6,
+        Other => 7,
+    }
+}
+
+/// An `f32` the shortest-decimal JSON representation can carry through a
+/// round-trip: finite and not negative zero (the writer collapses `-0.0`
+/// to `0`, which would silently break bit-identity on read-back).
+fn encodable_f32(x: f32, what: &str) -> Result<f64, IngestError> {
+    if !x.is_finite() {
+        return Err(IngestError::Unencodable { msg: format!("non-finite {what} ({x})") });
+    }
+    if x.to_bits() == (-0.0f32).to_bits() {
+        return Err(IngestError::Unencodable {
+            msg: format!("negative zero {what} (JSON writer collapses -0.0 to 0)"),
+        });
+    }
+    Ok(f64::from(x))
+}
+
+/// Same contract as [`encodable_f32`] for the one stored `f64` (`t`).
+fn encodable_f64(x: f64, what: &str) -> Result<f64, IngestError> {
+    if !x.is_finite() {
+        return Err(IngestError::Unencodable { msg: format!("non-finite {what} ({x})") });
+    }
+    if x.to_bits() == (-0.0f64).to_bits() {
+        return Err(IngestError::Unencodable {
+            msg: format!("negative zero {what} (JSON writer collapses -0.0 to 0)"),
+        });
+    }
+    Ok(x)
+}
+
+/// Encode one timed event as a canonical frame (minified JSON, sorted
+/// keys, shortest-round-trip floats). `px`/`py` are not stored — the
+/// format derives them from `pt`/`phi` on replay, so the writer insists
+/// they match the generator's `pt*cos(phi)` / `pt*sin(phi)` bit-exactly
+/// rather than record something replay could not reproduce.
+pub fn encode_frame(te: &TimedEvent) -> Result<String, IngestError> {
+    let ev = &te.event;
+    if ev.id > MAX_JSON_INT {
+        return Err(IngestError::Unencodable {
+            msg: format!("event id {} exceeds 2^53 (JSON integer precision)", ev.id),
+        });
+    }
+    let mut parts = Vec::with_capacity(ev.particles.len());
+    for (i, p) in ev.particles.iter().enumerate() {
+        if p.px.to_bits() != (p.pt * p.phi.cos()).to_bits()
+            || p.py.to_bits() != (p.pt * p.phi.sin()).to_bits()
+        {
+            return Err(IngestError::Unencodable {
+                msg: format!(
+                    "particle {i}: px/py are not pt*cos(phi)/pt*sin(phi) bit-exact \
+                     (the frame format derives them on replay)"
+                ),
+            });
+        }
+        if !matches!(p.charge, -1 | 0 | 1) {
+            return Err(IngestError::Unencodable {
+                msg: format!("particle {i}: charge {} outside {{-1,0,1}}", p.charge),
+            });
+        }
+        parts.push(Value::Arr(vec![
+            Value::Num(encodable_f32(p.pt, "pt")?),
+            Value::Num(encodable_f32(p.eta, "eta")?),
+            Value::Num(encodable_f32(p.phi, "phi")?),
+            Value::Num(encodable_f32(p.dz, "dz")?),
+            Value::from(class_index(p.class)),
+            Value::Num(f64::from(p.charge)),
+            Value::Num(encodable_f32(p.truth_weight, "truth_weight")?),
+        ]));
+    }
+    let frame = json::obj(vec![
+        ("id", Value::Num(ev.id as f64)),
+        (
+            "met",
+            Value::Arr(vec![
+                Value::Num(encodable_f32(ev.true_met_xy[0], "met[0]")?),
+                Value::Num(encodable_f32(ev.true_met_xy[1], "met[1]")?),
+            ]),
+        ),
+        ("p", Value::Arr(parts)),
+        ("t", Value::Num(encodable_f64(te.arrival_s, "t")?)),
+    ]);
+    Ok(frame.to_json())
+}
+
+// ---------------------------------------------------------------------------
+// Lazy scanning
+// ---------------------------------------------------------------------------
+
+/// Offset tape for one particle: where its five float tokens start, plus
+/// the two categorical fields, which are cheap enough to byte-match during
+/// the scan itself (`class` is a single digit, `charge` one of three
+/// two-byte-max tokens — no digit conversion happens).
+struct PartSpan {
+    /// Token start offsets: `[pt, eta, phi, dz, truth_weight]`.
+    f: [usize; 5],
+    class: u8,
+    charge: i8,
+}
+
+/// A scanned frame: validated token extents over borrowed bytes. Field
+/// conversion is deferred — [`hot`](LazyFrame::hot) touches only
+/// `pt/eta/phi`, [`materialise`](LazyFrame::materialise) builds the full
+/// event. Because [`scan`](LazyFrame::scan) validates every number token
+/// with the strict grammar walk (anything it accepts also parses as
+/// `f64`), conversion after a successful scan cannot fail.
+pub struct LazyFrame<'a> {
+    b: &'a [u8],
+    id: u64,
+    arrival_s: f64,
+    met_off: [usize; 2],
+    parts: Vec<PartSpan>,
+}
+
+/// Byte cursor over one frame payload; all methods fail typed, never
+/// panic, and never read past the slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn fail<T>(&self, msg: impl Into<String>) -> Result<T, FrameError> {
+        Err(FrameError { offset: self.i, msg: msg.into() })
+    }
+
+    fn ws(&mut self) {
+        self.i = json::skip_ws(self.b, self.i);
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    /// Consume an exact literal (after whitespace).
+    fn eat(&mut self, lit: &'static [u8]) -> Result<(), FrameError> {
+        self.ws();
+        let end = self.i.checked_add(lit.len());
+        if end.is_some() && self.b.get(self.i..self.i + lit.len()) == Some(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            self.fail(format!("expected '{}'", String::from_utf8_lossy(lit)))
+        }
+    }
+
+    /// Validate the number token here (no digit conversion) and return its
+    /// start offset.
+    fn num(&mut self) -> Result<usize, FrameError> {
+        self.ws();
+        let start = self.i;
+        match json::skip_number(self.b, self.i) {
+            Ok(end) => {
+                self.i = end;
+                Ok(start)
+            }
+            Err(e) => Err(FrameError { offset: start, msg: e.msg }),
+        }
+    }
+
+    /// Parse the number token here (for the two per-frame scalars `id`
+    /// and `t`, where eager conversion costs nothing measurable).
+    fn num_value(&mut self) -> Result<f64, FrameError> {
+        self.ws();
+        let start = self.i;
+        match json::scan_number(self.b, self.i) {
+            Ok((x, end)) => {
+                self.i = end;
+                Ok(x)
+            }
+            Err(e) => Err(FrameError { offset: start, msg: e.msg }),
+        }
+    }
+
+    /// The consumed token must end here: next byte is a separator, not
+    /// more number. Guards the byte-matched `class`/`charge` shortcuts
+    /// against half-matching a longer token like `0.5` or `12`.
+    fn boundary(&self) -> bool {
+        matches!(self.b.get(self.i), None | Some(b',' | b']' | b'}' | b' ' | b'\t' | b'\n' | b'\r'))
+    }
+
+    /// Particle class: a single digit `0..=7`, matched without parsing.
+    fn class(&mut self) -> Result<u8, FrameError> {
+        self.ws();
+        if let Some(c @ b'0'..=b'7') = self.b.get(self.i).copied() {
+            self.i += 1;
+            if self.boundary() {
+                return Ok(c - b'0');
+            }
+            self.i -= 1;
+        }
+        self.fail("expected particle class 0..=7")
+    }
+
+    /// Charge: exactly `-1`, `0`, or `1`, matched without parsing.
+    fn charge(&mut self) -> Result<i8, FrameError> {
+        self.ws();
+        let (value, width) = match (self.b.get(self.i).copied(), self.b.get(self.i + 1).copied()) {
+            (Some(b'-'), Some(b'1')) => (-1, 2),
+            (Some(b'0'), _) => (0, 1),
+            (Some(b'1'), _) => (1, 1),
+            _ => return self.fail("expected charge -1, 0, or 1"),
+        };
+        self.i += width;
+        if self.boundary() {
+            Ok(value)
+        } else {
+            self.i -= width;
+            self.fail("expected charge -1, 0, or 1")
+        }
+    }
+}
+
+impl<'a> LazyFrame<'a> {
+    /// Walk the frame bytes once, validating the canonical grammar and
+    /// recording float token offsets. Key order is fixed by the format
+    /// (`id`, `met`, `p`, `t` — the writer emits sorted keys), so the
+    /// scan is a straight-line pass, tolerant of whitespace only.
+    pub fn scan(b: &'a [u8]) -> Result<LazyFrame<'a>, FrameError> {
+        let mut c = Cursor { b, i: 0 };
+        c.eat(b"{")?;
+        c.eat(b"\"id\"")?;
+        c.eat(b":")?;
+        let id_raw = c.num_value()?;
+        if id_raw < 0.0 || id_raw.fract() != 0.0 || id_raw > MAX_JSON_INT as f64 {
+            return Err(FrameError {
+                offset: c.i,
+                msg: format!("id {id_raw} is not an integer in 0..=2^53"),
+            });
+        }
+        let id = id_raw as u64;
+        c.eat(b",")?;
+        c.eat(b"\"met\"")?;
+        c.eat(b":")?;
+        c.eat(b"[")?;
+        let m0 = c.num()?;
+        c.eat(b",")?;
+        let m1 = c.num()?;
+        c.eat(b"]")?;
+        c.eat(b",")?;
+        c.eat(b"\"p\"")?;
+        c.eat(b":")?;
+        c.eat(b"[")?;
+        let mut parts = Vec::new();
+        if c.peek() == Some(b']') {
+            c.i += 1;
+        } else {
+            loop {
+                c.eat(b"[")?;
+                let pt = c.num()?;
+                c.eat(b",")?;
+                let eta = c.num()?;
+                c.eat(b",")?;
+                let phi = c.num()?;
+                c.eat(b",")?;
+                let dz = c.num()?;
+                c.eat(b",")?;
+                let class = c.class()?;
+                c.eat(b",")?;
+                let charge = c.charge()?;
+                c.eat(b",")?;
+                let tw = c.num()?;
+                c.eat(b"]")?;
+                parts.push(PartSpan { f: [pt, eta, phi, dz, tw], class, charge });
+                match c.peek() {
+                    Some(b',') => c.i += 1,
+                    Some(b']') => {
+                        c.i += 1;
+                        break;
+                    }
+                    _ => return c.fail("expected ',' or ']' in particle list"),
+                }
+            }
+        }
+        c.eat(b",")?;
+        c.eat(b"\"t\"")?;
+        c.eat(b":")?;
+        let arrival_s = c.num_value()?;
+        c.eat(b"}")?;
+        c.ws();
+        if c.i != b.len() {
+            return c.fail("trailing bytes after frame object");
+        }
+        Ok(LazyFrame { b, id, arrival_s, met_off: [m0, m1], parts })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn arrival_s(&self) -> f64 {
+        self.arrival_s
+    }
+
+    pub fn n_particles(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Convert the number token at a scan-recorded offset. Infallible
+    /// after a successful scan (the strict grammar guarantees the parse);
+    /// kept fallible so a misuse still fails typed instead of panicking.
+    fn num_at(&self, off: usize) -> Result<f64, FrameError> {
+        match json::scan_number(self.b, off) {
+            Ok((x, _)) => Ok(x),
+            Err(e) => Err(FrameError { offset: off, msg: e.msg }),
+        }
+    }
+
+    /// The generator-truth MET vector.
+    pub fn met(&self) -> Result<[f32; 2], FrameError> {
+        Ok([self.num_at(self.met_off[0])? as f32, self.num_at(self.met_off[1])? as f32])
+    }
+
+    /// The hot fields, and nothing else: `[pt, eta, phi]` per particle —
+    /// all the serving lanes read. This is the lazy fast path the
+    /// ingest-throughput bench measures against eager deserialization.
+    pub fn hot(&self) -> Result<Vec<[f32; 3]>, FrameError> {
+        let mut out = Vec::with_capacity(self.parts.len());
+        for s in &self.parts {
+            out.push([
+                self.num_at(s.f[0])? as f32,
+                self.num_at(s.f[1])? as f32,
+                self.num_at(s.f[2])? as f32,
+            ]);
+        }
+        Ok(out)
+    }
+
+    /// Build the full [`TimedEvent`], recomputing `px`/`py` exactly as
+    /// the generator does (`pt*cos(phi)` / `pt*sin(phi)` in `f32`) so the
+    /// replayed event is bit-identical to the recorded one.
+    pub fn materialise(&self) -> Result<TimedEvent, FrameError> {
+        let mut particles = Vec::with_capacity(self.parts.len());
+        for s in &self.parts {
+            let pt = self.num_at(s.f[0])? as f32;
+            let eta = self.num_at(s.f[1])? as f32;
+            let phi = self.num_at(s.f[2])? as f32;
+            let dz = self.num_at(s.f[3])? as f32;
+            let truth_weight = self.num_at(s.f[4])? as f32;
+            particles.push(Particle {
+                pt,
+                eta,
+                phi,
+                px: pt * phi.cos(),
+                py: pt * phi.sin(),
+                dz,
+                class: ParticleClass::from_index(usize::from(s.class)),
+                charge: s.charge,
+                truth_weight,
+            });
+        }
+        let true_met_xy = self.met()?;
+        Ok(TimedEvent {
+            event: Event { id: self.id, particles, true_met_xy },
+            arrival_s: self.arrival_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::bit_identical;
+    use crate::physics::GeneratorConfig;
+    use crate::pipeline::{EventSource, SyntheticSource};
+
+    fn sample_events(n: usize, seed: u64) -> Vec<TimedEvent> {
+        let mut src =
+            SyntheticSource::new(n, seed, GeneratorConfig::default()).with_rate(1000.0);
+        let mut out = Vec::new();
+        while let Some(te) = src.next_event() {
+            out.push(te);
+        }
+        out
+    }
+
+    #[test]
+    fn encode_scan_materialise_roundtrips_bit_exact() {
+        for te in sample_events(8, 33) {
+            let s = encode_frame(&te).unwrap();
+            let lf = LazyFrame::scan(s.as_bytes()).unwrap();
+            assert_eq!(lf.id(), te.event.id);
+            assert_eq!(lf.n_particles(), te.event.n_particles());
+            assert_eq!(lf.arrival_s().to_bits(), te.arrival_s.to_bits());
+            let back = lf.materialise().unwrap();
+            assert!(bit_identical(&te, &back), "event {}", te.event.id);
+        }
+    }
+
+    #[test]
+    fn hot_fields_match_materialised_event() {
+        for te in sample_events(3, 7) {
+            let s = encode_frame(&te).unwrap();
+            let lf = LazyFrame::scan(s.as_bytes()).unwrap();
+            let hot = lf.hot().unwrap();
+            assert_eq!(hot.len(), te.event.particles.len());
+            for (h, p) in hot.iter().zip(&te.event.particles) {
+                assert_eq!(h[0].to_bits(), p.pt.to_bits());
+                assert_eq!(h[1].to_bits(), p.eta.to_bits());
+                assert_eq!(h[2].to_bits(), p.phi.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn frames_are_canonical_minified_sorted() {
+        let te = &sample_events(1, 9)[0];
+        let s = encode_frame(te).unwrap();
+        assert!(s.starts_with("{\"id\":"), "frame: {}", &s[..30.min(s.len())]);
+        assert!(!s.contains(' '), "minified frames contain no spaces");
+        let id_pos = s.find("\"id\"").unwrap();
+        let met_pos = s.find("\"met\"").unwrap();
+        let p_pos = s.find("\"p\"").unwrap();
+        let t_pos = s.rfind("\"t\"").unwrap();
+        assert!(id_pos < met_pos && met_pos < p_pos && p_pos < t_pos);
+    }
+
+    #[test]
+    fn empty_particle_list_roundtrips() {
+        let te = TimedEvent {
+            event: Event { id: 0, particles: Vec::new(), true_met_xy: [1.5, 2.5] },
+            arrival_s: 0.25,
+        };
+        let s = encode_frame(&te).unwrap();
+        let lf = LazyFrame::scan(s.as_bytes()).unwrap();
+        assert_eq!(lf.n_particles(), 0);
+        assert!(bit_identical(&te, &lf.materialise().unwrap()));
+    }
+
+    #[test]
+    fn encode_rejects_unencodable_values() {
+        let base = &sample_events(1, 11)[0];
+
+        let mut nan = base.clone();
+        nan.event.true_met_xy[0] = f32::NAN;
+        assert!(matches!(encode_frame(&nan), Err(IngestError::Unencodable { .. })));
+
+        let mut neg0 = base.clone();
+        if let Some(p) = neg0.event.particles.first_mut() {
+            p.dz = -0.0;
+        }
+        assert!(matches!(encode_frame(&neg0), Err(IngestError::Unencodable { .. })));
+
+        let mut big_id = base.clone();
+        big_id.event.id = (1u64 << 53) + 1;
+        assert!(matches!(encode_frame(&big_id), Err(IngestError::Unencodable { .. })));
+
+        let mut drifted = base.clone();
+        if let Some(p) = drifted.event.particles.first_mut() {
+            p.px += 1.0;
+        }
+        assert!(matches!(encode_frame(&drifted), Err(IngestError::Unencodable { .. })));
+
+        let mut charged = base.clone();
+        if let Some(p) = charged.event.particles.first_mut() {
+            p.charge = 3;
+        }
+        assert!(matches!(encode_frame(&charged), Err(IngestError::Unencodable { .. })));
+    }
+
+    #[test]
+    fn scan_rejects_malformed_frames() {
+        let te = &sample_events(1, 13)[0];
+        let good = encode_frame(te).unwrap();
+
+        // truncation at every prefix length fails typed, never panics
+        for cut in 0..good.len() {
+            assert!(LazyFrame::scan(&good.as_bytes()[..cut]).is_err(), "cut={cut}");
+        }
+
+        for bad in [
+            "",
+            "{}",
+            "{\"id\":1}",
+            "{\"met\":[0,0],\"id\":1,\"p\":[],\"t\":0}", // wrong key order
+            "{\"id\":-1,\"met\":[0,0],\"p\":[],\"t\":0}", // negative id
+            "{\"id\":1.5,\"met\":[0,0],\"p\":[],\"t\":0}", // fractional id
+            "{\"id\":1,\"met\":[0],\"p\":[],\"t\":0}",   // met arity
+            "{\"id\":1,\"met\":[0,0],\"p\":[[1,2,3]],\"t\":0}", // particle arity
+            "{\"id\":1,\"met\":[0,0],\"p\":[[1,2,3,4,9,0,0]],\"t\":0}", // class 9
+            "{\"id\":1,\"met\":[0,0],\"p\":[[1,2,3,4,0,2,0]],\"t\":0}", // charge 2
+            "{\"id\":1,\"met\":[0,0],\"p\":[[1,2,3,4,0,0.5,0]],\"t\":0}", // charge 0.5
+            "{\"id\":1,\"met\":[0,0],\"p\":[],\"t\":0}x", // trailing bytes
+        ] {
+            assert!(LazyFrame::scan(bad.as_bytes()).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn scan_tolerates_whitespace() {
+        let s = "{ \"id\" : 3 , \"met\" : [ 1.5 , 0.5 ] , \"p\" : [ [ 1 , 0.5 , 0 , 0 , 3 , 0 , 0 ] ] , \"t\" : 0.125 }";
+        let lf = LazyFrame::scan(s.as_bytes()).unwrap();
+        assert_eq!(lf.id(), 3);
+        assert_eq!(lf.n_particles(), 1);
+        let ev = lf.materialise().unwrap();
+        assert_eq!(ev.event.true_met_xy, [1.5, 0.5]);
+        assert_eq!(ev.event.particles[0].class, ParticleClass::Photon);
+    }
+}

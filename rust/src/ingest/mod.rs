@@ -1,0 +1,275 @@
+//! Zero-copy lazy event ingestion: the `.evtape` on-disk stream format.
+//!
+//! A `.evtape` file is a record-once / replay-many capture of an event
+//! stream. The design goals, in order: **bit-identical replay** of the
+//! stream that produced the tape, **lazy field access** (the serving lanes
+//! only ever read `pt/eta/phi` per particle plus the event id — replay
+//! must not pay for eager whole-document deserialization), and **typed
+//! failure** (no input, however corrupt, may panic this module or yield a
+//! silently-wrong event).
+//!
+//! # Format (`.evtape` version 1)
+//!
+//! All integers are little-endian. Layout, start to end of file:
+//!
+//! ```text
+//! offset 0      magic            8 bytes   b"EVTAPE01"
+//! offset 8      header_len       u32
+//! offset 12     header           header_len bytes of minified JSON
+//!               frame 0          u32 frame_len, then frame_len JSON bytes
+//!               ...              (n_frames length-prefixed frames)
+//!               frame n-1
+//! index_off     index            n_frames x u64: absolute byte offset of
+//!                                each frame's length prefix
+//!               n_frames         u64
+//!               index_off        u64
+//!               checksum         u64   FNV-1a 64 over bytes[0 .. len-16]
+//! len - 8       tail magic       8 bytes   b"EVTAPEIX"
+//! ```
+//!
+//! The final 32 bytes (`n_frames` through tail magic) form the fixed-size
+//! footer, so a reader seeks to `len - 32`, validates both magics and the
+//! checksum, and then has O(1) access to any frame through the index. The
+//! checksum covers every byte before itself (including `n_frames` and
+//! `index_off`); FNV-1a's per-byte xor-then-multiply-by-odd-prime step is
+//! a bijection on the running state, so any single corrupted byte is
+//! guaranteed to change the digest.
+//!
+//! The **header** is one minified JSON object with sorted keys:
+//! `{"events":N,"generator":{...},"rate_hz":R,"seed":S,"source":"...",
+//! "version":1}` where `generator` carries the five
+//! [`GeneratorConfig`](crate::physics::GeneratorConfig) fields (sorted:
+//! `ang_smear`, `hard_scatter_pt`, `mean_hard`, `mean_pileup`,
+//! `pt_smear`). `events` must equal the footer's `n_frames`.
+//!
+//! Each **frame** is one minified JSON object with sorted keys:
+//! `{"id":N,"met":[x,y],"p":[[pt,eta,phi,dz,class,charge,tw],...],"t":T}`
+//! — `t` is the arrival offset in seconds and each particle is a 7-element
+//! array (five floats, then `class` in `0..=7` and `charge` in
+//! `{-1,0,1}`). `px`/`py` are deliberately **not** stored: the generator
+//! derives them as `pt * cos(phi)` / `pt * sin(phi)` in `f32`, so replay
+//! recomputes them bit-identically and every frame stays ~22% smaller.
+//! Floats are written in Rust's shortest-round-trip decimal form, which
+//! recovers the exact `f32` bit pattern on read-back; the writer rejects
+//! (typed [`IngestError::Unencodable`], never silently) the few values
+//! that representation cannot carry through JSON: non-finite floats,
+//! negative zero, and ids above 2^53.
+//!
+//! # Format stability
+//!
+//! Version 1 is frozen: readers reject any other `version` with
+//! [`IngestError::BadVersion`] instead of guessing, and the committed
+//! golden fixture (`tests/fixtures/ingest/golden.evtape`) pins the exact
+//! bytes both directions (decode the fixture, re-encode the events) so
+//! accidental drift fails loudly in CI. Future revisions bump the byte in
+//! the head magic and the `version` field together.
+//!
+//! # Lazy scanning
+//!
+//! [`LazyFrame::scan`] walks a frame's bytes once, recording the byte
+//! offset of every float token (via [`crate::util::json::skip_number`],
+//! which validates the token's grammar without converting digits) and
+//! byte-matching the tiny `class`/`charge` integer tokens. No JSON
+//! [`Value`](crate::util::json::Value) tree and no `String` keys are ever
+//! allocated. [`LazyFrame::hot`] then converts only the three floats per
+//! particle the lanes need; [`LazyFrame::materialise`] builds the full
+//! [`TimedEvent`] for replay. Because the grammar walk is strict (every
+//! accepted token also parses as `f64`), a frame that scans cleanly
+//! cannot fail to materialise — [`Tape::from_bytes`] scans every frame up
+//! front, so replay after a successful open is infallible.
+
+mod frame;
+mod source;
+mod tape;
+
+pub use frame::{encode_frame, FrameError, LazyFrame};
+pub use source::TapeSource;
+pub use tape::{record, Tape, TapeHeader, TapeWriter};
+
+use crate::pipeline::TimedEvent;
+
+/// File magic at offset 0.
+pub const MAGIC: [u8; 8] = *b"EVTAPE01";
+/// Magic in the last 8 bytes of the file.
+pub const TAIL_MAGIC: [u8; 8] = *b"EVTAPEIX";
+/// The only format version this reader/writer speaks.
+pub const FORMAT_VERSION: u32 = 1;
+/// Fixed-size footer: n_frames, index_off, checksum, tail magic.
+pub const FOOTER_LEN: usize = 32;
+
+/// Largest integer exactly representable as an `f64` (ids and seeds ride
+/// through JSON numbers, so anything above this would silently round).
+pub const MAX_JSON_INT: u64 = 1 << 53;
+
+/// FNV-1a 64-bit digest. Used as the tape's whole-file checksum: the
+/// xor-then-multiply step is bijective on the state, so every single-byte
+/// corruption changes the digest.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Typed ingestion failure. Every malformed input maps to one of these —
+/// the module never panics on input bytes (`panic-free-library` applies).
+#[derive(Debug, Clone, PartialEq)]
+pub enum IngestError {
+    /// Filesystem error reading or writing a tape.
+    Io { path: String, msg: String },
+    /// The file ends before a structure that must be present.
+    Truncated { offset: usize, needed: usize },
+    /// Head or tail magic mismatch (`which` is `"head"` or `"tail"`).
+    BadMagic { which: &'static str },
+    /// The header's `version` field is not [`FORMAT_VERSION`].
+    BadVersion { found: u32 },
+    /// The header JSON is missing, malformed, or inconsistent.
+    BadHeader { msg: String },
+    /// The whole-file checksum does not match the stored digest.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// The trailing frame index disagrees with the frames themselves.
+    CorruptIndex { msg: String },
+    /// Frame `frame` failed to scan at byte `offset` within its payload.
+    BadFrame { frame: usize, offset: usize, msg: String },
+    /// The writer was handed a value the format cannot round-trip.
+    Unencodable { msg: String },
+    /// A frame index outside `0..len`.
+    OutOfRange { index: usize, len: usize },
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::Io { path, msg } => write!(f, "io error on '{path}': {msg}"),
+            IngestError::Truncated { offset, needed } => {
+                write!(f, "truncated tape: needed {needed} bytes at offset {offset}")
+            }
+            IngestError::BadMagic { which } => write!(f, "bad {which} magic (not an .evtape file?)"),
+            IngestError::BadVersion { found } => {
+                write!(f, "unsupported .evtape version {found} (reader speaks {FORMAT_VERSION})")
+            }
+            IngestError::BadHeader { msg } => write!(f, "bad tape header: {msg}"),
+            IngestError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            IngestError::CorruptIndex { msg } => write!(f, "corrupt frame index: {msg}"),
+            IngestError::BadFrame { frame, offset, msg } => {
+                write!(f, "bad frame {frame} at payload offset {offset}: {msg}")
+            }
+            IngestError::Unencodable { msg } => write!(f, "unencodable value: {msg}"),
+            IngestError::OutOfRange { index, len } => {
+                write!(f, "frame index {index} out of range (tape has {len} frames)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// True iff two timed events are equal down to the last float bit —
+/// arrival time, MET vector, and every particle field including the
+/// recomputed `px`/`py`. This is the replay contract `dgnnflow record`
+/// verifies and the regression tests pin.
+pub fn bit_identical(a: &TimedEvent, b: &TimedEvent) -> bool {
+    if a.event.id != b.event.id
+        || a.arrival_s.to_bits() != b.arrival_s.to_bits()
+        || a.event.true_met_xy[0].to_bits() != b.event.true_met_xy[0].to_bits()
+        || a.event.true_met_xy[1].to_bits() != b.event.true_met_xy[1].to_bits()
+        || a.event.particles.len() != b.event.particles.len()
+    {
+        return false;
+    }
+    a.event.particles.iter().zip(&b.event.particles).all(|(p, q)| {
+        p.pt.to_bits() == q.pt.to_bits()
+            && p.eta.to_bits() == q.eta.to_bits()
+            && p.phi.to_bits() == q.phi.to_bits()
+            && p.px.to_bits() == q.px.to_bits()
+            && p.py.to_bits() == q.py.to_bits()
+            && p.dz.to_bits() == q.dz.to_bits()
+            && p.class == q.class
+            && p.charge == q.charge
+            && p.truth_weight.to_bits() == q.truth_weight.to_bits()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::{GeneratorConfig, Particle, ParticleClass};
+    use crate::pipeline::{EventSource, SyntheticSource};
+
+    #[test]
+    fn checksum_detects_every_single_byte_flip() {
+        let base = b"EVTAPE01 some representative tape bytes \x00\x01\xfe\xff".to_vec();
+        let clean = checksum(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.clone();
+                flipped[i] ^= 1 << bit;
+                assert_ne!(checksum(&flipped), clean, "flip at byte {i} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_known_vector() {
+        // FNV-1a 64 reference vectors
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(checksum(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn errors_display_and_compare() {
+        let e = IngestError::BadVersion { found: 9 };
+        assert!(e.to_string().contains("version 9"));
+        assert_eq!(e, IngestError::BadVersion { found: 9 });
+        assert_ne!(e, IngestError::BadMagic { which: "head" });
+        let dynamic: Box<dyn std::error::Error> = Box::new(e);
+        assert!(dynamic.to_string().contains("unsupported"));
+    }
+
+    #[test]
+    fn bit_identical_requires_exact_bits() {
+        let mut src = SyntheticSource::new(2, 5, GeneratorConfig::default());
+        let a = src.next_event().expect("event");
+        assert!(bit_identical(&a, &a.clone()));
+        let b = src.next_event().expect("event");
+        assert!(!bit_identical(&a, &b));
+
+        let mut c = a.clone();
+        c.arrival_s = f64::from_bits(a.arrival_s.to_bits() ^ 1);
+        assert!(!bit_identical(&a, &c));
+
+        let mut d = a.clone();
+        if let Some(p) = d.event.particles.first_mut() {
+            p.px = f32::from_bits(p.px.to_bits() ^ 1);
+        }
+        assert!(!bit_identical(&a, &d));
+    }
+
+    #[test]
+    fn bit_identical_distinguishes_class_and_charge() {
+        let p = Particle {
+            pt: 1.0,
+            eta: 0.0,
+            phi: 0.0,
+            px: 1.0,
+            py: 0.0,
+            dz: 0.0,
+            class: ParticleClass::Photon,
+            charge: 0,
+            truth_weight: 0.0,
+        };
+        let ev = crate::physics::Event { id: 1, particles: vec![p], true_met_xy: [0.0, 0.0] };
+        let a = TimedEvent { event: ev.clone(), arrival_s: 0.0 };
+        let mut b = TimedEvent { event: ev, arrival_s: 0.0 };
+        if let Some(q) = b.event.particles.first_mut() {
+            q.class = ParticleClass::Muon;
+            q.charge = -1;
+        }
+        assert!(!bit_identical(&a, &b));
+    }
+}

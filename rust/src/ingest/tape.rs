@@ -1,0 +1,614 @@
+//! `.evtape` container: writer, validating reader, and the `record`
+//! capture loop.
+//!
+//! The writer buffers encoded frames and assembles the whole file in
+//! [`TapeWriter::finish`] (the header carries the final event count, which
+//! is unknown until the stream ends). The reader validates *everything*
+//! up front in [`Tape::from_bytes`] — magics, checksum, footer arithmetic,
+//! header consistency, a full frame walk cross-checked against the index,
+//! and a grammar scan of every frame — so replay after a successful open
+//! cannot fail. See the [module docs](super) for the byte layout.
+
+use super::frame::{encode_frame, LazyFrame};
+use super::{checksum, IngestError, FOOTER_LEN, FORMAT_VERSION, MAGIC, MAX_JSON_INT, TAIL_MAGIC};
+use crate::fixedpoint::cast;
+use crate::physics::GeneratorConfig;
+use crate::pipeline::{EventSource, TimedEvent};
+use crate::util::json::{self, Value};
+
+/// Little-endian `u64` at `off`, or `None` if out of bounds.
+fn u64_at(b: &[u8], off: usize) -> Option<u64> {
+    let end = off.checked_add(8)?;
+    let a: [u8; 8] = b.get(off..end)?.try_into().ok()?;
+    Some(u64::from_le_bytes(a))
+}
+
+/// Little-endian `u32` at `off`, or `None` if out of bounds.
+fn u32_at(b: &[u8], off: usize) -> Option<u32> {
+    let end = off.checked_add(4)?;
+    let a: [u8; 4] = b.get(off..end)?.try_into().ok()?;
+    Some(u32::from_le_bytes(a))
+}
+
+// ---------------------------------------------------------------------------
+// Header
+// ---------------------------------------------------------------------------
+
+/// The tape's self-description: format version, the seed/rate/generator
+/// config that produced the stream (enough to rebuild the originating
+/// source and verify bit-identity), and the event count.
+#[derive(Clone, Debug)]
+pub struct TapeHeader {
+    pub version: u32,
+    pub seed: u64,
+    pub events: usize,
+    pub rate_hz: f64,
+    /// Name of the source that was recorded (e.g. `"synthetic"`).
+    pub source: String,
+    pub generator: GeneratorConfig,
+}
+
+impl TapeHeader {
+    /// Minified sorted-key JSON (canonical header bytes).
+    pub fn to_json(&self) -> String {
+        json::obj(vec![
+            ("events", Value::from(self.events)),
+            (
+                "generator",
+                json::obj(vec![
+                    ("ang_smear", Value::Num(self.generator.ang_smear)),
+                    ("hard_scatter_pt", Value::Num(self.generator.hard_scatter_pt)),
+                    ("mean_hard", Value::Num(self.generator.mean_hard)),
+                    ("mean_pileup", Value::Num(self.generator.mean_pileup)),
+                    ("pt_smear", Value::Num(self.generator.pt_smear)),
+                ]),
+            ),
+            ("rate_hz", Value::Num(self.rate_hz)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("source", Value::from(self.source.as_str())),
+            ("version", Value::Num(f64::from(self.version))),
+        ])
+        .to_json()
+    }
+
+    pub fn from_json(v: &Value) -> Result<TapeHeader, IngestError> {
+        fn f64_field(v: &Value, key: &str) -> Result<f64, IngestError> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .map_err(|e| IngestError::BadHeader { msg: format!("{key}: {e}") })
+        }
+        let seed_raw = f64_field(v, "seed")?;
+        if seed_raw < 0.0 || seed_raw.fract() != 0.0 || seed_raw > MAX_JSON_INT as f64 {
+            return Err(IngestError::BadHeader {
+                msg: format!("seed {seed_raw} is not an integer in 0..=2^53"),
+            });
+        }
+        let version_raw = v
+            .get("version")
+            .and_then(|x| x.as_usize())
+            .map_err(|e| IngestError::BadHeader { msg: format!("version: {e}") })?;
+        let events = v
+            .get("events")
+            .and_then(|x| x.as_usize())
+            .map_err(|e| IngestError::BadHeader { msg: format!("events: {e}") })?;
+        let source = v
+            .get("source")
+            .and_then(|x| x.as_str())
+            .map_err(|e| IngestError::BadHeader { msg: format!("source: {e}") })?
+            .to_string();
+        let gen = v
+            .get("generator")
+            .map_err(|e| IngestError::BadHeader { msg: format!("generator: {e}") })?;
+        let generator = GeneratorConfig {
+            mean_pileup: f64_field(gen, "mean_pileup")?,
+            hard_scatter_pt: f64_field(gen, "hard_scatter_pt")?,
+            mean_hard: f64_field(gen, "mean_hard")?,
+            pt_smear: f64_field(gen, "pt_smear")?,
+            ang_smear: f64_field(gen, "ang_smear")?,
+        };
+        Ok(TapeHeader {
+            // out-of-u32-range versions still surface as BadVersion (with
+            // a saturated value) rather than a second error shape
+            version: u32::try_from(version_raw).unwrap_or(u32::MAX),
+            seed: seed_raw as u64,
+            events,
+            rate_hz: f64_field(v, "rate_hz")?,
+            source,
+            generator,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Streaming tape writer: append events, then [`finish`](Self::finish)
+/// into the final byte image (frame section, index, checksummed footer).
+pub struct TapeWriter {
+    seed: u64,
+    rate_hz: f64,
+    source: String,
+    generator: GeneratorConfig,
+    frames: Vec<String>,
+}
+
+impl TapeWriter {
+    pub fn new(
+        seed: u64,
+        rate_hz: f64,
+        source: &str,
+        generator: GeneratorConfig,
+    ) -> Result<TapeWriter, IngestError> {
+        if seed > MAX_JSON_INT {
+            return Err(IngestError::Unencodable {
+                msg: format!("seed {seed} exceeds 2^53 (JSON integer precision)"),
+            });
+        }
+        for (name, x) in [
+            ("rate_hz", rate_hz),
+            ("mean_pileup", generator.mean_pileup),
+            ("hard_scatter_pt", generator.hard_scatter_pt),
+            ("mean_hard", generator.mean_hard),
+            ("pt_smear", generator.pt_smear),
+            ("ang_smear", generator.ang_smear),
+        ] {
+            if !x.is_finite() {
+                return Err(IngestError::Unencodable {
+                    msg: format!("non-finite header field {name} ({x})"),
+                });
+            }
+        }
+        Ok(TapeWriter {
+            seed,
+            rate_hz,
+            source: source.to_string(),
+            generator,
+            frames: Vec::new(),
+        })
+    }
+
+    /// Encode and buffer one event.
+    pub fn append(&mut self, te: &TimedEvent) -> Result<(), IngestError> {
+        self.frames.push(encode_frame(te)?);
+        Ok(())
+    }
+
+    pub fn n_frames(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Assemble the complete `.evtape` byte image.
+    pub fn finish(self) -> Result<Vec<u8>, IngestError> {
+        let header = TapeHeader {
+            version: FORMAT_VERSION,
+            seed: self.seed,
+            events: self.frames.len(),
+            rate_hz: self.rate_hz,
+            source: self.source,
+            generator: self.generator,
+        };
+        let hjson = header.to_json();
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        let hlen = cast::try_idx32(hjson.len()).map_err(|_| IngestError::Unencodable {
+            msg: format!("header of {} bytes exceeds the u32 length prefix", hjson.len()),
+        })?;
+        out.extend_from_slice(&hlen.to_le_bytes());
+        out.extend_from_slice(hjson.as_bytes());
+        let mut index: Vec<u64> = Vec::with_capacity(self.frames.len());
+        for f in &self.frames {
+            index.push(out.len() as u64);
+            let flen = cast::try_idx32(f.len()).map_err(|_| IngestError::Unencodable {
+                msg: format!("frame of {} bytes exceeds the u32 length prefix", f.len()),
+            })?;
+            out.extend_from_slice(&flen.to_le_bytes());
+            out.extend_from_slice(f.as_bytes());
+        }
+        let index_off = out.len() as u64;
+        for off in &index {
+            out.extend_from_slice(&off.to_le_bytes());
+        }
+        out.extend_from_slice(&(index.len() as u64).to_le_bytes());
+        out.extend_from_slice(&index_off.to_le_bytes());
+        // the digest covers every byte before itself, n_frames and
+        // index_off included
+        let digest = checksum(&out);
+        out.extend_from_slice(&digest.to_le_bytes());
+        out.extend_from_slice(&TAIL_MAGIC);
+        Ok(out)
+    }
+}
+
+/// Drain an event source into a tape image. `seed`/`rate_hz`/`generator`
+/// are recorded in the header so replay can rebuild (and verify against)
+/// the originating source.
+pub fn record<S: EventSource + ?Sized>(
+    source: &mut S,
+    seed: u64,
+    rate_hz: f64,
+    generator: GeneratorConfig,
+) -> Result<Vec<u8>, IngestError> {
+    let mut w = TapeWriter::new(seed, rate_hz, source.name(), generator)?;
+    while let Some(te) = source.next_event() {
+        w.append(&te)?;
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// A fully validated, in-memory tape. Construction checks everything
+/// (see [`Tape::from_bytes`]); afterwards every frame is O(1) to reach
+/// through the index and guaranteed to scan and materialise.
+pub struct Tape {
+    bytes: Vec<u8>,
+    header: TapeHeader,
+    /// Per frame: (payload start, payload length) into `bytes`.
+    frames: Vec<(usize, usize)>,
+}
+
+impl Tape {
+    /// Read and validate a tape file.
+    pub fn open<P: AsRef<std::path::Path>>(path: P) -> Result<Tape, IngestError> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).map_err(|e| IngestError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        Tape::from_bytes(bytes)
+    }
+
+    /// Validate a tape byte image end to end: magics, whole-file
+    /// checksum, footer arithmetic, header parse + consistency, a frame
+    /// walk cross-checked against every index entry (the index is fully
+    /// redundant with the frame chain, so any disagreement is
+    /// [`IngestError::CorruptIndex`]), and a grammar scan of every frame.
+    /// No input bytes can panic this function, and nothing that passes it
+    /// can fail to replay.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Tape, IngestError> {
+        let b = &bytes[..];
+        let len = b.len();
+        if len < MAGIC.len() {
+            return Err(IngestError::Truncated { offset: len, needed: MAGIC.len() - len });
+        }
+        if b.get(..MAGIC.len()) != Some(&MAGIC[..]) {
+            return Err(IngestError::BadMagic { which: "head" });
+        }
+        let min_len = MAGIC.len() + 4 + FOOTER_LEN;
+        if len < min_len {
+            return Err(IngestError::Truncated { offset: len, needed: min_len - len });
+        }
+        if b.get(len - TAIL_MAGIC.len()..) != Some(&TAIL_MAGIC[..]) {
+            return Err(IngestError::BadMagic { which: "tail" });
+        }
+        let stored = u64_at(b, len - 16)
+            .ok_or(IngestError::Truncated { offset: len - 16, needed: 8 })?;
+        let computed = checksum(&b[..len - 16]);
+        if stored != computed {
+            return Err(IngestError::ChecksumMismatch { stored, computed });
+        }
+        let n_frames_raw = u64_at(b, len - 32)
+            .ok_or(IngestError::Truncated { offset: len - 32, needed: 8 })?;
+        let index_off_raw = u64_at(b, len - 24)
+            .ok_or(IngestError::Truncated { offset: len - 24, needed: 8 })?;
+        let n = usize::try_from(n_frames_raw).map_err(|_| IngestError::CorruptIndex {
+            msg: format!("frame count {n_frames_raw} does not fit in usize"),
+        })?;
+        let index_off = usize::try_from(index_off_raw).map_err(|_| IngestError::CorruptIndex {
+            msg: format!("index offset {index_off_raw} does not fit in usize"),
+        })?;
+        let expected_len = n
+            .checked_mul(8)
+            .and_then(|ib| ib.checked_add(index_off))
+            .and_then(|x| x.checked_add(FOOTER_LEN))
+            .ok_or_else(|| IngestError::CorruptIndex {
+                msg: format!("footer arithmetic overflows ({n} frames, index at {index_off})"),
+            })?;
+        if expected_len != len {
+            return Err(IngestError::CorruptIndex {
+                msg: format!(
+                    "footer claims {n} frames with index at {index_off}, but the file is {len} bytes"
+                ),
+            });
+        }
+        let hlen = u32_at(b, MAGIC.len())
+            .ok_or_else(|| IngestError::Truncated { offset: MAGIC.len(), needed: 4 })?
+            as usize;
+        let header_start = MAGIC.len() + 4;
+        let header_end = header_start.checked_add(hlen).ok_or_else(|| {
+            IngestError::BadHeader { msg: "header length overflows".to_string() }
+        })?;
+        if header_end > index_off {
+            return Err(IngestError::BadHeader {
+                msg: format!(
+                    "header of {hlen} bytes runs past the frame index at {index_off}"
+                ),
+            });
+        }
+        let hjson = std::str::from_utf8(&b[header_start..header_end])
+            .map_err(|_| IngestError::BadHeader { msg: "header is not UTF-8".to_string() })?;
+        let hval = json::parse(hjson)
+            .map_err(|e| IngestError::BadHeader { msg: e.to_string() })?;
+        let header = TapeHeader::from_json(&hval)?;
+        if header.version != FORMAT_VERSION {
+            return Err(IngestError::BadVersion { found: header.version });
+        }
+        if header.events != n {
+            return Err(IngestError::BadHeader {
+                msg: format!("header says {} events, footer says {n}", header.events),
+            });
+        }
+        let mut frames = Vec::with_capacity(n);
+        let mut off = header_end;
+        for i in 0..n {
+            let indexed = u64_at(b, index_off + i * 8).ok_or_else(|| {
+                IngestError::CorruptIndex { msg: format!("index entry {i} out of bounds") }
+            })?;
+            if indexed != off as u64 {
+                return Err(IngestError::CorruptIndex {
+                    msg: format!(
+                        "index entry {i} points at {indexed}, frame chain walks to {off}"
+                    ),
+                });
+            }
+            if off.checked_add(4).map_or(true, |e| e > index_off) {
+                return Err(IngestError::CorruptIndex {
+                    msg: format!("frame {i} length prefix runs past the index"),
+                });
+            }
+            let flen = u32_at(b, off)
+                .ok_or(IngestError::Truncated { offset: off, needed: 4 })?
+                as usize;
+            let start = off + 4;
+            let end = start.checked_add(flen).ok_or_else(|| IngestError::CorruptIndex {
+                msg: format!("frame {i} length overflows"),
+            })?;
+            if end > index_off {
+                return Err(IngestError::Truncated { offset: start, needed: flen });
+            }
+            frames.push((start, flen));
+            off = end;
+        }
+        if off != index_off {
+            return Err(IngestError::CorruptIndex {
+                msg: format!("{} unaccounted bytes between frames and index", index_off - off),
+            });
+        }
+        // scan every frame now, so replay after open is infallible
+        for (i, &(start, flen)) in frames.iter().enumerate() {
+            LazyFrame::scan(&b[start..start + flen]).map_err(|e| IngestError::BadFrame {
+                frame: i,
+                offset: e.offset,
+                msg: e.msg,
+            })?;
+        }
+        Ok(Tape { bytes, header, frames })
+    }
+
+    pub fn header(&self) -> &TapeHeader {
+        &self.header
+    }
+
+    /// Number of frames (events) on the tape.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Size of the whole tape image in bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Raw JSON payload of frame `i` (O(1) through the index).
+    pub fn frame_bytes(&self, i: usize) -> Result<&[u8], IngestError> {
+        let &(start, flen) = self
+            .frames
+            .get(i)
+            .ok_or_else(|| IngestError::OutOfRange { index: i, len: self.frames.len() })?;
+        self.bytes.get(start..start + flen).ok_or_else(|| IngestError::CorruptIndex {
+            msg: "frame span outside tape bytes".to_string(),
+        })
+    }
+
+    /// Lazy-scan frame `i` into an offset tape.
+    pub fn scan(&self, i: usize) -> Result<LazyFrame<'_>, IngestError> {
+        LazyFrame::scan(self.frame_bytes(i)?).map_err(|e| IngestError::BadFrame {
+            frame: i,
+            offset: e.offset,
+            msg: e.msg,
+        })
+    }
+
+    /// Materialise frame `i` into a full event.
+    pub fn event(&self, i: usize) -> Result<TimedEvent, IngestError> {
+        self.scan(i)?.materialise().map_err(|e| IngestError::BadFrame {
+            frame: i,
+            offset: e.offset,
+            msg: e.msg,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::bit_identical;
+    use crate::pipeline::SyntheticSource;
+
+    fn tape_bytes(events: usize, seed: u64, rate_hz: f64) -> Vec<u8> {
+        let cfg = GeneratorConfig { mean_pileup: 8.0, ..Default::default() };
+        let mut src = SyntheticSource::new(events, seed, cfg.clone()).with_rate(rate_hz);
+        record(&mut src, seed, rate_hz, cfg).unwrap()
+    }
+
+    /// Recompute and overwrite the footer digest (adversarial edits that
+    /// must defeat the checksum to reach the deeper validators).
+    fn rechecksum(bytes: &mut [u8]) {
+        let len = bytes.len();
+        let digest = checksum(&bytes[..len - 16]);
+        bytes[len - 16..len - 8].copy_from_slice(&digest.to_le_bytes());
+    }
+
+    #[test]
+    fn record_replay_roundtrip_is_bit_identical() {
+        let cfg = GeneratorConfig::default();
+        let seed = 42;
+        let mut src = SyntheticSource::new(10, seed, cfg.clone()).with_rate(2000.0);
+        let bytes = record(&mut src, seed, 2000.0, cfg.clone()).unwrap();
+        let tape = Tape::from_bytes(bytes).unwrap();
+        assert_eq!(tape.len(), 10);
+        assert!(!tape.is_empty());
+
+        let h = tape.header();
+        assert_eq!(h.version, FORMAT_VERSION);
+        assert_eq!(h.seed, seed);
+        assert_eq!(h.events, 10);
+        assert_eq!(h.rate_hz, 2000.0);
+        assert_eq!(h.source, "synthetic");
+        // GeneratorConfig has no PartialEq: compare the fields
+        assert_eq!(h.generator.mean_pileup, cfg.mean_pileup);
+        assert_eq!(h.generator.hard_scatter_pt, cfg.hard_scatter_pt);
+        assert_eq!(h.generator.mean_hard, cfg.mean_hard);
+        assert_eq!(h.generator.pt_smear, cfg.pt_smear);
+        assert_eq!(h.generator.ang_smear, cfg.ang_smear);
+
+        let mut reference = SyntheticSource::new(10, seed, cfg).with_rate(2000.0);
+        for i in 0..tape.len() {
+            let replayed = tape.event(i).unwrap();
+            let original = reference.next_event().unwrap();
+            assert!(bit_identical(&replayed, &original), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn empty_tape_roundtrips() {
+        let bytes = tape_bytes(0, 7, 0.0);
+        let tape = Tape::from_bytes(bytes).unwrap();
+        assert_eq!(tape.len(), 0);
+        assert!(tape.is_empty());
+        assert!(matches!(
+            tape.event(0),
+            Err(IngestError::OutOfRange { index: 0, len: 0 })
+        ));
+    }
+
+    #[test]
+    fn header_json_roundtrips() {
+        let h = TapeHeader {
+            version: FORMAT_VERSION,
+            seed: 99,
+            events: 3,
+            rate_hz: 1500.0,
+            source: "synthetic".to_string(),
+            generator: GeneratorConfig::default(),
+        };
+        let v = json::parse(&h.to_json()).unwrap();
+        let back = TapeHeader::from_json(&v).unwrap();
+        assert_eq!(back.version, h.version);
+        assert_eq!(back.seed, h.seed);
+        assert_eq!(back.events, h.events);
+        assert_eq!(back.rate_hz, h.rate_hz);
+        assert_eq!(back.source, h.source);
+        assert_eq!(back.generator.mean_pileup, h.generator.mean_pileup);
+        assert_eq!(back.generator.ang_smear, h.generator.ang_smear);
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_caught() {
+        let clean = tape_bytes(2, 3, 1000.0);
+        // flipping any one byte anywhere must yield a typed error: the
+        // checksum catches content bytes, the magic/digest checks catch
+        // the footer itself
+        for i in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[i] ^= 0x20;
+            assert!(Tape::from_bytes(bad).is_err(), "byte {i}");
+        }
+    }
+
+    #[test]
+    fn truncation_is_caught_at_every_length() {
+        let clean = tape_bytes(2, 5, 1000.0);
+        for cut in 0..clean.len() {
+            let bad = clean[..cut].to_vec();
+            assert!(Tape::from_bytes(bad).is_err(), "cut={cut}");
+        }
+    }
+
+    fn find_bytes(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+        haystack.windows(needle.len()).position(|w| w == needle)
+    }
+
+    #[test]
+    fn version_lie_yields_bad_version() {
+        let clean = tape_bytes(1, 2, 0.0);
+        let pos = find_bytes(&clean, b"\"version\":1").unwrap();
+        let mut bad = clean.clone();
+        bad[pos + "\"version\":".len()] = b'2';
+        rechecksum(&mut bad);
+        assert!(matches!(
+            Tape::from_bytes(bad),
+            Err(IngestError::BadVersion { found: 2 })
+        ));
+    }
+
+    #[test]
+    fn index_corruption_yields_corrupt_index() {
+        let clean = tape_bytes(3, 11, 1000.0);
+        let len = clean.len();
+        // index entry 1 sits at index_off + 8; index_off is at len-24
+        let index_off =
+            usize::try_from(u64_at(&clean, len - 24).unwrap()).unwrap();
+        let mut bad = clean.clone();
+        let entry = u64_at(&bad, index_off + 8).unwrap();
+        bad[index_off + 8..index_off + 16].copy_from_slice(&(entry + 1).to_le_bytes());
+        rechecksum(&mut bad);
+        assert!(matches!(
+            Tape::from_bytes(bad),
+            Err(IngestError::CorruptIndex { .. })
+        ));
+    }
+
+    #[test]
+    fn frame_length_lie_yields_typed_error() {
+        let clean = tape_bytes(2, 13, 1000.0);
+        // first frame's length prefix lives right after the header
+        let hlen = usize::try_from(u32_at(&clean, 8).unwrap()).unwrap();
+        let first = 12 + hlen;
+        let real = u32_at(&clean, first).unwrap();
+        let mut bad = clean.clone();
+        bad[first..first + 4].copy_from_slice(&(real + 3).to_le_bytes());
+        rechecksum(&mut bad);
+        // a lying prefix desynchronises the chain from the index (or runs
+        // past it) — either way a typed error, never a wrong event
+        assert!(Tape::from_bytes(bad).is_err());
+    }
+
+    #[test]
+    fn writer_rejects_oversized_seed() {
+        assert!(matches!(
+            TapeWriter::new((1 << 53) + 1, 0.0, "synthetic", GeneratorConfig::default()),
+            Err(IngestError::Unencodable { .. })
+        ));
+    }
+
+    #[test]
+    fn bytes_between_frames_and_index_are_caught() {
+        // shrink the first frame's length prefix so the chain stops short
+        let clean = tape_bytes(1, 17, 0.0);
+        let hlen = usize::try_from(u32_at(&clean, 8).unwrap()).unwrap();
+        let first = 12 + hlen;
+        let real = u32_at(&clean, first).unwrap();
+        let mut bad = clean.clone();
+        bad[first..first + 4].copy_from_slice(&(real - 1).to_le_bytes());
+        rechecksum(&mut bad);
+        assert!(Tape::from_bytes(bad).is_err());
+    }
+}

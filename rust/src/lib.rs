@@ -70,6 +70,14 @@
 //!   dynamic ΔR graph construction (paper Eq. 1).
 //! - [`devices`] — analytic GPU/CPU latency models for paper-shape
 //!   comparisons.
+//! - [`ingest`] — the record-once/replay-many dataset workflow: the
+//!   `.evtape` on-disk stream format (length-prefixed frames, O(1) seek
+//!   index, whole-file checksum) with a zero-copy lazy frame scanner
+//!   (offset tape over the raw bytes — only the fields a consumer touches
+//!   are ever converted), typed [`ingest::IngestError`] for every corrupt
+//!   input, and [`ingest::TapeSource`] replaying a recorded stream into
+//!   the pipeline/farm bit-identically (CLI `dgnnflow record`,
+//!   `--source tape --tape f.evtape`, bench `benches/ingest_throughput.rs`).
 //! - [`fixedpoint`] — the pluggable datapath arithmetic
 //!   ([`fixedpoint::Arith`]): f32 reference vs ap_fixed<W, I> with
 //!   saturation + round-to-nearest, threaded through the model, the timed
@@ -122,13 +130,18 @@
 //! (`.github/workflows/ci.yml`) and locally: `--quick` for the smoke tier
 //! (`dgnnflow lint` ahead of everything else, fmt, clippy `-D warnings`,
 //! golden suite, GC schedule/co-sim pins, a
-//! fabric serve smoke, a 2-shard farm smoke, a `simulate --trace` smoke
+//! fabric serve smoke, a 2-shard farm smoke, a record→replay smoke
+//! (`dgnnflow record` then `serve --source tape`, bit-identity verified),
+//! a `simulate --trace` smoke
 //! checking the emitted Chrome-trace JSON validates and is
 //! byte-deterministic, and a `farm --metrics-out` smoke checking the
 //! Prometheus counters reconcile with the report), `--bench-check` for the
 //! bench-regression gate
 //! (pinned-seed benches exact-compared against `baselines/*.json`; see
-//! `baselines/README.md` for the `DGNNFLOW_BENCH_REBASE=1` flow), and no
+//! `baselines/README.md` for the `DGNNFLOW_BENCH_REBASE=1` flow),
+//! `--fuzz` for the ingestion adversarial tier (randomised truncation,
+//! byte flips, frame-length lies, and index corruption over valid tapes
+//! must all fail typed — scheduled nightly and on demand in CI), and no
 //! argument for everything including a release build and the full test
 //! suite. All cargo invocations are `--locked` and offline (the single
 //! dependency is vendored).
@@ -140,6 +153,7 @@ pub mod devices;
 pub mod farm;
 pub mod fixedpoint;
 pub mod graph;
+pub mod ingest;
 pub mod model;
 pub mod obs;
 pub mod physics;

@@ -4,6 +4,7 @@
 //!   info        artifact + config inventory
 //!   serve       run the trigger pipeline over synthetic events
 //!   farm        run a sharded multi-backend serving farm
+//!   record      capture an event stream to a .evtape for replay
 //!   simulate    run one event through the simulated DGNNFlow fabric
 //!   resources   print the Table I resource estimate
 //!   power       print the Table II power estimate
@@ -18,11 +19,12 @@ use dgnnflow::dataflow::{BuildSite, DataflowEngine, GcSchedule, PowerModel, Reso
 use dgnnflow::farm::{AdmissionPolicy, Farm, PacedBackend, RoutingPolicy};
 use dgnnflow::fixedpoint::{Arith, Format};
 use dgnnflow::graph::{build_edges, pad_graph, padding::DEFAULT_BUCKETS};
+use dgnnflow::ingest;
 use dgnnflow::model::{L1DeepMetV2, Weights};
 use dgnnflow::obs::metrics::Registry;
 use dgnnflow::obs::trace::{validate_chrome_trace, TraceRecorder};
 use dgnnflow::physics::{EventGenerator, GeneratorConfig};
-use dgnnflow::pipeline::{BurstSource, EventSource, Pipeline, SyntheticSource};
+use dgnnflow::pipeline::{BurstSource, EventSource, Pipeline, SyntheticSource, TapeSource};
 use dgnnflow::runtime::{ModelRuntime, PjrtService};
 use dgnnflow::trigger::Backend;
 use dgnnflow::util::bench::Table;
@@ -41,6 +43,7 @@ fn main() {
         Some("info") => cmd_info(),
         Some("serve") => cmd_serve(&args),
         Some("farm") => cmd_farm(&args),
+        Some("record") => cmd_record(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("resources") => cmd_resources(&args),
         Some("power") => cmd_power(&args),
@@ -70,6 +73,7 @@ fn print_help() {
          \u{20}  info                     artifact + config inventory\n\
          \u{20}  serve [--backend B]      trigger pipeline over synthetic events\n\
          \u{20}  farm [--shards M]        sharded serving farm with routed dispatch\n\
+         \u{20}  record --out F.evtape    capture an event stream for bit-identical replay\n\
          \u{20}  simulate [--trace F]     event stream through the simulated fabric\n\
          \u{20}  resources                Table I resource estimate\n\
          \u{20}  power                    Table II power estimate\n\
@@ -202,7 +206,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Help::new("serve", "run the streaming pipeline over an event source")
                 .arg("--events N", "number of events (default 1000)")
                 .arg("--backend B", "rust-cpu | pjrt | fpga (default fpga)")
-                .arg("--source S", "synthetic | burst (default synthetic)")
+                .arg("--source S", "synthetic | burst | tape (default synthetic)")
+                .arg("--tape FILE", ".evtape to replay (required with --source tape)")
                 .arg("--workers N", "worker threads (default 4)")
                 .arg("--batch N", "dynamic batcher max batch (default from config)")
                 .arg("--batch-timeout-us N", "batcher flush timeout (default from config)")
@@ -262,7 +267,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         // fixed bunch-crossing cadence; only observable with --paced
         "synthetic" => Box::new(SyntheticSource::new(events, seed, gen_cfg).with_rate(rate_hz)),
         "burst" => Box::new(BurstSource::new(events, seed, gen_cfg, rate_hz)),
-        other => anyhow::bail!("unknown source '{other}' (synthetic | burst)"),
+        "tape" => Box::new(TapeSource::open(
+            args.opt_str("tape")
+                .ok_or_else(|| anyhow::anyhow!("--source tape requires --tape FILE"))?,
+        )?),
+        other => anyhow::bail!("unknown source '{other}' (synthetic | burst | tape)"),
     };
 
     let mut builder = Pipeline::builder()
@@ -301,7 +310,8 @@ fn cmd_farm(args: &Args) -> anyhow::Result<()> {
                 .arg("--backend B", "per-shard backend: rust-cpu | fpga (default rust-cpu)")
                 .arg("--routing P", "rr | jsq | ewma (default jsq)")
                 .arg("--admission P", "tail-drop | deadline:<ms> (default tail-drop)")
-                .arg("--source S", "synthetic | burst (default synthetic)")
+                .arg("--source S", "synthetic | burst | tape (default synthetic)")
+                .arg("--tape FILE", ".evtape to replay (required with --source tape)")
                 .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 2000)")
                 .arg("--burst-factor X", "burst source rate multiplier (default 8)")
                 .arg("--paced", "honour arrival times; activates admission control")
@@ -349,7 +359,11 @@ fn cmd_farm(args: &Args) -> anyhow::Result<()> {
             BurstSource::new(events, seed, gen_cfg, rate_hz)
                 .with_burst_factor(args.f64_or("burst-factor", 8.0).map_err(anyhow::Error::msg)?),
         ),
-        other => anyhow::bail!("unknown source '{other}' (synthetic | burst)"),
+        "tape" => Box::new(TapeSource::open(
+            args.opt_str("tape")
+                .ok_or_else(|| anyhow::anyhow!("--source tape requires --tape FILE"))?,
+        )?),
+        other => anyhow::bail!("unknown source '{other}' (synthetic | burst | tape)"),
     };
 
     // Every shard owns its own backend instance (same weights, independent
@@ -415,6 +429,79 @@ fn cmd_farm(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
         println!("metrics[ok]: counters reconcile with the farm report -> {}", path.display());
     }
+    Ok(())
+}
+
+fn cmd_record(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            Help::new("record", "capture an event stream to a .evtape for bit-identical replay")
+                .arg("--out FILE", "output tape path (required)")
+                .arg("--events N", "number of events (default 1000)")
+                .arg("--source S", "synthetic | burst (default synthetic)")
+                .arg("--rate HZ", "arrival rate: synthetic cadence / burst base (default 5000)")
+                .arg("--burst-factor X", "burst source rate multiplier (default 8)")
+                .arg("--seed N", "event stream seed (default 1)")
+                .arg("--pileup X", "mean pileup (default 60)")
+                .render()
+        );
+        return Ok(());
+    }
+    let out = args
+        .opt_str("out")
+        .ok_or_else(|| anyhow::anyhow!("record: --out FILE is required"))?;
+    let events = args.usize_or("events", 1000).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let pileup = args.f64_or("pileup", 60.0).map_err(anyhow::Error::msg)?;
+    let rate_hz = args.f64_or("rate", 5000.0).map_err(anyhow::Error::msg)?;
+    let burst_factor = args.f64_or("burst-factor", 8.0).map_err(anyhow::Error::msg)?;
+    let gen_cfg = GeneratorConfig { mean_pileup: pileup, ..Default::default() };
+    let kind = args.str_or("source", "synthetic");
+    let make_source = || -> anyhow::Result<Box<dyn EventSource>> {
+        Ok(match kind {
+            "synthetic" => {
+                Box::new(SyntheticSource::new(events, seed, gen_cfg.clone()).with_rate(rate_hz))
+            }
+            "burst" => Box::new(
+                BurstSource::new(events, seed, gen_cfg.clone(), rate_hz)
+                    .with_burst_factor(burst_factor),
+            ),
+            other => anyhow::bail!("unknown source '{other}' (synthetic | burst)"),
+        })
+    };
+
+    let mut src = make_source()?;
+    let bytes = ingest::record(&mut src, seed, rate_hz, gen_cfg.clone())?;
+
+    // Prove the image replays bit-identically against a fresh copy of the
+    // originating stream *before* anything hits the filesystem — a tape
+    // that diverges from its own recording session is worse than no tape.
+    let mut replay = TapeSource::from_tape(ingest::Tape::from_bytes(bytes.clone())?);
+    let mut reference = make_source()?;
+    let mut verified = 0usize;
+    loop {
+        match (replay.next_event(), reference.next_event()) {
+            (Some(a), Some(b)) => {
+                anyhow::ensure!(
+                    ingest::bit_identical(&a, &b),
+                    "replay diverged from the originating stream at event {verified}"
+                );
+                verified += 1;
+            }
+            (None, None) => break,
+            _ => anyhow::bail!("replay length diverged from the originating stream"),
+        }
+    }
+
+    std::fs::write(out, &bytes).map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    let per_event =
+        if verified > 0 { bytes.len() as f64 / verified as f64 } else { bytes.len() as f64 };
+    println!(
+        "record[ok]: {verified} events, {} bytes ({per_event:.1} bytes/event), \
+         source {kind}, seed {seed}, bit-identical replay verified -> {out}",
+        bytes.len()
+    );
     Ok(())
 }
 
@@ -588,18 +675,24 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
     // un-pin it). DGNNFLOW_BENCH_BOOTSTRAP=1 accepts a bootstrap once.
     let in_ci = matches!(std::env::var("CI").as_deref(), Ok("true") | Ok("1"));
     let allow_bootstrap = std::env::var("DGNNFLOW_BENCH_BOOTSTRAP").as_deref() == Ok("1");
+    let mode = benchgate::GateMode::resolve(in_ci, allow_bootstrap);
+    // Printed so CI can assert the gate actually ran enforcing — a
+    // mis-set CI env degrading every run to bootstrap mode would
+    // otherwise pass silently forever.
+    println!("bench-check: mode={}", mode.as_str());
     let pairs = [
         ("BENCH_parallelism.json", "baselines/BENCH_parallelism.json"),
         ("BENCH_graphbuild.json", "baselines/BENCH_graphbuild.json"),
         ("BENCH_farm.json", "baselines/BENCH_farm.json"),
         ("BENCH_stream.json", "baselines/BENCH_stream.json"),
+        ("BENCH_ingest.json", "baselines/BENCH_ingest.json"),
     ];
     let mut failures = 0usize;
     for (emitted, baseline) in pairs {
         let outcome = benchgate::run_gate(&dir.join(emitted), &dir.join(baseline), rebase)?;
         match outcome {
             benchgate::GateOutcome::Pass => println!("bench-check: {emitted} matches {baseline}"),
-            benchgate::GateOutcome::Bootstrapped if in_ci && !allow_bootstrap => {
+            benchgate::GateOutcome::Bootstrapped if !mode.allows_bootstrap() => {
                 eprintln!(
                     "bench-check: {baseline} was MISSING in CI — the gate pinned nothing \
                      (set DGNNFLOW_BENCH_BOOTSTRAP=1 to accept this run's bootstrap)\n{}",

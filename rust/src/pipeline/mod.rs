@@ -50,6 +50,10 @@ pub mod source;
 
 pub use source::{BurstSource, EventSource, ReplaySource, SyntheticSource, TimedEvent};
 
+// Tape replay lives in `ingest` (it owns the on-disk format) but is a
+// first-class event source, so re-export it beside its siblings.
+pub use crate::ingest::TapeSource;
+
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};

@@ -81,6 +81,17 @@ fn keyset(bench: &str) -> Option<KeySet> {
                 "holds_500k",
             ],
         }),
+        // Ingestion bench: the tape's frame count, the XOR of every replayed
+        // event id, and the lazy-vs-eager value agreement are exact
+        // invariants of the pinned (seed, events, pileup) stream — any
+        // format or scanner change that alters what comes off the tape
+        // drifts one of them. Throughput numbers (events/sec, speedup,
+        // bytes/event) are host-dependent and deliberately not pinned.
+        "ingest_throughput" => Some(KeySet {
+            doc: &["seed", "events", "pileup"],
+            point_id: &["codec"],
+            point_cmp: &["frames", "ids_xor", "matches_reference"],
+        }),
         _ => None,
     }
 }
@@ -198,6 +209,44 @@ pub fn bootstrap_help() -> String {
         "     and commit the updated baselines.",
     ]
     .join("\n")
+}
+
+/// How the gate treats a *missing* baseline. Resolved once per
+/// `bench-check` run from the environment and printed
+/// (`bench-check: mode=...`) so CI can assert the gate really ran
+/// enforcing — a runner that lost its `CI` env would otherwise degrade
+/// every missing baseline to a silent bootstrap forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateMode {
+    /// CI: a missing baseline fails the gate (nothing would be pinned).
+    Enforcing,
+    /// Local / explicitly-allowed bootstrap: a missing baseline is
+    /// created from the emitted file for the operator to review + commit.
+    Local,
+}
+
+impl GateMode {
+    /// `in_ci` comes from the `CI` env var the runner sets;
+    /// `allow_bootstrap` from `DGNNFLOW_BENCH_BOOTSTRAP=1` (accept one
+    /// bootstrap in CI deliberately, e.g. when adding a new bench).
+    pub fn resolve(in_ci: bool, allow_bootstrap: bool) -> GateMode {
+        if in_ci && !allow_bootstrap {
+            GateMode::Enforcing
+        } else {
+            GateMode::Local
+        }
+    }
+
+    pub fn allows_bootstrap(self) -> bool {
+        matches!(self, GateMode::Local)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GateMode::Enforcing => "enforcing",
+            GateMode::Local => "local",
+        }
+    }
 }
 
 /// Outcome of one emitted-vs-baseline gate run.
@@ -476,6 +525,44 @@ mod tests {
         for needle in ["bench-baselines", "DGNNFLOW_BENCH_REBASE=1", "rust/baselines/README.md"] {
             assert!(help.contains(needle), "bootstrap help must mention '{needle}':\n{help}");
         }
+    }
+
+    #[test]
+    fn gate_mode_resolution_and_rendering() {
+        // only a CI runner without the explicit bootstrap escape enforces
+        assert_eq!(GateMode::resolve(true, false), GateMode::Enforcing);
+        assert_eq!(GateMode::resolve(true, true), GateMode::Local);
+        assert_eq!(GateMode::resolve(false, false), GateMode::Local);
+        assert_eq!(GateMode::resolve(false, true), GateMode::Local);
+        assert!(!GateMode::Enforcing.allows_bootstrap());
+        assert!(GateMode::Local.allows_bootstrap());
+        // ci.sh greps for this exact token — pin the rendering
+        assert_eq!(GateMode::Enforcing.as_str(), "enforcing");
+        assert_eq!(GateMode::Local.as_str(), "local");
+    }
+
+    #[test]
+    fn ingest_throughput_pins_invariants_not_throughput() {
+        let doc = |xor: u64, evps: f64| {
+            json::parse(&format!(
+                r#"{{
+                    "bench": "ingest_throughput",
+                    "seed": 21, "events": 256, "pileup": 60,
+                    "points": [
+                        {{"codec": "lazy", "frames": 256, "ids_xor": {xor},
+                          "matches_reference": true, "events_per_sec": {evps},
+                          "bytes_per_event": 3100.5, "speedup_vs_eager": 6.2}}
+                    ]
+                }}"#
+            ))
+            .unwrap()
+        };
+        // host throughput drift is ignored...
+        assert!(compare_docs(&doc(0, 9e5), &doc(0, 3e5)).unwrap().is_empty());
+        // ...but a replayed-id drift fails
+        let diffs = compare_docs(&doc(0, 9e5), &doc(7, 9e5)).unwrap();
+        assert_eq!(diffs.len(), 1, "{diffs:?}");
+        assert!(diffs[0].contains("ids_xor"), "{}", diffs[0]);
     }
 
     #[test]

@@ -41,6 +41,81 @@ fn err<T>(msg: impl Into<String>, offset: usize) -> Result<T> {
 }
 
 // ---------------------------------------------------------------------------
+// Low-level byte scanner
+//
+// Shared by the recursive parser below and by zero-copy consumers that walk
+// raw JSON bytes without building a `Value` tree (the lazy `.evtape` frame
+// scanner in `crate::ingest`). Each function takes the byte slice plus a
+// start offset and returns the offset one past the scanned token.
+// ---------------------------------------------------------------------------
+
+/// Advance past JSON whitespace, returning the first non-whitespace offset.
+#[inline]
+pub fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while matches!(b.get(i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        i += 1;
+    }
+    i
+}
+
+/// Walk the JSON number token starting at `i` without converting its
+/// digits — the cheap half of number scanning, used by lazy consumers to
+/// record a token's extent and defer the `f64` conversion until (unless)
+/// the field is actually read. Strict grammar: at least one integer digit,
+/// and digits required after `.` and after the exponent marker, so every
+/// token this accepts is also accepted by `f64::from_str`.
+pub fn skip_number(b: &[u8], mut i: usize) -> Result<usize> {
+    let start = i;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    let int_digits = i;
+    while matches!(b.get(i), Some(c) if c.is_ascii_digit()) {
+        i += 1;
+    }
+    if i == int_digits {
+        return err("expected digit in number", start);
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        let frac_digits = i;
+        while matches!(b.get(i), Some(c) if c.is_ascii_digit()) {
+            i += 1;
+        }
+        if i == frac_digits {
+            return err("expected digit after '.'", start);
+        }
+    }
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        let exp_digits = i;
+        while matches!(b.get(i), Some(c) if c.is_ascii_digit()) {
+            i += 1;
+        }
+        if i == exp_digits {
+            return err("expected digit in exponent", start);
+        }
+    }
+    Ok(i)
+}
+
+/// Parse the JSON number token at `i`: `(value, offset one past the token)`.
+pub fn scan_number(b: &[u8], i: usize) -> Result<(f64, usize)> {
+    let end = skip_number(b, i)?;
+    // the grammar walk admits only ASCII sign/digit/dot/exponent bytes, so
+    // the slice is valid UTF-8
+    let s = std::str::from_utf8(&b[i..end])
+        .map_err(|_| JsonError { msg: "bad utf8 in number".into(), offset: i })?;
+    match s.parse::<f64>() {
+        Ok(x) => Ok((x, end)),
+        Err(_) => err(format!("bad number '{s}'"), i),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Parser
 // ---------------------------------------------------------------------------
 
@@ -51,9 +126,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
-            self.i += 1;
-        }
+        self.i = skip_ws(self.b, self.i);
     }
 
     fn peek(&self) -> Option<u8> {
@@ -94,34 +167,9 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Value> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        let s = std::str::from_utf8(&self.b[start..self.i])
-            .map_err(|_| JsonError { msg: "bad utf8 in number".into(), offset: start })?;
-        match s.parse::<f64>() {
-            Ok(x) => Ok(Value::Num(x)),
-            Err(_) => err(format!("bad number '{s}'"), start),
-        }
+        let (x, end) = scan_number(self.b, self.i)?;
+        self.i = end;
+        Ok(Value::Num(x))
     }
 
     fn string(&mut self) -> Result<String> {
@@ -542,5 +590,67 @@ mod tests {
         let v = obj(vec![("x", 1.0.into()), ("y", "z".into())]);
         assert_eq!(v.get("x").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(v.get("y").unwrap().as_str().unwrap(), "z");
+    }
+
+    #[test]
+    fn scanner_skip_ws() {
+        assert_eq!(skip_ws(b"  \t\n x", 0), 5);
+        assert_eq!(skip_ws(b"x", 0), 0);
+        assert_eq!(skip_ws(b"  ", 0), 2); // may run to end of slice
+    }
+
+    #[test]
+    fn scanner_skip_number_extents() {
+        assert_eq!(skip_number(b"42,", 0).unwrap(), 2);
+        assert_eq!(skip_number(b"-3.5e2]", 0).unwrap(), 6);
+        assert_eq!(skip_number(b"x120", 1).unwrap(), 4);
+        assert_eq!(skip_number(b"1e+9 ", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn scanner_rejects_malformed_numbers() {
+        // strict grammar: a digit is required in every part
+        assert!(skip_number(b"-", 0).is_err());
+        assert!(skip_number(b".5", 0).is_err());
+        assert!(skip_number(b"1.", 0).is_err());
+        assert!(skip_number(b"1e", 0).is_err());
+        assert!(skip_number(b"1e+", 0).is_err());
+        assert!(skip_number(b"x", 0).is_err());
+        assert!(skip_number(b"", 0).is_err());
+    }
+
+    #[test]
+    fn scanner_scan_number_values() {
+        assert_eq!(scan_number(b"42", 0).unwrap(), (42.0, 2));
+        assert_eq!(scan_number(b"[-0.25]", 1).unwrap(), (-0.25, 6));
+        let (x, end) = scan_number(b"6.5e-1,", 0).unwrap();
+        assert_eq!(x, 0.65);
+        assert_eq!(end, 6);
+    }
+
+    #[test]
+    fn scanner_and_parser_agree() {
+        for s in ["0", "-17", "3.25", "-9.875e3", "1e2"] {
+            let via_parser = match parse(s).unwrap() {
+                Value::Num(x) => x,
+                other => panic!("expected number, got {other:?}"),
+            };
+            let (via_scanner, end) = scan_number(s.as_bytes(), 0).unwrap();
+            assert_eq!(via_parser.to_bits(), via_scanner.to_bits());
+            assert_eq!(end, s.len());
+        }
+    }
+
+    #[test]
+    fn shortest_decimal_roundtrips_f32_bits() {
+        // the .evtape frame writer relies on write_num's shortest repr
+        // round-tripping f32-valued floats exactly
+        for bits in [0x3f80_0000u32, 0x4048_f5c3, 0xc2f6_e979, 0x0000_0001, 0x7f7f_ffff] {
+            let x = f32::from_bits(bits);
+            let mut s = String::new();
+            write_num(x as f64, &mut s);
+            let (back, _) = scan_number(s.as_bytes(), 0).unwrap();
+            assert_eq!((back as f32).to_bits(), bits, "repr '{s}'");
+        }
     }
 }
